@@ -1,0 +1,76 @@
+"""Beyond-paper ablations on the thought-calibration design choices:
+
+* smoothing window W (paper fixes 10),
+* minimum steps before exit,
+* PCA dimensionality (paper fixes 256; we sweep relative to d_model),
+* probe quantity used for stopping (consistent vs novel-leaf composition).
+
+Each cell reports token fraction + accuracy + realized inconsistency risk at
+a fixed calibration target (δ=0.1, ε=0.1) on the in-distribution test split.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core import (calibrate_stopping_rule, fit_pca, pad_components,
+                        probe_scores, smooth_scores, stopping_time,
+                        train_probe, transform)
+from repro.core.risks import risk_inconsistency
+
+DELTA, EPS = 0.1, 0.1
+
+
+def _eval(pipe, scores_cal, scores_test, min_steps):
+    feats_cal, feats_test = pipe.feats["cal"], pipe.feats["test"]
+
+    def risk(i, t):
+        return risk_inconsistency(feats_cal[i].trace.labels,
+                                  min(t, feats_cal[i].n_steps))
+
+    res = calibrate_stopping_rule(scores_cal, risk, delta=DELTA, epsilon=EPS,
+                                  lam_grid=np.linspace(1, 0, 41),
+                                  min_steps=min_steps)
+    if res.lam is None:
+        return {"lam": "none", "token_frac": 1.0}
+    out = common.eval_stop(feats_test, scores_test, res.lam, min_steps)
+    return dict(out, lam=round(res.lam, 3))
+
+
+def run(pipe, emit):
+    # --- smoothing window ---------------------------------------------------
+    for w in (1, 3, 10, 20):
+        sc_cal, sc_test = [], []
+        for split, acc in (("cal", sc_cal), ("test", sc_test)):
+            for f in pipe.feats[split]:
+                z = np.asarray(transform(pipe.pca, jnp.asarray(f.reps)))
+                acc.append(smooth_scores(
+                    probe_scores(pipe.probes["consistent"], z), w))
+        emit("ablations", f"window={w}", _eval(pipe, sc_cal, sc_test, 2))
+
+    # --- min steps ------------------------------------------------------------
+    sc_cal = common.variant_scores(pipe, "cal", "consistent")
+    sc_test = common.variant_scores(pipe, "test", "consistent")
+    for ms in (1, 2, 4, 8):
+        emit("ablations", f"min_steps={ms}", _eval(pipe, sc_cal, sc_test, ms))
+
+    # --- PCA dimension ---------------------------------------------------------
+    train_reps = np.concatenate([f.reps for f in pipe.feats["train"]])
+    y = np.concatenate([common._probe_targets(f.trace, "consistent")
+                        for f in pipe.feats["train"]])
+    for k in (8, 16, 32, 64):
+        pca = pad_components(fit_pca(jnp.asarray(train_reps), k), k)
+        probe = train_probe(jax.random.PRNGKey(k), "linear",
+                            np.asarray(transform(pca, jnp.asarray(train_reps))),
+                            y, steps=250)
+        sc_cal, sc_test = [], []
+        for split, acc in (("cal", sc_cal), ("test", sc_test)):
+            for f in pipe.feats[split]:
+                z = np.asarray(transform(pca, jnp.asarray(f.reps)))
+                acc.append(smooth_scores(probe_scores(probe, z), common.WINDOW))
+        r = _eval(pipe, sc_cal, sc_test, 2)
+        emit("ablations", f"pca_dim={k}",
+             dict(r, probe_val_auroc=round(probe.val_auroc, 3)))

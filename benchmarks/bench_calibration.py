@@ -1,0 +1,82 @@
+"""Calibration curves (right panels of Figs. 2–3): empirical risk on the test
+split vs the target level, for each ε. A well-calibrated rule keeps realized
+risk ≤ δ with frequency ≥ 1-ε; the Supervised probe is expected to violate
+(its risk is not controllable when problems are unsolvable, §3.2)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import stopping_time
+from repro.core.risks import risk_correctness_drop, risk_inconsistency
+
+DELTA = 0.1
+EPS_GRID = (0.05, 0.1, 0.15, 0.2, 0.3, 0.4, 0.5)
+
+
+def run(pipe, emit):
+    for variant in ("supervised", "consistent", "novel_leaf"):
+        scores_test = common.variant_scores(pipe, "test", variant)
+        feats = pipe.feats["test"]
+        for eps in EPS_GRID:
+            lam = common.calibrate_variant(pipe, variant, DELTA, eps)
+            if lam is None:
+                emit("calibration", variant,
+                     {"eps": eps, "lam": "none", "emp_risk": 0.0,
+                      "violated": 0})
+                continue
+            risks = []
+            for f, s in zip(feats, scores_test):
+                t = min(stopping_time(s, lam, 2), f.n_steps)
+                if variant == "supervised":
+                    risks.append(risk_correctness_drop(f.trace.labels, t))
+                else:
+                    risks.append(risk_inconsistency(f.trace.labels, t))
+            emp = float(np.mean(risks))
+            emit("calibration", variant,
+                 {"eps": eps, "lam": round(lam, 3), "emp_risk": round(emp, 4),
+                  "violated": int(emp > DELTA)})
+
+    # large in-distribution test set (n=300): the paper's 50-trace split has
+    # risk-estimate std ~0.04; this resolves whether the guarantee holds.
+    import jax.numpy as jnp
+    from repro.core import probe_scores, smooth_scores, transform
+    feats_large = common.indist_features(pipe, n=300)
+    for variant in ("supervised", "consistent"):
+        probe = pipe.probes["correct" if variant == "supervised" else "consistent"]
+        scores_large = [
+            smooth_scores(probe_scores(
+                probe, np.asarray(transform(pipe.pca, jnp.asarray(f.reps)))),
+                common.WINDOW)
+            for f in feats_large]
+        for eps in (0.05, 0.1, 0.2):
+            lam = common.calibrate_variant(pipe, variant, DELTA, eps)
+            if lam is None:
+                continue
+            risks = []
+            toks_used, toks_full = [], []
+            for f, s in zip(feats_large, scores_large):
+                t = min(stopping_time(s, lam, 2), f.n_steps)
+                toks_used.append(f.tokens_at_step[t - 1])
+                toks_full.append(f.tokens_at_step[-1])
+                if variant == "supervised":
+                    risks.append(risk_correctness_drop(f.trace.labels, t))
+                else:
+                    risks.append(risk_inconsistency(f.trace.labels, t))
+            emp = float(np.mean(risks))
+            emit("calibration", f"{variant}/test_large_n300",
+                 {"eps": eps, "lam": round(lam, 3), "emp_risk": round(emp, 4),
+                  "violated": int(emp > DELTA),
+                  "token_frac": round(float(np.sum(toks_used) / np.sum(toks_full)), 3)})
+
+    # the raw-probe failure mode: threshold the UNCALIBRATED supervised probe
+    # at lam=0.5 (what a non-LTT deployment would do)
+    scores_test = common.variant_scores(pipe, "test", "supervised")
+    feats = pipe.feats["test"]
+    risks = [risk_correctness_drop(f.trace.labels,
+                                   min(stopping_time(s, 0.5, 2), f.n_steps))
+             for f, s in zip(feats, scores_test)]
+    emit("calibration", "supervised_uncalibrated",
+         {"eps": "", "lam": 0.5, "emp_risk": round(float(np.mean(risks)), 4),
+          "violated": int(np.mean(risks) > DELTA)})

@@ -1,0 +1,57 @@
+"""Figure 4: where do the savings come from? Token-trim fraction stratified
+by (a) whether the full-budget model solves the problem, and (b) full thought
+length — thought calibration should preferentially trim unsolvable and long
+traces, unlike Crop which trims uniformly (paper §4.4)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+
+DELTA, EPS = 0.1, 0.2
+
+
+def _trim_stats(feats, stops):
+    full_len = np.array([f.tokens_at_step[-1] for f in feats])
+    used = np.array([f.tokens_at_step[min(t, f.n_steps) - 1]
+                     for f, t in zip(feats, stops)])
+    trimmed = 1.0 - used / full_len
+    solved = np.array([f.trace.labels.correct_at[-1] for f in feats])
+    long_mask = full_len > np.median(full_len)
+    return {
+        "trim_solved": float(trimmed[solved].mean()) if solved.any() else 0.0,
+        "trim_unsolved": float(trimmed[~solved].mean()) if (~solved).any() else 0.0,
+        "trim_short": float(trimmed[~long_mask].mean()),
+        "trim_long": float(trimmed[long_mask].mean()),
+        "trim_std": float(trimmed.std()),
+    }
+
+
+def run(pipe, emit):
+    feats = pipe.feats["test"] + common.ood_features(pipe, n=100, seed=1234,
+                                                     which="ood_long")
+    # calibrated consistent variant
+    lam = common.calibrate_variant(pipe, "consistent", DELTA, EPS)
+    scores = []
+    import jax.numpy as jnp
+    from repro.core import probe_scores, smooth_scores, transform
+    for f in feats:
+        z = np.asarray(transform(pipe.pca, jnp.asarray(f.reps)))
+        scores.append(smooth_scores(
+            probe_scores(pipe.probes["consistent"], z), common.WINDOW))
+    from repro.core import stopping_time
+    stops_tc = [min(stopping_time(s, lam if lam is not None else 1.1, 2), f.n_steps)
+                for s, f in zip(scores, feats)]
+    emit("fig4_stratified", "thought_calibration",
+         dict(_trim_stats(feats, stops_tc), lam=lam))
+
+    # crop at matched mean budget
+    used = np.mean([f.tokens_at_step[t - 1] for f, t in zip(feats, stops_tc)])
+    budget = int(used)
+    stops_crop = []
+    for f in feats:
+        t = int(np.searchsorted(f.tokens_at_step, budget, side="right"))
+        stops_crop.append(max(1, min(t if t > 0 else 1, f.n_steps)))
+    emit("fig4_stratified", "crop_matched",
+         dict(_trim_stats(feats, stops_crop), budget=budget))

@@ -1,0 +1,77 @@
+"""Kernel micro-benchmarks: wall time of the jitted reference paths on this
+CPU host (the Pallas kernels run interpret=True here, so CPU timings of the
+compiled reference are the meaningful number) + parity errors vs the Pallas
+kernel bodies. On TPU the same ops.py entry points run the kernels natively.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+        (out[0] if isinstance(out, tuple) else out).block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run(pipe, emit):
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 8)
+
+    # probe scorer
+    for n, d in ((512, 256), (2048, 512)):
+        reps = jax.random.normal(ks[0], (n, d))
+        mean = jax.random.normal(ks[1], (d,)) * 0.1
+        comps = jax.random.normal(ks[2], (d, 256)) * d ** -0.5
+        w1 = jax.random.normal(ks[3], (256,))
+        w2 = jax.random.normal(ks[4], (256,))
+        b = jnp.float32(0.0)
+        f_ref = jax.jit(lambda *a: ref.probe_score_ref(*a))
+        us = _time(f_ref, reps, mean, comps, w1, b, w2, b)
+        got = ops.probe_score(reps, mean, comps, w1, b, w2, b, use_kernel=True)
+        want = ref.probe_score_ref(reps, mean, comps, w1, b, w2, b)
+        err = float(jnp.max(jnp.abs(got - want)))
+        emit("kernels", f"probe_score_n{n}_d{d}",
+             {"us_per_call_ref_cpu": round(us, 1), "kernel_maxerr": err})
+
+    # decode attention
+    for b_, h, kv, dh, w in ((8, 32, 8, 128, 4096), (32, 16, 16, 128, 2048)):
+        q = jax.random.normal(ks[0], (b_, h, dh), jnp.bfloat16)
+        kc = jax.random.normal(ks[1], (b_, w, kv, dh), jnp.bfloat16)
+        vc = jax.random.normal(ks[2], (b_, w, kv, dh), jnp.bfloat16)
+        lengths = jnp.full((b_,), w)
+        f_ref = jax.jit(ref.decode_attention_ref)
+        us = _time(f_ref, q, kc, vc, lengths)
+        got = ops.decode_attention(q, kc, vc, lengths, use_kernel=True)
+        want = ref.decode_attention_ref(q, kc, vc, lengths)
+        err = float(jnp.max(jnp.abs(got.astype(jnp.float32)
+                                    - want.astype(jnp.float32))))
+        emit("kernels", f"decode_attn_b{b_}_w{w}",
+             {"us_per_call_ref_cpu": round(us, 1), "kernel_maxerr": err})
+
+    # SSD scan
+    for b_, s, h, p in ((2, 512, 16, 64),):
+        n, c = 64, 128
+        x = jax.random.normal(ks[0], (b_, s, h, p)) * 0.3
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (b_, s, h)))
+        A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+        Bm = jax.random.normal(ks[3], (b_, s, n)) * 0.3
+        Cm = jax.random.normal(ks[4], (b_, s, n)) * 0.3
+        f_ref = jax.jit(lambda *a: ref.ssd_chunk_scan_ref(*a, c))
+        us = _time(f_ref, x, dt * A, Bm, Cm)
+        ya, sa = ops.ssd_chunk_scan(x, dt * A, Bm, Cm, c, use_kernel=True)
+        yb, sb = ref.ssd_chunk_scan_ref(x, dt * A, Bm, Cm, c)
+        err = float(jnp.max(jnp.abs(ya - yb)))
+        emit("kernels", f"ssd_scan_b{b_}_s{s}",
+             {"us_per_call_ref_cpu": round(us, 1), "kernel_maxerr": err})

@@ -1,0 +1,37 @@
+"""Roofline table (deliverable g): read the dry-run artifacts and print the
+three roofline terms, the dominant bottleneck, and the useful-FLOPs ratio per
+(arch x shape x mesh)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.environ.get("REPRO_DRYRUN_DIR", "experiments/dryrun")
+
+
+def run(pipe, emit):
+    files = sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json")))
+    if not files:
+        emit("roofline", "missing",
+             {"note": f"no dry-run artifacts in {DRYRUN_DIR}; "
+                      "run python -m repro.launch.dryrun first"})
+        return
+    for f in files:
+        rec = json.load(open(f))
+        name = f"{rec['arch']}/{rec['shape']}/{rec['mesh']}"
+        if not rec.get("ok"):
+            emit("roofline", name, {"ok": 0, "error": rec.get("error", "")[:80]})
+            continue
+        rl = rec["roofline"]
+        emit("roofline", name, {
+            "ok": 1,
+            "t_compute_s": f"{rl['t_compute_s']:.3e}",
+            "t_memory_s": f"{rl['t_memory_s']:.3e}",
+            "t_collective_s": f"{rl['t_collective_s']:.3e}",
+            "bottleneck": rl["bottleneck"],
+            "useful_flops_ratio": round(rl["useful_flops_ratio"], 3),
+            "mem_gib_per_dev": round(rec["memory"]["total_bytes"] / 2 ** 30, 2),
+            "fits_16gib": int(rec["memory"]["total_bytes"] < 16 * 2 ** 30),
+        })

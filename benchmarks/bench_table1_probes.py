@@ -1,0 +1,64 @@
+"""Table 1: probe-architecture ablation — binary AUROC of linear / MLP /
+transformer probes on train and calibration splits for all four quantities
+(paper Appendix B.1)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core import auroc, probe_scores, train_probe, transform
+
+
+def _xy(pipe, split, q, pca=True):
+    feats = pipe.feats[split]
+    reps = np.concatenate([f.reps for f in feats])
+    if pca:
+        x = np.asarray(transform(pipe.pca, jnp.asarray(reps)))
+    else:
+        x = reps
+    y = np.concatenate([common._probe_targets(f.trace, q) for f in feats])
+    return x, y
+
+
+def _seq_xy(pipe, split, q):
+    """Padded (N, T, D) sequences for the transformer probe (raw reps —
+    the paper finds PCA hurts the transformer)."""
+    feats = pipe.feats[split]
+    t_max = max(f.n_steps for f in feats)
+    d = feats[0].reps.shape[-1]
+    x = np.zeros((len(feats), t_max, d), np.float32)
+    y = np.zeros((len(feats), t_max), np.float32)
+    for i, f in enumerate(feats):
+        x[i, : f.n_steps] = f.reps
+        y[i, : f.n_steps] = common._probe_targets(f.trace, q)
+    return x, y
+
+
+def run(pipe, emit):
+    key = jax.random.PRNGKey(42)
+    for q in common.QUANTITIES:
+        xtr, ytr = _xy(pipe, "train", q)
+        xcal, ycal = _xy(pipe, "cal", q)
+        for kind in ("linear", "mlp"):
+            probe = train_probe(jax.random.fold_in(key, hash((q, kind)) % 2**31),
+                                kind, xtr, ytr, steps=250)
+            s_tr = probe_scores(probe, xtr)
+            s_cal = probe_scores(probe, xcal)
+            emit("table1_probes", f"{q}/{kind}", {
+                "train_auroc": round(auroc(s_tr, ytr), 3),
+                "cal_auroc": round(auroc(s_cal, ycal), 3),
+            })
+        # transformer probe: sequence labeling over raw (non-PCA) reps
+        xs_tr, ys_tr = _seq_xy(pipe, "train", q)
+        xs_cal, ys_cal = _seq_xy(pipe, "cal", q)
+        probe = train_probe(jax.random.fold_in(key, hash((q, "tf")) % 2**31),
+                            "transformer", xs_tr, ys_tr, steps=150)
+        s_tr = probe_scores(probe, xs_tr).ravel()
+        s_cal = probe_scores(probe, xs_cal).ravel()
+        emit("table1_probes", f"{q}/transformer", {
+            "train_auroc": round(auroc(s_tr, ys_tr.ravel()), 3),
+            "cal_auroc": round(auroc(s_cal, ys_cal.ravel()), 3),
+        })

@@ -1,0 +1,292 @@
+"""Shared experiment pipeline for all paper benchmarks.
+
+Mirrors the paper's protocol (§4.1) on the synthetic reasoning world:
+
+1. train a reasoning LM (reduced config) on in-distribution traces;
+2. split probe data 500 train / 450 calibration / 50 test, *in dataset
+   order* (paper: s1K-1.1 splits);
+3. collect last-layer hidden states per trace, segment into steps,
+   mean-pool, PCA-reduce;
+4. train linear probes for P(correct) / P(consistent) / P(leaf) / P(novel);
+5. smooth scores (window 10) and calibrate λ per ε via LTT;
+6. evaluate early exit: stopping after step t yields the generator's attempt
+   z_t (the paper truncates + forces an answer; here the world gives z_t
+   exactly), so accuracy / consistency / token counts are noise-free.
+
+Artifacts are cached under experiments/artifacts/ so individual benchmarks
+share one trained model.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_reduced
+from repro.core import (
+    PCA,
+    calibrate_stopping_rule,
+    fit_pca,
+    pad_components,
+    probe_scores,
+    smooth_scores,
+    stopping_time,
+    train_probe,
+    transform,
+)
+from repro.core.probes import TrainedProbe
+from repro.core.risks import risk_correctness_drop, risk_inconsistency
+from repro.core.segmentation import segment_mean_pool, segment_steps
+from repro.data import DataConfig, PackedDataset, TraceConfig, generate_dataset, ood_config
+from repro.data.traces import BOUNDARY_IDS, MARKER_IDS, Trace
+from repro.models import model as M
+from repro.training import load_checkpoint, make_train_step, save_checkpoint
+from repro.training.loop import train
+from repro.training.schedules import get_schedule
+
+ART_DIR = os.environ.get("REPRO_ARTIFACTS", "experiments/artifacts")
+ARCH = "qwen3-8b"
+PROBE_DIM = 64
+WINDOW = 10
+TRAIN_STEPS = int(os.environ.get("REPRO_TRAIN_STEPS", "400"))
+N_TRAIN, N_CAL, N_TEST = 500, 450, 50
+QUANTITIES = ("correct", "consistent", "leaf", "novel")
+
+
+@dataclass
+class TraceFeatures:
+    trace: Trace
+    reps: np.ndarray          # (T, D) pooled step reps
+    n_steps: int
+    tokens_at_step: np.ndarray  # (T,) cumulative thinking tokens after step t
+
+
+@dataclass
+class Pipeline:
+    cfg: object
+    params: dict
+    pca: PCA
+    probes: Dict[str, TrainedProbe]
+    feats: Dict[str, List[TraceFeatures]]   # split -> features
+
+
+def _model_cfg():
+    return get_reduced(ARCH).replace(vocab_size=512, probe_dim=PROBE_DIM)
+
+
+def train_lm(cfg, seed: int = 0, steps: int = TRAIN_STEPS, log=print):
+    params = M.init_params(cfg, jax.random.PRNGKey(seed))
+    ds = PackedDataset(DataConfig(seq_len=256, batch_size=16,
+                                  num_traces=3000, seed=seed))
+    params, _, hist = train(cfg, params, ds.batches(), steps=steps,
+                            peak_lr=1e-3, schedule="cosine", moe_impl="dense",
+                            log_every=max(steps // 8, 1), log_fn=log)
+    return params, hist
+
+
+def collect_features(cfg, params, traces: Sequence[Trace],
+                     batch: int = 16) -> List[TraceFeatures]:
+    """Forward each trace; pool last-layer hidden states per reasoning step."""
+    out: List[TraceFeatures] = []
+    fwd = jax.jit(lambda p, t: M.forward(cfg, p, t, compute_dtype="float32",
+                                         moe_impl="dense").hidden)
+    order = sorted(range(len(traces)), key=lambda i: len(traces[i].tokens))
+    for i0 in range(0, len(order), batch):
+        idx = order[i0 : i0 + batch]
+        group = [traces[i] for i in idx]
+        s_max = max(len(t.tokens) for t in group)
+        s_max = (s_max + 31) // 32 * 32
+        toks = np.zeros((len(group), s_max), np.int32)
+        for j, t in enumerate(group):
+            toks[j, : len(t.tokens)] = t.tokens
+        hidden = fwd(params, jnp.asarray(toks))
+        seg = segment_steps(jnp.asarray(toks), BOUNDARY_IDS, MARKER_IDS)
+        for j, t in enumerate(group):
+            n = t.labels.num_steps
+            valid = (jnp.arange(s_max)[None] < len(t.tokens))
+            reps, _ = segment_mean_pool(hidden[j : j + 1], seg.step_id[j : j + 1],
+                                        n, valid)
+            step_tok = np.asarray(
+                [np.sum(t.step_of_token <= k) for k in range(n)])
+            cum = np.cumsum(np.bincount(
+                t.step_of_token[t.step_of_token >= 0], minlength=n))
+            out.append(TraceFeatures(
+                trace=t, reps=np.asarray(reps[0]), n_steps=n,
+                tokens_at_step=cum))
+    # restore original order
+    by_id = {id(f.trace): f for f in out}
+    return [by_id[id(traces[i])] for i in range(len(traces))]
+
+
+def _probe_targets(tr: Trace, kind: str) -> np.ndarray:
+    lab = tr.labels
+    return {
+        "correct": lab.correct_at,
+        "consistent": lab.consistent_at,
+        "leaf": lab.is_leaf,
+        "novel": lab.is_novel,
+    }[kind].astype(np.float32)
+
+
+def build_pipeline(force: bool = False, log=print,
+                   seed: int = 0) -> Pipeline:
+    os.makedirs(ART_DIR, exist_ok=True)
+    cfg = _model_cfg()
+    ckpt = os.path.join(ART_DIR, "lm.msgpack")
+    params = M.init_params(cfg, jax.random.PRNGKey(seed))
+    if os.path.exists(ckpt) and not force:
+        params, _ = load_checkpoint(ckpt, params)
+        log(f"[common] loaded cached LM from {ckpt}")
+    else:
+        log(f"[common] training LM ({TRAIN_STEPS} steps)...")
+        params, _ = train_lm(cfg, seed=seed, log=log)
+        save_checkpoint(ckpt, params, {"arch": ARCH, "steps": TRAIN_STEPS})
+
+    # datasets: disjoint seed from LM-training traces
+    traces = generate_dataset(N_TRAIN + N_CAL + N_TEST, TraceConfig(), seed=seed + 1000)
+    splits = {
+        "train": traces[:N_TRAIN],
+        "cal": traces[N_TRAIN : N_TRAIN + N_CAL],
+        "test": traces[N_TRAIN + N_CAL :],
+    }
+    feats = {}
+    for k, v in splits.items():
+        fpath = os.path.join(ART_DIR, f"feats_{k}.npz")
+        if os.path.exists(fpath) and not force:
+            data = np.load(fpath, allow_pickle=False)
+            feats[k] = [
+                TraceFeatures(trace=t, reps=data[f"reps_{i}"],
+                              n_steps=t.labels.num_steps,
+                              tokens_at_step=data[f"tok_{i}"])
+                for i, t in enumerate(v)]
+            log(f"[common] loaded cached features for split {k}")
+        else:
+            log(f"[common] collecting hidden-state features ({k})...")
+            feats[k] = collect_features(cfg, params, v)
+            np.savez(fpath, **{f"reps_{i}": f.reps for i, f in enumerate(feats[k])},
+                     **{f"tok_{i}": f.tokens_at_step for i, f in enumerate(feats[k])})
+
+    train_reps = np.concatenate([f.reps for f in feats["train"]])
+    pca = pad_components(fit_pca(jnp.asarray(train_reps), PROBE_DIM), PROBE_DIM)
+
+    probes: Dict[str, TrainedProbe] = {}
+    key = jax.random.PRNGKey(seed + 7)
+    for q in QUANTITIES:
+        x = transform(pca, jnp.asarray(train_reps))
+        y = np.concatenate([_probe_targets(f.trace, q) for f in feats["train"]])
+        probes[q] = train_probe(jax.random.fold_in(key, hash(q) % 2**31),
+                                "linear", np.asarray(x), y, steps=300)
+        log(f"[common] probe {q:10s} train AUROC {probes[q].train_auroc:.3f} "
+            f"val {probes[q].val_auroc:.3f}")
+    return Pipeline(cfg=cfg, params=params, pca=pca, probes=probes, feats=feats)
+
+
+# ---------------------------------------------------------------------------
+# scoring + evaluation
+# ---------------------------------------------------------------------------
+
+def variant_scores(pipe: Pipeline, split: str, variant: str) -> List[np.ndarray]:
+    """Smoothed per-step exit scores for a probe variant
+    (supervised|consistent|novel_leaf)."""
+    out = []
+    for f in pipe.feats[split]:
+        z = np.asarray(transform(pipe.pca, jnp.asarray(f.reps)))
+        if variant == "supervised":
+            s = probe_scores(pipe.probes["correct"], z)
+        elif variant == "consistent":
+            s = probe_scores(pipe.probes["consistent"], z)
+        elif variant == "novel_leaf":
+            s = probe_scores(pipe.probes["leaf"], z) * \
+                (1.0 - probe_scores(pipe.probes["novel"], z))
+        else:
+            raise ValueError(variant)
+        out.append(smooth_scores(s, WINDOW))
+    return out
+
+
+def eval_stop(feats: List[TraceFeatures], scores: List[np.ndarray],
+              lam: float, min_steps: int = 2) -> dict:
+    """Apply threshold λ; report token fraction, accuracy, consistency risk."""
+    toks_used, toks_full, acc, cons = [], [], [], []
+    for f, s in zip(feats, scores):
+        t = stopping_time(s, lam, min_steps)
+        t = min(t, f.n_steps)
+        toks_used.append(f.tokens_at_step[t - 1])
+        toks_full.append(f.tokens_at_step[-1])
+        lab = f.trace.labels
+        acc.append(bool(lab.correct_at[t - 1]))
+        cons.append(bool(lab.consistent_at[t - 1]))
+    return {
+        "token_frac": float(np.sum(toks_used) / np.sum(toks_full)),
+        "mean_tokens": float(np.mean(toks_used)),
+        "accuracy": float(np.mean(acc)),
+        "consistency": float(np.mean(cons)),
+        "incons_risk": 1.0 - float(np.mean(cons)),
+    }
+
+
+def eval_crop(feats: List[TraceFeatures], budget: int) -> dict:
+    """Naive budget forcing: stop at a fixed thinking-token budget."""
+    toks_used, toks_full, acc, cons = [], [], [], []
+    for f in feats:
+        t = int(np.searchsorted(f.tokens_at_step, budget, side="right"))
+        t = max(1, min(t if t > 0 else 1, f.n_steps))
+        toks_used.append(min(f.tokens_at_step[t - 1], budget))
+        toks_full.append(f.tokens_at_step[-1])
+        lab = f.trace.labels
+        acc.append(bool(lab.correct_at[t - 1]))
+        cons.append(bool(lab.consistent_at[t - 1]))
+    return {
+        "token_frac": float(np.sum(toks_used) / np.sum(toks_full)),
+        "mean_tokens": float(np.mean(toks_used)),
+        "accuracy": float(np.mean(acc)),
+        "consistency": float(np.mean(cons)),
+        "incons_risk": 1.0 - float(np.mean(cons)),
+    }
+
+
+def calibrate_variant(pipe: Pipeline, variant: str, delta: float, eps: float,
+                      cal_split: str = "cal") -> Optional[float]:
+    scores = variant_scores(pipe, cal_split, variant)
+    feats = pipe.feats[cal_split]
+
+    def risk(i, t):
+        lab = feats[i].trace.labels
+        t = min(t, feats[i].n_steps)
+        if variant == "supervised":
+            return risk_correctness_drop(lab, t)
+        return risk_inconsistency(lab, t)
+
+    res = calibrate_stopping_rule(scores, risk, delta=delta, epsilon=eps,
+                                  lam_grid=np.linspace(1.0, 0.0, 41),
+                                  min_steps=2)
+    return res.lam
+
+
+def indist_features(pipe: Pipeline, n: int = 300, seed: int = 77_000):
+    """Extra in-distribution traces (beyond the paper-faithful 50-trace test
+    split) to estimate realized risk with usable statistical power."""
+    traces = generate_dataset(n, TraceConfig(), seed=seed)
+    return collect_features(pipe.cfg, pipe.params, traces)
+
+
+def ood_features(pipe: Pipeline, n: int = 200, seed: int = 9000,
+                 which: str = "ood") -> List[TraceFeatures]:
+    base = TraceConfig()
+    cfgs = {
+        # three OOD stand-ins with distinct shift characters (AIME/GPQA/MATH)
+        "ood": ood_config(base),
+        "ood_hard": ood_config(base),
+        "ood_long": TraceConfig(depth_range=(4, 10), overthink_range=(8, 30),
+                                p_solvable=0.7, max_steps=96),
+        "ood_easy": TraceConfig(depth_range=(2, 5), overthink_range=(1, 6),
+                                p_solvable=0.9),
+    }[which]
+    traces = generate_dataset(n, cfgs, seed=seed)
+    return collect_features(pipe.cfg, pipe.params, traces)

@@ -1,0 +1,81 @@
+"""Benchmark harness: one module per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [--only fig2,...] [--fresh]``
+
+Prints ``bench,case,key=value,...`` CSV lines and writes JSON records to
+experiments/bench/.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+BENCHES = ("table1", "fig2", "fig3", "fig4", "calibration", "ablations",
+           "kernels", "roofline")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="all",
+                    help=f"comma list of {BENCHES}")
+    ap.add_argument("--fresh", action="store_true",
+                    help="retrain the LM instead of using cached artifacts")
+    ap.add_argument("--out", default="experiments/bench")
+    args = ap.parse_args()
+
+    sel = BENCHES if args.only == "all" else tuple(args.only.split(","))
+    os.makedirs(args.out, exist_ok=True)
+    records = []
+
+    def emit(bench: str, case: str, payload: dict) -> None:
+        records.append({"bench": bench, "case": case, **payload})
+        kv = ",".join(f"{k}={v}" for k, v in payload.items())
+        print(f"{bench},{case},{kv}", flush=True)
+
+    from benchmarks import common
+    needs_pipeline = any(b in sel for b in
+                         ("table1", "fig2", "fig3", "fig4", "calibration",
+                          "ablations"))
+    pipe = common.build_pipeline(force=args.fresh) if needs_pipeline else None
+
+    t0 = time.time()
+    if "table1" in sel:
+        from benchmarks import bench_table1_probes
+        bench_table1_probes.run(pipe, emit)
+    if "fig2" in sel:
+        from benchmarks import bench_fig2_indist
+        bench_fig2_indist.run(pipe, emit)
+        hl = bench_fig2_indist.headline(pipe)
+        if hl:
+            emit("fig2_indist", "HEADLINE", hl)
+    if "fig3" in sel:
+        from benchmarks import bench_fig3_ood
+        bench_fig3_ood.run(pipe, emit)
+    if "fig4" in sel:
+        from benchmarks import bench_fig4_stratified
+        bench_fig4_stratified.run(pipe, emit)
+    if "calibration" in sel:
+        from benchmarks import bench_calibration
+        bench_calibration.run(pipe, emit)
+    if "ablations" in sel:
+        from benchmarks import bench_ablations
+        bench_ablations.run(pipe, emit)
+    if "kernels" in sel:
+        from benchmarks import bench_kernels
+        bench_kernels.run(pipe, emit)
+    if "roofline" in sel:
+        from benchmarks import bench_roofline
+        bench_roofline.run(pipe, emit)
+
+    path = os.path.join(args.out, "results.json")
+    with open(path, "w") as f:
+        json.dump(records, f, indent=2)
+    print(f"# {len(records)} records -> {path}  ({time.time()-t0:.1f}s)")
+
+
+if __name__ == "__main__":
+    main()

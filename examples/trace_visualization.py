@@ -1,0 +1,58 @@
+"""Figure-5 reproduction: per-step consistency-probe scores over one trace.
+
+    PYTHONPATH=src python examples/trace_visualization.py
+
+Prints each reasoning step with its probe score as a text heat bar — the
+score should dip on backtracks and rise once the model re-confirms the final
+answer, as in the paper's qualitative example.
+Relies on benchmark artifacts (run ``python -m benchmarks.run --only fig2``
+first, or it will build the pipeline from scratch).
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+sys.path.insert(0, ".")
+
+import numpy as np
+
+from benchmarks import common
+
+
+def bar(p: float, width: int = 30) -> str:
+    n = int(p * width)
+    return "#" * n + "." * (width - n)
+
+
+def main():
+    pipe = common.build_pipeline()
+    scores = common.variant_scores(pipe, "test", "consistent")
+    feats = pipe.feats["test"]
+    # pick a solvable trace with a long overthink tail
+    pick = max(
+        range(len(feats)),
+        key=lambda i: (feats[i].trace.solvable, feats[i].n_steps))
+    f, s = feats[pick], scores[pick]
+    tr = f.trace
+    kinds = []
+    # recover step kinds from labels for display
+    for t in range(f.n_steps):
+        if tr.labels.is_leaf[t] and tr.labels.is_novel[t]:
+            kinds.append("ANSWER ")
+        elif tr.labels.is_leaf[t]:
+            kinds.append("reattempt")
+        elif tr.labels.is_novel[t]:
+            kinds.append("progress")
+        else:
+            kinds.append("backtrack")
+    print(f"trace: solvable={tr.solvable} true_answer={tr.true_answer} "
+          f"final={tr.final_answer} steps={f.n_steps}")
+    print(f"{'step':>4} {'kind':>10} {'P(consistent)':>14}  ")
+    for t in range(f.n_steps):
+        mark = " <- first correct" if (tr.labels.correct_at[t]
+                                       and not tr.labels.correct_at[:t].any()) else ""
+        print(f"{t:4d} {kinds[t]:>10} {s[t]:14.3f}  |{bar(s[t])}|{mark}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Architecture config registry.
+
+``get_config(arch_id)`` returns the full assigned-architecture config;
+``get_reduced(arch_id)`` returns the CPU-smoke-test variant of the same family.
+"""
+
+from repro.configs.base import INPUT_SHAPES, SHAPES, InputShape, ModelConfig
+
+from repro.configs import (
+    chatglm3_6b,
+    hymba_1_5b,
+    llama32_vision_11b,
+    mamba2_2_7b,
+    minicpm_2b,
+    musicgen_large,
+    phi3_mini_3_8b,
+    phi35_moe_42b,
+    qwen2_moe_a2_7b,
+    qwen3_8b,
+)
+
+_MODULES = (
+    chatglm3_6b,
+    qwen2_moe_a2_7b,
+    llama32_vision_11b,
+    mamba2_2_7b,
+    phi3_mini_3_8b,
+    minicpm_2b,
+    phi35_moe_42b,
+    hymba_1_5b,
+    musicgen_large,
+    qwen3_8b,
+)
+
+REGISTRY = {m.ARCH_ID: m for m in _MODULES}
+ARCH_IDS = tuple(REGISTRY)
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id not in REGISTRY:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(REGISTRY)}")
+    return REGISTRY[arch_id].config()
+
+
+def get_reduced(arch_id: str) -> ModelConfig:
+    if arch_id not in REGISTRY:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(REGISTRY)}")
+    return REGISTRY[arch_id].reduced()
+
+
+__all__ = [
+    "ARCH_IDS",
+    "INPUT_SHAPES",
+    "REGISTRY",
+    "SHAPES",
+    "InputShape",
+    "ModelConfig",
+    "get_config",
+    "get_reduced",
+]

@@ -1,0 +1,185 @@
+"""Model / run configuration dataclasses.
+
+One ``ModelConfig`` covers all six assigned architecture families (dense, moe,
+vlm, ssm, hybrid, audio).  Family-specific fields default to "off" so a dense
+config stays small.  Every assigned architecture gets its own module in this
+package with a ``config()`` (full size, exact paper/model-card dims) and a
+``reduced()`` (smoke-test size: <=2 layers, d_model<=512, <=4 experts).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int = 0            # routed experts
+    top_k: int = 0
+    num_shared_experts: int = 0     # always-active experts (Qwen2-MoE style)
+    expert_d_ff: int = 0            # per-expert FFN width
+    router_aux_coef: float = 0.01   # load-balance loss coefficient
+    router_jitter: float = 0.0
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """Mamba-2 SSD parameters (arXiv:2405.21060)."""
+    d_state: int = 0
+    head_dim: int = 64              # SSD head dim (paper's P)
+    expand: int = 2                 # d_inner = expand * d_model
+    chunk_size: int = 256           # SSD chunk length
+    conv_width: int = 4             # depthwise causal conv window
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def num_heads(self, d_model: int) -> int:
+        return self.d_inner(d_model) // self.head_dim
+
+
+@dataclass(frozen=True)
+class CrossAttnConfig:
+    """Cross-attention to stub modality embeddings (VLM image / audio cond)."""
+    every_n_layers: int = 0         # 0 = no cross-attn; musicgen uses 1 (every layer)
+    num_context_tokens: int = 0     # precomputed patch/frame/conditioning tokens
+    context_dim: int = 0            # dim of stub embeddings (projected to d_model)
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    arch_id: str
+    family: str                     # dense | moe | vlm | ssm | hybrid | audio
+    citation: str
+
+    num_layers: int = 0
+    d_model: int = 0
+    num_heads: int = 0
+    num_kv_heads: int = 0
+    head_dim: int = 0               # 0 -> d_model // num_heads
+    d_ff: int = 0
+    vocab_size: int = 0
+
+    # attention flavor
+    rope: str = "rope"              # rope | rope2d (partial-dim GLM) | none
+    rope_theta: float = 10000.0
+    qk_norm: bool = False
+    attn_logit_softcap: float = 0.0
+    sliding_window: int = 0         # 0 = full attention (training/prefill)
+    native_swa: bool = False        # True: SWA is part of the arch (Phi-3, Hymba)
+                                    # False: sliding_window is only the long_500k
+                                    # decode variant; train/prefill stay full.
+
+    # norms / activations
+    norm: str = "rmsnorm"           # rmsnorm | layernorm
+    norm_eps: float = 1e-5
+    activation: str = "swiglu"      # swiglu | gelu
+    residual_scale: float = 1.0     # MiniCPM depth-scaled residual
+    tie_embeddings: bool = False
+
+    moe: MoEConfig = field(default_factory=MoEConfig)
+    ssm: SSMConfig = field(default_factory=SSMConfig)
+    cross_attn: CrossAttnConfig = field(default_factory=CrossAttnConfig)
+
+    # hybrid (Hymba): parallel attention + SSM heads inside each layer
+    hybrid_parallel: bool = False
+
+    # audio (MusicGen): K codebook streams, summed embeddings, K LM heads
+    num_codebooks: int = 0
+
+    # thought-calibration hook
+    probe_dim: int = 256            # PCA dim for probes (paper: 256)
+
+    max_seq_len: int = 524_288
+    dtype: str = "bfloat16"
+
+    # -- derived ---------------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // max(self.num_heads, 1)
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab padded so the LM head shards cleanly over 16-way model axis."""
+        return _round_up(self.vocab_size, 256)
+
+    @property
+    def q_dim(self) -> int:
+        return self.num_heads * self.resolved_head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.num_kv_heads * self.resolved_head_dim
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def uses_ssm(self) -> bool:
+        return self.family in ("ssm", "hybrid")
+
+    @property
+    def uses_cross_attn(self) -> bool:
+        return self.cross_attn.every_n_layers > 0
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    # -- parameter count (for 6ND roofline term) --------------------------
+    def param_count(self, active_only: bool = False) -> int:
+        d, f, L = self.d_model, self.d_ff, self.num_layers
+        hd = self.resolved_head_dim
+        n = self.padded_vocab * d                     # embedding
+        if not self.tie_embeddings:
+            n += self.padded_vocab * d * max(1, self.num_codebooks or 1)
+        per_layer = 0
+        if self.family != "ssm":
+            per_layer += d * (self.q_dim + 2 * self.kv_dim)  # qkv
+            per_layer += self.q_dim * d                       # o
+        if self.family == "moe":
+            e = self.moe
+            n_routed = e.top_k if active_only else e.num_experts
+            per_layer += (n_routed + e.num_shared_experts) * 3 * d * e.expert_d_ff
+            per_layer += d * e.num_experts                    # router
+        elif f:
+            mult = 3 if self.activation == "swiglu" else 2
+            per_layer += mult * d * f
+        if self.uses_ssm:
+            s = self.ssm
+            di = s.d_inner(d)
+            nh = s.num_heads(d)
+            # wz + wx (d->di each), wB + wC (d->N, shared over heads),
+            # wdt (d->H), out proj (di->d), depthwise convs
+            per_layer += (2 * d * di + 2 * d * s.d_state + d * nh
+                          + di * d + (di + 2 * s.d_state) * s.conv_width)
+        if self.uses_cross_attn:
+            ca_layers = (L // self.cross_attn.every_n_layers)
+            per_layer += (d * (self.q_dim + 2 * self.kv_dim) + self.q_dim * d) * ca_layers / L
+        return int(n + per_layer * L)
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                       # train | prefill | decode
+
+
+INPUT_SHAPES: Tuple[InputShape, ...] = (
+    InputShape("train_4k", 4_096, 256, "train"),
+    InputShape("prefill_32k", 32_768, 32, "prefill"),
+    InputShape("decode_32k", 32_768, 128, "decode"),
+    InputShape("long_500k", 524_288, 1, "decode"),
+)
+
+SHAPES = {s.name: s for s in INPUT_SHAPES}

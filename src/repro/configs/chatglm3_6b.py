@@ -1,0 +1,30 @@
+"""ChatGLM3-6B [dense] — RoPE-2d (partial rotary), GQA kv=2 [arXiv:2406.12793]."""
+from repro.configs.base import ModelConfig
+
+ARCH_ID = "chatglm3-6b"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        arch_id=ARCH_ID,
+        family="dense",
+        citation="arXiv:2406.12793 (GLM / ChatGLM family)",
+        num_layers=28,
+        d_model=4096,
+        num_heads=32,
+        num_kv_heads=2,
+        head_dim=128,
+        d_ff=13696,
+        vocab_size=65024,
+        rope="rope2d",              # GLM applies rotary to half the head dim
+        norm="rmsnorm",
+        activation="swiglu",
+        sliding_window=8192,        # SWA decode variant enables long_500k
+    )
+
+
+def reduced() -> ModelConfig:
+    return config().replace(
+        num_layers=2, d_model=256, num_heads=4, num_kv_heads=2, head_dim=64,
+        d_ff=512, vocab_size=512, max_seq_len=2048, sliding_window=128,
+    )

@@ -1,0 +1,39 @@
+"""Hymba-1.5B [hybrid] — parallel attention + mamba heads per layer [arXiv:2411.13676].
+
+Hymba fuses attention heads and SSM heads *in parallel* within each block and uses
+sliding-window attention for most layers; we model all layers as parallel
+(SWA-attention || SSD) with mean-fused outputs.
+"""
+from repro.configs.base import ModelConfig, SSMConfig
+
+ARCH_ID = "hymba-1.5b"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        arch_id=ARCH_ID,
+        family="hybrid",
+        citation="arXiv:2411.13676 (Hymba)",
+        num_layers=32,
+        d_model=1600,
+        num_heads=25,
+        num_kv_heads=5,
+        head_dim=64,
+        d_ff=5504,
+        vocab_size=32001,
+        rope="rope",
+        norm="rmsnorm",
+        activation="swiglu",
+        hybrid_parallel=True,
+        sliding_window=2048,          # Hymba uses SWA in hybrid layers
+        native_swa=True,
+        ssm=SSMConfig(d_state=16, head_dim=64, expand=2, chunk_size=256),
+    )
+
+
+def reduced() -> ModelConfig:
+    return config().replace(
+        num_layers=2, d_model=256, num_heads=4, num_kv_heads=2, head_dim=64,
+        d_ff=512, vocab_size=512, max_seq_len=2048, sliding_window=128,
+        ssm=SSMConfig(d_state=8, head_dim=32, expand=2, chunk_size=64),
+    )

@@ -1,0 +1,42 @@
+"""Llama-3.2-11B-Vision [vlm] — cross-attn image layers [hf:meta-llama/Llama-3.2-11B-Vision].
+
+Backbone only: the ViT vision encoder + projector is a STUB — ``input_specs``
+provides precomputed patch embeddings consumed through cross-attention layers
+interleaved every 5th layer.
+"""
+from repro.configs.base import CrossAttnConfig, ModelConfig
+
+ARCH_ID = "llama-3.2-vision-11b"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        arch_id=ARCH_ID,
+        family="vlm",
+        citation="hf:meta-llama/Llama-3.2-11B-Vision",
+        num_layers=40,
+        d_model=4096,
+        num_heads=32,
+        num_kv_heads=8,
+        head_dim=128,
+        d_ff=14336,
+        vocab_size=128256,
+        rope="rope",
+        rope_theta=500000.0,
+        norm="rmsnorm",
+        activation="swiglu",
+        sliding_window=8192,
+        cross_attn=CrossAttnConfig(
+            every_n_layers=5,          # 8 cross-attn layers of 40
+            num_context_tokens=1601,   # 1 global + 1600 patches (560px/14 tiles)
+            context_dim=1280,          # ViT-H width (stub embeddings)
+        ),
+    )
+
+
+def reduced() -> ModelConfig:
+    return config().replace(
+        num_layers=2, d_model=256, num_heads=4, num_kv_heads=2, head_dim=64,
+        d_ff=512, vocab_size=512, max_seq_len=2048, sliding_window=128,
+        cross_attn=CrossAttnConfig(every_n_layers=2, num_context_tokens=16, context_dim=64),
+    )

@@ -1,0 +1,28 @@
+"""Mamba2-2.7B [ssm] — SSD (state-space duality), attention-free [arXiv:2405.21060]."""
+from repro.configs.base import ModelConfig, SSMConfig
+
+ARCH_ID = "mamba2-2.7b"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        arch_id=ARCH_ID,
+        family="ssm",
+        citation="arXiv:2405.21060 (Mamba-2 / SSD)",
+        num_layers=64,
+        d_model=2560,
+        num_heads=0,
+        num_kv_heads=0,
+        d_ff=0,                       # attention-free, no separate FFN (Mamba block only)
+        vocab_size=50280,
+        rope="none",
+        norm="rmsnorm",
+        ssm=SSMConfig(d_state=128, head_dim=64, expand=2, chunk_size=256),
+    )
+
+
+def reduced() -> ModelConfig:
+    return config().replace(
+        num_layers=2, d_model=256, vocab_size=512, max_seq_len=2048,
+        ssm=SSMConfig(d_state=16, head_dim=32, expand=2, chunk_size=64),
+    )

@@ -1,0 +1,35 @@
+"""MiniCPM-2B [dense] — llama-like, WSD LR schedule, depth-scaled residual [arXiv:2404.06395]."""
+import math
+
+from repro.configs.base import ModelConfig
+
+ARCH_ID = "minicpm-2b"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        arch_id=ARCH_ID,
+        family="dense",
+        citation="arXiv:2404.06395 (MiniCPM)",
+        num_layers=40,
+        d_model=2304,
+        num_heads=36,
+        num_kv_heads=36,
+        head_dim=64,
+        d_ff=5760,
+        vocab_size=122753,
+        rope="rope",
+        norm="rmsnorm",
+        activation="swiglu",
+        tie_embeddings=True,
+        residual_scale=1.4 / math.sqrt(40),   # MiniCPM depth scaling
+        sliding_window=8192,
+    )
+
+
+def reduced() -> ModelConfig:
+    return config().replace(
+        num_layers=2, d_model=256, num_heads=4, num_kv_heads=4, head_dim=64,
+        d_ff=512, vocab_size=512, max_seq_len=2048, sliding_window=128,
+        residual_scale=1.4 / math.sqrt(2),
+    )

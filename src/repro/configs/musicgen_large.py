@@ -1,0 +1,42 @@
+"""MusicGen-large [audio] — decoder-only over EnCodec tokens [arXiv:2306.05284].
+
+Backbone only: the EnCodec conv codec + T5 text encoder are STUBS —
+``input_specs`` provides K=4 codebook token streams and precomputed text
+conditioning embeddings consumed via cross-attention (every layer).
+"""
+from repro.configs.base import CrossAttnConfig, ModelConfig
+
+ARCH_ID = "musicgen-large"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        arch_id=ARCH_ID,
+        family="audio",
+        citation="arXiv:2306.05284 (MusicGen)",
+        num_layers=48,
+        d_model=2048,
+        num_heads=32,
+        num_kv_heads=32,
+        head_dim=64,
+        d_ff=8192,
+        vocab_size=2048,             # EnCodec codebook size
+        rope="none",                 # MusicGen uses learned/sinusoidal positions
+        norm="layernorm",
+        activation="gelu",
+        num_codebooks=4,
+        sliding_window=8192,
+        cross_attn=CrossAttnConfig(
+            every_n_layers=1,          # cross-attend to T5 conditioning each layer
+            num_context_tokens=64,
+            context_dim=1024,          # T5-large width (stub)
+        ),
+    )
+
+
+def reduced() -> ModelConfig:
+    return config().replace(
+        num_layers=2, d_model=256, num_heads=4, num_kv_heads=4, head_dim=64,
+        d_ff=512, vocab_size=256, max_seq_len=2048, num_codebooks=2, sliding_window=128,
+        cross_attn=CrossAttnConfig(every_n_layers=1, num_context_tokens=8, context_dim=64),
+    )

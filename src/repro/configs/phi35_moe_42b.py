@@ -1,0 +1,32 @@
+"""Phi-3.5-MoE-42B (A6.6B) [moe] — 16 experts top-2 [hf:microsoft/Phi-3.5-MoE-instruct]."""
+from repro.configs.base import ModelConfig, MoEConfig
+
+ARCH_ID = "phi3.5-moe-42b-a6.6b"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        arch_id=ARCH_ID,
+        family="moe",
+        citation="hf:microsoft/Phi-3.5-MoE-instruct",
+        num_layers=32,
+        d_model=4096,
+        num_heads=32,
+        num_kv_heads=8,
+        head_dim=128,
+        d_ff=6400,
+        vocab_size=32064,
+        rope="rope",
+        norm="layernorm",            # Phi-MoE uses LayerNorm
+        activation="swiglu",
+        sliding_window=8192,
+        moe=MoEConfig(num_experts=16, top_k=2, num_shared_experts=0, expert_d_ff=6400),
+    )
+
+
+def reduced() -> ModelConfig:
+    return config().replace(
+        num_layers=2, d_model=256, num_heads=4, num_kv_heads=2, head_dim=64,
+        d_ff=128, vocab_size=512, max_seq_len=2048, sliding_window=128,
+        moe=MoEConfig(num_experts=4, top_k=2, num_shared_experts=0, expert_d_ff=128),
+    )

@@ -1,0 +1,31 @@
+"""Phi-3-mini-3.8B [dense] — RoPE SwiGLU, MHA (kv=32), native SWA [arXiv:2404.14219]."""
+from repro.configs.base import ModelConfig
+
+ARCH_ID = "phi3-mini-3.8b"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        arch_id=ARCH_ID,
+        family="dense",
+        citation="arXiv:2404.14219 (Phi-3)",
+        num_layers=32,
+        d_model=3072,
+        num_heads=32,
+        num_kv_heads=32,
+        head_dim=96,
+        d_ff=8192,
+        vocab_size=32064,
+        rope="rope",
+        norm="rmsnorm",
+        activation="swiglu",
+        sliding_window=2047,          # Phi-3 native sliding window
+        native_swa=True,
+    )
+
+
+def reduced() -> ModelConfig:
+    return config().replace(
+        num_layers=2, d_model=256, num_heads=4, num_kv_heads=4, head_dim=64,
+        d_ff=512, vocab_size=512, max_seq_len=2048, sliding_window=128,
+    )

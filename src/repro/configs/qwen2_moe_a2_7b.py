@@ -1,0 +1,34 @@
+"""Qwen1.5/2-MoE-A2.7B [moe] — 4 shared + 60 routed top-4 [hf:Qwen/Qwen1.5-MoE-A2.7B]."""
+from repro.configs.base import ModelConfig, MoEConfig
+
+ARCH_ID = "qwen2-moe-a2.7b"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        arch_id=ARCH_ID,
+        family="moe",
+        citation="hf:Qwen/Qwen1.5-MoE-A2.7B",
+        num_layers=24,
+        d_model=2048,
+        num_heads=16,
+        num_kv_heads=16,
+        head_dim=128,
+        d_ff=1408,                  # per-expert width
+        vocab_size=151936,
+        rope="rope",
+        norm="rmsnorm",
+        activation="swiglu",
+        sliding_window=8192,
+        moe=MoEConfig(
+            num_experts=60, top_k=4, num_shared_experts=4, expert_d_ff=1408,
+        ),
+    )
+
+
+def reduced() -> ModelConfig:
+    return config().replace(
+        num_layers=2, d_model=256, num_heads=4, num_kv_heads=4, head_dim=64,
+        d_ff=128, vocab_size=512, max_seq_len=2048, sliding_window=128,
+        moe=MoEConfig(num_experts=4, top_k=2, num_shared_experts=1, expert_d_ff=128),
+    )

@@ -1,0 +1,32 @@
+"""Qwen3-8B [dense] — qk_norm, GQA kv=8 [hf:Qwen/Qwen3-8B]."""
+from repro.configs.base import ModelConfig
+
+ARCH_ID = "qwen3-8b"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        arch_id=ARCH_ID,
+        family="dense",
+        citation="hf:Qwen/Qwen3-8B",
+        num_layers=36,
+        d_model=4096,
+        num_heads=32,
+        num_kv_heads=8,
+        head_dim=128,
+        d_ff=12288,
+        vocab_size=151936,
+        rope="rope",
+        rope_theta=1000000.0,
+        qk_norm=True,
+        norm="rmsnorm",
+        activation="swiglu",
+        sliding_window=8192,
+    )
+
+
+def reduced() -> ModelConfig:
+    return config().replace(
+        num_layers=2, d_model=256, num_heads=4, num_kv_heads=2, head_dim=64,
+        d_ff=512, vocab_size=512, max_seq_len=2048, sliding_window=128,
+    )

@@ -1,0 +1,29 @@
+"""Thought calibration — the paper's contribution as a composable module."""
+
+from repro.core.calibration import (
+    CalibrationResult,
+    binomial_tail_pvalue,
+    calibrate_stopping_rule,
+    fixed_sequence_test,
+    smooth_scores,
+    stopping_time,
+)
+from repro.core.controller import (
+    ControllerConfig,
+    ControllerState,
+    ProbeParams,
+    init_probe_params,
+    init_state,
+    score_step,
+    update,
+)
+from repro.core.pca import PCA, fit_pca, pad_components, transform
+from repro.core.probes import TrainedProbe, auroc, probe_scores, train_probe
+from repro.core.risks import (
+    TraceLabels,
+    empirical_risk_curve,
+    probe_targets,
+    risk_correctness_drop,
+    risk_inconsistency,
+)
+from repro.core.segmentation import Segmentation, segment_mean_pool, segment_steps

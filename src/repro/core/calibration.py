@@ -1,0 +1,171 @@
+"""Learn-then-Test calibration of the stopping rule (paper §3.1).
+
+Hyperparameter (threshold λ) selection is multiple hypothesis testing:
+for a descending grid Λ = {λ_1 > λ_2 > ...}, each λ_j carries the null
+
+    H_j : E[R(y_{t(λ_j)})] > δ
+
+where t(λ) is the (per-example) stopping time induced by threshold λ and R is
+a bounded risk.  With a valid p-value p_j (binomial tail bound, Eq. 5) and
+*fixed sequence testing* — justified because risk is expected to be monotone
+in λ (G_t ⊆ G_T) — the returned λ̂ satisfies
+
+    P( E[R(y_t)] ≤ δ )  ≥  1 − ε        (over draws of the calibration set)
+
+which is Theorem 3.4 (FWER control ⇒ risk control, Angelopoulos et al. 2021).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional, Sequence
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# binomial tail p-value
+# ---------------------------------------------------------------------------
+
+def _log_binom_pmf(k: np.ndarray, n: int, p: float) -> np.ndarray:
+    from math import lgamma
+    k = np.asarray(k, np.float64)
+    logc = (
+        lgamma(n + 1)
+        - np.vectorize(lgamma)(k + 1)
+        - np.vectorize(lgamma)(n - k + 1)
+    )
+    with np.errstate(divide="ignore"):
+        return logc + k * np.log(max(p, 1e-300)) + (n - k) * np.log(max(1 - p, 1e-300))
+
+
+def binom_cdf(k: int, n: int, p: float) -> float:
+    """P(Binom(n, p) <= k), exact summation in log space (no scipy)."""
+    if k < 0:
+        return 0.0
+    if k >= n:
+        return 1.0
+    if p <= 0.0:
+        return 1.0
+    if p >= 1.0:
+        return 0.0
+    ks = np.arange(0, k + 1)
+    logs = _log_binom_pmf(ks, n, p)
+    mx = logs.max()
+    return float(min(1.0, math.exp(mx) * np.exp(logs - mx).sum()))
+
+
+def binomial_tail_pvalue(emp_risk: float, n: int, delta: float) -> float:
+    """Hoeffding–Bentkus-style binomial tail p-value for H: E[R] > delta.
+
+    p = P(Binom(n, delta) <= ceil(n * R̂_n)) — super-uniform under H for
+    bounded risks (Quach et al. 2024, Eq. 5 of the paper).
+    """
+    k = int(math.ceil(n * emp_risk - 1e-12))
+    return binom_cdf(k, n, delta)
+
+
+# ---------------------------------------------------------------------------
+# fixed sequence testing
+# ---------------------------------------------------------------------------
+
+@dataclass
+class CalibrationResult:
+    lam: Optional[float]          # selected threshold (None: no valid λ — never stop early)
+    lam_grid: List[float]
+    p_values: List[float]
+    emp_risks: List[float]
+    n: int
+    delta: float
+    epsilon: float
+
+
+def fixed_sequence_test(
+    lam_grid: Sequence[float],
+    risk_at_lambda: Callable[[float], np.ndarray],
+    delta: float,
+    epsilon: float,
+) -> CalibrationResult:
+    """Walk Λ in the given (descending = most-conservative-first) order;
+    reject while p_j ≤ ε; return the last rejected λ (the smallest valid
+    threshold, i.e. the earliest-stopping calibrated rule).
+
+    ``risk_at_lambda(λ)`` returns the per-example risk vector R_i ∈ [0, 1]
+    on the calibration set when stopping with threshold λ.
+    """
+    pvals: List[float] = []
+    risks: List[float] = []
+    selected: Optional[float] = None
+    for lam in lam_grid:
+        r = np.asarray(risk_at_lambda(float(lam)), np.float64)
+        n = r.size
+        emp = float(r.mean()) if n else 1.0
+        p = binomial_tail_pvalue(emp, n, delta)
+        pvals.append(p)
+        risks.append(emp)
+        if p <= epsilon:
+            selected = float(lam)     # H_j rejected: λ_j is risk-controlling
+        else:
+            break                      # stop at first failure (fixed sequence)
+    return CalibrationResult(
+        lam=selected,
+        lam_grid=[float(l) for l in lam_grid[: len(pvals)]],
+        p_values=pvals,
+        emp_risks=risks,
+        n=n if pvals else 0,
+        delta=delta,
+        epsilon=epsilon,
+    )
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: calibrate a probe-threshold stopping rule
+# ---------------------------------------------------------------------------
+
+def stopping_time(scores: np.ndarray, lam: float, min_steps: int = 1) -> int:
+    """First step t with smoothed score ≥ λ (1-indexed count of steps kept);
+    returns len(scores) if never triggered."""
+    s = np.asarray(scores)
+    idx = np.nonzero(s[min_steps - 1 :] >= lam)[0]
+    if idx.size == 0:
+        return len(s)
+    return int(idx[0]) + min_steps
+
+
+def smooth_scores(scores: np.ndarray, window: int = 10) -> np.ndarray:
+    """Trailing-window mean (paper: averaged over a window of 10 steps)."""
+    s = np.asarray(scores, np.float64)
+    if s.size == 0:
+        return s
+    out = np.empty_like(s)
+    csum = np.cumsum(s)
+    for t in range(len(s)):
+        lo = max(0, t - window + 1)
+        tot = csum[t] - (csum[lo - 1] if lo > 0 else 0.0)
+        out[t] = tot / (t - lo + 1)
+    return out
+
+
+def calibrate_stopping_rule(
+    per_trace_scores: Sequence[np.ndarray],   # smoothed probe scores per calib trace
+    per_trace_risk: Callable[[int, int], float],
+    # (trace_idx, stop_step) -> risk in [0,1]
+    *,
+    delta: float,
+    epsilon: float,
+    lam_grid: Optional[Sequence[float]] = None,
+    min_steps: int = 1,
+) -> CalibrationResult:
+    """Calibrate λ for "stop when smoothed score ≥ λ" (descending grid)."""
+    if lam_grid is None:
+        lam_grid = np.linspace(1.0, 0.0, 51)
+
+    def risk_at(lam: float) -> np.ndarray:
+        out = np.empty(len(per_trace_scores))
+        for i, sc in enumerate(per_trace_scores):
+            t = stopping_time(sc, lam, min_steps)
+            out[i] = per_trace_risk(i, t)
+        return out
+
+    return fixed_sequence_test(list(lam_grid), risk_at, delta, epsilon)

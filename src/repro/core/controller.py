@@ -1,0 +1,152 @@
+"""Online early-exit controller — thought calibration in the decode loop.
+
+This is the piece the paper could not run online (their probes were applied
+to exported hidden states offline); here the whole decision rule is a pure
+``jnp`` state machine living inside the jitted serve step:
+
+per generated token:
+  1. accumulate the token's last-layer hidden state into the current step's
+     running mean (``rep_sum`` / ``tok_cnt``);
+  2. if the token is a boundary *and* the step contained a marker token
+     ("wait"/"but"), close the step: PCA-project the mean rep, score with the
+     probe(s), push into a 10-step smoothing window;
+  3. exit the lane when the smoothed score ≥ λ̂ (the LTT-calibrated
+     threshold) and ≥ ``min_steps`` steps have closed.
+
+Exited lanes keep a frozen state (masked updates) so the batched decode step
+stays shape-stable — SIMD predication, the TPU-idiomatic form of eviction.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class ControllerConfig:
+    boundary_ids: Tuple[int, ...]
+    marker_ids: Tuple[int, ...]
+    window: int = 10          # smoothing window (paper: 10 steps)
+    min_steps: int = 2
+    probe_dim: int = 256      # PCA dim
+
+
+class ProbeParams(NamedTuple):
+    """PCA + linear head(s). For 'novel_leaf', head2 is the novelty head and
+    f = sigmoid(leaf) * (1 - sigmoid(novel)); otherwise head2 is ignored."""
+    pca_mean: jax.Array       # (D,)
+    pca_comps: jax.Array      # (D, K)
+    w1: jax.Array             # (K,)
+    b1: jax.Array             # ()
+    w2: jax.Array             # (K,)
+    b2: jax.Array             # ()
+    lam: jax.Array            # () calibrated threshold
+    compose: jax.Array        # () int32: 0 = single head, 1 = novel-leaf
+
+
+class ControllerState(NamedTuple):
+    rep_sum: jax.Array        # (B, D) f32
+    tok_cnt: jax.Array        # (B,)   f32
+    has_marker: jax.Array     # (B,)   bool
+    win: jax.Array            # (B, W) f32 probe-score ring
+    win_n: jax.Array          # (B,)   i32 scores pushed so far
+    smoothed: jax.Array       # (B,)   f32 current smoothed score
+    steps: jax.Array          # (B,)   i32 closed steps
+    done: jax.Array           # (B,)   bool
+    exit_pos: jax.Array       # (B,)   i32 token position at exit (-1 = active)
+
+
+def init_state(batch: int, d_model: int, window: int) -> ControllerState:
+    return ControllerState(
+        rep_sum=jnp.zeros((batch, d_model), jnp.float32),
+        tok_cnt=jnp.zeros((batch,), jnp.float32),
+        has_marker=jnp.zeros((batch,), bool),
+        win=jnp.zeros((batch, window), jnp.float32),
+        win_n=jnp.zeros((batch,), jnp.int32),
+        smoothed=jnp.zeros((batch,), jnp.float32),
+        steps=jnp.zeros((batch,), jnp.int32),
+        done=jnp.zeros((batch,), bool),
+        exit_pos=jnp.full((batch,), -1, jnp.int32),
+    )
+
+
+def init_probe_params(d_model: int, k: int) -> ProbeParams:
+    return ProbeParams(
+        pca_mean=jnp.zeros((d_model,), jnp.float32),
+        pca_comps=jnp.zeros((d_model, k), jnp.float32),
+        w1=jnp.zeros((k,), jnp.float32),
+        b1=jnp.zeros((), jnp.float32),
+        w2=jnp.zeros((k,), jnp.float32),
+        b2=jnp.zeros((), jnp.float32),
+        lam=jnp.ones((), jnp.float32),
+        compose=jnp.zeros((), jnp.int32),
+    )
+
+
+def _isin(tokens: jax.Array, ids: Sequence[int]) -> jax.Array:
+    if len(ids) == 0:
+        return jnp.zeros(tokens.shape, bool)
+    return jnp.isin(tokens, jnp.asarray(list(ids), tokens.dtype))
+
+
+def score_step(params: ProbeParams, rep: jax.Array) -> jax.Array:
+    """rep: (B, D) mean step representation -> (B,) probe probability."""
+    z = (rep - params.pca_mean) @ params.pca_comps            # (B, K)
+    p1 = jax.nn.sigmoid(z @ params.w1 + params.b1)
+    p2 = jax.nn.sigmoid(z @ params.w2 + params.b2)
+    composed = p1 * (1.0 - p2)                                 # novel-leaf form
+    return jnp.where(params.compose > 0, composed, p1)
+
+
+def update(
+    ctrl: ControllerConfig,
+    params: ProbeParams,
+    state: ControllerState,
+    token: jax.Array,          # (B,) token just generated
+    hidden: jax.Array,         # (B, D) its last-layer hidden state
+    position: jax.Array,       # (B,) absolute position of that token
+) -> ControllerState:
+    b, d = hidden.shape
+    active = ~state.done
+
+    is_boundary = _isin(token, ctrl.boundary_ids) & active
+    is_marker = _isin(token, ctrl.marker_ids)
+
+    rep_sum = state.rep_sum + jnp.where(active[:, None], hidden.astype(jnp.float32), 0.0)
+    tok_cnt = state.tok_cnt + active.astype(jnp.float32)
+    has_marker = state.has_marker | (is_marker & active)
+
+    close = is_boundary & has_marker                           # step closes now
+    rep = rep_sum / jnp.maximum(tok_cnt, 1.0)[:, None]
+    score = score_step(params, rep)                            # (B,)
+
+    # push score into the smoothing ring where a step closed
+    slot = state.win_n % ctrl.window
+    win = jnp.where(
+        close[:, None] & (jnp.arange(ctrl.window)[None] == slot[:, None]),
+        score[:, None],
+        state.win,
+    )
+    win_n = state.win_n + close.astype(jnp.int32)
+    filled = jnp.minimum(win_n, ctrl.window).astype(jnp.float32)
+    win_mask = jnp.arange(ctrl.window)[None] < jnp.minimum(win_n, ctrl.window)[:, None]
+    smoothed_new = jnp.sum(win * win_mask, axis=1) / jnp.maximum(filled, 1.0)
+    smoothed = jnp.where(close, smoothed_new, state.smoothed)
+
+    steps = state.steps + close.astype(jnp.int32)
+    trigger = close & (smoothed >= params.lam) & (steps >= ctrl.min_steps)
+    done = state.done | trigger
+    exit_pos = jnp.where(trigger & (state.exit_pos < 0), position, state.exit_pos)
+
+    # reset per-step accumulators where the step closed
+    rep_sum = jnp.where(close[:, None], 0.0, rep_sum)
+    tok_cnt = jnp.where(close, 0.0, tok_cnt)
+    has_marker = jnp.where(close, False, has_marker)
+
+    return ControllerState(
+        rep_sum, tok_cnt, has_marker, win, win_n, smoothed, steps, done, exit_pos
+    )

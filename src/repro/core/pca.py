@@ -1,0 +1,45 @@
+"""PCA dimensionality reduction for step representations (paper §3.3, d=256)."""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class PCA(NamedTuple):
+    mean: jax.Array          # (D,)
+    components: jax.Array    # (D, K) — top-K right singular vectors
+    explained: jax.Array     # (K,) explained-variance ratios
+
+
+def fit_pca(x: jax.Array, k: int) -> PCA:
+    """x: (N, D) float. Returns projection to the top-``k`` principal axes."""
+    x = x.astype(jnp.float32)
+    mean = jnp.mean(x, axis=0)
+    xc = x - mean
+    # economical SVD on (N, D)
+    _, s, vt = jnp.linalg.svd(xc, full_matrices=False)
+    k = min(k, vt.shape[0])
+    comps = vt[:k].T                                     # (D, K)
+    var = (s ** 2) / jnp.maximum(x.shape[0] - 1, 1)
+    explained = var[:k] / jnp.maximum(jnp.sum(var), 1e-12)
+    return PCA(mean, comps, explained)
+
+
+def transform(pca: PCA, x: jax.Array) -> jax.Array:
+    return (x.astype(jnp.float32) - pca.mean) @ pca.components
+
+
+def pad_components(pca: PCA, k: int) -> PCA:
+    """Zero-pad to exactly ``k`` components (fixed probe input width)."""
+    d, kk = pca.components.shape
+    if kk >= k:
+        return PCA(pca.mean, pca.components[:, :k], pca.explained[:k])
+    pad = jnp.zeros((d, k - kk), jnp.float32)
+    return PCA(
+        pca.mean,
+        jnp.concatenate([pca.components, pad], axis=1),
+        jnp.concatenate([pca.explained, jnp.zeros((k - kk,), jnp.float32)]),
+    )

@@ -1,0 +1,244 @@
+"""Probes over step representations (paper §3.3, Appendix B.1).
+
+Three architectures, matching the paper's ablation:
+
+* ``LinearProbe``  — logistic regression on PCA-reduced reps (the default;
+  the paper's main results use this to avoid overfitting on ~500 traces).
+* ``MLPProbe``     — 1–2 hidden layers.
+* ``TransformerProbe`` — causal sequence labeling over the step-rep sequence
+  (operates on the *raw* d_model reps, per the paper's finding).
+
+All train with full-batch Adam + BCE and early stopping on validation AUROC.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+
+def auroc(scores: np.ndarray, labels: np.ndarray) -> float:
+    """Rank-based AUROC (ties handled by average rank)."""
+    scores = np.asarray(scores, np.float64).ravel()
+    labels = np.asarray(labels).ravel().astype(bool)
+    n_pos = int(labels.sum())
+    n_neg = labels.size - n_pos
+    if n_pos == 0 or n_neg == 0:
+        return float("nan")
+    order = np.argsort(scores, kind="mergesort")
+    ranks = np.empty_like(order, dtype=np.float64)
+    sorted_scores = scores[order]
+    i = 0
+    r = 1.0
+    while i < len(sorted_scores):
+        j = i
+        while j + 1 < len(sorted_scores) and sorted_scores[j + 1] == sorted_scores[i]:
+            j += 1
+        avg = (r + r + (j - i)) / 2.0
+        ranks[order[i : j + 1]] = avg
+        r += j - i + 1
+        i = j + 1
+    return float((ranks[labels].sum() - n_pos * (n_pos + 1) / 2.0) / (n_pos * n_neg))
+
+
+# ---------------------------------------------------------------------------
+# parameter inits / applies
+# ---------------------------------------------------------------------------
+
+def init_linear(key, d: int) -> dict:
+    return {"w": jnp.zeros((d,), jnp.float32), "b": jnp.zeros((), jnp.float32)}
+
+
+def apply_linear(p: dict, x: jax.Array) -> jax.Array:
+    return x.astype(jnp.float32) @ p["w"] + p["b"]
+
+
+def init_mlp(key, d: int, hidden: Tuple[int, ...] = (64,)) -> dict:
+    ks = jax.random.split(key, len(hidden) + 1)
+    dims = (d, *hidden)
+    layers = [
+        {
+            "w": jax.random.normal(ks[i], (dims[i], dims[i + 1]), jnp.float32)
+            * (dims[i] ** -0.5),
+            "b": jnp.zeros((dims[i + 1],), jnp.float32),
+        }
+        for i in range(len(hidden))
+    ]
+    head = {"w": jnp.zeros((dims[-1],), jnp.float32), "b": jnp.zeros((), jnp.float32)}
+    return {"layers": layers, "head": head}
+
+
+def apply_mlp(p: dict, x: jax.Array) -> jax.Array:
+    h = x.astype(jnp.float32)
+    for layer in p["layers"]:
+        h = jax.nn.relu(h @ layer["w"] + layer["b"])
+    return h @ p["head"]["w"] + p["head"]["b"]
+
+
+def init_transformer(key, d_in: int, d_model: int = 32, n_layers: int = 1,
+                     n_heads: int = 4, d_ff: int = 64) -> dict:
+    ks = jax.random.split(key, 2 + n_layers)
+    p = {
+        "proj_in": jax.random.normal(ks[0], (d_in, d_model), jnp.float32) * d_in ** -0.5,
+        "layers": [],
+        "head": {"w": jnp.zeros((d_model,), jnp.float32), "b": jnp.zeros((), jnp.float32)},
+    }
+    for i in range(n_layers):
+        k1, k2, k3, k4 = jax.random.split(ks[1 + i], 4)
+        std = d_model ** -0.5
+        p["layers"].append({
+            "wqkv": jax.random.normal(k1, (d_model, 3 * d_model), jnp.float32) * std,
+            "wo": jax.random.normal(k2, (d_model, d_model), jnp.float32) * std,
+            "w1": jax.random.normal(k3, (d_model, d_ff), jnp.float32) * std,
+            "w2": jax.random.normal(k4, (d_ff, d_model), jnp.float32) * (d_ff ** -0.5),
+            "ln1": jnp.ones((d_model,), jnp.float32),
+            "ln2": jnp.ones((d_model,), jnp.float32),
+        })
+    return p
+
+
+def _probe_rmsnorm(x, g):
+    return x * jax.lax.rsqrt(jnp.mean(x * x, -1, keepdims=True) + 1e-6) * g
+
+
+def apply_transformer(p: dict, x: jax.Array, mask: Optional[jax.Array] = None,
+                      n_heads: int = 4) -> jax.Array:
+    """x: (T, D_in) step reps -> (T,) per-step logits (causal)."""
+    t = x.shape[0]
+    dm, nh = p["proj_in"].shape[1], n_heads
+    hd = dm // nh
+    pos = jnp.arange(t)[:, None]
+    dim = jnp.arange(0, dm, 2)[None, :]
+    angle = pos / (10000.0 ** (dim / dm))
+    pe = jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1)[:, :dm]
+    h = x.astype(jnp.float32) @ p["proj_in"] + pe
+    causal = jnp.tril(jnp.ones((t, t), bool))
+    if mask is not None:
+        causal = causal & mask[None, :]
+    for lp in p["layers"]:
+        hn = _probe_rmsnorm(h, lp["ln1"])
+        qkv = hn @ lp["wqkv"]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        q = q.reshape(t, nh, hd).swapaxes(0, 1)
+        k = k.reshape(t, nh, hd).swapaxes(0, 1)
+        v = v.reshape(t, nh, hd).swapaxes(0, 1)
+        att = (q @ k.swapaxes(-1, -2)) / math.sqrt(hd)
+        att = jnp.where(causal[None], att, -1e30)
+        o = jax.nn.softmax(att, -1) @ v
+        h = h + o.swapaxes(0, 1).reshape(t, dm) @ lp["wo"]
+        hn = _probe_rmsnorm(h, lp["ln2"])
+        h = h + jax.nn.relu(hn @ lp["w1"]) @ lp["w2"]
+    return h @ p["head"]["w"] + p["head"]["b"]
+
+
+# ---------------------------------------------------------------------------
+# training
+# ---------------------------------------------------------------------------
+
+@dataclass
+class TrainedProbe:
+    kind: str
+    params: dict
+    train_auroc: float
+    val_auroc: float
+
+
+def _bce(logits, labels, weights):
+    z = jnp.clip(logits, -30, 30)
+    l = jnp.maximum(z, 0) - z * labels + jnp.log1p(jnp.exp(-jnp.abs(z)))
+    return jnp.sum(l * weights) / jnp.maximum(jnp.sum(weights), 1.0)
+
+
+def train_probe(
+    key,
+    kind: str,
+    x: np.ndarray,            # (N, D) reps — or (N, T, D) for transformer
+    y: np.ndarray,            # (N,) or (N, T) binary labels
+    w: Optional[np.ndarray] = None,
+    *,
+    val_frac: float = 0.1,
+    lr: float = 1e-2,
+    steps: int = 300,
+    l2: float = 1e-4,
+    patience: int = 10,
+    mlp_hidden: Tuple[int, ...] = (64,),
+) -> TrainedProbe:
+    """Full-batch Adam + BCE with early stopping on val AUROC."""
+    x = jnp.asarray(x, jnp.float32)
+    y = jnp.asarray(y, jnp.float32)
+    w = jnp.ones(y.shape, jnp.float32) if w is None else jnp.asarray(w, jnp.float32)
+    n = x.shape[0]
+    n_val = max(int(n * val_frac), 1)
+    perm = jax.random.permutation(key, n)
+    vi, ti = perm[:n_val], perm[n_val:]
+
+    if kind == "linear":
+        params = init_linear(key, x.shape[-1])
+        fwd = lambda p, xx: apply_linear(p, xx)
+    elif kind == "mlp":
+        params = init_mlp(key, x.shape[-1], mlp_hidden)
+        fwd = lambda p, xx: apply_mlp(p, xx)
+    elif kind == "transformer":
+        params = init_transformer(key, x.shape[-1])
+        fwd = lambda p, xx: jax.vmap(lambda s: apply_transformer(p, s))(xx)
+    else:
+        raise ValueError(kind)
+
+    def loss_fn(p, xx, yy, ww):
+        logits = fwd(p, xx)
+        reg = 0.0
+        if kind == "linear":
+            reg = l2 * jnp.sum(p["w"] ** 2)
+        return _bce(logits, yy, ww) + reg
+
+    # minimal Adam
+    m = jax.tree.map(jnp.zeros_like, params)
+    v = jax.tree.map(jnp.zeros_like, params)
+
+    @jax.jit
+    def step_fn(p, m, v, t):
+        g = jax.grad(loss_fn)(p, x[ti], y[ti], w[ti])
+        m = jax.tree.map(lambda a, b: 0.9 * a + 0.1 * b, m, g)
+        v = jax.tree.map(lambda a, b: 0.999 * a + 0.001 * b * b, v, g)
+        mh = jax.tree.map(lambda a: a / (1 - 0.9 ** t), m)
+        vh = jax.tree.map(lambda a: a / (1 - 0.999 ** t), v)
+        p = jax.tree.map(lambda a, b, c: a - lr * b / (jnp.sqrt(c) + 1e-8), p, mh, vh)
+        return p, m, v
+
+    best_auc, best_params, bad = -1.0, params, 0
+    for t in range(1, steps + 1):
+        params, m, v = step_fn(params, m, v, t)
+        if t % 10 == 0 or t == steps:
+            val_scores = np.asarray(fwd(params, x[vi])).ravel()
+            val_auc = auroc(val_scores, np.asarray(y[vi]).ravel())
+            if math.isnan(val_auc) or val_auc > best_auc:
+                best_auc = -1.0 if math.isnan(val_auc) else val_auc
+                best_params, bad = params, 0
+            else:
+                bad += 1
+                if bad >= patience:
+                    break
+
+    train_scores = np.asarray(fwd(best_params, x[ti])).ravel()
+    tr_auc = auroc(train_scores, np.asarray(y[ti]).ravel())
+    return TrainedProbe(kind, best_params, tr_auc, best_auc)
+
+
+def probe_scores(probe: TrainedProbe, x) -> np.ndarray:
+    x = jnp.asarray(x, jnp.float32)
+    if probe.kind == "linear":
+        out = apply_linear(probe.params, x)
+    elif probe.kind == "mlp":
+        out = apply_mlp(probe.params, x)
+    else:
+        out = jax.vmap(lambda s: apply_transformer(probe.params, s))(x)
+    return np.asarray(jax.nn.sigmoid(out))

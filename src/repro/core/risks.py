@@ -1,0 +1,88 @@
+"""Risk functions for the three thought-calibration variants (paper §3.2).
+
+Each risk is bounded in [0, 1] and is evaluated at the stopping step t chosen
+by a candidate threshold λ:
+
+* Supervised / correctness (Eq. 6–7):
+    R = 1{correct at T} (1 − f_corr) + 1{wrong at T} f_corr
+  — but for *decision* risk we use the operational form: risk of stopping at t
+  is 1{answer at t would be wrong} when the full-budget answer is right
+  (i.e. performance lost by stopping).
+* Consistency (Eq. 8–9): risk of stopping at t is 1{z_t != z_T}.
+* Novel-leaf (Eq. 10–11): same consistency labels; the probe differs
+  (P(leaf) · (1 − P(novel))), not the risk.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Sequence
+
+import numpy as np
+
+
+@dataclass
+class TraceLabels:
+    """Per-step ground truth for one reasoning trace (from the verifier —
+    here the synthetic-trace generator, see repro.data.traces)."""
+    correct_at: np.ndarray      # (T,) bool — answer if stopped after step t is correct
+    consistent_at: np.ndarray   # (T,) bool — z_t == z_T
+    is_leaf: np.ndarray         # (T,) bool — step attempts an answer
+    is_novel: np.ndarray        # (T,) bool — step adds information to G
+    num_steps: int
+
+    def correct_final(self) -> bool:
+        return bool(self.correct_at[-1]) if len(self.correct_at) else False
+
+
+def risk_correctness_drop(labels: TraceLabels, stop_step: int) -> float:
+    """Performance lost by stopping: 1 if full budget answers correctly but
+    the truncated attempt does not. (Unsolvable traces contribute 0 — cannot
+    lose what was never gained; this is why λ=1 is still risk-controlling for
+    the *consistency* rule but NOT for raw correctness, per the paper.)"""
+    t = min(stop_step, labels.num_steps) - 1
+    if not labels.correct_final():
+        return 0.0
+    return 0.0 if bool(labels.correct_at[t]) else 1.0
+
+
+def risk_inconsistency(labels: TraceLabels, stop_step: int) -> float:
+    """1{z_t != z_T}: stopped answer differs from the full-budget answer."""
+    t = min(stop_step, labels.num_steps) - 1
+    return 0.0 if bool(labels.consistent_at[t]) else 1.0
+
+
+def probe_targets(labels: TraceLabels, kind: str) -> np.ndarray:
+    """Per-step binary training targets for each probe variant."""
+    if kind == "correct":
+        return labels.correct_at.astype(np.float32)
+    if kind == "consistent":
+        return labels.consistent_at.astype(np.float32)
+    if kind == "leaf":
+        return labels.is_leaf.astype(np.float32)
+    if kind == "novel":
+        return labels.is_novel.astype(np.float32)
+    if kind == "novel_leaf":
+        # f = P(leaf) * (1 - P(novel)): train the two factors separately; this
+        # target is the composed ground truth for evaluation.
+        return (labels.is_leaf & ~labels.is_novel).astype(np.float32)
+    raise ValueError(kind)
+
+
+def empirical_risk_curve(
+    all_labels: Sequence[TraceLabels],
+    all_scores: Sequence[np.ndarray],
+    lam: float,
+    kind: str,
+    min_steps: int = 1,
+) -> float:
+    from repro.core.calibration import stopping_time
+
+    risks = []
+    for lab, sc in zip(all_labels, all_scores):
+        t = stopping_time(sc, lam, min_steps)
+        if kind == "correct":
+            risks.append(risk_correctness_drop(lab, t))
+        else:
+            risks.append(risk_inconsistency(lab, t))
+    return float(np.mean(risks)) if risks else 0.0

@@ -1,0 +1,91 @@
+"""Reasoning-step segmentation (paper §3.3).
+
+The paper splits a thinking trajectory into steps at ``\\n\\n`` boundaries whose
+completed section contains "wait" or "but".  At runtime we operate on token
+ids, so segmentation is defined over (boundary-token, marker-token) id sets:
+
+* a *candidate* boundary is any token in ``boundary_ids``;
+* a candidate closes a step iff the section accumulated since the last closed
+  step contains at least one token in ``marker_ids``.
+
+Two implementations:
+* ``segment_steps`` — full-sequence (offline / prefill): ``lax.scan`` over the
+  token axis; returns per-token step ids + per-step metadata.
+* the online variant lives in :mod:`repro.core.controller` as two carry bits
+  (``has_marker``) inside the decode loop.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+class Segmentation(NamedTuple):
+    step_id: jax.Array      # (B, S) int32 — step index of every token
+    num_steps: jax.Array    # (B,)   int32 — number of *closed* steps
+    boundary: jax.Array     # (B, S) bool  — True where a step closed
+
+
+def _isin(tokens: jax.Array, ids: Sequence[int]) -> jax.Array:
+    if len(ids) == 0:
+        return jnp.zeros(tokens.shape, bool)
+    return jnp.isin(tokens, jnp.asarray(list(ids), tokens.dtype))
+
+
+def segment_steps(
+    tokens: jax.Array,
+    boundary_ids: Sequence[int],
+    marker_ids: Sequence[int],
+) -> Segmentation:
+    """Segment (B, S) token ids into reasoning steps."""
+    is_cand = _isin(tokens, boundary_ids)     # (B, S)
+    is_mark = _isin(tokens, marker_ids)
+
+    def scan_fn(carry, inp):
+        step, has_marker = carry              # (B,), (B,)
+        cand, mark = inp
+        has_marker = has_marker | mark
+        close = cand & has_marker
+        out_step = step                       # token belongs to current step
+        step = jnp.where(close, step + 1, step)
+        has_marker = jnp.where(close, False, has_marker)
+        return (step, has_marker), (out_step, close)
+
+    b = tokens.shape[0]
+    init = (jnp.zeros((b,), jnp.int32), jnp.zeros((b,), bool))
+    (_, _), (step_id, boundary) = jax.lax.scan(
+        scan_fn, init, (is_cand.T, is_mark.T)
+    )
+    step_id = step_id.T
+    boundary = boundary.T
+    num_steps = jnp.sum(boundary, axis=1).astype(jnp.int32)
+    return Segmentation(step_id, num_steps, boundary)
+
+
+def segment_mean_pool(
+    hidden: jax.Array,        # (B, S, D)
+    step_id: jax.Array,       # (B, S)
+    max_steps: int,
+    token_valid: jax.Array | None = None,   # (B, S) bool
+):
+    """Mean last-layer representation per step (paper §3.3).
+
+    Returns (reps (B, T, D) float32, counts (B, T)).  Steps beyond
+    ``max_steps`` are dropped; empty steps have zero reps and zero counts.
+    """
+    b, s, d = hidden.shape
+    sid = jnp.clip(step_id, 0, max_steps - 1)
+    valid = jnp.ones((b, s), bool) if token_valid is None else token_valid
+    valid &= step_id < max_steps
+
+    def pool_one(h, i, m):
+        w = m.astype(jnp.float32)
+        sums = jax.ops.segment_sum(h.astype(jnp.float32) * w[:, None], i, max_steps)
+        cnts = jax.ops.segment_sum(w, i, max_steps)
+        return sums / jnp.maximum(cnts, 1.0)[:, None], cnts
+
+    reps, counts = jax.vmap(pool_one)(hidden, sid, valid)
+    return reps, counts

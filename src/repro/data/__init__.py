@@ -1,0 +1,12 @@
+from repro.data.pipeline import DataConfig, PackedDataset, pack_tokens
+from repro.data.traces import (
+    ANS_BASE,
+    BOUNDARY_IDS,
+    MARKER_IDS,
+    NUM_ANSWERS,
+    Trace,
+    TraceConfig,
+    generate_dataset,
+    generate_trace,
+    ood_config,
+)

@@ -1,0 +1,60 @@
+"""Token data pipeline: trace corpus -> packed next-token batches.
+
+Pure numpy on the host (the realistic layout: host pipeline feeding the
+device loop), deterministic given a seed, with an infinite epoch-shuffled
+iterator for the train loop.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterator, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.data.traces import PAD, Trace, TraceConfig, generate_dataset
+
+
+def pack_tokens(traces: Sequence[np.ndarray], seq_len: int) -> np.ndarray:
+    """Concatenate token streams and cut into (N, seq_len + 1) rows (the +1
+    column provides the shifted labels)."""
+    flat = np.concatenate(list(traces)) if traces else np.zeros((0,), np.int32)
+    row = seq_len + 1
+    n = len(flat) // row
+    if n == 0:
+        out = np.full((1, row), PAD, np.int32)
+        out[0, : len(flat)] = flat
+        return out
+    return flat[: n * row].reshape(n, row).astype(np.int32)
+
+
+@dataclass
+class DataConfig:
+    seq_len: int = 256
+    batch_size: int = 16
+    num_traces: int = 2000
+    seed: int = 0
+
+
+class PackedDataset:
+    def __init__(self, cfg: DataConfig, trace_cfg: TraceConfig | None = None):
+        self.cfg = cfg
+        trace_cfg = trace_cfg or TraceConfig()
+        traces = generate_dataset(cfg.num_traces, trace_cfg, cfg.seed)
+        self.rows = pack_tokens([t.tokens for t in traces], cfg.seq_len)
+        self.vocab_size = trace_cfg.vocab_size
+
+    def __len__(self) -> int:
+        return len(self.rows)
+
+    def batches(self, epochs: int | None = None) -> Iterator[Tuple[np.ndarray, np.ndarray]]:
+        """Yields (tokens (B, S), labels (B, S)) forever (or ``epochs`` times)."""
+        rng = np.random.default_rng(self.cfg.seed + 1)
+        b = self.cfg.batch_size
+        epoch = 0
+        while epochs is None or epoch < epochs:
+            order = rng.permutation(len(self.rows))
+            for i in range(0, len(order) - b + 1, b):
+                rows = self.rows[order[i : i + b]]
+                yield rows[:, :-1], rows[:, 1:]
+            epoch += 1

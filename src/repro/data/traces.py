@@ -1,0 +1,234 @@
+"""Synthetic reasoning traces with *exact* graph ground truth.
+
+Stands in for s1K-1.1 + the Qwen-3-32B verifier (DESIGN.md §4).  Each trace is
+generated from an explicit reasoning graph G (paper §3): the generator walks
+the graph emitting token-serialized "steps", so every label the paper obtains
+by prompting a verifier LLM — is-leaf, is-novel, consistent-at-t,
+correct-at-t — is known *by construction*.
+
+World model
+-----------
+* A problem has a hidden solution chain of ``depth`` concept nodes ending at
+  the true answer a*; distractor branches hang off the chain.
+* Phase 1 (explore): the "model" extends the tree with novel steps, sometimes
+  backtracking (redundant walk — not novel) or proposing a wrong answer from
+  a distractor (a leaf).
+* Phase 2 (converge): solvable traces reach a* and attempt it (novel leaf).
+  Unsolvable traces skip this phase.
+* Phase 3 (overthink): redundant re-verification — re-walking known nodes and
+  re-attempting the same answer.  This is the compute thought calibration
+  should trim: the reasoning graph stops growing here.
+
+Token serialization per step:
+    [WAIT | BUT] node-signature-tokens [ANSWER_MARK ans_tok] NL2
+``BUT`` marks backtracks, ``WAIT`` everything else — so every section carries
+a marker and every NL2 closes a step (merged-section behaviour is exercised
+separately in unit tests).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence, Tuple
+
+import networkx as nx
+import numpy as np
+
+from repro.core.risks import TraceLabels
+
+# ---------------------------------------------------------------------------
+# vocabulary layout
+# ---------------------------------------------------------------------------
+
+PAD, BOS, EOS, NL2, WAIT, BUT, THINK_END, ANSWER_MARK = range(8)
+NUM_ANSWERS = 32
+ANS_BASE = 8                          # answer tokens: [8, 8 + NUM_ANSWERS)
+CONTENT_BASE = ANS_BASE + NUM_ANSWERS
+
+BOUNDARY_IDS = (NL2,)
+MARKER_IDS = (WAIT, BUT)
+
+
+@dataclass
+class TraceConfig:
+    vocab_size: int = 512
+    depth_range: Tuple[int, int] = (3, 8)         # solution chain length
+    distractor_range: Tuple[int, int] = (1, 4)
+    sig_len: int = 3                              # tokens per node signature
+    p_backtrack: float = 0.15
+    p_wrong_attempt: float = 0.2
+    overthink_range: Tuple[int, int] = (6, 28)    # phase-3 redundant steps
+    # (s1K-style trajectories spend roughly half their budget re-verifying;
+    #  the overthink tail is the mass thought calibration can reclaim)
+    p_solvable: float = 0.8
+    max_steps: int = 64
+    seed_world: int = 0                           # node-signature world seed
+
+
+@dataclass
+class Trace:
+    tokens: np.ndarray            # (S,) int32, BOS ... THINK_END EOS
+    step_of_token: np.ndarray     # (S,) int32 (-1 for non-step tokens)
+    labels: TraceLabels
+    solvable: bool
+    true_answer: int
+    final_answer: Optional[int]
+    graph: nx.DiGraph             # the full reasoning graph G_T
+    graph_sizes: np.ndarray       # (T,) |G_t| after each step — growth signal
+    step_texts: List[str] = field(default_factory=list)
+
+
+def _node_signature(rng_world: np.random.Generator, cfg: TraceConfig, node: int) -> np.ndarray:
+    """Deterministic per-node content tokens (shared across traces so the LM
+    can learn the world)."""
+    r = np.random.default_rng(cfg.seed_world * 1_000_003 + node)
+    hi = cfg.vocab_size
+    return r.integers(CONTENT_BASE, hi, size=cfg.sig_len).astype(np.int32)
+
+
+def generate_trace(rng: np.random.Generator, cfg: TraceConfig) -> Trace:
+    depth = int(rng.integers(*cfg.depth_range))
+    n_distract = int(rng.integers(*cfg.distractor_range))
+    solvable = bool(rng.random() < cfg.p_solvable)
+    true_answer = int(rng.integers(0, NUM_ANSWERS))
+
+    # node ids: 0 = root(question); 1..depth = solution chain; rest distractors
+    chain = list(range(1, depth + 1))
+    distractors = list(range(depth + 1, depth + 1 + n_distract))
+    wrong_answers = [int(a) for a in rng.choice(
+        [a for a in range(NUM_ANSWERS) if a != true_answer], n_distract, replace=False)]
+
+    g = nx.DiGraph()
+    g.add_node(0)
+
+    steps: List[dict] = []          # {type, node, attempt, novel, leaf, tokens}
+
+    def add_step(kind: str, node: int, parent: Optional[int], attempt: Optional[int]):
+        novel = node not in g or (parent is not None and not g.has_edge(parent, node))
+        if node not in g:
+            g.add_node(node)
+        if parent is not None:
+            g.add_edge(parent, node)
+        leaf = attempt is not None
+        steps.append({
+            "kind": kind, "node": node, "attempt": attempt,
+            "novel": novel, "leaf": leaf, "gsize": g.number_of_nodes() + g.number_of_edges(),
+        })
+
+    # ---- phase 1: explore ------------------------------------------------
+    frontier = 0
+    visited = [0]
+    chain_pos = 0
+    d_used = 0
+    while chain_pos < depth and len(steps) < cfg.max_steps - 2:
+        r = rng.random()
+        if r < cfg.p_backtrack and len(visited) > 1:
+            back = int(rng.choice(visited[:-1]))
+            add_step("backtrack", back, None, None)
+        elif r < cfg.p_backtrack + cfg.p_wrong_attempt and d_used < n_distract:
+            dn = distractors[d_used]
+            add_step("distract", dn, frontier, wrong_answers[d_used])
+            d_used += 1
+        else:
+            node = chain[chain_pos]
+            add_step("progress", node, frontier, None)
+            visited.append(node)
+            frontier = node
+            chain_pos += 1
+
+    # ---- phase 2: converge -----------------------------------------------
+    if solvable:
+        ans_node = depth + 1 + n_distract       # answer node id
+        add_step("answer", ans_node, frontier, true_answer)
+    # unsolvable: last attempt (if any) remains a wrong one
+
+    # ---- phase 3: overthink ----------------------------------------------
+    n_over = int(rng.integers(*cfg.overthink_range))
+    attempts = [s["attempt"] for s in steps if s["attempt"] is not None]
+    last_attempt = attempts[-1] if attempts else None
+    for _ in range(n_over):
+        if len(steps) >= cfg.max_steps:
+            break
+        if rng.random() < 0.5 and last_attempt is not None:
+            # re-attempt same answer: leaf, NOT novel (graph unchanged)
+            node = steps[-1]["node"]
+            add_step("reattempt", node, None, last_attempt)
+        else:
+            back = int(rng.choice(visited))
+            add_step("rewalk", back, None, None)
+
+    # ---- labels ------------------------------------------------------------
+    t_steps = len(steps)
+    attempts_at = np.full(t_steps, -1, np.int64)
+    cur = -1
+    for i, s in enumerate(steps):
+        if s["attempt"] is not None:
+            cur = s["attempt"]
+        attempts_at[i] = cur
+    final_answer = int(attempts_at[-1]) if attempts_at[-1] >= 0 else None
+    # z_t consistent with z_T includes the no-attempt-yet == no-attempt-ever case
+    consistent_at = attempts_at == attempts_at[-1]
+    correct_at = attempts_at == true_answer
+    is_leaf = np.array([s["leaf"] for s in steps])
+    is_novel = np.array([s["novel"] for s in steps])
+    gsizes = np.array([s["gsize"] for s in steps], np.int64)
+
+    labels = TraceLabels(
+        correct_at=correct_at,
+        consistent_at=consistent_at,
+        is_leaf=is_leaf,
+        is_novel=is_novel,
+        num_steps=t_steps,
+    )
+
+    # ---- serialize ---------------------------------------------------------
+    toks: List[int] = [BOS]
+    step_of: List[int] = [-1]
+    for i, s in enumerate(steps):
+        marker = BUT if s["kind"] in ("backtrack", "rewalk") else WAIT
+        body = [marker, *(_node_signature(rng, cfg, s["node"]).tolist())]
+        if s["attempt"] is not None:
+            body += [ANSWER_MARK, ANS_BASE + s["attempt"]]
+        body.append(NL2)
+        toks.extend(body)
+        step_of.extend([i] * len(body))
+    toks.append(THINK_END)
+    step_of.append(-1)
+    if final_answer is not None:
+        toks.append(ANS_BASE + final_answer)
+        step_of.append(-1)
+    toks.append(EOS)
+    step_of.append(-1)
+
+    return Trace(
+        tokens=np.asarray(toks, np.int32),
+        step_of_token=np.asarray(step_of, np.int32),
+        labels=labels,
+        solvable=solvable,
+        true_answer=true_answer,
+        final_answer=final_answer,
+        graph=g,
+        graph_sizes=gsizes,
+    )
+
+
+def generate_dataset(n: int, cfg: TraceConfig, seed: int = 0) -> List[Trace]:
+    rng = np.random.default_rng(seed)
+    return [generate_trace(rng, cfg) for _ in range(n)]
+
+
+def ood_config(base: TraceConfig) -> TraceConfig:
+    """Shifted distribution: harder, longer, more overthinking (AIME/GPQA
+    stand-in for the paper's generalization setting)."""
+    return TraceConfig(
+        vocab_size=base.vocab_size,
+        depth_range=(6, 14),
+        distractor_range=(2, 6),
+        sig_len=base.sig_len,
+        p_backtrack=0.25,
+        p_wrong_attempt=0.3,
+        overthink_range=(4, 20),
+        p_solvable=0.55,
+        max_steps=72,
+        seed_world=base.seed_world,    # same concept world, different dynamics
+    )

@@ -1,0 +1,2 @@
+from repro.kernels import ops, ref
+from repro.kernels.ops import decode_attention, probe_score, ssd_chunk_scan

@@ -1,0 +1,117 @@
+"""GQA flash-decode attention over a KV cache (Pallas TPU kernel).
+
+One new query token per sequence attends to a (possibly partially-valid)
+cache.  The cache's W axis is tiled; the grid's innermost dimension walks KV
+tiles *sequentially* (TPU grid order), carrying the online-softmax state
+(running max m, normalizer l, weighted accumulator acc) in VMEM scratch —
+the TPU analogue of flash-decoding's split-K reduction, with BlockSpec-tiled
+HBM→VMEM streaming of K/V instead of GPU shared-memory staging.
+
+Shapes: q (B, H, Dh); k/v (B, W, Hkv, Dh); lengths (B,) valid prefix length.
+Grid: (B, W // TILE_W).  Scratch: m/l (H, 1), acc (H, Dh) — f32.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+TILE_W = 256
+NEG_INF = -1e30
+
+
+def _kernel(lo_ref, hi_ref, q_ref, k_ref, v_ref, out_ref, m_ref, l_ref, acc_ref):
+    w_idx = pl.program_id(1)
+    n_w = pl.num_programs(1)
+
+    @pl.when(w_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)                      # (H, Dh)
+    k = k_ref[0].astype(jnp.float32)                      # (TW, Hkv, Dh)
+    v = v_ref[0].astype(jnp.float32)
+    h, dh = q.shape
+    tw, hkv, _ = k.shape
+    g = h // hkv
+
+    lo, hi = lo_ref[0], hi_ref[0]
+    kpos = w_idx * tw + jax.lax.broadcasted_iota(jnp.int32, (tw,), 0)
+    valid = (kpos >= lo) & (kpos < hi)                     # (TW,) window mask
+
+    qg = q.reshape(hkv, g, dh)
+    scores = jax.lax.dot_general(
+        qg, k.transpose(1, 2, 0),                          # (Hkv,g,Dh)x(Hkv,Dh,TW)
+        (((2,), (1,)), ((0,), (0,))),
+        precision=jax.lax.Precision.HIGHEST,
+    ) / math.sqrt(dh)                                      # (Hkv, g, TW)
+    scores = scores.reshape(h, tw)
+    scores = jnp.where(valid[None, :], scores, NEG_INF)
+
+    m_prev = m_ref[...]                                    # (H, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(scores, axis=1, keepdims=True))
+    p = jnp.exp(scores - m_new)                            # (H, TW)
+    p = jnp.where(valid[None, :], p, 0.0)
+    alpha = jnp.exp(m_prev - m_new)                        # (H, 1)
+
+    pg = p.reshape(hkv, g, tw)
+    pv = jax.lax.dot_general(
+        pg, v.transpose(1, 0, 2),                          # (Hkv,g,TW)x(Hkv,TW,Dh)
+        (((2,), (1,)), ((0,), (0,))),
+        precision=jax.lax.Precision.HIGHEST,
+    ).reshape(h, dh)
+
+    m_ref[...] = m_new
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + pv
+
+    @pl.when(w_idx == n_w - 1)
+    def _final():
+        out_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "tile_w", "window"))
+def decode_attention(q, k_cache, v_cache, lengths, *, interpret: bool = True,
+                     tile_w: int = TILE_W, window: int = 0):
+    """q: (B, H, Dh); caches: (B, W, Hkv, Dh); lengths: (B,). -> (B, H, Dh).
+
+    ``window`` > 0 restricts attention to the last ``window`` valid positions
+    (sliding-window decode; slot layout must be position-ordered)."""
+    b, h, dh = q.shape
+    w = k_cache.shape[1]
+    hkv = k_cache.shape[2]
+    tw = min(tile_w, w)
+    w_pad = (w + tw - 1) // tw * tw
+    if w_pad != w:
+        pad = ((0, 0), (0, w_pad - w), (0, 0), (0, 0))
+        k_cache = jnp.pad(k_cache, pad)
+        v_cache = jnp.pad(v_cache, pad)
+    hi = lengths.astype(jnp.int32)
+    lo = jnp.maximum(hi - window, 0) if window else jnp.zeros_like(hi)
+    out = pl.pallas_call(
+        _kernel,
+        grid=(b, w_pad // tw),
+        in_specs=[
+            pl.BlockSpec((1,), lambda bi, wi: (bi,)),
+            pl.BlockSpec((1,), lambda bi, wi: (bi,)),
+            pl.BlockSpec((1, h, dh), lambda bi, wi: (bi, 0, 0)),
+            pl.BlockSpec((1, tw, hkv, dh), lambda bi, wi: (bi, wi, 0, 0)),
+            pl.BlockSpec((1, tw, hkv, dh), lambda bi, wi: (bi, wi, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, dh), lambda bi, wi: (bi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((h, 1), jnp.float32),
+            pltpu.VMEM((h, 1), jnp.float32),
+            pltpu.VMEM((h, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lo, hi, q, k_cache, v_cache)
+    return out

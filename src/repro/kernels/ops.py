@@ -1,0 +1,40 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``use_kernel`` selects between the Pallas path (interpret=True on CPU — the
+kernel body executes for real, validating the TPU program) and the pure-jnp
+reference.  On actual TPU deployments ``interpret`` flips to False with no
+other change.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention as _decode_attention
+from repro.kernels.probe_score import probe_score as _probe_score
+from repro.kernels.ssd_scan import ssd_chunk_scan as _ssd_chunk_scan
+
+
+def probe_score(reps, pca_mean, pca_comps, w1, b1, w2, b2,
+                *, use_kernel: bool = True, interpret: bool = True):
+    if use_kernel:
+        return _probe_score(reps, pca_mean, pca_comps, w1, b1, w2, b2,
+                            interpret=interpret)
+    return ref.probe_score_ref(reps, pca_mean, pca_comps, w1, b1, w2, b2)
+
+
+def decode_attention(q, k_cache, v_cache, lengths, window: int = 0,
+                     *, use_kernel: bool = True, interpret: bool = True):
+    if use_kernel:
+        return _decode_attention(q, k_cache, v_cache, lengths,
+                                 interpret=interpret, window=window)
+    return ref.decode_attention_ref(q, k_cache, v_cache, lengths, window)
+
+
+def ssd_chunk_scan(x, dA, Bm, Cm, chunk: int = 256,
+                   *, use_kernel: bool = True, interpret: bool = True):
+    if use_kernel:
+        return _ssd_chunk_scan(x, dA, Bm, Cm, chunk, interpret=interpret)
+    return ref.ssd_chunk_scan_ref(x, dA, Bm, Cm, chunk)

@@ -1,0 +1,66 @@
+"""Fused thought-calibration probe scorer (Pallas TPU kernel).
+
+Computes, for a tile of step representations resident in VMEM:
+
+    z  = (x - mean) @ P          (d_model x probe_dim MXU matmul)
+    p1 = sigmoid(z . w1 + b1)
+    p2 = sigmoid(z . w2 + b2)
+
+in one pass — PCA projection, both probe heads, and the sigmoids fused so a
+step rep is read from HBM exactly once (the paper's offline sklearn pipeline
+becomes a single on-chip op; DESIGN.md §3).
+
+Tiling: grid over N (rows); each program loads an (TN, D) rep tile plus the
+shared (D, K) projection. D and K are multiples of 128 for every assigned
+arch (MXU-aligned); TN = 128 rows keeps the working set
+(TN*D + D*K + TN*K) * 4B ≈ 6.3 MB at D=4096, K=256 — inside one core's VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_N = 128
+
+
+def _kernel(x_ref, mean_ref, comps_ref, w_ref, b_ref, out_ref):
+    x = x_ref[...].astype(jnp.float32)                   # (TN, D)
+    mean = mean_ref[...].astype(jnp.float32)             # (1, D)
+    comps = comps_ref[...].astype(jnp.float32)           # (D, K)
+    w = w_ref[...].astype(jnp.float32)                   # (K, 2)
+    b = b_ref[...].astype(jnp.float32)                   # (1, 2)
+    z = jax.lax.dot(x - mean, comps,
+                    precision=jax.lax.Precision.HIGHEST)  # (TN, K) on the MXU
+    logits = jax.lax.dot(z, w, precision=jax.lax.Precision.HIGHEST) + b
+    out_ref[...] = jax.nn.sigmoid(logits)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def probe_score(reps, pca_mean, pca_comps, w1, b1, w2, b2, *, interpret: bool = True):
+    """reps: (N, D) -> (N, 2) probabilities. Pads N to a TILE_N multiple."""
+    n, d = reps.shape
+    k = pca_comps.shape[1]
+    n_pad = (n + TILE_N - 1) // TILE_N * TILE_N
+    if n_pad != n:
+        reps = jnp.pad(reps, ((0, n_pad - n), (0, 0)))
+    w = jnp.stack([w1, w2], axis=1)                       # (K, 2)
+    b = jnp.stack([b1, b2])[None, :]                      # (1, 2)
+    out = pl.pallas_call(
+        _kernel,
+        grid=(n_pad // TILE_N,),
+        in_specs=[
+            pl.BlockSpec((TILE_N, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+            pl.BlockSpec((d, k), lambda i: (0, 0)),
+            pl.BlockSpec((k, 2), lambda i: (0, 0)),
+            pl.BlockSpec((1, 2), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((TILE_N, 2), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, 2), jnp.float32),
+        interpret=interpret,
+    )(reps, pca_mean[None, :], pca_comps, w, b)
+    return out[:n]

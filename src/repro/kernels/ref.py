@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def probe_score_ref(reps, pca_mean, pca_comps, w1, b1, w2, b2):
+    """reps: (N, D) -> (N, 2) probe probabilities [p1, p2].
+
+    p1 = sigmoid((x - mean) P w1 + b1), p2 likewise — the two heads of the
+    thought-calibration scorer (single probe / novel-leaf composition happens
+    downstream)."""
+    z = (reps.astype(jnp.float32) - pca_mean) @ pca_comps
+    p1 = jax.nn.sigmoid(z @ w1 + b1)
+    p2 = jax.nn.sigmoid(z @ w2 + b2)
+    return jnp.stack([p1, p2], axis=-1)
+
+
+def decode_attention_ref(q, k_cache, v_cache, lengths, window: int = 0):
+    """q: (B, H, Dh); caches: (B, W, Hkv, Dh); lengths: (B,) valid prefix.
+
+    Returns (B, H, Dh). GQA: H % Hkv == 0. ``window``>0: only the last
+    ``window`` valid positions attend."""
+    b, h, dh = q.shape
+    w, hkv = k_cache.shape[1], k_cache.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, hkv, g, dh)
+    scores = jnp.einsum("bkgd,bwkd->bkgw", qg.astype(jnp.float32),
+                        k_cache.astype(jnp.float32)) / math.sqrt(dh)
+    pos = jnp.arange(w)[None]
+    valid = pos < lengths[:, None]
+    if window:
+        valid &= pos >= jnp.maximum(lengths[:, None] - window, 0)
+    valid = valid[:, None, None, :]
+    scores = jnp.where(valid, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgw,bwkd->bkgd", probs, v_cache.astype(jnp.float32))
+    return out.reshape(b, h, dh).astype(q.dtype)
+
+
+def ssd_chunk_scan_ref(x, dA, Bm, Cm, chunk):
+    """Oracle for the SSD kernel — delegates to the model's chunked SSD.
+
+    x: (B, S, H, P) discretized inputs; dA: (B, S, H); Bm/Cm: (B, S, N).
+    Returns (y (B, S, H, P), final_state (B, H, P, N))."""
+    from repro.models.ssm import ssd_scan
+
+    return ssd_scan(x, dA, Bm, Cm, chunk)

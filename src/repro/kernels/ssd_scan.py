@@ -1,0 +1,128 @@
+"""Mamba-2 SSD chunk scan (Pallas TPU kernel).
+
+TPU adaptation of the SSD algorithm (arXiv:2405.21060 §6): the GPU reference
+implements intra-chunk work with warp-level primitives; here each grid step
+processes one (head-tile, chunk) as dense MXU matmuls —
+
+    L    = exp(segsum(dA))                   (TH, L, L) causal decay
+    Ydiag= (C Bᵀ ∘ L) X                      chunk-local "attention"
+    S_c  = Bᵀ (decay ∘ X)                    chunk state contribution
+    Yoff = C S_{c-1} ∘ decay_out             inter-chunk correction
+
+— and the inter-chunk recurrence S_c = γ_c S_{c-1} + ΔS_c is carried in VMEM
+scratch across the *sequential* innermost grid dimension (chunks), exactly
+where a GPU kernel would run a cross-block scan.
+
+Grid: (B, H // TILE_H, S // L).  Head tile TH=8 keeps the L×L decay tensor
+(TH * L² * 4B = 2 MB at L=256) plus x/B/C tiles inside VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+TILE_H = 8
+
+
+def _segsum_tile(a):
+    """a: (TH, L) -> (TH, L, L) lower-tri cumulative segment sums (else -inf)."""
+    l = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    seg = cs[:, :, None] - cs[:, None, :]
+    tri = jax.lax.broadcasted_iota(jnp.int32, (l, l), 0) >= jax.lax.broadcasted_iota(
+        jnp.int32, (l, l), 1)
+    return jnp.where(tri[None], seg, -jnp.inf)
+
+
+def _kernel(x_ref, da_ref, b_ref, c_ref, y_ref, st_out_ref, state_ref):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0].astype(jnp.float32)          # (L, TH, P)
+    da = da_ref[0].astype(jnp.float32)        # (L, TH)
+    bm = b_ref[0].astype(jnp.float32)         # (L, N)
+    cm = c_ref[0].astype(jnp.float32)         # (L, N)
+
+    l, th, p = x.shape
+    n = bm.shape[-1]
+
+    da_t = da.T                                # (TH, L)
+    a_cum = jnp.cumsum(da_t, axis=-1)          # (TH, L)
+    lmat = jnp.exp(_segsum_tile(da_t))         # (TH, L, L)
+
+    # intra-chunk: scores = (C B^T) ∘ L  -> y_diag = scores @ x
+    cb = jax.lax.dot(cm, bm.T, precision=jax.lax.Precision.HIGHEST)  # (L, L)
+    scores = cb[None] * lmat                    # (TH, L, L)
+    xh = x.transpose(1, 0, 2)                   # (TH, L, P)
+    y_diag = jax.lax.dot_general(
+        scores, xh, (((2,), (1,)), ((0,), (0,))),
+        precision=jax.lax.Precision.HIGHEST)    # (TH, L, P)
+
+    # chunk state contribution: S_c = sum_l decay_l B_l x_l^T  -> (TH, P, N)
+    decay_states = jnp.exp(a_cum[:, -1:] - a_cum)          # (TH, L)
+    xw = xh * decay_states[:, :, None]                     # (TH, L, P)
+    s_c = jax.lax.dot_general(
+        xw.transpose(0, 2, 1), bm[None].repeat(th, 0),
+        (((2,), (1,)), ((0,), (0,))),
+        precision=jax.lax.Precision.HIGHEST)               # (TH, P, N)
+
+    # inter-chunk: y_off = (C S_prev^T) ∘ decay_out
+    s_prev = state_ref[...]                                # (TH, P, N)
+    y_off = jax.lax.dot_general(
+        s_prev, cm.T[None].repeat(th, 0),
+        (((2,), (1,)), ((0,), (0,))),
+        precision=jax.lax.Precision.HIGHEST)               # (TH, P, L)
+    y_off = y_off.transpose(0, 2, 1) * jnp.exp(a_cum)[:, :, None]
+
+    y_ref[0] = (y_diag + y_off).transpose(1, 0, 2).astype(y_ref.dtype)
+
+    chunk_decay = jnp.exp(a_cum[:, -1])                    # (TH,)
+    state_ref[...] = s_prev * chunk_decay[:, None, None] + s_c
+
+    @pl.when(ci == pl.num_programs(2) - 1)
+    def _final():
+        st_out_ref[0] = state_ref[...].astype(st_out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret", "tile_h"))
+def ssd_chunk_scan(x, dA, Bm, Cm, chunk: int = 256, *, interpret: bool = True,
+                   tile_h: int = TILE_H):
+    """x: (B, S, H, P) discretized; dA: (B, S, H); Bm/Cm: (B, S, N).
+
+    Returns (y (B, S, H, P) f32, final_state (B, H, P, N) f32).
+    Requires S % chunk == 0 and H % tile_h == 0 (pad upstream)."""
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    th = min(tile_h, h)
+    assert s % chunk == 0 and h % th == 0, (s, chunk, h, th)
+    nh, nc = h // th, s // chunk
+
+    y, st = pl.pallas_call(
+        _kernel,
+        grid=(b, nh, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, th, p), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, chunk, th), lambda bi, hi, ci: (bi, ci, hi)),
+            pl.BlockSpec((1, chunk, n), lambda bi, hi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, chunk, n), lambda bi, hi, ci: (bi, ci, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, th, p), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, th, p, n), lambda bi, hi, ci: (bi, hi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, s, h, p), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((th, p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dA, Bm, Cm)
+    return y, st

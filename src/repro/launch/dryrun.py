@@ -1,0 +1,415 @@
+"""Multi-pod dry-run: lower + compile every (arch × input-shape × mesh).
+
+MUST set the host-device override before ANY other import (jax locks the
+device count at first init):
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import contextlib
+import json
+import time
+import traceback
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES, SHAPES, get_config
+from repro.core import controller as ctrl_mod
+from repro.data.traces import BOUNDARY_IDS, MARKER_IDS
+from repro.launch import roofline, sharding
+from repro.launch.mesh import make_production_mesh
+from repro.models import cache as cache_mod
+from repro.models import model as model_mod
+from repro.training import optim
+from repro.training.loop import make_train_step
+from repro.training.schedules import get_schedule
+
+
+def _sds(tree, dtype=None):
+    def conv(x):
+        dt = dtype or x.dtype
+        return jax.ShapeDtypeStruct(x.shape, dt)
+    return jax.tree.map(conv, tree)
+
+
+def param_shapes(cfg, dtype):
+    shapes = jax.eval_shape(lambda k: model_mod.init_params(cfg, k),
+                            jax.random.PRNGKey(0))
+    return _sds(shapes, dtype)
+
+
+def token_sds(cfg, batch: int, seq: int):
+    if cfg.num_codebooks:
+        return jax.ShapeDtypeStruct((batch, seq, cfg.num_codebooks), jnp.int32)
+    return jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+
+
+def ctx_sds(cfg, batch: int) -> Optional[jax.ShapeDtypeStruct]:
+    if not cfg.uses_cross_attn:
+        return None
+    ca = cfg.cross_attn
+    return jax.ShapeDtypeStruct((batch, ca.num_context_tokens, ca.context_dim),
+                                jnp.bfloat16)
+
+
+def input_specs(cfg, shape):
+    """ShapeDtypeStruct stand-ins for every model input of this shape."""
+    if shape.kind == "train":
+        d = {"tokens": token_sds(cfg, shape.global_batch, shape.seq_len),
+             "labels": token_sds(cfg, shape.global_batch, shape.seq_len)}
+    else:
+        d = {"tokens": token_sds(cfg, shape.global_batch,
+                                 shape.seq_len if shape.kind == "prefill" else 1)}
+    c = ctx_sds(cfg, shape.global_batch)
+    if c is not None:
+        d["ctx"] = c
+    return d
+
+
+def _decode_window(cfg, shape) -> int:
+    """long_500k uses the sliding-window decode variant for attention archs
+    (sub-quadratic requirement); decode_32k keeps the full cache."""
+    if shape.name == "long_500k" and cfg.family != "ssm" and cfg.sliding_window:
+        return cfg.sliding_window
+    if cfg.native_swa and cfg.family != "ssm":
+        return cfg.sliding_window
+    return 0
+
+
+def _train_microbatch(cfg, shape) -> int:
+    """Gradient-accumulation factor for train lowering: MoE dispatch buffers
+    and CE temps need the cut at train_4k scale; dense fits without it."""
+    if shape.kind != "train":
+        return 1
+    return 4 if cfg.family == "moe" else 2
+
+
+def build_case(cfg, shape, mesh, *, moe_impl: str = "dispatch",
+               unroll: bool = False, zero1: bool = True,
+               kv_quant: bool = False, master_weights: bool = False):
+    """Returns (fn, example_args (ShapeDtypeStructs), in_shardings)."""
+    ins = input_specs(cfg, shape)
+    bspec2 = sharding.batch_spec(shape.global_batch, mesh, 2)
+    tok_ndim = 3 if cfg.num_codebooks else 2
+    tok_spec = sharding.batch_spec(shape.global_batch, mesh, tok_ndim)
+    ctx_spec = sharding.batch_spec(shape.global_batch, mesh, 3)
+
+    if shape.kind == "train":
+        p_dtype = jnp.bfloat16 if master_weights else jnp.float32
+        pshapes = param_shapes(cfg, p_dtype)
+        pspecs = sharding.param_specs(
+            pshapes, expert_data_size=mesh.shape["data"])
+        zd = mesh.shape["data"] if zero1 else 0
+        if master_weights:
+            f32_shapes = param_shapes(cfg, jnp.float32)
+            zs = sharding.opt_specs(f32_shapes, zero1_data_size=zd)
+            ospecs = optim.AdamWMasterState(zs.step, zs.m, zs.m, zs.v)
+            oshapes = optim.AdamWMasterState(
+                jax.ShapeDtypeStruct((), jnp.int32), f32_shapes, f32_shapes,
+                f32_shapes)
+        else:
+            ospecs = sharding.opt_specs(pshapes, zero1_data_size=zd)
+            oshapes = optim.AdamWState(
+                jax.ShapeDtypeStruct((), jnp.int32), pshapes, pshapes)
+        sched = get_schedule("cosine", peak_lr=3e-4, warmup=100, total=10000)
+        step = make_train_step(cfg, sched, moe_impl=moe_impl, remat=True,
+                               unroll=unroll,
+                               microbatch=_train_microbatch(cfg, shape),
+                               master_weights=master_weights)
+        if "ctx" in ins:
+            fn = lambda p, o, t, l, c: step(p, o, t, l, c)
+            args = (pshapes, oshapes, ins["tokens"], ins["labels"], ins["ctx"])
+            shardings = (pspecs, ospecs, tok_spec, tok_spec, ctx_spec)
+        else:
+            fn = lambda p, o, t, l: step(p, o, t, l)
+            args = (pshapes, oshapes, ins["tokens"], ins["labels"])
+            shardings = (pspecs, ospecs, tok_spec, tok_spec)
+        # out = (params, opt, metrics): pin output shardings to the input
+        # specs so donated buffers actually alias (XLA would otherwise be
+        # free to pick different output shardings and break aliasing).
+        return fn, args, shardings, (0, 1), (pspecs, ospecs, None)
+
+    pshapes = param_shapes(cfg, jnp.bfloat16)
+    pspecs = sharding.param_specs(pshapes, expert_data_size=mesh.shape["data"])
+
+    if shape.kind == "prefill":
+        use_window = bool(cfg.native_swa)
+
+        def fn(p, t, c=None):
+            return model_mod.prefill(cfg, p, t, c, use_window=use_window,
+                                     moe_impl=moe_impl, unroll=unroll)
+
+        if "ctx" in ins:
+            args = (pshapes, ins["tokens"], ins["ctx"])
+            shardings = (pspecs, tok_spec, ctx_spec)
+        else:
+            args = (pshapes, ins["tokens"])
+            shardings = (pspecs, tok_spec)
+        return fn, args, shardings, (), None
+
+    # decode: one token against a seq_len cache + thought-calibration controller
+    window = _decode_window(cfg, shape)
+    cache_shapes = jax.eval_shape(
+        lambda: cache_mod.init_cache(cfg, shape.global_batch, shape.seq_len,
+                                     use_window=bool(window),
+                                     kv_quant=kv_quant))
+    cache_specs = sharding.cache_specs(cfg, cache_shapes, shape.global_batch, mesh)
+    state_shapes = jax.eval_shape(
+        lambda: ctrl_mod.init_state(shape.global_batch, cfg.d_model, 10))
+    state_specs = sharding.cache_specs(cfg, state_shapes, shape.global_batch, mesh)
+    probe_shapes = jax.eval_shape(
+        lambda: ctrl_mod.init_probe_params(cfg.d_model, cfg.probe_dim))
+    probe_specs = jax.tree.map(lambda _: P(), probe_shapes)
+    ctrl = ctrl_mod.ControllerConfig(
+        boundary_ids=BOUNDARY_IDS, marker_ids=MARKER_IDS, window=10,
+        min_steps=2, probe_dim=cfg.probe_dim)
+
+    def fn(p, probe, dcache, state, t):
+        logits, hidden, dcache = model_mod.decode_step(
+            cfg, p, dcache, t, window=window, moe_impl=moe_impl, unroll=unroll)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        tok = nxt[:, 0, 0] if cfg.num_codebooks else nxt[:, 0]
+        state = ctrl_mod.update(ctrl, probe, state, tok, hidden[:, 0],
+                                dcache["pos"] - 1)
+        return nxt, dcache, state
+
+    args = (pshapes, probe_shapes, cache_shapes, state_shapes, ins["tokens"])
+    shardings = (pspecs, probe_specs, cache_specs, state_specs, tok_spec)
+    return fn, args, shardings, (2, 3), (None, cache_specs, state_specs)
+
+
+def _seq_parallel_ok(cfg, shape, mesh) -> bool:
+    """Residual sequence-sharding is valid when the token axis divides the
+    model-axis size (train / prefill only)."""
+    return (shape.kind in ("train", "prefill")
+            and shape.seq_len % mesh.shape["model"] == 0)
+
+
+def _residual_spec(mesh):
+    from repro.launch.mesh import batch_axes
+    return P(batch_axes(mesh), "model", None)
+
+
+def _kv_cache_specs(cfg, shape, mesh, kv_quant=False):
+    """(full k/v spec, full scale spec, per-layer slice spec) for decode."""
+    if shape.kind != "decode" or cfg.family == "ssm":
+        return None, None, None, None, None
+    full = sharding.cache_specs(
+        cfg,
+        jax.eval_shape(lambda: cache_mod.init_cache(
+            cfg, shape.global_batch, shape.seq_len,
+            use_window=bool(_decode_window(cfg, shape)),
+            kv_quant=kv_quant)),
+        shape.global_batch, mesh)
+    kspec = full.get("k")
+    sspec = full.get("k_scale")
+    slice_spec = P(*tuple(kspec)[1:]) if kspec is not None else None
+    # q replication + W-sharded scores only when the cache is seq-stationary
+    q_spec, scores_spec = None, None
+    if kspec is not None and len(tuple(kspec)) >= 3 and tuple(kspec)[2] == "model":
+        b_ax = tuple(kspec)[1]
+        q_spec = P(b_ax, None, None, None)
+        scores_spec = P(b_ax, None, None, "model")   # (B, H, 1, W)
+    return kspec, sspec, slice_spec, q_spec, scores_spec
+
+
+def _moe_groups_spec(mesh, global_batch):
+    """MoE routing groups = sequences; shard groups over the batch axes."""
+    from repro.launch.mesh import batch_axes
+    axes = batch_axes(mesh)
+    import numpy as _np
+    total = int(_np.prod([mesh.shape[a] for a in axes]))
+    if global_batch % total == 0:
+        return P(axes, None, None)
+    if global_batch % mesh.shape["data"] == 0:
+        return P("data", None, None)
+    return None
+
+
+def _depth_points(cfg):
+    """Two shallow variants for linear depth extrapolation of HLO costs
+    (XLA cost analysis counts a scan body once, so full-depth modules
+    undercount per-layer work; see EXPERIMENTS.md §Dry-run)."""
+    if cfg.family == "vlm":
+        n = cfg.cross_attn.every_n_layers
+        return (cfg.replace(num_layers=n), n), (cfg.replace(num_layers=2 * n), 2 * n)
+    return (cfg.replace(num_layers=1), 1), (cfg.replace(num_layers=2), 2)
+
+
+def _named_out(mesh, out_specs):
+    if out_specs is None:
+        return None
+    return tuple(
+        sharding.named(mesh, o) if o is not None else None for o in out_specs)
+
+
+def _jit_case(mesh, fn, specs, donate, out_specs):
+    in_sh = sharding.named(mesh, specs)
+    kw = {}
+    if out_specs is not None:
+        kw["out_shardings"] = _named_out(mesh, out_specs)
+    return jax.jit(fn, in_shardings=in_sh, donate_argnums=donate, **kw)
+
+
+def _lower_compile(cfg, shape, mesh, moe_impl, unroll=False, kv_quant=False,
+                   master_weights=False):
+    fn, args, specs, donate, out_specs = build_case(
+        cfg, shape, mesh, moe_impl=moe_impl, unroll=unroll, kv_quant=kv_quant,
+        master_weights=master_weights)
+    kv_full, kv_scale, kv_slice, q_spec, sc_spec = _kv_cache_specs(
+        cfg, shape, mesh, kv_quant)
+    ctx = model_mod.activation_sharding(
+        residual=_residual_spec(mesh) if _seq_parallel_ok(cfg, shape, mesh) else None,
+        moe_groups=_moe_groups_spec(mesh, shape.global_batch),
+        kv_slice=kv_slice, kv_full=kv_full, kv_scale_full=kv_scale,
+        q_decode=q_spec, scores_decode=sc_spec)
+    with jax.set_mesh(mesh), ctx:
+        lowered = _jit_case(mesh, fn, specs, donate, out_specs).lower(*args)
+        compiled = lowered.compile()
+    return compiled
+
+
+def _extrapolated_roofline(cfg, shape, mesh, moe_impl, chips, kv_quant=False,
+                           master_weights=False):
+    """Linear-in-depth extrapolation of flops / HBM bytes / collective bytes
+    from two shallow lowerings: cost(L) = base + L * per_layer."""
+    (c1, l1), (c2, l2) = _depth_points(cfg)
+    r1 = roofline.analyze(
+        _lower_compile(c1, shape, mesh, moe_impl, unroll=True, kv_quant=kv_quant,
+                       master_weights=master_weights),
+        model_flops=0.0, chips=chips)
+    r2 = roofline.analyze(
+        _lower_compile(c2, shape, mesh, moe_impl, unroll=True, kv_quant=kv_quant,
+                       master_weights=master_weights),
+        model_flops=0.0, chips=chips)
+    lfull = cfg.num_layers
+
+    def extrap(a, b):
+        per_layer = (b - a) / (l2 - l1)
+        return max(a + per_layer * (lfull - l1), 0.0)
+
+    coll = {}
+    for k in set(r1.coll_breakdown) | set(r2.coll_breakdown):
+        coll[k] = int(extrap(r1.coll_breakdown.get(k, 0), r2.coll_breakdown.get(k, 0)))
+    mf = roofline.model_flops_estimate(cfg, shape)
+    return roofline.Roofline(
+        flops=extrap(r1.flops, r2.flops),
+        bytes_hbm=extrap(r1.bytes_hbm, r2.bytes_hbm),
+        bytes_coll=float(sum(coll.values())),
+        coll_breakdown=coll,
+        model_flops=mf,
+        chips=chips,
+    )
+
+
+def run_case(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+             moe_impl: str = "dispatch", skip_roofline: bool = False,
+             kv_quant: bool = False, master_weights: bool = False) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    t0 = time.time()
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16", "chips": chips,
+           "kv_quant": kv_quant, "ok": False}
+    try:
+        fn, args, specs, donate, out_specs = build_case(
+            cfg, shape, mesh, moe_impl=moe_impl, kv_quant=kv_quant,
+            master_weights=master_weights)
+        kv_full, kv_scale, kv_slice, q_spec, sc_spec = _kv_cache_specs(
+            cfg, shape, mesh, kv_quant)
+        ctx = model_mod.activation_sharding(
+            residual=_residual_spec(mesh) if _seq_parallel_ok(cfg, shape, mesh) else None,
+            moe_groups=_moe_groups_spec(mesh, shape.global_batch),
+            kv_slice=kv_slice, kv_full=kv_full, kv_scale_full=kv_scale,
+            q_decode=q_spec, scores_decode=sc_spec)
+        with jax.set_mesh(mesh), ctx:
+            lowered = _jit_case(mesh, fn, specs, donate, out_specs).lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            ma = compiled.memory_analysis()
+            mf = roofline.model_flops_estimate(cfg, shape)
+            rl_raw = roofline.analyze(compiled, model_flops=mf, chips=chips)
+        if skip_roofline:
+            rl = rl_raw
+        else:
+            rl = _extrapolated_roofline(cfg, shape, mesh, moe_impl, chips,
+                                        kv_quant=kv_quant,
+                                        master_weights=master_weights)
+        rec.update(
+            ok=True,
+            t_lower_s=round(t_lower, 2),
+            t_compile_s=round(t_compile, 2),
+            memory=dict(
+                argument_bytes=ma.argument_size_in_bytes,
+                output_bytes=ma.output_size_in_bytes,
+                temp_bytes=ma.temp_size_in_bytes,
+                alias_bytes=ma.alias_size_in_bytes,
+                total_bytes=(ma.argument_size_in_bytes + ma.temp_size_in_bytes
+                             + ma.output_size_in_bytes
+                             - ma.alias_size_in_bytes),
+            ),
+            roofline=rl.as_dict(),
+            roofline_raw_scanbody=rl_raw.as_dict(),
+        )
+        print(f"[ok]   {arch:25s} {shape_name:12s} {rec['mesh']:8s} "
+              f"lower {t_lower:5.1f}s compile {t_compile:6.1f}s  "
+              f"mem/dev {(rec['memory']['total_bytes'])/2**30:6.2f} GiB  "
+              f"bottleneck={rl.bottleneck}", flush=True)
+    except Exception as e:  # noqa: BLE001 — a failed case is a recorded bug
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+        print(f"[FAIL] {arch:25s} {shape_name:12s} {rec['mesh']:8s} {rec['error'][:140]}",
+              flush=True)
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        suffix = ("_kvint8" if kv_quant else "") + (
+            "_master" if master_weights else "")
+        fname = f"{arch.replace('/', '_')}_{shape_name}_{rec['mesh']}{suffix}.json"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            json.dump(rec, f, indent=2)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default="all", help="arch id or 'all'")
+    ap.add_argument("--shape", default="all", help="input shape or 'all'")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--moe-impl", default="dispatch")
+    ap.add_argument("--skip-roofline", action="store_true",
+                    help="skip the shallow-depth roofline extrapolation lowerings")
+    ap.add_argument("--kv-int8", action="store_true",
+                    help="decode shapes: int8-quantized KV cache variant")
+    ap.add_argument("--master-weights", action="store_true",
+                    help="train shapes: bf16 params + f32 master copy variant")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch == "all" else (args.arch,)
+    shapes = [s.name for s in INPUT_SHAPES] if args.shape == "all" else (args.shape,)
+    meshes = {"single": (False,), "multi": (True,), "both": (False, True)}[args.mesh]
+
+    results = []
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                results.append(run_case(a, s, mp, args.out, args.moe_impl,
+                                         skip_roofline=args.skip_roofline,
+                                         kv_quant=args.kv_int8,
+                                         master_weights=args.master_weights))
+    n_ok = sum(r["ok"] for r in results)
+    print(f"\n{n_ok}/{len(results)} cases compiled")
+    if n_ok < len(results):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

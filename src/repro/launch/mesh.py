@@ -1,0 +1,36 @@
+"""Production meshes.
+
+Defined as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state — device count is locked on first jax init,
+and only ``dryrun.py`` forces 512 host devices.
+"""
+
+from __future__ import annotations
+
+import jax
+
+BATCH_AXES_SINGLE = ("data",)
+BATCH_AXES_MULTI = ("pod", "data")
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; multi_pod adds a leading 2-pod axis."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_host_mesh(model_parallel: int = 1):
+    """Tiny mesh over however many local devices exist (tests / examples)."""
+    n = len(jax.devices())
+    assert n % model_parallel == 0
+    return jax.make_mesh(
+        (n // model_parallel, model_parallel), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )
+
+
+def batch_axes(mesh) -> tuple:
+    return BATCH_AXES_MULTI if "pod" in mesh.axis_names else BATCH_AXES_SINGLE

@@ -1,0 +1,146 @@
+"""Roofline terms from a compiled dry-run artifact (deliverable g).
+
+    compute    = HLO_FLOPs_per_device / peak_FLOPs
+    memory     = HLO_bytes_per_device / HBM_bw
+    collective = collective_bytes_per_device / ICI_link_bw
+
+``cost_analysis`` reports the per-partition (per-device) module after GSPMD,
+so its flops/bytes are already per-chip.  Collective bytes are not included
+there — we parse the compiled HLO text and sum the output-operand sizes of
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute instruction (all-reduce counted twice: reduce-scatter +
+all-gather phases on a ring).
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict
+
+# TPU v5e-class constants (per chip)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|(\S+))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-op-kind output bytes of every collective in the compiled module."""
+    out: Dict[str, int] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        shape_str = m.group(1) or m.group(2)
+        kind = m.group(3)
+        nbytes = _shape_bytes(shape_str)
+        if kind == "all-reduce":
+            nbytes *= 2          # ring AR = RS + AG volume
+        # '-done' duplicates the '-start' shape; count each instruction once
+        out[kind] = out.get(kind, 0) + nbytes
+    return out
+
+
+@dataclass
+class Roofline:
+    flops: float                 # per device
+    bytes_hbm: float             # per device
+    bytes_coll: float            # per device
+    coll_breakdown: Dict[str, int] = field(default_factory=dict)
+    model_flops: float = 0.0     # analytic 6ND (global)
+    chips: int = 1
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_hbm / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.bytes_coll / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / (HLO flops x chips): <1 means remat/redundant work
+        (for training, MODEL_FLOPS = 6ND counts fwd+bwd already)."""
+        total = self.flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    def as_dict(self) -> dict:
+        return {
+            "flops_per_dev": self.flops,
+            "bytes_hbm_per_dev": self.bytes_hbm,
+            "bytes_coll_per_dev": self.bytes_coll,
+            "coll_breakdown": self.coll_breakdown,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "model_flops": self.model_flops,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "chips": self.chips,
+        }
+
+
+def analyze(compiled, *, model_flops: float, chips: int) -> Roofline:
+    ca = compiled.cost_analysis()
+    flops = float(ca.get("flops", 0.0))
+    nbytes = float(ca.get("bytes accessed", 0.0))
+    txt = compiled.as_text()
+    coll = collective_bytes(txt)
+    return Roofline(
+        flops=flops,
+        bytes_hbm=nbytes,
+        bytes_coll=float(sum(coll.values())),
+        coll_breakdown=coll,
+        model_flops=model_flops,
+        chips=chips,
+    )
+
+
+def model_flops_estimate(cfg, shape) -> float:
+    """Analytic MODEL_FLOPS: 6·N·D for training, 2·N·D for inference
+    (N = active params, D = tokens processed this step)."""
+    n_active = cfg.param_count(active_only=True)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch

@@ -1,0 +1,97 @@
+"""Serving launcher: batched requests through the thought-calibrated engine.
+
+``python -m repro.launch.serve --arch <id> --policy calibrated|crop|full``
+
+Loads (or trains on the fly) a reduced model, fits probes + LTT threshold on
+calibration traces, then serves test prompts and reports thinking-token usage
+vs answer accuracy — the serving-side realization of the paper's pipeline.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_reduced
+from repro.core import controller as ctrl_mod
+from repro.data.traces import BOS, BOUNDARY_IDS, MARKER_IDS, TraceConfig, generate_dataset
+from repro.models import model as model_mod
+from repro.serving import Engine, ServeRequest
+from repro.training import load_checkpoint
+
+
+def build_controller(cfg, probe_bundle) -> ctrl_mod.ProbeParams:
+    """probe_bundle: dict from repro.benchmarks pipeline (pca + heads + lam)."""
+    pp = ctrl_mod.init_probe_params(cfg.d_model, cfg.probe_dim)
+    return pp._replace(**probe_bundle)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-8b", choices=list(ARCH_IDS))
+    ap.add_argument("--policy", default="calibrated",
+                    choices=["calibrated", "crop", "full"])
+    ap.add_argument("--crop-budget", type=int, default=64)
+    ap.add_argument("--lanes", type=int, default=8)
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=256)
+    ap.add_argument("--ckpt", default="", help="params checkpoint (msgpack)")
+    ap.add_argument("--probe-ckpt", default="", help="probe bundle (json+npz)")
+    ap.add_argument("--lam", type=float, default=0.8)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_reduced(args.arch).replace(vocab_size=512)
+    key = jax.random.PRNGKey(args.seed)
+    params = model_mod.init_params(cfg, key)
+    if args.ckpt:
+        params, meta = load_checkpoint(args.ckpt, params)
+        print("loaded", args.ckpt, meta)
+
+    pp = ctrl_mod.init_probe_params(cfg.d_model, cfg.probe_dim)
+    if args.probe_ckpt:
+        data = np.load(args.probe_ckpt)
+        pp = pp._replace(
+            pca_mean=jnp.asarray(data["pca_mean"]),
+            pca_comps=jnp.asarray(data["pca_comps"]),
+            w1=jnp.asarray(data["w1"]), b1=jnp.asarray(data["b1"]),
+            w2=jnp.asarray(data["w2"]), b2=jnp.asarray(data["b2"]),
+            lam=jnp.asarray(data["lam"]),
+            compose=jnp.asarray(data.get("compose", 0), jnp.int32),
+        )
+    else:
+        pp = pp._replace(lam=jnp.asarray(args.lam, jnp.float32))
+
+    ctrl = ctrl_mod.ControllerConfig(
+        boundary_ids=BOUNDARY_IDS, marker_ids=MARKER_IDS,
+        window=10, min_steps=2, probe_dim=cfg.probe_dim)
+    eng = Engine(cfg, params, ctrl=ctrl, probe_params=pp, lanes=args.lanes,
+                 policy=args.policy, crop_budget=args.crop_budget)
+
+    rng = np.random.default_rng(args.seed)
+    traces = generate_dataset(args.requests, TraceConfig(), seed=args.seed + 7)
+    reqs = [ServeRequest(uid=i, prompt=t.tokens[:6].astype(np.int32),
+                         max_new=args.max_new)
+            for i, t in enumerate(traces)]
+    results = eng.run(reqs)
+
+    think = np.array([r.think_tokens for r in results])
+    early = np.array([r.exited_early for r in results])
+    correct = np.array([
+        (r.answer is not None and r.answer == traces[i].true_answer)
+        for i, r in enumerate(results)])
+    print(json.dumps({
+        "policy": args.policy,
+        "mean_think_tokens": float(think.mean()),
+        "early_exit_rate": float(early.mean()),
+        "answer_rate": float(np.mean([r.answer is not None for r in results])),
+        "accuracy_vs_world": float(correct.mean()),
+    }, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,191 @@
+"""Sharding rules: parameter / optimizer / activation / cache PartitionSpecs.
+
+Megatron-style tensor parallelism on the ``model`` axis:
+
+* qkv / gate / up / SSM in-projections  — output-dim sharded
+* o / down / SSM out-projections        — input-dim sharded
+* embedding + LM head                   — vocab sharded
+* MoE expert stacks (…, E, D, F)        — per-expert FFN dim sharded
+* norms, routers, scalar gates, SSD A/D — replicated
+
+Batch shards on ``("data",)`` (single pod) or ``("pod", "data")``.  For the
+``long_500k`` decode shape (batch = 1) the batch axis cannot shard, so caches
+shard their widest non-batch dim on ``data`` instead (sequence-parallel /
+state-parallel decode) — see DESIGN.md §6.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+# leaf-name -> (spec builder). None entries mean "replicated".
+_LAST_DIM = ("wq", "wk", "wv", "w_gate", "w_up", "wz", "wx", "conv_x",
+             "gate_norm", "lm_head")
+_SECOND_LAST = ("wo", "w_down")
+_REPLICATED = ("scale", "bias", "q_norm", "k_norm", "router", "wB", "wC",
+               "wdt", "dt_bias", "A_log", "D", "conv_B", "conv_C",
+               "gate_attn", "gate_mlp", "fuse_a", "fuse_s", "ctx_proj",
+               "w", "b")
+
+
+def _spec_for(path: tuple, leaf, expert_data_size: int = 0) -> P:
+    names = [p.key for p in path if hasattr(p, "key")]
+    name = names[-1] if names else ""
+    nd = np.ndim(leaf) if not hasattr(leaf, "ndim") else leaf.ndim
+    shape = getattr(leaf, "shape", ())
+    # Expert stacks (L, E, D, F): optionally FSDP the expert dim over "data"
+    # (expert-parallel weight sharding) when E divides — the 42B Phi-3.5-MoE
+    # cannot hold f32 experts at 16-way TP alone.
+    if (expert_data_size and nd == 4
+            and name in ("w_gate", "w_up", "w_down")
+            and len(shape) == 4 and shape[1] % expert_data_size == 0):
+        return P(None, "data", None, "model") if name != "w_down"             else P(None, "data", "model", None)
+    if name == "embed":
+        # (V, D) or (K, V, D): shard d_model (last dim). Sharding the vocab
+        # dim instead makes the embedding-gradient scatter unpartitionable —
+        # GSPMD replicates the full (B, S, D) f32 update on every device.
+        # The LM head keeps vocab sharding (logits stay vocab-sharded for CE).
+        spec = [None] * nd
+        spec[-1] = "model"
+        return P(*spec)
+    if name in _LAST_DIM:
+        spec = [None] * nd
+        spec[-1] = "model"
+        return P(*spec)
+    if name in _SECOND_LAST:
+        spec = [None] * nd
+        spec[-2] = "model"
+        return P(*spec)
+    return P()
+
+
+def param_specs(params, *, expert_data_size: int = 0) -> Any:
+    """Pytree of PartitionSpec mirroring ``params`` (works on shapes too)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda pt, lf: _spec_for(pt, lf, expert_data_size), params)
+
+
+def opt_specs(params, *, zero1_data_size: int = 0):
+    """AdamW state: step replicated, m/v like params.
+
+    ``zero1_data_size`` > 0 additionally shards each m/v leaf's largest
+    still-unsharded divisible dim over "data" (ZeRO-1 optimizer-state
+    partitioning): grads reduce-scatter into the shard, updated params
+    all-gather back — GSPMD derives both collectives from the specs."""
+    from repro.training.optim import AdamWState
+
+    ps = param_specs(params, expert_data_size=zero1_data_size)
+    if not zero1_data_size:
+        return AdamWState(P(), ps, ps)
+
+    def extend(spec_leaf_pair):
+        spec, leaf = spec_leaf_pair
+        dims = list(spec) + [None] * (leaf.ndim - len(spec))
+        if "data" in dims:          # already data-sharded (expert FSDP)
+            return P(*dims)
+        for i in sorted(range(leaf.ndim), key=lambda i: -leaf.shape[i]):
+            if dims[i] is None and leaf.shape[i] % zero1_data_size == 0                     and leaf.shape[i] >= zero1_data_size:
+                dims[i] = "data"
+                break
+        return P(*dims)
+
+    zs = jax.tree.map(lambda sp, lf: extend((sp, lf)), ps, params,
+                      is_leaf=lambda x: isinstance(x, P))
+    return AdamWState(P(), zs, zs)
+
+
+def batch_spec(global_batch: int, mesh, ndim: int) -> P:
+    """(B, ...) activation spec; replicates when B cannot shard."""
+    from repro.launch.mesh import batch_axes
+
+    axes = batch_axes(mesh)
+    total = int(np.prod([mesh.shape[a] for a in axes]))
+    if global_batch % total == 0:
+        return P(axes, *([None] * (ndim - 1)))
+    if global_batch % mesh.shape["data"] == 0:
+        return P("data", *([None] * (ndim - 1)))
+    return P(*([None] * ndim))
+
+
+def cache_specs(cfg, cache, global_batch: int, mesh):
+    """Decode/prefill cache specs. Batch-sharded when possible; for B=1
+    (long_500k) shard K/V on the cache-width dim and SSM state on the
+    head/state dims over ``data``."""
+    from repro.launch.mesh import batch_axes
+
+    axes = batch_axes(mesh)
+    total = int(np.prod([mesh.shape[a] for a in axes]))
+    b_ok = global_batch % total == 0
+    b_axis = axes if b_ok else (
+        "data" if global_batch % mesh.shape["data"] == 0 else None)
+
+    def spec_of(path, leaf):
+        names = [p.key for p in path if hasattr(p, "key")]
+        name = names[-1] if names else ""
+        nd = leaf.ndim
+        if name == "pos":
+            return P(b_axis) if b_axis else P()
+        if name in ("k", "v", "cross_k", "cross_v"):   # (L, B, W, KV, HD)
+            kv, hd, w = leaf.shape[3], leaf.shape[4], leaf.shape[2]
+            msz = mesh.shape["model"]
+            spec = [None, None, None, None, None]
+            if b_axis:
+                spec[1] = b_axis
+            elif w % mesh.shape["data"] == 0 and name in ("k", "v"):
+                spec[2] = "data"                       # sequence-parallel (B=1)
+            # TP placement of the cache: kv-head sharding when it divides
+            # (layout-compatible with head-sharded q); otherwise shard the
+            # SEQUENCE dim over "model" — a softmax over a sharded reduction
+            # axis costs only (B, H) stat all-reduces, whereas hd-sharding
+            # forces a full cache all-gather per layer (measured 72 GiB/step
+            # on qwen3-8b decode_32k; see EXPERIMENTS.md §Perf).
+            if kv % msz == 0:
+                spec[3] = "model"
+            elif name in ("k", "v") and spec[2] is None and w % msz == 0:
+                spec[2] = "model"
+            elif hd % msz == 0:
+                spec[4] = "model"
+            return P(*spec)
+        if name in ("k_scale", "v_scale"):        # (L, B, W, KV)
+            kv, w = leaf.shape[3], leaf.shape[2]
+            msz = mesh.shape["model"]
+            spec = [None, None, None, None]
+            if b_axis:
+                spec[1] = b_axis
+            elif w % mesh.shape["data"] == 0:
+                spec[2] = "data"
+            if kv % msz == 0:
+                spec[3] = "model"
+            elif spec[2] is None and w % msz == 0:
+                spec[2] = "model"
+            return P(*spec)
+        if name == "state":                       # (L, B, H, P, N)
+            if b_axis:
+                return P(None, b_axis, None, None, None)
+            h, pdim = leaf.shape[2], leaf.shape[3]
+            if h % mesh.shape["data"] == 0:
+                return P(None, None, "data", None, None)
+            if pdim % mesh.shape["data"] == 0:
+                return P(None, None, None, "data", None)
+            return P()
+        if name.startswith("conv_"):              # (L, B, K-1, C)
+            if b_axis:
+                return P(None, b_axis, None, None)
+            c = leaf.shape[-1]
+            if c % mesh.shape["model"] == 0:
+                return P(None, None, None, "model")
+            return P()
+        return P(b_axis) if (b_axis and nd >= 1 and leaf.shape[0] == global_batch) else P()
+
+    return jax.tree_util.tree_map_with_path(spec_of, cache)
+
+
+def named(mesh, tree_of_specs):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree_of_specs,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,95 @@
+"""Training launcher.
+
+``python -m repro.launch.train --arch <id> [--reduced] --steps N``
+
+* ``--reduced`` (default on CPU): runs the smoke-size variant of the arch on
+  the local host mesh, with real data from the synthetic-trace pipeline.
+* full size: builds the production mesh sharding and runs the same jitted
+  step — on this CPU container use ``repro.launch.dryrun`` instead (the full
+  configs only make sense as lowered artifacts here).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config, get_reduced
+from repro.data import DataConfig, PackedDataset, TraceConfig
+from repro.models import model as model_mod
+from repro.training import adamw_init, load_checkpoint, make_train_step, save_checkpoint
+from repro.training.schedules import get_schedule
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-8b", choices=list(ARCH_IDS))
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--schedule", default="cosine", choices=["cosine", "wsd"])
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt", default="")
+    ap.add_argument("--moe-impl", default="dense")
+    args = ap.parse_args()
+
+    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    # the trace vocabulary is 512 tokens; clamp reduced configs onto it
+    if args.reduced:
+        cfg = cfg.replace(vocab_size=max(cfg.vocab_size, 512))
+
+    print(f"arch={cfg.arch_id} family={cfg.family} layers={cfg.num_layers} "
+          f"d_model={cfg.d_model} params~{cfg.param_count()/1e6:.1f}M")
+
+    key = jax.random.PRNGKey(args.seed)
+    params = model_mod.init_params(cfg, key)
+    ds = PackedDataset(DataConfig(seq_len=args.seq, batch_size=args.batch,
+                                  num_traces=4000, seed=args.seed))
+    data = ds.batches()
+
+    # MiniCPM trains with WSD per its paper; honor that default
+    schedule = "wsd" if cfg.arch_id == "minicpm-2b" and args.schedule == "cosine" \
+        else args.schedule
+    sched = get_schedule(schedule, peak_lr=args.lr, warmup=min(50, args.steps // 10 + 1),
+                         total=args.steps)
+    step_fn = jax.jit(make_train_step(cfg, sched, moe_impl=args.moe_impl))
+    opt = adamw_init(params)
+
+    needs_ctx = cfg.uses_cross_attn
+    ctx = None
+    if needs_ctx:
+        ca = cfg.cross_attn
+        ctx = jnp.zeros((args.batch, ca.num_context_tokens, ca.context_dim),
+                        jnp.float32)
+
+    t0 = time.time()
+    for i in range(args.steps):
+        tokens, labels = next(data)
+        tokens = jnp.asarray(tokens)
+        labels = jnp.asarray(labels)
+        if cfg.num_codebooks:
+            tokens = jnp.repeat(tokens[..., None], cfg.num_codebooks, -1) % cfg.vocab_size
+            labels = jnp.repeat(labels[..., None], cfg.num_codebooks, -1) % cfg.vocab_size
+        if needs_ctx:
+            params, opt, metrics = step_fn(params, opt, tokens, labels, ctx)
+        else:
+            params, opt, metrics = step_fn(params, opt, tokens, labels)
+        if (i + 1) % 20 == 0 or i == 0:
+            print(f"step {i+1:5d}  loss {float(metrics['loss']):.4f}  "
+                  f"lr {float(metrics['lr']):.2e}  ({time.time()-t0:.1f}s)", flush=True)
+
+    if args.ckpt:
+        save_checkpoint(args.ckpt, params, {"arch": cfg.arch_id, "steps": args.steps})
+        print("saved", args.ckpt)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Activation-sharding hooks shared by model.py and moe.py.
+
+The launcher installs PartitionSpecs here (under ``jax.set_mesh``) so inner
+modules can pin GSPMD shardings on tensors whose sharding does not propagate
+through data-movement ops (sorts, scatters) — notably the MoE dispatch
+buckets and the residual stream saved by the layer scan.
+"""
+
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+_SPECS = {"residual": None, "moe_groups": None, "kv_slice": None,
+          "kv_full": None, "kv_scale_full": None, "q_decode": None,
+          "scores_decode": None}
+
+
+@contextlib.contextmanager
+def activation_sharding(residual=None, moe_groups=None, kv_slice=None,
+                        kv_full=None, kv_scale_full=None, q_decode=None,
+                        scores_decode=None):
+    prev = dict(_SPECS)
+    _SPECS["residual"] = residual
+    _SPECS["moe_groups"] = moe_groups
+    _SPECS["kv_slice"] = kv_slice
+    _SPECS["kv_full"] = kv_full
+    _SPECS["kv_scale_full"] = kv_scale_full
+    _SPECS["q_decode"] = q_decode
+    _SPECS["scores_decode"] = scores_decode
+    try:
+        yield
+    finally:
+        _SPECS.update(prev)
+
+
+def shard(x, kind: str):
+    spec = _SPECS.get(kind)
+    if spec is None:
+        return x
+    ndim_spec = len(spec)
+    if x.ndim < ndim_spec:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)

@@ -1,0 +1,305 @@
+"""Shared transformer primitives (pure-functional, pjit-friendly).
+
+Everything here is plain ``jnp`` on explicit parameter pytrees so that the
+whole model remains a single traced function for pjit / ``lower().compile()``.
+Attention uses a flash-style query-chunk scan above ``_CHUNK_THRESHOLD`` so
+32k-token prefill never materialises an (S, S) score tensor.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# Above this sequence length, causal self-attention switches to the
+# query-chunked (flash-style) path to bound temp memory.
+_CHUNK_THRESHOLD = 2048
+_Q_CHUNK = 1024
+
+_NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * scale.astype(jnp.float32)).astype(dt)
+
+
+def layernorm(x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def apply_norm(cfg, p: dict, x: jax.Array) -> jax.Array:
+    if cfg.norm == "layernorm":
+        return layernorm(x, p["scale"], p["bias"], cfg.norm_eps)
+    return rmsnorm(x, p["scale"], cfg.norm_eps)
+
+
+def init_norm(cfg, d: int) -> dict:
+    p = {"scale": jnp.ones((d,), jnp.float32)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float, rotary_dim: Optional[int] = None) -> jax.Array:
+    rd = rotary_dim or head_dim
+    return 1.0 / (theta ** (jnp.arange(0, rd, 2, dtype=jnp.float32) / rd))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float, variant: str) -> jax.Array:
+    """x: (B, S, H, D). variant: 'rope' (full dim) | 'rope2d' (first half, GLM) | 'none'."""
+    if variant == "none":
+        return x
+    head_dim = x.shape[-1]
+    rot = head_dim // 2 if variant == "rope2d" else head_dim
+    freqs = rope_frequencies(head_dim, theta, rot)                  # (rot/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs       # (B, S, rot/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    x1, x2 = jnp.split(x_rot.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return jnp.concatenate([out.astype(x.dtype), x_pass], axis=-1)
+
+
+def sinusoidal_positions(positions: jax.Array, d_model: int) -> jax.Array:
+    """MusicGen-style additive sinusoidal embeddings. positions: (B, S)."""
+    half = d_model // 2
+    freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(angles), jnp.cos(angles)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def _causal_window_mask(q_pos: jax.Array, k_pos: jax.Array, window: int) -> jax.Array:
+    """(Q, K) bool mask: causal, optionally sliding-window."""
+    m = k_pos[None, :] <= q_pos[:, None]
+    if window:
+        m &= k_pos[None, :] > (q_pos[:, None] - window)
+    return m
+
+
+def _sdpa(q, k, v, mask, softcap: float = 0.0):
+    """q:(B,Q,H,D) k,v:(B,K,Hkv,D) mask:(Q,K) or (B,Q,K)."""
+    b, qs, h, d = q.shape
+    hkv = k.shape[2]
+    if hkv != h:
+        k = jnp.repeat(k, h // hkv, axis=2)
+        v = jnp.repeat(v, h // hkv, axis=2)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) / math.sqrt(d)
+    if softcap:
+        scores = softcap * jnp.tanh(scores / softcap)
+    if mask.ndim == 2:
+        mask = mask[None]
+    scores = jnp.where(mask[:, None], scores, _NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def causal_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    window: int = 0,
+    softcap: float = 0.0,
+) -> jax.Array:
+    """Causal (optionally sliding-window) self-attention, q/k/v aligned.
+
+    q: (B, S, H, D);  k, v: (B, S, Hkv, D).  Returns (B, S, H, D).
+    Long sequences use a query-chunk ``lax.scan`` so temp memory is
+    O(S * chunk) instead of O(S^2).
+    """
+    b, s, h, d = q.shape
+    pos = jnp.arange(s)
+    if s <= _CHUNK_THRESHOLD:
+        return _sdpa(q, k, v, _causal_window_mask(pos, pos, window), softcap)
+
+    nchunk = s // _Q_CHUNK
+    assert s % _Q_CHUNK == 0, f"seq {s} not divisible by q-chunk {_Q_CHUNK}"
+    qc = q.reshape(b, nchunk, _Q_CHUNK, h, d).swapaxes(0, 1)        # (N, B, C, H, D)
+
+    def body(_, qi_i):
+        qi, i = qi_i
+        q_pos = i * _Q_CHUNK + jnp.arange(_Q_CHUNK)
+        mask = _causal_window_mask(q_pos, pos, window)
+        return None, _sdpa(qi, k, v, mask, softcap)
+
+    # checkpoint per chunk: backward recomputes this chunk's scores instead
+    # of storing (chunk, S) probabilities for every chunk.
+    _, out = jax.lax.scan(jax.checkpoint(body), None, (qc, jnp.arange(nchunk)))
+    return out.swapaxes(0, 1).reshape(b, s, h, d)
+
+
+def decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    valid: jax.Array,
+    softcap: float = 0.0,
+) -> jax.Array:
+    """One-token decode attention over a cache.
+
+    q: (B, 1, H, D); caches: (B, W, Hkv, D); valid: (B, W) bool.
+    """
+    b, _, h, d = q.shape
+    hkv = k_cache.shape[2]
+    if hkv != h:
+        k_cache = jnp.repeat(k_cache, h // hkv, axis=2)
+        v_cache = jnp.repeat(v_cache, h // hkv, axis=2)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k_cache).astype(jnp.float32) / math.sqrt(d)
+    if softcap:
+        scores = softcap * jnp.tanh(scores / softcap)
+    scores = jnp.where(valid[:, None, None, :], scores, _NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v_cache)
+
+
+def decode_attention_appended(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    valid: jax.Array,
+    k_new: jax.Array,
+    v_new: jax.Array,
+    softcap: float = 0.0,
+) -> jax.Array:
+    """One-token decode attention over cache ∪ {current token}, WITHOUT
+    writing the cache: the current token's (k, v) participate via an extra
+    softmax lane. Decouples attention from the cache scatter so the layer
+    scan never re-emits cache-sized outputs (no double buffering).
+
+    q, k_new, v_new: (B, 1, H*, D); caches: (B, W, Hkv, D); valid: (B, W).
+    """
+    b, _, h, d = q.shape
+    hkv = k_cache.shape[2]
+    g = h // hkv
+    from repro.models.act_sharding import shard as _shard
+
+    qf = q.astype(jnp.float32)
+    scores_c = jnp.einsum(
+        "bqhd,bkhd->bhqk", qf,
+        jnp.repeat(k_cache, g, axis=2).astype(jnp.float32)) / math.sqrt(d)
+    # keep scores sequence-stationary when the cache is W-sharded: otherwise
+    # GSPMD picks head-stationary scores and all-gathers the cache per layer
+    scores_c = _shard(scores_c, "scores_decode")
+    score_n = jnp.einsum(
+        "bqhd,bqhd->bhq", qf,
+        jnp.repeat(k_new, g, axis=2).astype(jnp.float32))[..., None] / math.sqrt(d)
+    if softcap:
+        scores_c = softcap * jnp.tanh(scores_c / softcap)
+        score_n = softcap * jnp.tanh(score_n / softcap)
+    scores_c = jnp.where(valid[:, None, None, :], scores_c, _NEG_INF)
+    m = jnp.maximum(jnp.max(scores_c, axis=-1, keepdims=True), score_n)
+    p_c = jnp.exp(scores_c - m)
+    p_c = jnp.where(valid[:, None, None, :], p_c, 0.0)
+    p_n = jnp.exp(score_n - m)
+    z = jnp.sum(p_c, axis=-1, keepdims=True) + p_n
+    out = jnp.einsum("bhqk,bkhd->bqhd", p_c / z,
+                     jnp.repeat(v_cache, g, axis=2).astype(jnp.float32))
+    out = out + (p_n / z).transpose(0, 2, 1, 3) * jnp.repeat(
+        v_new, g, axis=2).astype(jnp.float32)
+    return out.astype(q.dtype)
+
+
+def cross_attention(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Full (non-causal) cross attention. q:(B,S,H,D) k,v:(B,T,Hkv,D)."""
+    b, s, h, d = q.shape
+    hkv = k.shape[2]
+    if hkv != h:
+        k = jnp.repeat(k, h // hkv, axis=2)
+        v = jnp.repeat(v, h // hkv, axis=2)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) / math.sqrt(d)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp(cfg, p: dict, x: jax.Array) -> jax.Array:
+    if cfg.activation == "swiglu":
+        gate = jnp.einsum("...d,df->...f", x, p["w_gate"].astype(x.dtype))
+        up = jnp.einsum("...d,df->...f", x, p["w_up"].astype(x.dtype))
+        h = jax.nn.silu(gate) * up
+    else:  # gelu
+        h = jax.nn.gelu(jnp.einsum("...d,df->...f", x, p["w_up"].astype(x.dtype)))
+    return jnp.einsum("...f,fd->...d", h, p["w_down"].astype(x.dtype))
+
+
+def init_mlp(cfg, key, d: int, f: int) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    std_in = d ** -0.5
+    std_out = f ** -0.5
+    p = {
+        "w_up": jax.random.normal(k1, (d, f), jnp.float32) * std_in,
+        "w_down": jax.random.normal(k2, (f, d), jnp.float32) * std_out,
+    }
+    if cfg.activation == "swiglu":
+        p["w_gate"] = jax.random.normal(k3, (d, f), jnp.float32) * std_in
+    return p
+
+
+# ---------------------------------------------------------------------------
+# attention block params
+# ---------------------------------------------------------------------------
+
+def init_attention(cfg, key, *, cross: bool = False) -> dict:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    kq, kk, kv_, ko, kn = jax.random.split(key, 5)
+    std = d ** -0.5
+    p = {
+        "wq": jax.random.normal(kq, (d, cfg.q_dim), jnp.float32) * std,
+        # cross-attn K/V also take d_model input: context embeddings are
+        # pre-projected by params["ctx_proj"] before reaching the layer.
+        "wk": jax.random.normal(kk, (d, cfg.kv_dim), jnp.float32) * std,
+        "wv": jax.random.normal(kv_, (d, cfg.kv_dim), jnp.float32) * std,
+        "wo": jax.random.normal(ko, (cfg.q_dim, d), jnp.float32) * (cfg.q_dim ** -0.5),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), jnp.float32)
+        p["k_norm"] = jnp.ones((hd,), jnp.float32)
+    return p
+
+
+def project_qkv(cfg, p: dict, x: jax.Array, kv_input: Optional[jax.Array] = None):
+    """Project to (B,S,H,D) / (B,T,Hkv,D) with optional per-head qk rmsnorm."""
+    kv_input = x if kv_input is None else kv_input
+    hd = cfg.resolved_head_dim
+    q = jnp.einsum("...d,de->...e", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("...d,de->...e", kv_input, p["wk"].astype(kv_input.dtype))
+    v = jnp.einsum("...d,de->...e", kv_input, p["wv"].astype(kv_input.dtype))
+    q = q.reshape(*q.shape[:-1], cfg.num_heads, hd)
+    k = k.reshape(*k.shape[:-1], cfg.num_kv_heads, hd)
+    v = v.reshape(*v.shape[:-1], cfg.num_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def attn_output(cfg, p: dict, o: jax.Array) -> jax.Array:
+    o = o.reshape(*o.shape[:-2], cfg.q_dim)
+    return jnp.einsum("...e,ed->...d", o, p["wo"].astype(o.dtype))

@@ -1,0 +1,717 @@
+"""Model assembly: init / forward / prefill / decode for all six families.
+
+Layers are *stacked* on a leading axis and iterated with ``jax.lax.scan`` so
+the lowered HLO stays compact (a 64-layer model is one scan, not 64 inlined
+blocks) — essential for fast lower+compile at 512 devices.  The VLM family
+(cross-attn every Nth layer) scans over "super-blocks" of (N-1) self layers +
+1 cross layer.
+
+All functions are pure; parameters are explicit pytrees of ``float32`` leaves
+cast to ``cfg.dtype`` at use.  ``forward`` returns the last-layer hidden
+states alongside logits — the hook thought-calibration probes consume.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import cache as cache_mod
+from repro.models import layers, moe, ssm
+
+
+# Activation-sharding hooks (Megatron-style sequence parallelism for the
+# residual stream; group sharding for MoE buckets) live in act_sharding so
+# moe.py can share them. ``activation_sharding`` is re-exported for callers.
+from repro.models.act_sharding import activation_sharding  # noqa: F401
+from repro.models.act_sharding import shard as _shard_act
+
+
+def _shard_residual(x):
+    return _shard_act(x, "residual")
+
+
+class ForwardOut(NamedTuple):
+    logits: jax.Array
+    hidden: jax.Array        # (B, S, D) post-final-norm
+    aux_loss: jax.Array      # MoE load-balance (0 otherwise)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_self_layer(cfg, key) -> dict:
+    ks = jax.random.split(key, 6)
+    p = {
+        "ln1": layers.init_norm(cfg, cfg.d_model),
+        "attn": layers.init_attention(cfg, ks[0]),
+    }
+    if cfg.family == "moe":
+        p["ln2"] = layers.init_norm(cfg, cfg.d_model)
+        p["moe"] = moe.init_moe(cfg, ks[1])
+    elif cfg.d_ff:
+        p["ln2"] = layers.init_norm(cfg, cfg.d_model)
+        p["mlp"] = layers.init_mlp(cfg, ks[1], cfg.d_model, cfg.d_ff)
+    if cfg.family == "hybrid":
+        p["ssm"] = ssm.init_ssm(cfg, ks[2])
+        p["fuse_a"] = jnp.ones((cfg.d_model,), jnp.float32)
+        p["fuse_s"] = jnp.ones((cfg.d_model,), jnp.float32)
+    if cfg.family == "audio":
+        p["lnc"] = layers.init_norm(cfg, cfg.d_model)
+        p["cross"] = layers.init_attention(cfg, ks[3], cross=True)
+    return p
+
+
+def _init_ssm_layer(cfg, key) -> dict:
+    return {"ln1": layers.init_norm(cfg, cfg.d_model), "ssm": ssm.init_ssm(cfg, key)}
+
+
+def _init_cross_layer(cfg, key) -> dict:
+    ks = jax.random.split(key, 2)
+    return {
+        "lnc": layers.init_norm(cfg, cfg.d_model),
+        "cross": layers.init_attention(cfg, ks[0], cross=True),
+        "ln2": layers.init_norm(cfg, cfg.d_model),
+        "mlp": layers.init_mlp(cfg, ks[1], cfg.d_model, cfg.d_ff),
+        "gate_attn": jnp.zeros((), jnp.float32),
+        "gate_mlp": jnp.zeros((), jnp.float32),
+    }
+
+
+def _stack(init_one, cfg, key, n: int):
+    return jax.vmap(lambda k: init_one(cfg, k))(jax.random.split(key, n))
+
+
+def init_params(cfg, key) -> dict:
+    ke, kl, kh, kc, kx = jax.random.split(key, 5)
+    v, d = cfg.padded_vocab, cfg.d_model
+    std = d ** -0.5
+    ncb = max(cfg.num_codebooks, 1)
+    if cfg.num_codebooks:
+        embed = jax.random.normal(ke, (ncb, v, d), jnp.float32) * std
+    else:
+        embed = jax.random.normal(ke, (v, d), jnp.float32) * std
+    params: dict = {"embed": embed, "final_norm": layers.init_norm(cfg, d)}
+
+    if cfg.family == "ssm":
+        params["blocks"] = _stack(_init_ssm_layer, cfg, kl, cfg.num_layers)
+    elif cfg.family == "vlm":
+        n = cfg.cross_attn.every_n_layers
+        n_super = cfg.num_layers // n
+        keys = jax.random.split(kl, n_super)
+        params["blocks"] = jax.vmap(
+            lambda k: _stack(_init_self_layer, cfg, k, n - 1)
+        )(keys)
+        params["cross_blocks"] = _stack(_init_cross_layer, cfg, kc, n_super)
+    else:
+        params["blocks"] = _stack(_init_self_layer, cfg, kl, cfg.num_layers)
+
+    if cfg.uses_cross_attn:
+        params["ctx_proj"] = (
+            jax.random.normal(kx, (cfg.cross_attn.context_dim, d), jnp.float32)
+            * cfg.cross_attn.context_dim ** -0.5
+        )
+    if not cfg.tie_embeddings:
+        if cfg.num_codebooks:
+            params["lm_head"] = jax.random.normal(kh, (ncb, d, v), jnp.float32) * std
+        else:
+            params["lm_head"] = jax.random.normal(kh, (d, v), jnp.float32) * std
+    return params
+
+
+# ---------------------------------------------------------------------------
+# sublayers (full sequence)
+# ---------------------------------------------------------------------------
+
+def _self_attn_full(cfg, lp, x, pos, window):
+    h = layers.apply_norm(cfg, lp["ln1"], x)
+    q, k, v = layers.project_qkv(cfg, lp["attn"], h)
+    q = layers.apply_rope(q, pos, cfg.rope_theta, cfg.rope)
+    k = layers.apply_rope(k, pos, cfg.rope_theta, cfg.rope)
+    o = layers.causal_attention(q, k, v, window=window, softcap=cfg.attn_logit_softcap)
+    return layers.attn_output(cfg, lp["attn"], o)
+
+
+def _cross_attn_full(cfg, lp, x, ctx_h):
+    h = layers.apply_norm(cfg, lp["lnc"], x)
+    q, k, v = layers.project_qkv(cfg, lp["cross"], h, kv_input=ctx_h)
+    o = layers.cross_attention(q, k, v)
+    return layers.attn_output(cfg, lp["cross"], o)
+
+
+def _train_window(cfg) -> int:
+    return cfg.sliding_window if cfg.native_swa else 0
+
+
+def _layer_full(cfg, lp, x, pos, ctx_h, moe_impl):
+    """One uniform-family layer over a full sequence. Returns (x, aux)."""
+    rs = cfg.residual_scale
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.family == "ssm":
+        x = x + rs * ssm.ssm_block(cfg, lp["ssm"], layers.apply_norm(cfg, lp["ln1"], x))
+        return x, aux
+    if cfg.family == "hybrid":
+        h = layers.apply_norm(cfg, lp["ln1"], x)
+        q, k, v = layers.project_qkv(cfg, lp["attn"], h)
+        q = layers.apply_rope(q, pos, cfg.rope_theta, cfg.rope)
+        k = layers.apply_rope(k, pos, cfg.rope_theta, cfg.rope)
+        ao = layers.attn_output(
+            cfg, lp["attn"],
+            layers.causal_attention(q, k, v, window=_train_window(cfg)),
+        )
+        so = ssm.ssm_block(cfg, lp["ssm"], h)
+        fused = 0.5 * (
+            layers.rmsnorm(ao, lp["fuse_a"], cfg.norm_eps)
+            + layers.rmsnorm(so, lp["fuse_s"], cfg.norm_eps)
+        )
+        x = x + rs * fused
+    else:
+        x = x + rs * _self_attn_full(cfg, lp, x, pos, _train_window(cfg))
+    if cfg.family == "audio":
+        x = x + rs * _cross_attn_full(cfg, lp, x, ctx_h)
+    if cfg.family == "moe":
+        y, aux = moe.moe_ffn(cfg, lp["moe"], layers.apply_norm(cfg, lp["ln2"], x), moe_impl)
+        x = x + rs * y
+    elif cfg.d_ff:
+        x = x + rs * layers.mlp(cfg, lp["mlp"], layers.apply_norm(cfg, lp["ln2"], x))
+    return x, aux
+
+
+def _cross_layer_full(cfg, lp, x, ctx_h):
+    """VLM gated cross-attention layer (Llama-3.2-Vision style)."""
+    g_a = jnp.tanh(lp["gate_attn"]).astype(x.dtype)
+    x = x + g_a * _cross_attn_full(cfg, lp, x, ctx_h)
+    g_m = jnp.tanh(lp["gate_mlp"]).astype(x.dtype)
+    x = x + g_m * layers.mlp(cfg, lp["mlp"], layers.apply_norm(cfg, lp["ln2"], x))
+    return x
+
+
+# ---------------------------------------------------------------------------
+# embedding / head
+# ---------------------------------------------------------------------------
+
+def embed_tokens(cfg, params, tokens, dtype):
+    if cfg.num_codebooks:
+        # tokens: (B, S, K); sum codebook embeddings (MusicGen)
+        x = 0.0
+        for cb in range(cfg.num_codebooks):
+            x = x + params["embed"][cb].astype(dtype)[tokens[..., cb]]
+        return x
+    return params["embed"].astype(dtype)[tokens]
+
+
+def lm_logits(cfg, params, hidden):
+    if cfg.tie_embeddings:
+        w = params["embed"].astype(hidden.dtype)
+        return jnp.einsum("bsd,vd->bsv", hidden, w)
+    if cfg.num_codebooks:
+        return jnp.einsum("bsd,kdv->bskv", hidden, params["lm_head"].astype(hidden.dtype))
+    return jnp.einsum("bsd,dv->bsv", hidden, params["lm_head"].astype(hidden.dtype))
+
+
+def _ctx_hidden(cfg, params, ctx, dtype):
+    if ctx is None:
+        return None
+    return jnp.einsum("btc,cd->btd", ctx.astype(dtype), params["ctx_proj"].astype(dtype))
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "remat", "moe_impl", "compute_dtype", "unroll"),
+)
+def forward(
+    cfg,
+    params,
+    tokens: jax.Array,
+    ctx: Optional[jax.Array] = None,
+    *,
+    remat: bool = False,
+    moe_impl: str = "dispatch",
+    compute_dtype: str = "bfloat16",
+    unroll: bool = False,
+) -> ForwardOut:
+    dtype = jnp.dtype(compute_dtype)
+    b, s = tokens.shape[:2]
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    x = embed_tokens(cfg, params, tokens, dtype)
+    if cfg.rope == "none" and cfg.family == "audio":
+        x = x + layers.sinusoidal_positions(pos, cfg.d_model).astype(dtype)
+    x = _shard_residual(x)
+    ctx_h = _ctx_hidden(cfg, params, ctx, dtype)
+
+    if cfg.family == "vlm":
+        n = cfg.cross_attn.every_n_layers
+
+        def super_block(carry, ps):
+            xc, aux = carry
+            self_ps, cross_ps = ps
+
+            def inner(carry2, lp):
+                x2, a2 = carry2
+                x2, a_l = _layer_full(cfg, lp, x2, pos, None, moe_impl)
+                return (x2, a2 + a_l), None
+
+            inner_fn = jax.checkpoint(inner) if remat else inner
+            (xc, aux), _ = jax.lax.scan(inner_fn, (xc, aux), self_ps,
+                                        unroll=unroll)
+            xc = _cross_layer_full(cfg, cross_ps, xc, ctx_h)
+            return (_shard_residual(xc), aux), None
+
+        blk = jax.checkpoint(super_block) if remat else super_block
+        (x, aux), _ = jax.lax.scan(blk, (x, jnp.zeros((), jnp.float32)),
+                                   (params["blocks"], params["cross_blocks"]),
+                                   unroll=unroll)
+    else:
+        def block(carry, lp):
+            xc, aux = carry
+            xc, a_l = _layer_full(cfg, lp, xc, pos, ctx_h, moe_impl)
+            return (_shard_residual(xc), aux + a_l), None
+
+        blk = jax.checkpoint(block) if remat else block
+        (x, aux), _ = jax.lax.scan(blk, (x, jnp.zeros((), jnp.float32)),
+                                   params["blocks"], unroll=unroll)
+
+    hidden = layers.apply_norm(cfg, params["final_norm"], x)
+    logits = lm_logits(cfg, params, hidden)
+    return ForwardOut(logits, hidden, aux)
+
+
+def loss_fn(cfg, params, tokens, labels, ctx=None, *, remat=True,
+            moe_impl="dispatch", unroll: bool = False):
+    """Next-token cross entropy (labels already shifted). Returns (loss, metrics).
+
+    The gold logit is picked with an iota==label mask (fuses into the vocab
+    reduction under GSPMD, keeping vocab-sharded logits sharded) instead of
+    ``take_along_axis`` (a gather that forces an all-gather plus an f32
+    materialization of the full logits)."""
+    out = forward(cfg, params, tokens, ctx, remat=remat, moe_impl=moe_impl,
+                  unroll=unroll)
+    logits = out.logits
+    m = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+    shifted = (logits - m).astype(jnp.float32)
+    logz = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1))
+    onehot_mask = jax.lax.broadcasted_iota(
+        jnp.int32, logits.shape, logits.ndim - 1) == labels[..., None]
+    gold = jnp.sum(jnp.where(onehot_mask, shifted, 0.0), axis=-1)
+    nll = jnp.mean(logz - gold)
+    loss = nll + out.aux_loss
+    return loss, {"nll": nll, "aux": out.aux_loss}
+
+
+# ---------------------------------------------------------------------------
+# prefill / decode
+# ---------------------------------------------------------------------------
+
+def prefill(
+    cfg,
+    params,
+    tokens: jax.Array,
+    ctx: Optional[jax.Array] = None,
+    *,
+    use_window: bool = False,
+    cache_len: int | None = None,
+    moe_impl: str = "dispatch",
+    compute_dtype: str = "bfloat16",
+    unroll: bool = False,
+):
+    """Run the full prompt, build a decode cache. Returns (last_logits, hidden, cache).
+
+    ``cache_len``: total cache slots to allocate (>= prompt length); defaults
+    to the prompt length (no decode headroom). Ignored when a sliding window
+    is active (ring buffers are window-sized).
+
+    Implemented as forward + cache construction from per-layer K/V recompute is
+    wasteful; instead we thread cache writes through the same scan.
+    """
+    dtype = jnp.dtype(compute_dtype)
+    b, s = tokens.shape[:2]
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    x = embed_tokens(cfg, params, tokens, dtype)
+    if cfg.rope == "none" and cfg.family == "audio":
+        x = x + layers.sinusoidal_positions(pos, cfg.d_model).astype(dtype)
+    ctx_h = _ctx_hidden(cfg, params, ctx, dtype)
+
+    window = cfg.sliding_window if (use_window or cfg.native_swa) and cfg.sliding_window else 0
+    # Ring caches must be exactly window-wide (slot = pos % window) to stay
+    # correct as decode continues past the prompt; append caches get headroom.
+    w_cache = window if window else max(cache_len or s, s)
+
+    def kv_for_cache(k, v):
+        """Lay the prompt K/V into the cache: ring layout (slot = pos % w)
+        when windowed, else first-s-slots of a w_cache-slot append cache."""
+        if w_cache == s:
+            return k, v
+        if w_cache < s:
+            # ring: keep last w_cache positions, rolled so slot = pos % w_cache
+            kk, vv = k[:, -w_cache:], v[:, -w_cache:]
+            shift = s % w_cache
+            return jnp.roll(kk, shift, axis=1), jnp.roll(vv, shift, axis=1)
+        pad = w_cache - s
+        return (jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))),
+                jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))))
+
+    aux0 = jnp.zeros((), jnp.float32)
+
+    def self_body(carry, lp):
+        xc, aux = carry
+        h = layers.apply_norm(cfg, lp["ln1"], xc)
+        q, k, v = layers.project_qkv(cfg, lp["attn"], h)
+        q = layers.apply_rope(q, pos, cfg.rope_theta, cfg.rope)
+        k = layers.apply_rope(k, pos, cfg.rope_theta, cfg.rope)
+        o = layers.causal_attention(q, k, v, window=window, softcap=cfg.attn_logit_softcap)
+        xc = xc + cfg.residual_scale * layers.attn_output(cfg, lp["attn"], o)
+        kc, vc = kv_for_cache(k, v)
+        if cfg.family == "audio":
+            xc = xc + cfg.residual_scale * _cross_attn_full(cfg, lp, xc, ctx_h)
+        if cfg.family == "moe":
+            y, a = moe.moe_ffn(cfg, lp["moe"], layers.apply_norm(cfg, lp["ln2"], xc), moe_impl)
+            xc = xc + cfg.residual_scale * y
+            aux = aux + a
+        elif cfg.d_ff:
+            xc = xc + cfg.residual_scale * layers.mlp(
+                cfg, lp["mlp"], layers.apply_norm(cfg, lp["ln2"], xc))
+        return (_shard_residual(xc), aux), (kc, vc)
+
+    def hybrid_body(carry, lp):
+        xc, aux = carry
+        h = layers.apply_norm(cfg, lp["ln1"], xc)
+        q, k, v = layers.project_qkv(cfg, lp["attn"], h)
+        q = layers.apply_rope(q, pos, cfg.rope_theta, cfg.rope)
+        k = layers.apply_rope(k, pos, cfg.rope_theta, cfg.rope)
+        ao = layers.attn_output(cfg, lp["attn"],
+                                layers.causal_attention(q, k, v, window=window or _train_window(cfg)))
+        # SSD with final state for the cache
+        so, st = _ssm_block_with_state(cfg, lp["ssm"], h)
+        fused = 0.5 * (layers.rmsnorm(ao, lp["fuse_a"], cfg.norm_eps)
+                       + layers.rmsnorm(so, lp["fuse_s"], cfg.norm_eps))
+        xc = xc + cfg.residual_scale * fused
+        xc = xc + cfg.residual_scale * layers.mlp(
+            cfg, lp["mlp"], layers.apply_norm(cfg, lp["ln2"], xc))
+        kc, vc = kv_for_cache(k, v)
+        return (_shard_residual(xc), aux), (kc, vc, st)
+
+    def ssm_body(carry, lp):
+        xc, aux = carry
+        h = layers.apply_norm(cfg, lp["ln1"], xc)
+        y, st = _ssm_block_with_state(cfg, lp["ssm"], h)
+        return (_shard_residual(xc + cfg.residual_scale * y), aux), st
+
+    cache: dict = {"pos": jnp.full((b,), s, jnp.int32)}
+    if cfg.family == "ssm":
+        (x, aux), states = jax.lax.scan(ssm_body, (x, aux0), params["blocks"],
+                                        unroll=unroll)
+        cache["ssm"] = states
+    elif cfg.family == "vlm":
+        n = cfg.cross_attn.every_n_layers
+
+        def super_block(carry, ps):
+            xc_aux, = (carry,)
+            self_ps, cross_ps = ps
+            xc_aux, kv = jax.lax.scan(self_body, xc_aux, self_ps, unroll=unroll)
+            xc, aux = xc_aux
+            xc = _cross_layer_full(cfg, cross_ps, xc, ctx_h)
+            return (xc, aux), kv
+
+        (x, aux), kvs = jax.lax.scan(super_block, (x, aux0),
+                                     (params["blocks"], params["cross_blocks"]),
+                                     unroll=unroll)
+        ks_, vs_ = kvs
+        ls = cache_mod.num_self_layers(cfg)
+        cache["k"] = ks_.reshape(ls, *ks_.shape[2:])
+        cache["v"] = vs_.reshape(ls, *vs_.shape[2:])
+        cache.update(_cross_kv(cfg, params, ctx_h))
+    elif cfg.family == "hybrid":
+        (x, aux), (ks_, vs_, states) = jax.lax.scan(
+            hybrid_body, (x, aux0), params["blocks"], unroll=unroll)
+        cache["k"], cache["v"] = ks_, vs_
+        cache["ssm"] = states
+    else:
+        (x, aux), (ks_, vs_) = jax.lax.scan(self_body, (x, aux0),
+                                            params["blocks"], unroll=unroll)
+        cache["k"], cache["v"] = ks_, vs_
+        if cfg.family == "audio":
+            cache.update(_cross_kv(cfg, params, ctx_h))
+
+    hidden = layers.apply_norm(cfg, params["final_norm"], x)
+    logits = lm_logits(cfg, params, hidden[:, -1:])
+    return logits, hidden, cache
+
+
+def _ssm_block_with_state(cfg, p, xin):
+    """Like ssm.ssm_block but also returns the decode state dict."""
+    s = cfg.ssm
+    d = cfg.d_model
+    h, hd = s.num_heads(d), s.head_dim
+
+    z = jnp.einsum("bsd,de->bse", xin, p["wz"].astype(xin.dtype))
+    xi = jnp.einsum("bsd,de->bse", xin, p["wx"].astype(xin.dtype))
+    Bm = jnp.einsum("bsd,dn->bsn", xin, p["wB"].astype(xin.dtype))
+    Cm = jnp.einsum("bsd,dn->bsn", xin, p["wC"].astype(xin.dtype))
+    dt = jnp.einsum("bsd,dh->bsh", xin.astype(jnp.float32), p["wdt"])
+
+    xi_pre, Bm_pre, Cm_pre = xi, Bm, Cm
+    xi, cx = ssm._causal_conv(xi, p["conv_x"])
+    Bm, cb = ssm._causal_conv(Bm, p["conv_B"])
+    Cm, cc = ssm._causal_conv(Cm, p["conv_C"])
+
+    dt = jax.nn.softplus(dt + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    dA = dt * A
+    xh = xi.reshape(*xi.shape[:-1], h, hd)
+    y, final_state = ssm.ssd_scan(xh * dt[..., None].astype(xi.dtype), dA, Bm, Cm, s.chunk_size)
+    y = y + xh * p["D"].astype(xi.dtype)[:, None]
+    y = y.reshape(*xin.shape[:-1], h * hd)
+    y = layers.rmsnorm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    y = jnp.einsum("bse,ed->bsd", y, p["wo"].astype(xin.dtype))
+    kw = s.conv_width - 1
+    state = {
+        "state": final_state,
+        "conv_x": xi_pre[:, -kw:] if xi_pre.shape[1] >= kw else jnp.pad(xi_pre, ((0, 0), (kw - xi_pre.shape[1], 0), (0, 0))),
+        "conv_B": Bm_pre[:, -kw:] if Bm_pre.shape[1] >= kw else jnp.pad(Bm_pre, ((0, 0), (kw - Bm_pre.shape[1], 0), (0, 0))),
+        "conv_C": Cm_pre[:, -kw:] if Cm_pre.shape[1] >= kw else jnp.pad(Cm_pre, ((0, 0), (kw - Cm_pre.shape[1], 0), (0, 0))),
+    }
+    return y, state
+
+
+def _cross_kv(cfg, params, ctx_h) -> dict:
+    """Precompute static cross-attention K/V for all cross layers."""
+    if ctx_h is None:
+        return {}
+    hd = cfg.resolved_head_dim
+    if cfg.family == "vlm":
+        cross_ps = params["cross_blocks"]
+    else:  # audio: cross params live inside each layer
+        cross_ps = params["blocks"]
+
+    def one(lp):
+        p = lp["cross"]
+        k = jnp.einsum("btc,ce->bte", ctx_h, p["wk"].astype(ctx_h.dtype))
+        v = jnp.einsum("btc,ce->bte", ctx_h, p["wv"].astype(ctx_h.dtype))
+        k = k.reshape(*k.shape[:-1], cfg.num_kv_heads, hd)
+        v = v.reshape(*v.shape[:-1], cfg.num_kv_heads, hd)
+        return k, v
+
+    ks_, vs_ = jax.vmap(one)(cross_ps)
+    return {"cross_k": ks_, "cross_v": vs_}
+
+
+# ---------------------------------------------------------------------------
+# decode step
+# ---------------------------------------------------------------------------
+
+def decode_step(
+    cfg,
+    params,
+    dcache: dict,
+    tokens: jax.Array,
+    *,
+    window: int = 0,
+    moe_impl: str = "dispatch",
+    compute_dtype: str = "bfloat16",
+    unroll: bool = False,
+):
+    """One-token decode. tokens: (B, 1) or (B, 1, K). Returns (logits, hidden, cache).
+
+    ``window`` is STATIC: nonzero means the attention caches are ring buffers
+    of that width (sliding-window decode); zero means full append caches.
+    """
+    dtype = jnp.dtype(compute_dtype)
+    b = tokens.shape[0]
+    pos = dcache["pos"]                                             # (B,)
+    pos2 = pos[:, None]                                             # (B,1)
+    x = embed_tokens(cfg, params, tokens, dtype)
+    if cfg.rope == "none" and cfg.family == "audio":
+        x = x + layers.sinusoidal_positions(pos2, cfg.d_model).astype(dtype)
+
+    aux0 = jnp.zeros((), jnp.float32)
+
+    def attn_sub(lp, xc, kcache, vcache):
+        """Read-only attention over (old cache ∪ current token); the cache
+        write happens ONCE after the layer scan (cache_write_stacked), so the
+        scan never re-emits cache-sized outputs (no double buffering)."""
+        h = layers.apply_norm(cfg, lp["ln1"], xc)
+        q, k, v = layers.project_qkv(cfg, lp["attn"], h)
+        q = layers.apply_rope(q, pos2, cfg.rope_theta, cfg.rope)
+        k = layers.apply_rope(k, pos2, cfg.rope_theta, cfg.rope)
+        # When the cache is sequence-sharded (kv heads don't divide the TP
+        # axis), replicate the (tiny) query so GSPMD keeps the (huge) cache
+        # W-stationary instead of all-gathering it per layer.
+        q = _shard_act(q, "q_decode")
+        valid = cache_mod.cache_valid_mask_pre_write(pos, kcache.shape[1], window)
+        o = layers.decode_attention_appended(
+            q, kcache, vcache, valid, k, v, cfg.attn_logit_softcap)
+        return layers.attn_output(cfg, lp["attn"], o), k, v
+
+    def cross_sub(lp, xc, ck, cv):
+        h = layers.apply_norm(cfg, lp["lnc"], xc)
+        hd = cfg.resolved_head_dim
+        q = jnp.einsum("bsd,de->bse", h, lp["cross"]["wq"].astype(h.dtype))
+        q = q.reshape(*q.shape[:-1], cfg.num_heads, hd)
+        valid = jnp.ones((b, ck.shape[1]), bool)
+        o = layers.decode_attention(q, ck, cv, valid)
+        return layers.attn_output(cfg, lp["cross"], o)
+
+    def self_body(carry, scanned):
+        xc, aux = carry
+        lp = scanned["lp"]
+        ao, k_new, v_new = attn_sub(lp, xc, scanned["k"], scanned["v"])
+        xc = xc + cfg.residual_scale * ao
+        if cfg.family == "audio":
+            xc = xc + cfg.residual_scale * cross_sub(lp, xc, scanned["ck"], scanned["cv"])
+        if cfg.family == "moe":
+            y, a = moe.moe_ffn(cfg, lp["moe"], layers.apply_norm(cfg, lp["ln2"], xc), moe_impl)
+            xc = xc + cfg.residual_scale * y
+            aux = aux + a
+        elif cfg.d_ff:
+            xc = xc + cfg.residual_scale * layers.mlp(
+                cfg, lp["mlp"], layers.apply_norm(cfg, lp["ln2"], xc))
+        return (xc, aux), {"k": k_new, "v": v_new}
+
+    def ssm_body(carry, scanned):
+        xc, aux = carry
+        lp = scanned["lp"]
+        h = layers.apply_norm(cfg, lp["ln1"], xc)
+        y, st = ssm.ssm_decode_step(cfg, lp["ssm"], scanned["ssm"], h)
+        return (xc + cfg.residual_scale * y, aux), {"ssm": st}
+
+    def hybrid_body(carry, scanned):
+        xc, aux = carry
+        lp = scanned["lp"]
+        h = layers.apply_norm(cfg, lp["ln1"], xc)
+        q, k, v = layers.project_qkv(cfg, lp["attn"], h)
+        q = layers.apply_rope(q, pos2, cfg.rope_theta, cfg.rope)
+        k = layers.apply_rope(k, pos2, cfg.rope_theta, cfg.rope)
+        valid = cache_mod.cache_valid_mask_pre_write(pos, scanned["k"].shape[1], window)
+        ao = layers.attn_output(cfg, lp["attn"], layers.decode_attention_appended(
+            q, scanned["k"], scanned["v"], valid, k, v))
+        so, st = ssm.ssm_decode_step(cfg, lp["ssm"], scanned["ssm"], h)
+        fused = 0.5 * (layers.rmsnorm(ao, lp["fuse_a"], cfg.norm_eps)
+                       + layers.rmsnorm(so, lp["fuse_s"], cfg.norm_eps))
+        xc = xc + cfg.residual_scale * fused
+        xc = xc + cfg.residual_scale * layers.mlp(
+            cfg, lp["mlp"], layers.apply_norm(cfg, lp["ln2"], xc))
+        return (xc, aux), {"k": k, "v": v, "ssm": st}
+
+    new_cache = dict(dcache)
+    if cfg.family == "ssm":
+        xs = {"lp": params["blocks"], "ssm": dcache["ssm"]}
+        (x, aux), out = jax.lax.scan(ssm_body, (x, aux0), xs, unroll=unroll)
+        new_cache["ssm"] = out["ssm"]
+    elif cfg.family == "hybrid":
+        xs = {"lp": params["blocks"], "k": dcache["k"], "v": dcache["v"],
+              "ssm": dcache["ssm"]}
+        (x, aux), out = jax.lax.scan(hybrid_body, (x, aux0), xs, unroll=unroll)
+        new_cache["k"], new_cache["v"] = cache_mod.cache_write_stacked(
+            dcache["k"], dcache["v"], out["k"], out["v"], pos, window)
+        new_cache["ssm"] = out["ssm"]
+    elif cfg.family == "vlm":
+        n = cfg.cross_attn.every_n_layers
+        n_super = cfg.num_layers // n
+        ls = cache_mod.num_self_layers(cfg)
+        kr = dcache["k"].reshape(n_super, n - 1, *dcache["k"].shape[1:])
+        vr = dcache["v"].reshape(n_super, n - 1, *dcache["v"].shape[1:])
+
+        def super_block(carry, scanned):
+            xs_inner = {"lp": scanned["self"], "k": scanned["k"], "v": scanned["v"]}
+            carry, out = jax.lax.scan(self_body, carry, xs_inner, unroll=unroll)
+            xc, aux = carry
+            clp = scanned["cross"]
+            xc = xc + jnp.tanh(clp["gate_attn"]).astype(xc.dtype) * cross_sub(
+                clp, xc, scanned["ck"], scanned["cv"])
+            xc = xc + jnp.tanh(clp["gate_mlp"]).astype(xc.dtype) * layers.mlp(
+                cfg, clp["mlp"], layers.apply_norm(cfg, clp["ln2"], xc))
+            return (xc, aux), out
+
+        xs = {"self": params["blocks"], "cross": params["cross_blocks"],
+              "k": kr, "v": vr, "ck": dcache["cross_k"], "cv": dcache["cross_v"]}
+        (x, aux), out = jax.lax.scan(super_block, (x, aux0), xs, unroll=unroll)
+        k_new = out["k"].reshape(ls, *out["k"].shape[2:])
+        v_new = out["v"].reshape(ls, *out["v"].shape[2:])
+        new_cache["k"], new_cache["v"] = cache_mod.cache_write_stacked(
+            dcache["k"], dcache["v"], k_new, v_new, pos, window)
+    else:
+        # Cache lives in the scan CARRY and is updated with one
+        # dynamic-update-slice per layer — XLA's canonical in-place loop
+        # pattern, so the (potentially TB-scale) cache is single-buffered.
+        # With ``kv_quant`` the cache holds int8 values + per-(token, head)
+        # scales; slices are dequantized on read and re-quantized on write.
+        kv_quant = "k_scale" in dcache
+        w = dcache["k"].shape[2]
+        slot = pos % w if window else jnp.minimum(pos, w - 1)
+        bidx = jnp.arange(b)
+
+        def body(carry, scanned):
+            xc, aux, kf, vf, ksf, vsf, li = carry
+            lp = scanned["lp"]
+            # pin the carried cache's sharding: GSPMD otherwise replicates the
+            # scan carry over "model" and all-gathers the ENTIRE cache every
+            # decode step (measured 72 GiB/step on qwen3-8b decode_32k).
+            kf = _shard_act(kf, "kv_full")
+            vf = _shard_act(vf, "kv_full")
+            if kv_quant:
+                ksf = _shard_act(ksf, "kv_scale_full")
+                vsf = _shard_act(vsf, "kv_scale_full")
+            kc = jax.lax.dynamic_index_in_dim(kf, li, 0, keepdims=False)
+            vc = jax.lax.dynamic_index_in_dim(vf, li, 0, keepdims=False)
+            if kv_quant:
+                ksc = jax.lax.dynamic_index_in_dim(ksf, li, 0, keepdims=False)
+                vsc = jax.lax.dynamic_index_in_dim(vsf, li, 0, keepdims=False)
+                kc_d = cache_mod.dequantize_kv(kc, ksc, dtype)
+                vc_d = cache_mod.dequantize_kv(vc, vsc, dtype)
+            else:
+                kc_d, vc_d = kc, vc
+            ao, k_new, v_new = attn_sub(lp, xc, kc_d, vc_d)
+            if kv_quant:
+                kq, ks_new = cache_mod.quantize_kv(k_new[:, 0])
+                vq, vs_new = cache_mod.quantize_kv(v_new[:, 0])
+                kc = kc.at[bidx, slot].set(kq)
+                vc = vc.at[bidx, slot].set(vq)
+                ksc = ksc.at[bidx, slot].set(ks_new)
+                vsc = vsc.at[bidx, slot].set(vs_new)
+                ksf = jax.lax.dynamic_update_index_in_dim(ksf, ksc, li, 0)
+                vsf = jax.lax.dynamic_update_index_in_dim(vsf, vsc, li, 0)
+            else:
+                kc = kc.at[bidx, slot].set(k_new[:, 0])
+                vc = vc.at[bidx, slot].set(v_new[:, 0])
+            kf = jax.lax.dynamic_update_index_in_dim(kf, kc, li, 0)
+            vf = jax.lax.dynamic_update_index_in_dim(vf, vc, li, 0)
+            xc = xc + cfg.residual_scale * ao
+            if cfg.family == "audio":
+                xc = xc + cfg.residual_scale * cross_sub(
+                    lp, xc, scanned["ck"], scanned["cv"])
+            if cfg.family == "moe":
+                y, a = moe.moe_ffn(cfg, lp["moe"],
+                                   layers.apply_norm(cfg, lp["ln2"], xc), moe_impl)
+                xc = xc + cfg.residual_scale * y
+                aux = aux + a
+            elif cfg.d_ff:
+                xc = xc + cfg.residual_scale * layers.mlp(
+                    cfg, lp["mlp"], layers.apply_norm(cfg, lp["ln2"], xc))
+            return (xc, aux, kf, vf, ksf, vsf, li + 1), None
+
+        xs = {"lp": params["blocks"]}
+        if cfg.family == "audio":
+            xs["ck"], xs["cv"] = dcache["cross_k"], dcache["cross_v"]
+        zero_s = jnp.zeros((), jnp.bfloat16)
+        carry0 = (x, aux0, dcache["k"], dcache["v"],
+                  dcache.get("k_scale", zero_s), dcache.get("v_scale", zero_s),
+                  jnp.int32(0))
+        (x, aux, kf, vf, ksf, vsf, _), _ = jax.lax.scan(
+            body, carry0, xs, unroll=unroll)
+        new_cache["k"], new_cache["v"] = kf, vf
+        if kv_quant:
+            new_cache["k_scale"], new_cache["v_scale"] = ksf, vsf
+
+    new_cache["pos"] = pos + 1
+    hidden = layers.apply_norm(cfg, params["final_norm"], x)       # (B,1,D)
+    logits = lm_logits(cfg, params, hidden)
+    return logits, hidden, new_cache

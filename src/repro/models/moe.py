@@ -1,0 +1,164 @@
+"""Mixture-of-Experts FFN (Qwen2-MoE / Phi-3.5-MoE style).
+
+Two execution paths:
+
+* ``dispatch`` (default for full configs): sort/scatter "dropping" MoE — each
+  sequence is a routing group; tokens are scattered into per-expert capacity
+  buckets (capacity factor 1.25), experts run as one stacked einsum
+  ``(E, C, D) x (E, D, F)``, results gathered back.  Scatter/gather are
+  FLOP-free so ``cost_analysis`` reflects true active-expert compute — unlike
+  GShard one-hot dispatch einsums, whose dispatch matmuls would dominate the
+  FLOP count and poison the roofline's MODEL_FLOPS ratio.
+* ``dense``: every expert runs on every token, weighted combine.  Exact
+  (no token dropping) — used as the smoke-test oracle and for tiny configs.
+
+Shared experts (Qwen2-MoE) run densely — they are always active.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+CAPACITY_FACTOR = 1.25
+
+
+def init_moe(cfg, key) -> dict:
+    e = cfg.moe
+    d, f = cfg.d_model, e.expert_d_ff
+    kr, kg, ku, kd, ks = jax.random.split(key, 5)
+    std_in, std_out = d ** -0.5, f ** -0.5
+    p = {
+        "router": jax.random.normal(kr, (d, e.num_experts), jnp.float32) * std_in,
+        "w_gate": jax.random.normal(kg, (e.num_experts, d, f), jnp.float32) * std_in,
+        "w_up": jax.random.normal(ku, (e.num_experts, d, f), jnp.float32) * std_in,
+        "w_down": jax.random.normal(kd, (e.num_experts, f, d), jnp.float32) * std_out,
+    }
+    if e.num_shared_experts:
+        fs = e.num_shared_experts * f
+        k1, k2, k3 = jax.random.split(ks, 3)
+        p["shared"] = {
+            "w_gate": jax.random.normal(k1, (d, fs), jnp.float32) * std_in,
+            "w_up": jax.random.normal(k2, (d, fs), jnp.float32) * std_in,
+            "w_down": jax.random.normal(k3, (fs, d), jnp.float32) * std_out,
+        }
+    return p
+
+
+def _route(cfg, p, x) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Router top-k. x: (..., D) -> (probs_topk, idx_topk, aux_loss)."""
+    e = cfg.moe
+    logits = jnp.einsum("...d,de->...e", x.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, e.top_k)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+    # Switch-style load-balance aux loss. Expert counts via a scatter-add —
+    # never materialize the (tokens, K, E) one-hot (it would dominate temp
+    # memory at train_4k scale).
+    me = jnp.mean(probs.reshape(-1, e.num_experts), axis=0)
+    n_tok = top_i.size // e.top_k
+    counts = jnp.zeros((e.num_experts,), jnp.float32).at[top_i.reshape(-1)].add(1.0)
+    ce = counts / jnp.maximum(n_tok * e.top_k, 1)
+    aux = e.num_experts * jnp.sum(me * ce) * e.router_aux_coef
+    return top_p, top_i, aux
+
+
+def _experts_dense_on_buckets(p, buckets: jax.Array) -> jax.Array:
+    """buckets: (E, C, D) -> (E, C, D) through each expert's SwiGLU FFN."""
+    gate = jnp.einsum("ecd,edf->ecf", buckets, p["w_gate"].astype(buckets.dtype))
+    up = jnp.einsum("ecd,edf->ecf", buckets, p["w_up"].astype(buckets.dtype))
+    h = jax.nn.silu(gate) * up
+    return jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(buckets.dtype))
+
+
+def _experts_on_group_buckets(p, buckets: jax.Array) -> jax.Array:
+    """buckets: (G, E, C, D) -> (G, E, C, D) through each expert's FFN."""
+    gate = jnp.einsum("gecd,edf->gecf", buckets, p["w_gate"].astype(buckets.dtype))
+    up = jnp.einsum("gecd,edf->gecf", buckets, p["w_up"].astype(buckets.dtype))
+    h = jax.nn.silu(gate) * up
+    return jnp.einsum("gecf,efd->gecd", h, p["w_down"].astype(buckets.dtype))
+
+
+def _moe_dispatch(cfg, p, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Batched sort/scatter MoE. x: (G, T, D) routing groups.
+
+    Implemented with batched (not vmapped) sorts/scatters plus explicit
+    sharding constraints on the bucket tensors: GSPMD cannot propagate the
+    group-axis sharding through argsort/scatter chains, and an unsharded
+    bucket tensor at train_4k scale is tens of GiB per device.
+    """
+    from repro.models.act_sharding import shard
+
+    e = cfg.moe
+    g, t, d = x.shape
+    # Constrain every gather/scatter endpoint to group-sharded layout: WSC is
+    # differentiable and transposes onto the cotangents, so the backward
+    # scatters (which GSPMD cannot infer shardings for) stay group-sharded
+    # instead of replicating (B, S, D) f32 buffers on every device.
+    x = shard(x, "moe_groups")
+    cap = max(int(t * e.top_k / e.num_experts * CAPACITY_FACTOR), e.top_k)
+    top_p, top_i, aux = _route(cfg, p, x)               # (G, T, K)
+
+    tk = t * e.top_k
+    flat_e = top_i.reshape(g, tk)                       # expert id per slot
+    flat_w = top_p.reshape(g, tk)
+    flat_tok = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(t), e.top_k)[None], (g, tk))
+    gidx = jnp.arange(g)[:, None]
+
+    # Stable sort by expert id; position within expert = rank - expert start.
+    order = jnp.argsort(flat_e, axis=-1, stable=True)   # (G, TK)
+    sorted_e = jnp.take_along_axis(flat_e, order, -1)
+    counts = jnp.zeros((g, e.num_experts), jnp.int32).at[gidx, flat_e].add(1)
+    starts = jnp.cumsum(counts, -1) - counts            # exclusive prefix
+    pos = jnp.arange(tk)[None] - jnp.take_along_axis(starts, sorted_e, -1)
+    keep = pos < cap
+    slot = sorted_e * cap + jnp.where(keep, pos, 0)
+
+    tok_sorted = jnp.take_along_axis(flat_tok, order, -1)
+    src = jnp.take_along_axis(x, tok_sorted[..., None], 1)      # (G, TK, D)
+    src = shard(jnp.where(keep[..., None], src, 0), "moe_groups")
+    buckets = jnp.zeros((g, e.num_experts * cap, d), x.dtype).at[
+        gidx, slot].add(src)
+    buckets = shard(buckets, "moe_groups")
+    buckets = buckets.reshape(g, e.num_experts, cap, d)
+
+    out = _experts_on_group_buckets(p, buckets).reshape(g, e.num_experts * cap, d)
+    out = shard(out, "moe_groups")
+    gathered = jnp.take_along_axis(out, slot[..., None], 1)
+    w_sorted = jnp.take_along_axis(flat_w, order, -1)
+    gathered = gathered * jnp.where(keep, w_sorted, 0.0)[..., None].astype(x.dtype)
+    gathered = shard(gathered, "moe_groups")
+    y = jnp.zeros((g, t, d), x.dtype).at[gidx, tok_sorted].add(gathered)
+    return shard(y, "moe_groups"), aux
+
+
+def _moe_dense(cfg, p, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Exact dense-all-experts path. x: (B, S, D)."""
+    e = cfg.moe
+    top_p, top_i, aux = _route(cfg, p, x)
+    w = jnp.sum(jax.nn.one_hot(top_i, e.num_experts, dtype=jnp.float32) * top_p[..., None], axis=-2)
+    gate = jnp.einsum("bsd,edf->bsef", x, p["w_gate"].astype(x.dtype))
+    up = jnp.einsum("bsd,edf->bsef", x, p["w_up"].astype(x.dtype))
+    h = jax.nn.silu(gate) * up
+    y = jnp.einsum("bsef,efd->bsed", h, p["w_down"].astype(x.dtype))
+    y = jnp.sum(y * w[..., None].astype(x.dtype), axis=-2)
+    return y, aux
+
+
+def moe_ffn(cfg, p, x: jax.Array, impl: str = "dispatch") -> Tuple[jax.Array, jax.Array]:
+    """MoE FFN. x: (B, S, D) -> (y, aux_loss)."""
+    if impl == "dense":
+        y, aux = _moe_dense(cfg, p, x)
+    else:
+        y, aux = _moe_dispatch(cfg, p, x)
+    if cfg.moe.num_shared_experts:
+        sp = p["shared"]
+        gate = jnp.einsum("...d,df->...f", x, sp["w_gate"].astype(x.dtype))
+        up = jnp.einsum("...d,df->...f", x, sp["w_up"].astype(x.dtype))
+        y = y + jnp.einsum("...f,fd->...d", jax.nn.silu(gate) * up, sp["w_down"].astype(x.dtype))
+    return y, aux

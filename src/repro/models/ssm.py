@@ -1,0 +1,224 @@
+"""Mamba-2 SSD (state-space duality) block — arXiv:2405.21060.
+
+TPU adaptation notes (see DESIGN.md §3): the GPU reference uses warp-level
+scans; here the intra-chunk work is dense matmuls (MXU-friendly: chunk x chunk
+and chunk x d_state contractions) and the inter-chunk recurrence is a
+``jax.lax.scan`` over chunk states — the canonical TPU mapping of SSD.
+
+Projections are kept *separate* per component (z, x, B, C, dt) instead of one
+fused in_proj so each weight shards cleanly on the "model" mesh axis
+(d_inner % 16 == 0 for every assigned config) without mixed-dim splits.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+def init_ssm(cfg, key) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    din = s.d_inner(d)
+    h = s.num_heads(d)
+    n = s.d_state
+    ks = jax.random.split(key, 8)
+    std = d ** -0.5
+    return {
+        "wz": jax.random.normal(ks[0], (d, din), jnp.float32) * std,
+        "wx": jax.random.normal(ks[1], (d, din), jnp.float32) * std,
+        "wB": jax.random.normal(ks[2], (d, n), jnp.float32) * std,
+        "wC": jax.random.normal(ks[3], (d, n), jnp.float32) * std,
+        "wdt": jax.random.normal(ks[4], (d, h), jnp.float32) * std,
+        "dt_bias": jnp.log(jnp.expm1(jnp.exp(jax.random.uniform(
+            ks[5], (h,), jnp.float32, jnp.log(0.001), jnp.log(0.1))))),
+        "A_log": jnp.log(jnp.arange(1, h + 1, dtype=jnp.float32)),
+        "D": jnp.ones((h,), jnp.float32),
+        "conv_x": jax.random.normal(ks[6], (s.conv_width, din), jnp.float32) * (s.conv_width ** -0.5),
+        "conv_B": jax.random.normal(ks[7], (s.conv_width, n), jnp.float32) * (s.conv_width ** -0.5),
+        "conv_C": jax.random.normal(jax.random.fold_in(key, 99), (s.conv_width, n), jnp.float32)
+        * (s.conv_width ** -0.5),
+        "gate_norm": jnp.ones((din,), jnp.float32),
+        "wo": jax.random.normal(jax.random.fold_in(key, 100), (din, d), jnp.float32) * (din ** -0.5),
+    }
+
+
+# ---------------------------------------------------------------------------
+# core SSD math
+# ---------------------------------------------------------------------------
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """a: (..., L) -> (..., L, L) lower-triangular segment sums (else -inf)."""
+    l = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((l, l), bool))
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def ssd_scan(
+    x: jax.Array,       # (B, S, H, P) — already dt-discretized input
+    dA: jax.Array,      # (B, S, H)    — dt * A  (negative log-decay)
+    Bm: jax.Array,      # (B, S, N)
+    Cm: jax.Array,      # (B, S, N)
+    chunk: int,
+    init_state: jax.Array | None = None,   # (B, H, P, N)
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD. Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    s_orig = s
+    if s % chunk:
+        # Pad to a chunk multiple: dA=0 (decay 1) and x=0 contribute nothing
+        # to chunk states, so the final state and real outputs are unchanged.
+        pad = chunk - s % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dA = jnp.pad(dA, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        s = s + pad
+    nc = s // chunk
+
+    xc = x.reshape(b, nc, chunk, h, p)
+    ac = dA.reshape(b, nc, chunk, h).transpose(0, 3, 1, 2)          # (B,H,NC,L)
+    bc = Bm.reshape(b, nc, chunk, n)
+    cc = Cm.reshape(b, nc, chunk, n)
+
+    a_cum = jnp.cumsum(ac, axis=-1)                                 # (B,H,NC,L)
+
+    # 1. intra-chunk (diagonal blocks): dense, MXU-shaped
+    lmat = jnp.exp(_segsum(ac))                                     # (B,H,NC,L,L)
+    y_diag = jnp.einsum("bcln,bcsn,bhcls,bcshp->bclhp", cc, bc, lmat.astype(x.dtype), xc)
+
+    # 2. chunk-final states
+    decay_states = jnp.exp(a_cum[..., -1:] - a_cum)                 # (B,H,NC,L)
+    states = jnp.einsum("bcln,bhcl,bclhp->bchpn", bc, decay_states.astype(x.dtype), xc)
+
+    # 3. inter-chunk recurrence (sequential scan over chunks)
+    chunk_decay = jnp.exp(a_cum[..., -1])                           # (B,H,NC)
+    state0 = jnp.zeros((b, h, p, n), x.dtype) if init_state is None else init_state
+
+    def step(carry, inp):
+        st_c, dec_c = inp                                           # (B,H,P,N), (B,H)
+        prev = carry
+        new = prev * dec_c[..., None, None].astype(x.dtype) + st_c
+        return new, prev
+
+    states_t = states.transpose(1, 0, 2, 3, 4)                      # (NC,B,H,P,N)
+    decay_t = chunk_decay.transpose(2, 0, 1)                        # (NC,B,H)
+    final_state, prev_states = jax.lax.scan(step, state0, (states_t, decay_t))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)              # (B,NC,H,P,N)
+
+    # 4. inter-chunk contribution
+    state_decay_out = jnp.exp(a_cum)                                # (B,H,NC,L)
+    y_off = jnp.einsum(
+        "bcln,bchpn,bhcl->bclhp", cc, prev_states, state_decay_out.astype(x.dtype)
+    )
+
+    y = (y_diag + y_off).reshape(b, s, h, p)[:, :s_orig]
+    return y, final_state
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, carry: jax.Array | None = None):
+    """Depthwise causal conv. x: (B,S,C), w: (K,C). carry: (B,K-1,C) history."""
+    k = w.shape[0]
+    if carry is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[-1]), x.dtype)
+    else:
+        pad = carry.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i : i + x.shape[1]] * w[i].astype(x.dtype) for i in range(k))
+    new_carry = xp[:, -(k - 1):] if k > 1 else pad
+    return jax.nn.silu(out), new_carry
+
+
+# ---------------------------------------------------------------------------
+# full block
+# ---------------------------------------------------------------------------
+
+def ssm_block(cfg, p: dict, xin: jax.Array) -> jax.Array:
+    """Full-sequence Mamba-2 block (train / prefill). xin: (B, S, D)."""
+    s = cfg.ssm
+    d = cfg.d_model
+    h = s.num_heads(d)
+    hd = s.head_dim
+
+    z = jnp.einsum("bsd,de->bse", xin, p["wz"].astype(xin.dtype))
+    x = jnp.einsum("bsd,de->bse", xin, p["wx"].astype(xin.dtype))
+    Bm = jnp.einsum("bsd,dn->bsn", xin, p["wB"].astype(xin.dtype))
+    Cm = jnp.einsum("bsd,dn->bsn", xin, p["wC"].astype(xin.dtype))
+    dt = jnp.einsum("bsd,dh->bsh", xin.astype(jnp.float32), p["wdt"])
+
+    x, _ = _causal_conv(x, p["conv_x"])
+    Bm, _ = _causal_conv(Bm, p["conv_B"])
+    Cm, _ = _causal_conv(Cm, p["conv_C"])
+
+    dt = jax.nn.softplus(dt + p["dt_bias"])                          # (B,S,H)
+    A = -jnp.exp(p["A_log"])                                         # (H,)
+    dA = dt * A                                                      # (B,S,H)
+
+    xh = x.reshape(*x.shape[:-1], h, hd)
+    x_disc = xh * dt[..., None].astype(x.dtype)
+    y, _ = ssd_scan(x_disc, dA, Bm, Cm, s.chunk_size)
+    y = y + xh * p["D"].astype(x.dtype)[:, None]
+    y = y.reshape(*xin.shape[:-1], h * hd)
+
+    y = layers.rmsnorm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    return jnp.einsum("bse,ed->bsd", y, p["wo"].astype(xin.dtype))
+
+
+def init_ssm_state(cfg, batch: int, dtype) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    h, hd, n = s.num_heads(d), s.head_dim, s.d_state
+    din = s.d_inner(d)
+    return {
+        "state": jnp.zeros((batch, h, hd, n), dtype),
+        "conv_x": jnp.zeros((batch, s.conv_width - 1, din), dtype),
+        "conv_B": jnp.zeros((batch, s.conv_width - 1, n), dtype),
+        "conv_C": jnp.zeros((batch, s.conv_width - 1, n), dtype),
+    }
+
+
+def ssm_decode_step(cfg, p: dict, st: dict, xin: jax.Array) -> Tuple[jax.Array, dict]:
+    """One-token recurrent step. xin: (B, 1, D) -> (y (B,1,D), new state)."""
+    s = cfg.ssm
+    d = cfg.d_model
+    h, hd = s.num_heads(d), s.head_dim
+
+    z = jnp.einsum("bsd,de->bse", xin, p["wz"].astype(xin.dtype))
+    x = jnp.einsum("bsd,de->bse", xin, p["wx"].astype(xin.dtype))
+    Bm = jnp.einsum("bsd,dn->bsn", xin, p["wB"].astype(xin.dtype))
+    Cm = jnp.einsum("bsd,dn->bsn", xin, p["wC"].astype(xin.dtype))
+    dt = jnp.einsum("bsd,dh->bsh", xin.astype(jnp.float32), p["wdt"])
+
+    x, conv_x = _causal_conv(x, p["conv_x"], st["conv_x"])
+    Bm, conv_B = _causal_conv(Bm, p["conv_B"], st["conv_B"])
+    Cm, conv_C = _causal_conv(Cm, p["conv_C"], st["conv_C"])
+
+    dt = jax.nn.softplus(dt + p["dt_bias"])[:, 0]                    # (B,H)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt * A)                                             # (B,H)
+
+    xh = x[:, 0].reshape(-1, h, hd)                                  # (B,H,P)
+    bt, ct = Bm[:, 0], Cm[:, 0]                                      # (B,N)
+    # state <- decay * state + dt * x ⊗ B
+    new_state = (
+        st["state"] * dA[..., None, None].astype(xin.dtype)
+        + (dt[..., None].astype(xin.dtype) * xh)[..., None] * bt[:, None, None, :]
+    )
+    y = jnp.einsum("bhpn,bn->bhp", new_state, ct) + xh * p["D"].astype(xin.dtype)[:, None]
+    y = y.reshape(xin.shape[0], 1, h * hd)
+
+    y = layers.rmsnorm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    y = jnp.einsum("bse,ed->bsd", y, p["wo"].astype(xin.dtype))
+    new_st = {"state": new_state, "conv_x": conv_x, "conv_B": conv_B, "conv_C": conv_C}
+    return y, new_st

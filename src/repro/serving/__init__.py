@@ -1,0 +1,2 @@
+from repro.serving.engine import Engine, ServeRequest, ServeResult, make_serve_step
+from repro.serving.sampling import sample_tokens

@@ -1,0 +1,192 @@
+"""Batched serving engine with thought-calibration early exit.
+
+The jitted ``serve_step`` fuses: one-token decode → greedy/temp sampling →
+controller update (step pooling, probe scoring, smoothing, λ̂ comparison).
+Exited lanes are predicated no-ops; the host engine runs *waves* of B
+requests, frees lanes on exit (the saved steps are the paper's reclaimed
+compute), and force-feeds ``THINK_END`` to elicit the final answer — the
+paper's budget-forcing answer extraction (Appendix A prompt → here a token).
+
+Early-exit policies:
+* ``calibrated``: thought-calibration probe with LTT threshold λ̂;
+* ``crop``: naive budget forcing at a fixed thinking-token budget
+  (the paper's Crop baseline);
+* ``full``: decode to the trajectory's natural end (THINK_END) or max budget.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import controller as ctrl_mod
+from repro.data.traces import ANS_BASE, EOS, NUM_ANSWERS, THINK_END
+from repro.models import model as model_mod
+from repro.serving.sampling import sample_tokens
+
+
+@dataclass
+class ServeRequest:
+    uid: int
+    prompt: np.ndarray                  # (P,) int32
+    max_new: int = 256
+
+
+@dataclass
+class ServeResult:
+    uid: int
+    tokens: np.ndarray                  # generated tokens (thinking + answer)
+    think_tokens: int                   # tokens spent thinking
+    exited_early: bool
+    exit_step: int                      # closed reasoning steps at exit (-1: none)
+    answer: Optional[int]               # decoded answer id (synthetic world)
+    probe_trace: np.ndarray             # smoothed probe score after each token
+
+
+def make_serve_step(cfg, ctrl: ctrl_mod.ControllerConfig, *,
+                    window: int = 0, moe_impl: str = "dense",
+                    compute_dtype: str = "float32", temperature: float = 0.0):
+    """Build the jitted decode+controller step."""
+
+    def serve_step(params, probe_params, dcache, state, tokens, key, forced):
+        """tokens: (B, 1) current input; forced: (B,) optional forced next
+        token (-1 = sample). Returns (next_tokens, dcache, state, smoothed)."""
+        logits, hidden, dcache = model_mod.decode_step(
+            cfg, params, dcache, tokens,
+            window=window, moe_impl=moe_impl, compute_dtype=compute_dtype)
+        nxt = sample_tokens(key, logits, temperature)[:, 0]        # (B,)
+        nxt = jnp.where(forced >= 0, forced, nxt)
+        # controller consumes the token *just generated* and its hidden state
+        pos = dcache["pos"] - 1
+        state = ctrl_mod.update(ctrl, probe_params, state, nxt,
+                                hidden[:, 0], pos)
+        return nxt, dcache, state
+
+    return jax.jit(serve_step)
+
+
+class Engine:
+    """Wave-scheduled batched server (lanes freed on exit count as reclaimed
+    decode compute; see DESIGN.md §3 on TPU-predication batching)."""
+
+    def __init__(self, cfg, params, *, ctrl: ctrl_mod.ControllerConfig,
+                 probe_params: ctrl_mod.ProbeParams, lanes: int = 8,
+                 policy: str = "calibrated", crop_budget: int = 10 ** 9,
+                 moe_impl: str = "dense", compute_dtype: str = "float32",
+                 temperature: float = 0.0, seed: int = 0,
+                 kv_quant: bool = False):
+        self.cfg = cfg
+        self.params = params
+        self.ctrl = ctrl
+        self.probe_params = probe_params
+        self.lanes = lanes
+        self.policy = policy
+        self.crop_budget = crop_budget
+        self.moe_impl = moe_impl
+        self.compute_dtype = compute_dtype
+        self.key = jax.random.PRNGKey(seed)
+        self.temperature = temperature
+        self.kv_quant = kv_quant
+        self._step_fn = make_serve_step(cfg, ctrl, moe_impl=moe_impl,
+                                        compute_dtype=compute_dtype,
+                                        temperature=temperature)
+
+    def _prefill(self, prompts: np.ndarray, cache_len: int):
+        logits, hidden, cache = model_mod.prefill(
+            self.cfg, self.params, jnp.asarray(prompts),
+            cache_len=cache_len, moe_impl=self.moe_impl,
+            compute_dtype=self.compute_dtype)
+        if self.kv_quant and "k" in cache:
+            from repro.models.cache import quantize_kv
+            cache["k"], cache["k_scale"] = quantize_kv(cache["k"])
+            cache["v"], cache["v_scale"] = quantize_kv(cache["v"])
+        return logits, hidden, cache
+
+    def run(self, requests: Sequence[ServeRequest]) -> List[ServeResult]:
+        results: List[ServeResult] = []
+        for i in range(0, len(requests), self.lanes):
+            results.extend(self._run_wave(requests[i : i + self.lanes]))
+        return results
+
+    def _run_wave(self, reqs: Sequence[ServeRequest]) -> List[ServeResult]:
+        b = len(reqs)
+        plen = max(len(r.prompt) for r in reqs)
+        max_new = max(r.max_new for r in reqs)
+        prompts = np.zeros((b, plen), np.int32)
+        for i, r in enumerate(reqs):
+            prompts[i, plen - len(r.prompt):] = r.prompt     # left-pad
+        logits, hidden, dcache = self._prefill(prompts, plen + max_new + 8)
+
+        state = ctrl_mod.init_state(b, self.cfg.d_model, self.ctrl.window)
+        if self.policy != "calibrated":
+            # λ=+inf: the probe never triggers; crop/full policies control exit
+            pp = self.probe_params._replace(lam=jnp.asarray(jnp.inf, jnp.float32))
+        else:
+            pp = self.probe_params
+
+        tokens = np.asarray(jnp.argmax(logits, -1))[:, 0].astype(np.int32)  # (B,)
+        gen: List[List[int]] = [[int(tokens[i])] for i in range(b)]
+        think_done = np.zeros(b, bool)
+        lane_done = np.zeros(b, bool)
+        think_tokens = np.ones(b, np.int64)
+        answers: List[Optional[int]] = [None] * b
+        probe_traces: List[List[float]] = [[] for _ in range(b)]
+        exited_early = np.zeros(b, bool)
+
+        cur = jnp.asarray(tokens)
+        for t in range(max_new - 1):
+            self.key, sk = jax.random.split(self.key)
+            forced = np.full(b, -1, np.int32)
+            # early exit (calibrated or crop): force THINK_END next
+            st_done = np.asarray(state.done)
+            for i in range(b):
+                if lane_done[i] or think_done[i]:
+                    continue
+                crop_hit = self.policy == "crop" and think_tokens[i] >= self.crop_budget
+                probe_hit = self.policy == "calibrated" and st_done[i]
+                if crop_hit or probe_hit:
+                    forced[i] = THINK_END
+                    exited_early[i] = True
+            nxt, dcache, state = self._step_fn(
+                self.params, pp, dcache, state, cur[:, None], sk, jnp.asarray(forced))
+            nxt_np = np.asarray(nxt)
+            sm = np.asarray(state.smoothed)
+            for i in range(b):
+                if lane_done[i]:
+                    continue
+                tok = int(nxt_np[i])
+                gen[i].append(tok)
+                probe_traces[i].append(float(sm[i]))
+                if not think_done[i]:
+                    if tok == THINK_END:
+                        think_done[i] = True
+                    else:
+                        think_tokens[i] += 1
+                else:
+                    if ANS_BASE <= tok < ANS_BASE + NUM_ANSWERS and answers[i] is None:
+                        answers[i] = tok - ANS_BASE
+                    if tok == EOS or answers[i] is not None:
+                        lane_done[i] = True
+            cur = nxt
+            if lane_done.all():
+                break
+
+        st = state
+        exit_steps = np.asarray(st.exit_pos)
+        out = []
+        for i, r in enumerate(reqs):
+            out.append(ServeResult(
+                uid=r.uid,
+                tokens=np.asarray(gen[i], np.int32),
+                think_tokens=int(think_tokens[i]),
+                exited_early=bool(exited_early[i]),
+                exit_step=int(np.asarray(st.steps)[i]) if exited_early[i] else -1,
+                answer=answers[i],
+                probe_trace=np.asarray(probe_traces[i], np.float32),
+            ))
+        return out

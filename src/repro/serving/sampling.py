@@ -1,0 +1,14 @@
+"""Token sampling for the decode loop."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample_tokens(key, logits: jax.Array, temperature: float = 0.0) -> jax.Array:
+    """logits: (B, 1, V) (or (B, 1, K, V) for codebook models) -> next ids."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    g = jax.random.gumbel(key, logits.shape, jnp.float32)
+    return jnp.argmax(logits.astype(jnp.float32) / temperature + g, axis=-1).astype(jnp.int32)

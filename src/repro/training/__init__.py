@@ -1,0 +1,4 @@
+from repro.training.checkpoint import load_checkpoint, save_checkpoint
+from repro.training.loop import make_train_step, train
+from repro.training.optim import AdamWState, adamw_init, adamw_update, global_norm
+from repro.training.schedules import get_schedule, warmup_cosine, wsd

@@ -1,0 +1,55 @@
+"""Checkpointing: pytree <-> msgpack + raw numpy buffers (no orbax offline)."""
+
+from __future__ import annotations
+
+import os
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _flatten(tree) -> Tuple[list, Any]:
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def save_checkpoint(path: str, tree, metadata: dict | None = None) -> None:
+    leaves, treedef = _flatten(tree)
+    payload = {
+        "treedef": str(treedef),
+        "metadata": metadata or {},
+        "leaves": [
+            {
+                "dtype": str(np.asarray(l).dtype),
+                "shape": list(np.asarray(l).shape),
+                "data": np.ascontiguousarray(np.asarray(l)).tobytes(),
+            }
+            for l in leaves
+        ],
+    }
+    tmp = path + ".tmp"
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+    os.replace(tmp, path)
+
+
+def load_checkpoint(path: str, like_tree) -> Tuple[Any, dict]:
+    """Restore into the structure of ``like_tree`` (shapes must match)."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    leaves, treedef = _flatten(like_tree)
+    stored = payload["leaves"]
+    if len(stored) != len(leaves):
+        raise ValueError(
+            f"checkpoint has {len(stored)} leaves, expected {len(leaves)}")
+    out = []
+    for ref, s in zip(leaves, stored):
+        arr = np.frombuffer(s["data"], dtype=np.dtype(s["dtype"])).reshape(s["shape"])
+        if tuple(arr.shape) != tuple(np.asarray(ref).shape):
+            raise ValueError(f"shape mismatch {arr.shape} vs {np.asarray(ref).shape}")
+        out.append(jnp.asarray(arr))
+    return jax.tree.unflatten(jax.tree.structure(like_tree), out), payload["metadata"]

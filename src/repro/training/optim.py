@@ -1,0 +1,103 @@
+"""AdamW + gradient clipping in pure JAX (no optax dependency)."""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: dict
+    v: dict
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = lambda: jax.tree.map(jnp.zeros_like, params)
+    return AdamWState(jnp.zeros((), jnp.int32), zeros(), zeros())
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(jax.tree.map(lambda g: jnp.sum(jnp.square(g.astype(jnp.float32))), tree))
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(
+    grads,
+    state: AdamWState,
+    params,
+    lr: jax.Array,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    clip_norm: float = 1.0,
+) -> Tuple[dict, AdamWState, dict]:
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-9))
+    grads = jax.tree.map(lambda g: g * scale, grads)
+
+    step = state.step + 1
+    m = jax.tree.map(lambda a, g: b1 * a + (1 - b1) * g, state.m, grads)
+    v = jax.tree.map(lambda a, g: b2 * a + (1 - b2) * jnp.square(g), state.v, grads)
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, mi, vi):
+        mh = mi / bc1
+        vh = vi / bc2
+        return p - lr * (mh / (jnp.sqrt(vh) + eps) + weight_decay * p)
+
+    new_params = jax.tree.map(upd, params, m, v)
+    return new_params, AdamWState(step, m, v), {"grad_norm": gnorm}
+
+
+class AdamWMasterState(NamedTuple):
+    """Mixed-precision optimizer state: f32 master weights + moments (ZeRO-1
+    shardable), while the live params stay bf16 — gradient all-reduce and
+    param all-gather move half the bytes vs f32 training."""
+    step: jax.Array
+    master: dict
+    m: dict
+    v: dict
+
+
+def adamw_master_init(params_bf16) -> AdamWMasterState:
+    master = jax.tree.map(lambda p: p.astype(jnp.float32), params_bf16)
+    zeros = jax.tree.map(jnp.zeros_like, master)
+    return AdamWMasterState(jnp.zeros((), jnp.int32), master, zeros,
+                            jax.tree.map(jnp.zeros_like, master))
+
+
+def adamw_master_update(
+    grads,
+    state: AdamWMasterState,
+    lr,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    clip_norm: float = 1.0,
+):
+    """Update the f32 master copy from (possibly bf16) grads; returns the
+    bf16 live params cast from the new master."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-9))
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+
+    step = state.step + 1
+    m = jax.tree.map(lambda a, g: b1 * a + (1 - b1) * g, state.m, grads)
+    v = jax.tree.map(lambda a, g: b2 * a + (1 - b2) * jnp.square(g), state.v, grads)
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, mi, vi):
+        return p - lr * ((mi / bc1) / (jnp.sqrt(vi / bc2) + eps) + weight_decay * p)
+
+    master = jax.tree.map(upd, state.master, m, v)
+    params = jax.tree.map(lambda p: p.astype(jnp.bfloat16), master)
+    return params, AdamWMasterState(step, master, m, v), {"grad_norm": gnorm}

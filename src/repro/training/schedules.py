@@ -1,0 +1,38 @@
+"""LR schedules: linear warmup + {cosine, WSD}.
+
+WSD (Warmup-Stable-Decay) is MiniCPM's schedule [arXiv:2404.06395]: linear
+warmup, long stable plateau, short (typically 10%) exponential/linear decay.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, peak_lr: float, warmup: int, total: int, floor: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * step / jnp.maximum(warmup, 1)
+    prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def wsd(step, *, peak_lr: float, warmup: int, total: int, decay_frac: float = 0.1,
+        floor: float = 0.01):
+    step = jnp.asarray(step, jnp.float32)
+    decay_steps = jnp.maximum(total * decay_frac, 1.0)
+    decay_start = total - decay_steps
+    warm = peak_lr * step / jnp.maximum(warmup, 1)
+    stable = jnp.full_like(step, peak_lr)
+    prog = jnp.clip((step - decay_start) / decay_steps, 0.0, 1.0)
+    decay = peak_lr * (floor ** prog)          # exponential decay to floor*peak
+    out = jnp.where(step < warmup, warm, jnp.where(step < decay_start, stable, decay))
+    return out
+
+
+def get_schedule(name: str, **kw):
+    if name == "wsd":
+        return lambda s: wsd(s, **kw)
+    if name == "cosine":
+        return lambda s: warmup_cosine(s, **kw)
+    raise ValueError(name)

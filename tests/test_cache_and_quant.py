@@ -1,0 +1,77 @@
+"""Cache slot math (ring + append) and int8 KV quantization properties."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.models.cache import (
+    cache_key_positions,
+    cache_valid_mask,
+    cache_valid_mask_pre_write,
+    cache_write,
+    dequantize_kv,
+    quantize_kv,
+)
+
+
+@given(st.integers(1, 8).map(lambda x: 2 ** x), st.integers(0, 2000))
+@settings(max_examples=40, deadline=None)
+def test_ring_valid_mask_counts(w, p):
+    pos = jnp.asarray([p])
+    post = np.asarray(cache_valid_mask(pos, w, window=w))[0]
+    pre = np.asarray(cache_valid_mask_pre_write(pos, w, window=w))[0]
+    assert post.sum() == min(p + 1, w)
+    # pre-write: the slot about to be overwritten is excluded once warm
+    assert pre.sum() == min(p, w) - (1 if p >= w else 0)
+    assert not pre[p % w] or p < w
+
+
+@given(st.integers(1, 6).map(lambda x: 2 ** x), st.integers(0, 500))
+@settings(max_examples=40, deadline=None)
+def test_append_valid_mask(w, p):
+    pos = jnp.asarray([p])
+    post = np.asarray(cache_valid_mask(pos, w, window=0))[0]
+    assert post.sum() == min(p + 1, w)
+
+
+def test_ring_write_then_positions(key):
+    """Writing W+3 tokens into a W-ring leaves exactly the last W, with slot
+    = pos %% W."""
+    w, kv, hd = 8, 2, 4
+    k_cache = jnp.zeros((1, w, kv, hd))
+    v_cache = jnp.zeros((1, w, kv, hd))
+    total = w + 3
+    for p in range(total):
+        k_new = jnp.full((1, 1, kv, hd), float(p))
+        k_cache, v_cache = cache_write(k_cache, v_cache, k_new, k_new,
+                                       jnp.asarray([p]), window=w)
+    held = np.asarray(k_cache[0, :, 0, 0])
+    expect = np.array([(p if (p := s + (total - s - 1) // w * w + 0) else 0)
+                       for s in range(w)], float)
+    # slot s holds the latest position with pos % w == s
+    for s in range(w):
+        cand = [p for p in range(total) if p % w == s]
+        assert held[s] == cand[-1]
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 4), st.integers(8, 64))
+@settings(max_examples=30, deadline=None)
+def test_quantize_roundtrip_error_bound(seed, b, d):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(b, d)).astype(np.float32)) * \
+        (10 ** rng.uniform(-2, 2))
+    q, s = quantize_kv(x)
+    back = dequantize_kv(q, s, jnp.float32)
+    amax = np.abs(np.asarray(x)).max(-1, keepdims=True)
+    err = np.abs(np.asarray(back) - np.asarray(x))
+    # symmetric int8: error bounded by half a quantization step (+bf16 scale)
+    assert (err <= amax / 127.0 * 0.51 + amax * 0.01).all()
+
+
+def test_quantize_preserves_zero():
+    q, s = quantize_kv(jnp.zeros((3, 16)))
+    assert np.asarray(q).sum() == 0
+    assert bool(jnp.isfinite(s).all())

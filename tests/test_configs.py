@@ -1,0 +1,85 @@
+"""Assigned-architecture configs must match the assignment table exactly."""
+
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_reduced
+
+# (arch, family, L, d_model, H, KV, d_ff, vocab)
+TABLE = {
+    "chatglm3-6b": ("dense", 28, 4096, 32, 2, 13696, 65024),
+    "qwen2-moe-a2.7b": ("moe", 24, 2048, 16, 16, 1408, 151936),
+    "llama-3.2-vision-11b": ("vlm", 40, 4096, 32, 8, 14336, 128256),
+    "mamba2-2.7b": ("ssm", 64, 2560, 0, 0, 0, 50280),
+    "phi3-mini-3.8b": ("dense", 32, 3072, 32, 32, 8192, 32064),
+    "minicpm-2b": ("dense", 40, 2304, 36, 36, 5760, 122753),
+    "phi3.5-moe-42b-a6.6b": ("moe", 32, 4096, 32, 8, 6400, 32064),
+    "hymba-1.5b": ("hybrid", 32, 1600, 25, 5, 5504, 32001),
+    "musicgen-large": ("audio", 48, 2048, 32, 32, 8192, 2048),
+    "qwen3-8b": ("dense", 36, 4096, 32, 8, 12288, 151936),
+}
+
+
+def test_all_archs_present():
+    assert set(ARCH_IDS) == set(TABLE)
+
+
+@pytest.mark.parametrize("arch", sorted(TABLE))
+def test_exact_dims(arch):
+    fam, L, d, h, kv, ff, v = TABLE[arch]
+    cfg = get_config(arch)
+    assert cfg.family == fam
+    assert cfg.num_layers == L
+    assert cfg.d_model == d
+    assert cfg.num_heads == h
+    assert cfg.num_kv_heads == kv
+    assert cfg.d_ff == ff
+    assert cfg.vocab_size == v
+    assert cfg.citation
+
+
+@pytest.mark.parametrize("arch", sorted(TABLE))
+def test_reduced_within_smoke_limits(arch):
+    cfg = get_reduced(arch)
+    assert cfg.num_layers <= 2
+    assert cfg.d_model <= 512
+    if cfg.family == "moe":
+        assert cfg.moe.num_experts <= 4
+    assert cfg.family == get_config(arch).family
+
+
+def test_special_features():
+    assert get_config("chatglm3-6b").rope == "rope2d"
+    assert get_config("qwen3-8b").qk_norm
+    assert get_config("qwen2-moe-a2.7b").moe.num_shared_experts == 4
+    assert get_config("qwen2-moe-a2.7b").moe.top_k == 4
+    assert get_config("phi3.5-moe-42b-a6.6b").moe.top_k == 2
+    assert get_config("mamba2-2.7b").ssm.d_state == 128
+    assert get_config("hymba-1.5b").hybrid_parallel
+    assert get_config("hymba-1.5b").ssm.d_state == 16
+    assert get_config("musicgen-large").num_codebooks == 4
+    assert get_config("phi3-mini-3.8b").native_swa
+    assert get_config("minicpm-2b").tie_embeddings
+    assert get_config("llama-3.2-vision-11b").cross_attn.every_n_layers == 5
+
+
+def test_param_counts_roughly_match_names():
+    # arch names encode parameter counts; sanity-check within 30%
+    expect = {
+        "chatglm3-6b": 6e9, "qwen2-moe-a2.7b": 14e9,  # A2.7B = active 2.7B
+        "llama-3.2-vision-11b": 11e9, "mamba2-2.7b": 2.7e9,
+        "phi3-mini-3.8b": 3.8e9, "minicpm-2b": 2.7e9,
+        "phi3.5-moe-42b-a6.6b": 42e9, "hymba-1.5b": 1.5e9,
+        "musicgen-large": 3.3e9, "qwen3-8b": 8.2e9,
+    }
+    for arch, n in expect.items():
+        got = get_config(arch).param_count()
+        assert 0.5 * n < got < 1.8 * n, (arch, got, n)
+
+
+def test_active_param_counts_moe():
+    cfg = get_config("qwen2-moe-a2.7b")
+    active = cfg.param_count(active_only=True)
+    total = cfg.param_count()
+    assert active < total / 3
+    cfg2 = get_config("phi3.5-moe-42b-a6.6b")
+    assert cfg2.param_count(active_only=True) < cfg2.param_count() / 4

@@ -1,0 +1,105 @@
+"""Online exit controller: must equal the offline pipeline
+(segmentation -> pooling -> PCA -> probe -> smoothing -> threshold)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import controller as C
+from repro.core.calibration import smooth_scores, stopping_time
+from repro.core.segmentation import segment_mean_pool, segment_steps
+from repro.data.traces import BOUNDARY_IDS, MARKER_IDS, TraceConfig, generate_dataset
+
+D, K, W = 32, 8, 10
+
+
+def _probe_params(key, lam=0.6, compose=0):
+    ks = jax.random.split(key, 4)
+    return C.ProbeParams(
+        pca_mean=jax.random.normal(ks[0], (D,)) * 0.1,
+        pca_comps=jax.random.normal(ks[1], (D, K)) * D ** -0.5,
+        w1=jax.random.normal(ks[2], (K,)),
+        b1=jnp.float32(0.1),
+        w2=jax.random.normal(ks[3], (K,)),
+        b2=jnp.float32(-0.1),
+        lam=jnp.float32(lam),
+        compose=jnp.int32(compose),
+    )
+
+
+def _run_online(ctrl, pp, tokens, hidden):
+    b, s = tokens.shape
+    state = C.init_state(b, D, ctrl.window)
+    states = []
+    for t in range(s):
+        state = C.update(ctrl, pp, state, tokens[:, t], hidden[:, t],
+                         jnp.full((b,), t))
+        states.append(state)
+    return state, states
+
+
+@pytest.mark.parametrize("compose", [0, 1])
+def test_online_equals_offline(compose, key):
+    rng = np.random.default_rng(0)
+    traces = generate_dataset(4, TraceConfig(), seed=3)
+    s = max(len(t.tokens) for t in traces)
+    tokens = np.zeros((len(traces), s), np.int32)
+    for i, t in enumerate(traces):
+        tokens[i, : len(t.tokens)] = t.tokens
+    hidden = rng.normal(size=(len(traces), s, D)).astype(np.float32)
+
+    ctrl = C.ControllerConfig(BOUNDARY_IDS, MARKER_IDS, window=W,
+                              min_steps=1, probe_dim=K)
+    pp = _probe_params(key, lam=2.0, compose=compose)   # lam=2: never exits
+
+    state, _ = _run_online(ctrl, pp, jnp.asarray(tokens), jnp.asarray(hidden))
+
+    # offline reference
+    seg = segment_steps(jnp.asarray(tokens), BOUNDARY_IDS, MARKER_IDS)
+    for i, tr in enumerate(traces):
+        n_steps = int(seg.num_steps[i])
+        valid = jnp.arange(s)[None] < len(tr.tokens)
+        reps, _ = segment_mean_pool(jnp.asarray(hidden[i:i+1]),
+                                    seg.step_id[i:i+1], n_steps, valid)
+        scores = np.asarray(C.score_step(pp, reps[0]))
+        sm = smooth_scores(scores, W)
+        assert int(state.steps[i]) == n_steps
+        assert abs(float(state.smoothed[i]) - sm[-1]) < 1e-4
+
+
+def test_exit_freezes_lane(key):
+    ctrl = C.ControllerConfig(BOUNDARY_IDS, MARKER_IDS, window=W,
+                              min_steps=1, probe_dim=K)
+    pp = _probe_params(key, lam=0.0)       # exits at the first closed step
+    traces = generate_dataset(2, TraceConfig(), seed=5)
+    s = max(len(t.tokens) for t in traces)
+    tokens = np.zeros((2, s), np.int32)
+    for i, t in enumerate(traces):
+        tokens[i, : len(t.tokens)] = t.tokens
+    hidden = np.random.default_rng(1).normal(size=(2, s, D)).astype(np.float32)
+    state, states = _run_online(ctrl, pp, jnp.asarray(tokens), jnp.asarray(hidden))
+    assert bool(state.done.all())
+    # steps counter must freeze after done
+    done_at = [min(t for t, st in enumerate(states) if bool(st.done[i]))
+               for i in range(2)]
+    for i in range(2):
+        steps_at_done = int(states[done_at[i]].steps[i])
+        assert int(state.steps[i]) == steps_at_done
+        assert int(state.exit_pos[i]) == done_at[i]
+
+
+def test_min_steps_respected(key):
+    ctrl = C.ControllerConfig(BOUNDARY_IDS, MARKER_IDS, window=W,
+                              min_steps=4, probe_dim=K)
+    pp = _probe_params(key, lam=0.0)
+    traces = generate_dataset(1, TraceConfig(), seed=6)
+    t0 = traces[0]
+    tokens = t0.tokens[None]
+    hidden = np.random.default_rng(2).normal(
+        size=(1, tokens.shape[1], D)).astype(np.float32)
+    state, _ = _run_online(ctrl, pp, jnp.asarray(tokens), jnp.asarray(hidden))
+    assert int(state.steps[0]) >= 4 or not bool(state.done[0])
+    if bool(state.done[0]):
+        # exit could only have happened at or after the 4th closed step
+        assert int(state.steps[0]) >= 4

@@ -1,0 +1,121 @@
+"""LTT calibration: p-value validity, fixed-sequence behavior, and the
+finite-sample risk guarantee checked by Monte-Carlo simulation."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.calibration import (
+    binom_cdf,
+    binomial_tail_pvalue,
+    calibrate_stopping_rule,
+    fixed_sequence_test,
+    smooth_scores,
+    stopping_time,
+)
+
+
+def _binom_cdf_exact(k, n, p):
+    tot = 0.0
+    for i in range(k + 1):
+        tot += math.comb(n, i) * p ** i * (1 - p) ** (n - i)
+    return min(tot, 1.0)
+
+
+@given(st.integers(1, 60), st.floats(0.01, 0.99), st.integers(0, 60))
+@settings(max_examples=60, deadline=None)
+def test_binom_cdf_matches_exact(n, p, k):
+    k = min(k, n)
+    got = binom_cdf(k, n, p)
+    want = _binom_cdf_exact(k, n, p)
+    assert abs(got - want) < 1e-9
+
+
+def test_pvalue_superuniform_under_null():
+    """Under H: E[R] = delta_true > delta, P(p <= eps) <= eps (validity)."""
+    rng = np.random.default_rng(0)
+    n, delta, eps = 200, 0.1, 0.1
+    true_risk = 0.2        # null holds: true risk > delta
+    rejections = 0
+    trials = 400
+    for _ in range(trials):
+        r = rng.random(n) < true_risk
+        p = binomial_tail_pvalue(r.mean(), n, delta)
+        rejections += p <= eps
+    assert rejections / trials <= eps * 1.2 + 0.02
+
+
+def test_fixed_sequence_stops_at_first_failure():
+    lam_grid = [0.9, 0.7, 0.5, 0.3]
+    risks = {0.9: 0.0, 0.7: 0.0, 0.5: 0.5, 0.3: 0.0}  # 0.3 never tested
+
+    def risk_at(lam):
+        return np.full(100, risks[lam])
+
+    res = fixed_sequence_test(lam_grid, risk_at, delta=0.1, epsilon=0.1)
+    assert res.lam == 0.7
+    assert len(res.p_values) == 3      # stopped at 0.5, never evaluated 0.3
+
+
+def test_no_valid_lambda_returns_none():
+    res = fixed_sequence_test([0.9, 0.5], lambda l: np.ones(50), 0.1, 0.1)
+    assert res.lam is None
+
+
+def test_calibration_risk_guarantee_monte_carlo():
+    """E2E guarantee: over resampled calibration sets, the realized test risk
+    at the chosen lambda exceeds delta with frequency <= ~epsilon."""
+    rng = np.random.default_rng(1)
+    delta, eps = 0.15, 0.1
+    n_cal, n_test, n_steps = 150, 500, 30
+
+    def make_population(n):
+        scores, risks = [], []
+        for _ in range(n):
+            # score ramps up over steps; stopping early is risky
+            ramp = np.clip(np.linspace(0, 1.2, n_steps) + rng.normal(0, .15, n_steps), 0, 1)
+            scores.append(ramp)
+            risks.append((np.arange(1, n_steps + 1) < 12).astype(float))
+            # stopping before step 12 has risk 1, after 0
+        return scores, risks
+
+    violations = 0
+    trials = 60
+    for _ in range(trials):
+        cs, cr = make_population(n_cal)
+        res = calibrate_stopping_rule(
+            cs, lambda i, t: cr[i][min(t, n_steps) - 1],
+            delta=delta, epsilon=eps, lam_grid=np.linspace(1, 0, 21))
+        if res.lam is None:
+            continue
+        ts, tr = make_population(n_test)
+        risk = np.mean([tr[i][min(stopping_time(ts[i], res.lam), n_steps) - 1]
+                        for i in range(n_test)])
+        violations += risk > delta
+    assert violations / trials <= eps + 0.08, violations / trials
+
+
+@given(st.lists(st.floats(0, 1), min_size=1, max_size=50),
+       st.integers(1, 12))
+@settings(max_examples=50, deadline=None)
+def test_smoothing_window_properties(scores, window):
+    s = np.asarray(scores)
+    sm = smooth_scores(s, window)
+    assert sm.shape == s.shape
+    assert np.all(sm >= np.min(s) - 1e-12)
+    assert np.all(sm <= np.max(s) + 1e-12)
+    # first element is untouched by smoothing
+    assert abs(sm[0] - s[0]) < 1e-12
+
+
+@given(st.floats(0.0, 1.0), st.integers(1, 5))
+@settings(max_examples=30, deadline=None)
+def test_stopping_time_monotone_in_lambda(lam, min_steps):
+    rng = np.random.default_rng(3)
+    sc = rng.random(40)
+    t1 = stopping_time(sc, lam, min_steps)
+    t2 = stopping_time(sc, min(lam + 0.2, 1.0), min_steps)
+    assert t2 >= t1       # higher threshold => never stops earlier

@@ -1,0 +1,88 @@
+"""Segmentation + pooling: agreement with the trace generator, merging
+behavior for marker-less sections, and pooling as an exact segment mean."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.segmentation import segment_mean_pool, segment_steps
+from repro.data.traces import (
+    BOUNDARY_IDS,
+    MARKER_IDS,
+    NL2,
+    WAIT,
+    TraceConfig,
+    generate_dataset,
+)
+
+
+def test_agreement_with_generator():
+    traces = generate_dataset(20, TraceConfig(), seed=1)
+    s_max = max(len(t.tokens) for t in traces)
+    batch = np.zeros((len(traces), s_max), np.int32)
+    for i, t in enumerate(traces):
+        batch[i, : len(t.tokens)] = t.tokens
+    seg = segment_steps(jnp.asarray(batch), BOUNDARY_IDS, MARKER_IDS)
+    for i, t in enumerate(traces):
+        n = len(t.tokens)
+        mask = t.step_of_token >= 0
+        got = np.asarray(seg.step_id[i, :n])[mask]
+        assert (got == t.step_of_token[mask]).all()
+        assert int(seg.num_steps[i]) == t.labels.num_steps
+
+
+def test_markerless_sections_merge():
+    """A \\n\\n section without wait/but must merge into the next step."""
+    toks = jnp.asarray([[100, 101, NL2,          # no marker -> no close
+                         WAIT, 102, NL2,         # marker -> close step 0
+                         103, NL2,               # no marker -> no close
+                         WAIT, 104, NL2]])       # close step 1
+    seg = segment_steps(toks, BOUNDARY_IDS, MARKER_IDS)
+    assert int(seg.num_steps[0]) == 2
+    sid = np.asarray(seg.step_id[0])
+    assert sid[0] == 0 and sid[5] == 0       # merged section
+    assert sid[6] == 1 and sid[10] == 1
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(5, 120))
+@settings(max_examples=30, deadline=None)
+def test_step_ids_nondecreasing_and_bounded(seed, s):
+    rng = np.random.default_rng(seed)
+    toks = rng.integers(0, 16, size=(2, s)).astype(np.int32)
+    seg = segment_steps(jnp.asarray(toks), BOUNDARY_IDS, MARKER_IDS)
+    sid = np.asarray(seg.step_id)
+    assert (np.diff(sid, axis=1) >= 0).all()
+    assert (sid >= 0).all()
+    # number of closed steps can never exceed number of boundary tokens
+    assert (np.asarray(seg.num_steps) <= (toks == NL2).sum(1)).all()
+
+
+def test_segment_mean_pool_exact():
+    rng = np.random.default_rng(0)
+    b, s, d, t = 3, 40, 8, 6
+    hidden = rng.normal(size=(b, s, d)).astype(np.float32)
+    sid = np.sort(rng.integers(0, t, size=(b, s)), axis=1).astype(np.int32)
+    reps, counts = segment_mean_pool(jnp.asarray(hidden), jnp.asarray(sid), t)
+    reps, counts = np.asarray(reps), np.asarray(counts)
+    for i in range(b):
+        for step in range(t):
+            m = sid[i] == step
+            assert counts[i, step] == m.sum()
+            if m.sum():
+                np.testing.assert_allclose(reps[i, step], hidden[i, m].mean(0),
+                                           rtol=1e-5, atol=1e-5)
+            else:
+                assert np.abs(reps[i, step]).max() == 0
+
+
+def test_pool_respects_token_valid_mask():
+    b, s, d = 1, 10, 4
+    hidden = jnp.ones((b, s, d))
+    sid = jnp.zeros((b, s), jnp.int32)
+    valid = jnp.asarray([[1, 1, 1, 0, 0, 0, 0, 0, 0, 0]], bool)
+    reps, counts = segment_mean_pool(hidden, sid, 2, valid)
+    assert float(counts[0, 0]) == 3
+    np.testing.assert_allclose(np.asarray(reps[0, 0]), np.ones(d), rtol=1e-6)

@@ -1,0 +1,105 @@
+"""Prefill + decode must reproduce full-forward logits for every family."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_reduced
+from repro.models import model as M
+
+B, S = 2, 64
+
+
+def _mk(cfg, key, total):
+    shape = (B, total, cfg.num_codebooks) if cfg.num_codebooks else (B, total)
+    tokens = jax.random.randint(key, shape, 0, cfg.vocab_size)
+    ctx = None
+    if cfg.uses_cross_attn:
+        ca = cfg.cross_attn
+        ctx = jax.random.normal(key, (B, ca.num_context_tokens, ca.context_dim))
+    return tokens, ctx
+
+
+@pytest.mark.parametrize("arch", sorted(ARCH_IDS))
+def test_decode_matches_forward(arch, key):
+    cfg = get_reduced(arch)
+    params = M.init_params(cfg, key)
+    tokens, ctx = _mk(cfg, key, S + 1)
+    ref = M.forward(cfg, params, tokens, ctx, compute_dtype="float32",
+                    moe_impl="dense")
+    ref_last = np.asarray(ref.logits[:, -1])
+    _, _, cache = M.prefill(cfg, params, tokens[:, :S], ctx, cache_len=S + 8,
+                            compute_dtype="float32", moe_impl="dense")
+    win = cfg.sliding_window if cfg.native_swa else 0
+    lg, _, _ = M.decode_step(cfg, params, cache, tokens[:, S:S + 1],
+                             window=win, compute_dtype="float32",
+                             moe_impl="dense")
+    got = np.asarray(lg[:, 0])
+    rel = np.max(np.abs(got - ref_last)) / (np.max(np.abs(ref_last)) + 1e-9)
+    assert rel < 2e-3, rel
+
+
+@pytest.mark.parametrize("arch", ["qwen3-8b", "mamba2-2.7b", "hymba-1.5b"])
+def test_multi_step_decode(arch, key):
+    """Decode 8 consecutive tokens; each must match teacher-forced forward."""
+    cfg = get_reduced(arch)
+    params = M.init_params(cfg, key)
+    total = S + 8
+    tokens, ctx = _mk(cfg, key, total)
+    ref = M.forward(cfg, params, tokens, ctx, compute_dtype="float32",
+                    moe_impl="dense")
+    _, _, cache = M.prefill(cfg, params, tokens[:, :S], ctx, cache_len=total,
+                            compute_dtype="float32", moe_impl="dense")
+    win = cfg.sliding_window if cfg.native_swa else 0
+    for t in range(S, total):
+        lg, _, cache = M.decode_step(cfg, params, cache, tokens[:, t:t + 1],
+                                     window=win, compute_dtype="float32",
+                                     moe_impl="dense")
+        got = np.asarray(lg[:, 0])
+        want = np.asarray(ref.logits[:, t])
+        rel = np.max(np.abs(got - want)) / (np.max(np.abs(want)) + 1e-9)
+        assert rel < 5e-3, (t, rel)
+
+
+def test_sliding_window_decode_drops_old_tokens(key):
+    """With a ring cache, tokens beyond the window must not influence output."""
+    cfg = get_reduced("qwen3-8b").replace(sliding_window=16, native_swa=True)
+    params = M.init_params(cfg, key)
+    tokens, _ = _mk(cfg, key, S + 1)
+    # two prompts differing ONLY in early positions (outside the window)
+    tokens2 = tokens.at[:, :8].set((tokens[:, :8] + 3) % cfg.vocab_size)
+    out = []
+    for tk in (tokens, tokens2):
+        _, _, cache = M.prefill(cfg, params, tk[:, :S], None,
+                                compute_dtype="float32", moe_impl="dense")
+        lg, _, _ = M.decode_step(cfg, params, cache, tk[:, S:S + 1],
+                                 window=16, compute_dtype="float32",
+                                 moe_impl="dense")
+        out.append(np.asarray(lg))
+    np.testing.assert_allclose(out[0], out[1], rtol=1e-5, atol=1e-5)
+
+
+def test_int8_kv_decode_close_to_fp(key):
+    """int8-quantized KV decode must track the fp cache closely."""
+    from repro.models import cache as cache_mod
+    cfg = get_reduced("qwen3-8b")
+    params = M.init_params(cfg, key)
+    tokens, _ = _mk(cfg, key, S + 4)
+    _, _, cache = M.prefill(cfg, params, tokens[:, :S], None, cache_len=S + 8,
+                            compute_dtype="float32", moe_impl="dense")
+    # quantize the prefilled cache
+    qk, sk = cache_mod.quantize_kv(cache["k"])
+    qv, sv = cache_mod.quantize_kv(cache["v"])
+    qcache = dict(cache, k=qk, v=qv, k_scale=sk, v_scale=sv)
+    lg_fp, _, _ = M.decode_step(cfg, params, cache, tokens[:, S:S + 1],
+                                compute_dtype="float32", moe_impl="dense")
+    lg_q, _, qcache = M.decode_step(cfg, params, qcache, tokens[:, S:S + 1],
+                                    compute_dtype="float32", moe_impl="dense")
+    assert qcache["k"].dtype == jnp.int8
+    fp = np.asarray(lg_fp)
+    q = np.asarray(lg_q)
+    # top-1 prediction must agree; logits close in relative terms
+    assert (fp.argmax(-1) == q.argmax(-1)).mean() > 0.95
+    rel = np.max(np.abs(fp - q)) / (np.max(np.abs(fp)) + 1e-9)
+    assert rel < 0.05, rel

@@ -1,0 +1,86 @@
+"""Serving engine policies: crop budget, calibrated exit, lane bookkeeping."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.core import controller as C
+from repro.data.traces import BOS, BOUNDARY_IDS, MARKER_IDS
+from repro.models import model as M
+from repro.serving import Engine, ServeRequest
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_reduced("qwen3-8b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    ctrl = C.ControllerConfig(BOUNDARY_IDS, MARKER_IDS, window=10,
+                              min_steps=1, probe_dim=16)
+    pp = C.init_probe_params(cfg.d_model, 16)
+    return cfg, params, ctrl, pp
+
+
+def _reqs(n, max_new=48):
+    return [ServeRequest(uid=i, prompt=np.array([BOS, 100 + i], np.int32),
+                         max_new=max_new) for i in range(n)]
+
+
+def test_crop_budget_respected(setup):
+    cfg, params, ctrl, pp = setup
+    eng = Engine(cfg, params, ctrl=ctrl, probe_params=pp, lanes=4,
+                 policy="crop", crop_budget=10)
+    for r in eng.run(_reqs(4)):
+        assert r.think_tokens <= 10
+        assert r.exited_early
+
+
+def test_full_policy_never_exits_early(setup):
+    cfg, params, ctrl, pp = setup
+    eng = Engine(cfg, params, ctrl=ctrl, probe_params=pp, lanes=4,
+                 policy="full")
+    for r in eng.run(_reqs(4, max_new=32)):
+        assert not r.exited_early
+
+
+def test_calibrated_lam_zero_exits_after_min_steps(setup):
+    cfg, params, ctrl, pp = setup
+    pp0 = pp._replace(lam=jnp.float32(-1.0))   # always below the score
+    eng = Engine(cfg, params, ctrl=ctrl, probe_params=pp0, lanes=4,
+                 policy="calibrated")
+    res = eng.run(_reqs(4, max_new=64))
+    # with an untrained model boundary tokens may never be sampled; if any
+    # lane closed a step it must have exited early
+    for r in res:
+        if r.exit_step >= ctrl.min_steps:
+            assert r.exited_early
+
+
+def test_wave_scheduling_handles_more_requests_than_lanes(setup):
+    cfg, params, ctrl, pp = setup
+    eng = Engine(cfg, params, ctrl=ctrl, probe_params=pp, lanes=2,
+                 policy="crop", crop_budget=6)
+    res = eng.run(_reqs(5, max_new=24))
+    assert len(res) == 5
+    assert sorted(r.uid for r in res) == list(range(5))
+
+
+def test_results_contain_probe_trace(setup):
+    cfg, params, ctrl, pp = setup
+    eng = Engine(cfg, params, ctrl=ctrl, probe_params=pp, lanes=2,
+                 policy="full")
+    res = eng.run(_reqs(2, max_new=16))
+    for r in res:
+        assert r.probe_trace.ndim == 1
+        assert len(r.probe_trace) <= 16
+
+
+def test_engine_int8_kv(setup):
+    cfg, params, ctrl, pp = setup
+    eng = Engine(cfg, params, ctrl=ctrl, probe_params=pp, lanes=2,
+                 policy="crop", crop_budget=8, kv_quant=True)
+    res = eng.run(_reqs(2, max_new=16))
+    assert len(res) == 2
+    for r in res:
+        assert r.think_tokens <= 8

@@ -1,0 +1,112 @@
+"""Per-kernel allclose vs pure-jnp oracles, swept over shapes and dtypes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("n", [1, 7, 128, 300])
+@pytest.mark.parametrize("d,k", [(256, 128), (512, 256), (640, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_probe_score(n, d, k, dtype, key):
+    ks = jax.random.split(key, 5)
+    reps = jax.random.normal(ks[0], (n, d), dtype)
+    mean = (jax.random.normal(ks[1], (d,)) * 0.1).astype(jnp.float32)
+    comps = (jax.random.normal(ks[2], (d, k)) * d ** -0.5).astype(jnp.float32)
+    w1 = jax.random.normal(ks[3], (k,))
+    w2 = jax.random.normal(ks[4], (k,))
+    b1, b2 = jnp.float32(0.3), jnp.float32(-0.2)
+    got = ops.probe_score(reps, mean, comps, w1, b1, w2, b2, use_kernel=True)
+    want = ref.probe_score_ref(reps, mean, comps, w1, b1, w2, b2)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=tol)
+
+
+@pytest.mark.parametrize("b,h,kv,dh", [(1, 4, 4, 64), (3, 8, 2, 64), (2, 16, 8, 128)])
+@pytest.mark.parametrize("w", [64, 300, 1024])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention(b, h, kv, dh, w, dtype, key):
+    ks = jax.random.split(key, 4)
+    q = jax.random.normal(ks[0], (b, h, dh), dtype)
+    kc = jax.random.normal(ks[1], (b, w, kv, dh), dtype)
+    vc = jax.random.normal(ks[2], (b, w, kv, dh), dtype)
+    lengths = jax.random.randint(ks[3], (b,), 1, w + 1)
+    got = ops.decode_attention(q, kc, vc, lengths, use_kernel=True)
+    want = ref.decode_attention_ref(q, kc, vc, lengths)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), atol=tol)
+
+
+def test_decode_attention_length_zero_is_safe(key):
+    """Fully-invalid lanes must produce finite output (engine predication)."""
+    b, h, kv, dh, w = 2, 4, 2, 64, 128
+    q = jax.random.normal(key, (b, h, dh))
+    kc = jax.random.normal(key, (b, w, kv, dh))
+    vc = jax.random.normal(key, (b, w, kv, dh))
+    lengths = jnp.array([0, 64])
+    got = ops.decode_attention(q, kc, vc, lengths, use_kernel=True)
+    assert bool(jnp.isfinite(got).all())
+
+
+@pytest.mark.parametrize("b,s,h,p,n,c", [
+    (1, 64, 8, 32, 16, 32),
+    (2, 128, 8, 32, 16, 64),
+    (2, 256, 16, 64, 32, 64),
+])
+def test_ssd_chunk_scan(b, s, h, p, n, c, key):
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (b, s, h, p)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    dA = dt * A
+    Bm = jax.random.normal(ks[3], (b, s, n)) * 0.3
+    Cm = jax.random.normal(ks[4], (b, s, n)) * 0.3
+    ya, sa = ops.ssd_chunk_scan(x, dA, Bm, Cm, c, use_kernel=True)
+    yb, sb = ref.ssd_chunk_scan_ref(x, dA, Bm, Cm, c)
+    np.testing.assert_allclose(np.asarray(ya), np.asarray(yb), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(sa), np.asarray(sb), atol=1e-4)
+
+
+def test_ssd_kernel_matches_naive_recurrence(key):
+    """Chunked SSD (kernel) vs the O(S) per-step recurrence, the ground truth."""
+    b, s, h, p, n, c = 1, 32, 2, 8, 4, 8
+    ks = jax.random.split(key, 5)
+    x = np.asarray(jax.random.normal(ks[0], (b, s, h, p))) * 0.5
+    dt = np.asarray(jax.nn.softplus(jax.random.normal(ks[1], (b, s, h))))
+    A = np.asarray(-jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3))
+    Bm = np.asarray(jax.random.normal(ks[3], (b, s, n))) * 0.3
+    Cm = np.asarray(jax.random.normal(ks[4], (b, s, n))) * 0.3
+    # naive: state_{t} = exp(dt A) state + x_t B_t^T ; y = C state
+    state = np.zeros((b, h, p, n))
+    ys = np.zeros((b, s, h, p))
+    for t in range(s):
+        decay = np.exp(dt[:, t] * A)                       # (b,h)
+        state = state * decay[..., None, None] + \
+            x[:, t][..., None] * Bm[:, t][:, None, None, :]
+        ys[:, t] = np.einsum("bhpn,bn->bhp", state, Cm[:, t])
+    ya, sa = ops.ssd_chunk_scan(jnp.asarray(x), jnp.asarray(dt * A[None, None]),
+                                jnp.asarray(Bm), jnp.asarray(Cm), c,
+                                use_kernel=True)
+    np.testing.assert_allclose(np.asarray(ya), ys, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(sa), state, atol=1e-4)
+
+
+@pytest.mark.parametrize("window", [16, 100, 1024])
+def test_decode_attention_sliding_window(window, key):
+    b, h, kv, dh, w = 2, 8, 2, 64, 512
+    ks = jax.random.split(key, 4)
+    q = jax.random.normal(ks[0], (b, h, dh))
+    kc = jax.random.normal(ks[1], (b, w, kv, dh))
+    vc = jax.random.normal(ks[2], (b, w, kv, dh))
+    lengths = jnp.array([w, 200])
+    got = ops.decode_attention(q, kc, vc, lengths, window, use_kernel=True)
+    want = ref.decode_attention_ref(q, kc, vc, lengths, window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+    # tokens outside the window must not influence the result
+    kc2 = kc.at[:, : max(0, 200 - window - 5)].add(7.0)
+    got2 = ops.decode_attention(q, kc2, vc, lengths, window, use_kernel=True)
+    np.testing.assert_allclose(np.asarray(got[1]), np.asarray(got2[1]), atol=1e-5)

@@ -1,0 +1,95 @@
+"""Launch layer: sharding rules, roofline parsing, and a real (subprocess)
+dry-run of one full-size case on the 512-device host mesh."""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.launch import roofline
+from repro.launch.sharding import batch_spec, opt_specs, param_specs
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def test_param_specs_shard_big_leaves():
+    cfg = get_config("qwen3-8b")
+    shapes = jax.eval_shape(
+        lambda k: __import__("repro.models.model", fromlist=["m"]).init_params(cfg, k),
+        jax.random.PRNGKey(0))
+    specs = param_specs(shapes)
+    flat = jax.tree_util.tree_flatten_with_path(
+        specs, is_leaf=lambda x: isinstance(x, P))[0]
+    shapes_flat = jax.tree_util.tree_flatten_with_path(shapes)[0]
+    n_sharded = 0
+    for (path, spec), (_, shp) in zip(flat, shapes_flat):
+        if "model" in jax.tree.leaves(tuple(spec)):
+            # the sharded dim must divide by 16
+            i = list(spec).index("model")
+            assert shp.shape[i] % 16 == 0, (path, shp.shape, spec)
+            n_sharded += 1
+    assert n_sharded >= 6      # embed, head, wq/wk/wv/wo, mlp...
+
+
+def test_opt_specs_zero1_extends_sharding():
+    cfg = get_config("qwen3-8b")
+    from repro.models.model import init_params
+    shapes = jax.eval_shape(lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+    zs = opt_specs(shapes, zero1_data_size=16)
+    m_specs = jax.tree.leaves(zs.m, is_leaf=lambda x: isinstance(x, P))
+    assert any("data" in jax.tree.leaves(tuple(s)) for s in m_specs)
+
+
+def test_collective_bytes_parser():
+    hlo = """
+  %ag = bf16[32,1024,256]{2,1,0} all-gather(bf16[32,64,256]{2,1,0} %x), dim=1
+  %ar = f32[4096]{0} all-reduce(f32[4096]{0} %y), to_apply=%add
+  %rs = bf16[8,128]{1,0} reduce-scatter(bf16[128,128]{1,0} %z), dim=0
+  %cp = u32[16]{0} collective-permute(u32[16]{0} %w)
+"""
+    out = roofline.collective_bytes(hlo)
+    assert out["all-gather"] == 32 * 1024 * 256 * 2
+    assert out["all-reduce"] == 4096 * 4 * 2          # counted twice (RS+AG)
+    assert out["reduce-scatter"] == 8 * 128 * 2
+    assert out["collective-permute"] == 16 * 4
+
+
+def test_roofline_terms_and_bottleneck():
+    rl = roofline.Roofline(flops=197e12, bytes_hbm=819e9, bytes_coll=100e9,
+                           model_flops=197e12 * 0.5, chips=1)
+    assert abs(rl.t_compute - 1.0) < 1e-9
+    assert abs(rl.t_memory - 1.0) < 1e-9
+    assert rl.t_collective == 2.0
+    assert rl.bottleneck == "collective"
+    assert abs(rl.useful_flops_ratio - 0.5) < 1e-9
+
+
+def test_model_flops_decode_vs_train():
+    from repro.configs import SHAPES
+    cfg = get_config("qwen3-8b")
+    tr = roofline.model_flops_estimate(cfg, SHAPES["train_4k"])
+    de = roofline.model_flops_estimate(cfg, SHAPES["decode_32k"])
+    assert tr > de * 1000      # train processes ~8000x more tokens, x3 for bwd
+
+
+@pytest.mark.slow
+def test_dryrun_subprocess_single_case(tmp_path):
+    """Full-size minicpm decode on the 16x16 production mesh, real compile."""
+    env = dict(os.environ, PYTHONPATH=SRC)
+    env.pop("JAX_PLATFORMS", None)
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "minicpm-2b",
+         "--shape", "decode_32k", "--mesh", "single", "--out", str(tmp_path),
+         "--skip-roofline"],
+        capture_output=True, text=True, env=env, timeout=560)
+    assert r.returncode == 0, r.stdout + r.stderr
+    rec = json.load(open(os.path.join(tmp_path, "minicpm-2b_decode_32k_16x16.json")))
+    assert rec["ok"]
+    assert rec["memory"]["total_bytes"] < 16 * 2 ** 30

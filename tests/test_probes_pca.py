@@ -1,0 +1,63 @@
+"""Probe training + PCA correctness."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.pca import fit_pca, pad_components, transform
+from repro.core.probes import auroc, probe_scores, train_probe
+
+
+def test_auroc_known_values():
+    assert auroc(np.array([0.9, 0.8, 0.3, 0.1]), np.array([1, 1, 0, 0])) == 1.0
+    assert auroc(np.array([0.1, 0.2, 0.8, 0.9]), np.array([1, 1, 0, 0])) == 0.0
+    a = auroc(np.array([0.5, 0.5, 0.5, 0.5]), np.array([1, 0, 1, 0]))
+    assert abs(a - 0.5) < 1e-9
+
+
+def test_pca_reconstruction_and_variance(key):
+    rng = np.random.default_rng(0)
+    # low-rank data + noise
+    basis = rng.normal(size=(4, 32))
+    x = rng.normal(size=(500, 4)) @ basis + rng.normal(size=(500, 32)) * 0.01
+    pca = fit_pca(jnp.asarray(x), 4)
+    assert float(jnp.sum(pca.explained)) > 0.98
+    z = transform(pca, jnp.asarray(x))
+    assert z.shape == (500, 4)
+    # components orthonormal
+    gram = np.asarray(pca.components.T @ pca.components)
+    np.testing.assert_allclose(gram, np.eye(4), atol=1e-4)
+
+
+def test_pad_components(key):
+    x = jax.random.normal(key, (50, 16))
+    pca = fit_pca(x, 8)
+    padded = pad_components(pca, 12)
+    assert padded.components.shape == (16, 12)
+    z = transform(padded, x)
+    assert float(jnp.abs(z[:, 8:]).max()) == 0.0
+
+
+@pytest.mark.parametrize("kind", ["linear", "mlp"])
+def test_probe_learns_separable(kind, key):
+    rng = np.random.default_rng(1)
+    n, d = 600, 16
+    w = rng.normal(size=d)
+    x = rng.normal(size=(n, d))
+    y = (x @ w > 0).astype(np.float32)
+    probe = train_probe(key, kind, x, y, steps=300)
+    assert probe.val_auroc > 0.9, probe
+    s = probe_scores(probe, x)
+    assert auroc(s, y) > 0.9
+
+
+def test_transformer_probe_sequence_labels(key):
+    """Sequence labeling: label depends on the cumulative history, which a
+    causal transformer can capture but a per-step linear probe cannot."""
+    rng = np.random.default_rng(2)
+    n, t, d = 200, 12, 8
+    x = rng.normal(size=(n, t, d)).astype(np.float32)
+    y = (np.cumsum(x[..., 0], axis=1) > 0).astype(np.float32)
+    probe = train_probe(key, "transformer", x, y, steps=200)
+    assert probe.val_auroc > 0.75, probe.val_auroc

@@ -1,0 +1,99 @@
+"""Synthetic reasoning-trace generator: label/graph invariants the whole
+reproduction relies on (the generator IS the verifier — it must be coherent)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.data.traces import (
+    ANS_BASE,
+    NUM_ANSWERS,
+    THINK_END,
+    TraceConfig,
+    generate_dataset,
+    generate_trace,
+    ood_config,
+)
+
+
+@pytest.fixture(scope="module")
+def traces():
+    return generate_dataset(100, TraceConfig(), seed=0)
+
+
+def test_label_shapes_consistent(traces):
+    for t in traces:
+        T = t.labels.num_steps
+        for arr in (t.labels.correct_at, t.labels.consistent_at,
+                    t.labels.is_leaf, t.labels.is_novel):
+            assert len(arr) == T
+        assert len(t.graph_sizes) == T
+
+
+def test_consistency_is_suffix_closed(traces):
+    """Once z_t == z_T and no further attempts change it, consistency holds;
+    in particular the final step is always consistent with itself."""
+    for t in traces:
+        assert t.labels.consistent_at[-1]
+
+
+def test_correct_implies_solvable(traces):
+    for t in traces:
+        if t.labels.correct_at.any():
+            assert t.final_answer is not None
+        if t.solvable:
+            assert t.labels.correct_at[-1]
+            assert t.final_answer == t.true_answer
+
+
+def test_graph_growth_monotone_and_stalls_in_overthink(traces):
+    for t in traces:
+        g = t.graph_sizes
+        assert (np.diff(g) >= 0).all()
+        # novel steps exactly when the graph grows
+        grows = np.diff(np.concatenate([[1], g])) > 0
+        np.testing.assert_array_equal(grows, t.labels.is_novel)
+
+
+def test_overthink_tail_exists(traces):
+    """Most traces end with a stretch of non-novel steps (the waste the paper
+    trims); ensure the phenomenon exists in-distribution."""
+    frac_with_tail = np.mean([not t.labels.is_novel[-1] for t in traces])
+    assert frac_with_tail > 0.6
+
+
+def test_tokens_wellformed(traces):
+    for t in traces:
+        assert t.tokens[0] == 1                  # BOS
+        assert THINK_END in t.tokens
+        if t.final_answer is not None:
+            idx = np.nonzero(t.tokens == THINK_END)[0][0]
+            assert t.tokens[idx + 1] == ANS_BASE + t.final_answer
+
+
+def test_step_token_alignment(traces):
+    for t in traces:
+        T = t.labels.num_steps
+        sids = t.step_of_token[t.step_of_token >= 0]
+        assert sids.max() == T - 1
+        assert (np.diff(sids) >= 0).all()
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=25, deadline=None)
+def test_generator_deterministic(seed):
+    a = generate_trace(np.random.default_rng(seed), TraceConfig())
+    b = generate_trace(np.random.default_rng(seed), TraceConfig())
+    np.testing.assert_array_equal(a.tokens, b.tokens)
+    assert a.true_answer == b.true_answer
+
+
+def test_ood_config_is_harder():
+    base = TraceConfig()
+    ood = ood_config(base)
+    tr_id = generate_dataset(150, base, seed=1)
+    tr_ood = generate_dataset(150, ood, seed=1)
+    assert np.mean([t.solvable for t in tr_ood]) < np.mean([t.solvable for t in tr_id])
+    assert np.mean([t.labels.num_steps for t in tr_ood]) > \
+        np.mean([t.labels.num_steps for t in tr_id])
