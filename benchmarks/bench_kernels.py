@@ -25,6 +25,35 @@ def _time(fn, *args, iters=5):
     return (time.perf_counter() - t0) / iters * 1e6
 
 
+def bench_serve_loop(emit, lane_counts=(2, 8, 16), max_new=64, iters=3):
+    """Decode-loop throughput: per-token host loop vs chunked lax.scan.
+
+    Both drivers run the same jitted decode+controller math; the delta is
+    pure host overhead (one dispatch + device→host sync + Python bookkeeping
+    per token vs per chunk) — the cost the scanned engine removes.
+    """
+    from benchmarks.common import serve_fixture
+    from repro.serving import Engine
+
+    for lanes in lane_counts:
+        cfg, params, ctrl, pp, reqs = serve_fixture(lanes, max_new=max_new)
+        tok_s = {}
+        for mode in ("host", "scan"):
+            eng = Engine(cfg, params, ctrl=ctrl, probe_params=pp, lanes=lanes,
+                         policy="full", decode_mode=mode)
+            eng.run(reqs)                          # compile + warm up
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                eng.run(reqs)
+            dt = (time.perf_counter() - t0) / iters
+            tok_s[mode] = lanes * max_new / dt
+        emit("kernels", f"serve_loop_lanes{lanes}", {
+            "tok_s_host": round(tok_s["host"], 1),
+            "tok_s_scan": round(tok_s["scan"], 1),
+            "speedup": round(tok_s["scan"] / tok_s["host"], 2),
+        })
+
+
 def run(pipe, emit):
     key = jax.random.PRNGKey(0)
     ks = jax.random.split(key, 8)
@@ -75,3 +104,6 @@ def run(pipe, emit):
         err = float(jnp.max(jnp.abs(ya - yb)))
         emit("kernels", f"ssd_scan_b{b_}_s{s}",
              {"us_per_call_ref_cpu": round(us, 1), "kernel_maxerr": err})
+
+    # serving decode loop: host-bound vs device-scanned
+    bench_serve_loop(emit)

@@ -80,6 +80,30 @@ def _model_cfg():
     return get_reduced(ARCH).replace(vocab_size=512, probe_dim=PROBE_DIM)
 
 
+def serve_fixture(lanes: int, *, max_new: int = 64, seed: int = 0):
+    """Toy serving setup for the decode-loop benchmarks: a deliberately tiny
+    model (1 layer, d_model=128) so the measurement isolates the *loop* —
+    dispatch, device→host syncs, Python bookkeeping — rather than model
+    FLOPs, mirroring the TPU serving regime where per-token compute is
+    sub-millisecond. ``policy='full'`` decodes a fixed ``max_new`` tokens per
+    lane, so tokens/sec is directly comparable between the host-loop and
+    scanned drivers."""
+    from repro.core import controller as ctrl_mod
+    from repro.data.traces import BOS
+    from repro.serving import ServeRequest
+
+    cfg = get_reduced(ARCH).replace(num_layers=1, d_model=128, d_ff=256,
+                                    num_heads=2, num_kv_heads=1,
+                                    vocab_size=256)
+    params = M.init_params(cfg, jax.random.PRNGKey(seed))
+    ctrl = ctrl_mod.ControllerConfig(BOUNDARY_IDS, MARKER_IDS, window=WINDOW,
+                                     min_steps=2, probe_dim=16)
+    pp = ctrl_mod.init_probe_params(cfg.d_model, 16)
+    reqs = [ServeRequest(uid=i, prompt=np.array([BOS, 40 + i], np.int32),
+                         max_new=max_new) for i in range(lanes)]
+    return cfg, params, ctrl, pp, reqs
+
+
 def train_lm(cfg, seed: int = 0, steps: int = TRAIN_STEPS, log=print):
     params = M.init_params(cfg, jax.random.PRNGKey(seed))
     ds = PackedDataset(DataConfig(seq_len=256, batch_size=16,

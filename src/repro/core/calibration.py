@@ -97,6 +97,7 @@ def fixed_sequence_test(
     pvals: List[float] = []
     risks: List[float] = []
     selected: Optional[float] = None
+    n = 0                              # calibration-set size seen (0: empty Λ)
     for lam in lam_grid:
         r = np.asarray(risk_at_lambda(float(lam)), np.float64)
         n = r.size
@@ -108,12 +109,13 @@ def fixed_sequence_test(
             selected = float(lam)     # H_j rejected: λ_j is risk-controlling
         else:
             break                      # stop at first failure (fixed sequence)
+    # an empty grid is a well-formed "no valid λ" outcome, not an error
     return CalibrationResult(
         lam=selected,
         lam_grid=[float(l) for l in lam_grid[: len(pvals)]],
         p_values=pvals,
         emp_risks=risks,
-        n=n if pvals else 0,
+        n=n,
         delta=delta,
         epsilon=epsilon,
     )

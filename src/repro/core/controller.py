@@ -33,6 +33,14 @@ class ControllerConfig:
     window: int = 10          # smoothing window (paper: 10 steps)
     min_steps: int = 2
     probe_dim: int = 256      # PCA dim
+    # --- serving-phase tracking (all-device early exit). Negative ids/zero
+    # budget disable the corresponding transition, so probe-only callers
+    # (offline calibration, controller unit tests) are unaffected.
+    think_end_id: int = -1    # token that ends the thinking phase
+    eos_id: int = -1          # end-of-sequence token
+    ans_base: int = -1        # answer tokens live in [ans_base, ans_base+num_answers)
+    num_answers: int = 0
+    crop_budget: int = 0      # force THINK_END after this many thinking tokens (0: off)
 
 
 class ProbeParams(NamedTuple):
@@ -56,8 +64,17 @@ class ControllerState(NamedTuple):
     win_n: jax.Array          # (B,)   i32 scores pushed so far
     smoothed: jax.Array       # (B,)   f32 current smoothed score
     steps: jax.Array          # (B,)   i32 closed steps
-    done: jax.Array           # (B,)   bool
+    done: jax.Array           # (B,)   bool probe trigger fired
     exit_pos: jax.Array       # (B,)   i32 token position at exit (-1 = active)
+    # --- serving-phase bookkeeping (pure jnp so forcing can fuse into a scan)
+    think_done: jax.Array     # (B,)   bool THINK_END consumed
+    lane_done: jax.Array      # (B,)   bool answer/EOS emitted or budget spent
+    think_tokens: jax.Array   # (B,)   i32 thinking tokens generated so far
+    answer: jax.Array         # (B,)   i32 decoded answer id (-1 = none)
+    forced_exit: jax.Array    # (B,)   bool THINK_END was force-fed (early exit)
+    exit_step: jax.Array      # (B,)   i32 closed steps at the exit trigger (-1)
+    emitted: jax.Array        # (B,)   i32 tokens emitted to this lane's output
+    max_tokens: jax.Array     # (B,)   i32 per-lane emission budget (max_new)
 
 
 def init_state(batch: int, d_model: int, window: int) -> ControllerState:
@@ -71,6 +88,14 @@ def init_state(batch: int, d_model: int, window: int) -> ControllerState:
         steps=jnp.zeros((batch,), jnp.int32),
         done=jnp.zeros((batch,), bool),
         exit_pos=jnp.full((batch,), -1, jnp.int32),
+        think_done=jnp.zeros((batch,), bool),
+        lane_done=jnp.zeros((batch,), bool),
+        think_tokens=jnp.zeros((batch,), jnp.int32),
+        answer=jnp.full((batch,), -1, jnp.int32),
+        forced_exit=jnp.zeros((batch,), bool),
+        exit_step=jnp.full((batch,), -1, jnp.int32),
+        emitted=jnp.zeros((batch,), jnp.int32),
+        max_tokens=jnp.full((batch,), 2 ** 31 - 1, jnp.int32),
     )
 
 
@@ -111,7 +136,11 @@ def update(
     position: jax.Array,       # (B,) absolute position of that token
 ) -> ControllerState:
     b, d = hidden.shape
-    active = ~state.done
+    # Probe accumulation runs only while the lane is thinking and the probe
+    # has not triggered: boundary tokens decoded after THINK_END (the model
+    # free-runs until an answer/EOS appears) must not close steps, or the
+    # step counter drifts past the value at the exit trigger.
+    active = ~state.done & ~state.think_done & ~state.lane_done
 
     is_boundary = _isin(token, ctrl.boundary_ids) & active
     is_marker = _isin(token, ctrl.marker_ids)
@@ -141,12 +170,71 @@ def update(
     trigger = close & (smoothed >= params.lam) & (steps >= ctrl.min_steps)
     done = state.done | trigger
     exit_pos = jnp.where(trigger & (state.exit_pos < 0), position, state.exit_pos)
+    exit_step = jnp.where(trigger & (state.exit_step < 0), steps, state.exit_step)
 
     # reset per-step accumulators where the step closed
     rep_sum = jnp.where(close[:, None], 0.0, rep_sum)
     tok_cnt = jnp.where(close, 0.0, tok_cnt)
     has_marker = jnp.where(close, False, has_marker)
 
+    # ---- serving-phase transitions (disabled when the ids are unset) -------
+    td_prev, lane_prev = state.think_done, state.lane_done
+    if ctrl.think_end_id >= 0:
+        is_end = token == ctrl.think_end_id
+    else:
+        is_end = jnp.zeros(token.shape, bool)
+    think_done = td_prev | (is_end & ~lane_prev)
+    # a token counts against the thinking budget iff the lane was still
+    # thinking when it was generated and it is not THINK_END itself — this is
+    # what makes crop_budget=N decode exactly N thinking tokens (and makes a
+    # first-token THINK_END contribute zero, both off-by-ones of the old
+    # host loop)
+    think_tokens = state.think_tokens + (
+        ~td_prev & ~is_end & ~lane_prev).astype(jnp.int32)
+    if ctrl.ans_base >= 0 and ctrl.num_answers > 0:
+        is_ans = (token >= ctrl.ans_base) & (token < ctrl.ans_base + ctrl.num_answers)
+    else:
+        is_ans = jnp.zeros(token.shape, bool)
+    ans_now = td_prev & is_ans & (state.answer < 0) & ~lane_prev
+    answer = jnp.where(ans_now, token - ctrl.ans_base, state.answer)
+    if ctrl.eos_id >= 0:
+        is_eos = token == ctrl.eos_id
+    else:
+        is_eos = jnp.zeros(token.shape, bool)
+    # every token processed while the lane is live counts against its own
+    # emission budget (per-request max_new): a lane sharing a wave with a
+    # larger request stops at *its* budget, not the wave-wide maximum
+    emitted = state.emitted + (~lane_prev).astype(jnp.int32)
+    lane_done = lane_prev | (td_prev & (is_eos | ans_now)) \
+        | (emitted >= state.max_tokens)
+
     return ControllerState(
-        rep_sum, tok_cnt, has_marker, win, win_n, smoothed, steps, done, exit_pos
+        rep_sum, tok_cnt, has_marker, win, win_n, smoothed, steps, done,
+        exit_pos, think_done, lane_done, think_tokens, answer,
+        state.forced_exit, exit_step, emitted, state.max_tokens,
     )
+
+
+def forced_next(
+    ctrl: ControllerConfig, state: ControllerState
+) -> Tuple[jax.Array, ControllerState]:
+    """Device-side budget forcing: decide, per lane, whether the *next* token
+    must be THINK_END (-1 = sample freely).
+
+    A lane is forced when it is still thinking and either the probe triggered
+    (``state.done``) or the crop budget is exhausted.  The returned state
+    records ``forced_exit`` and the step count at the trigger (``exit_step``,
+    first-write-wins so a probe trigger recorded by :func:`update` is kept).
+    """
+    if ctrl.crop_budget > 0:
+        crop_hit = state.think_tokens >= ctrl.crop_budget
+    else:
+        crop_hit = jnp.zeros(state.think_tokens.shape, bool)
+    want = ~state.think_done & ~state.lane_done & (state.done | crop_hit)
+    if ctrl.think_end_id < 0:
+        return jnp.full(state.think_tokens.shape, -1, jnp.int32), state
+    forced = jnp.where(want, jnp.int32(ctrl.think_end_id), jnp.int32(-1))
+    exit_step = jnp.where(want & (state.exit_step < 0), state.steps,
+                          state.exit_step)
+    return forced, state._replace(forced_exit=state.forced_exit | want,
+                                  exit_step=exit_step)

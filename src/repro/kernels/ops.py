@@ -18,7 +18,7 @@ from repro.kernels.ssd_scan import ssd_chunk_scan as _ssd_chunk_scan
 
 
 def probe_score(reps, pca_mean, pca_comps, w1, b1, w2, b2,
-                *, use_kernel: bool = True, interpret: bool = True):
+                *, use_kernel: bool = True, interpret: bool | None = None):
     if use_kernel:
         return _probe_score(reps, pca_mean, pca_comps, w1, b1, w2, b2,
                             interpret=interpret)

@@ -39,9 +39,28 @@ def _kernel(x_ref, mean_ref, comps_ref, w_ref, b_ref, out_ref):
     out_ref[...] = jax.nn.sigmoid(logits)
 
 
+def default_interpret() -> bool:
+    """Pallas interpret mode is only needed off-TPU; on TPU the kernel
+    compiles natively. Resolved at call time so tests can fake backends."""
+    return jax.default_backend() != "tpu"
+
+
+def probe_score(reps, pca_mean, pca_comps, w1, b1, w2, b2,
+                *, interpret: bool | None = None):
+    """reps: (N, D) -> (N, 2) probabilities. Pads N to a TILE_N multiple.
+
+    ``interpret=None`` auto-detects the backend (compiled on TPU, interpreted
+    elsewhere) so the fused kernel actually runs compiled in deployment.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    return _probe_score_jit(reps, pca_mean, pca_comps, w1, b1, w2, b2,
+                            interpret=interpret)
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def probe_score(reps, pca_mean, pca_comps, w1, b1, w2, b2, *, interpret: bool = True):
-    """reps: (N, D) -> (N, 2) probabilities. Pads N to a TILE_N multiple."""
+def _probe_score_jit(reps, pca_mean, pca_comps, w1, b1, w2, b2, *,
+                     interpret: bool):
     n, d = reps.shape
     k = pca_comps.shape[1]
     n_pad = (n + TILE_N - 1) // TILE_N * TILE_N

@@ -241,6 +241,14 @@ def _depth_points(cfg):
     return (cfg.replace(num_layers=1), 1), (cfg.replace(num_layers=2), 2)
 
 
+def _mesh_ctx(mesh):
+    """jax>=0.5 uses ``jax.set_mesh``; older runtimes enter the Mesh itself
+    (the legacy global-mesh context) — same ambient-mesh effect for lowering."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
 def _named_out(mesh, out_specs):
     if out_specs is None:
         return None
@@ -268,7 +276,7 @@ def _lower_compile(cfg, shape, mesh, moe_impl, unroll=False, kv_quant=False,
         moe_groups=_moe_groups_spec(mesh, shape.global_batch),
         kv_slice=kv_slice, kv_full=kv_full, kv_scale_full=kv_scale,
         q_decode=q_spec, scores_decode=sc_spec)
-    with jax.set_mesh(mesh), ctx:
+    with _mesh_ctx(mesh), ctx:
         lowered = _jit_case(mesh, fn, specs, donate, out_specs).lower(*args)
         compiled = lowered.compile()
     return compiled
@@ -329,7 +337,7 @@ def run_case(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
             moe_groups=_moe_groups_spec(mesh, shape.global_batch),
             kv_slice=kv_slice, kv_full=kv_full, kv_scale_full=kv_scale,
             q_decode=q_spec, scores_decode=sc_spec)
-        with jax.set_mesh(mesh), ctx:
+        with _mesh_ctx(mesh), ctx:
             lowered = _jit_case(mesh, fn, specs, donate, out_specs).lower(*args)
             t_lower = time.time() - t0
             compiled = lowered.compile()

@@ -13,13 +13,19 @@ BATCH_AXES_SINGLE = ("data",)
 BATCH_AXES_MULTI = ("pod", "data")
 
 
+def _axis_type_kwargs(n_axes: int) -> dict:
+    """``axis_types`` only exists on jax >= 0.5 (Auto is the default there
+    anyway); omit it on older runtimes instead of crashing at import."""
+    if hasattr(jax.sharding, "AxisType"):
+        return {"axis_types": (jax.sharding.AxisType.Auto,) * n_axes}
+    return {}
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod; multi_pod adds a leading 2-pod axis."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return jax.make_mesh(shape, axes, **_axis_type_kwargs(len(axes)))
 
 
 def make_host_mesh(model_parallel: int = 1):
@@ -28,7 +34,7 @@ def make_host_mesh(model_parallel: int = 1):
     assert n % model_parallel == 0
     return jax.make_mesh(
         (n // model_parallel, model_parallel), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+        **_axis_type_kwargs(2),
     )
 
 

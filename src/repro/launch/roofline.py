@@ -118,6 +118,8 @@ class Roofline:
 
 def analyze(compiled, *, model_flops: float, chips: int) -> Roofline:
     ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):     # jax<0.5 returned [dict]
+        ca = ca[0] if ca else {}
     flops = float(ca.get("flops", 0.0))
     nbytes = float(ca.get("bytes accessed", 0.0))
     txt = compiled.as_text()

@@ -69,8 +69,12 @@ def main():
     ctrl = ctrl_mod.ControllerConfig(
         boundary_ids=BOUNDARY_IDS, marker_ids=MARKER_IDS,
         window=10, min_steps=2, probe_dim=cfg.probe_dim)
+    # forward the budget only for the crop policy: Engine folds crop_budget
+    # into calibrated as an opt-in safety net, and the CLI default of 64
+    # would silently crop a pure calibrated run
+    crop_kw = {"crop_budget": args.crop_budget} if args.policy == "crop" else {}
     eng = Engine(cfg, params, ctrl=ctrl, probe_params=pp, lanes=args.lanes,
-                 policy=args.policy, crop_budget=args.crop_budget)
+                 policy=args.policy, **crop_kw)
 
     rng = np.random.default_rng(args.seed)
     traces = generate_dataset(args.requests, TraceConfig(), seed=args.seed + 7)

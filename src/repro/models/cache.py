@@ -90,6 +90,22 @@ def dequantize_kv(q: jax.Array, scale: jax.Array, dtype=jnp.bfloat16) -> jax.Arr
     return (q.astype(jnp.float32) * scale.astype(jnp.float32)[..., None]).astype(dtype)
 
 
+def quantize_prefill_cache(cache: dict) -> dict:
+    """Quantize a freshly prefilled attention cache to int8 K/V + scales.
+
+    The returned dict has the exact pytree structure ``decode_step`` expects
+    for its quantized path, and that structure is stable under ``lax.scan``
+    (the scales ride in the scan carry next to the int8 values). SSM / cross
+    caches are passed through untouched.
+    """
+    if "k" not in cache:
+        return cache
+    out = dict(cache)
+    out["k"], out["k_scale"] = quantize_kv(cache["k"])
+    out["v"], out["v_scale"] = quantize_kv(cache["v"])
+    return out
+
+
 def cache_write(k_cache: jax.Array, v_cache: jax.Array, k_new: jax.Array,
                 v_new: jax.Array, pos: jax.Array, window: int):
     """Scatter one new (k, v) per sequence. caches: (B, W, Hkv, D);

@@ -311,6 +311,11 @@ def loss_fn(cfg, params, tokens, labels, ctx=None, *, remat=True,
 # prefill / decode
 # ---------------------------------------------------------------------------
 
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "use_window", "cache_len", "moe_impl",
+                     "compute_dtype", "unroll"),
+)
 def prefill(
     cfg,
     params,
@@ -324,6 +329,10 @@ def prefill(
     unroll: bool = False,
 ):
     """Run the full prompt, build a decode cache. Returns (last_logits, hidden, cache).
+
+    Jitted (cfg/shape knobs static): the serving engine prefolds every wave
+    through this, and an uncompiled prefill costs more than the whole decode
+    loop on small models.
 
     ``cache_len``: total cache slots to allocate (>= prompt length); defaults
     to the prompt length (no decode headroom). Ignored when a sliding window

@@ -1,2 +1,8 @@
-from repro.serving.engine import Engine, ServeRequest, ServeResult, make_serve_step
-from repro.serving.sampling import sample_tokens
+from repro.serving.engine import (
+    Engine,
+    ServeRequest,
+    ServeResult,
+    make_serve_step,
+    make_serve_steps,
+)
+from repro.serving.sampling import decode_key, sample_tokens

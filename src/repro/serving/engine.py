@@ -1,24 +1,40 @@
 """Batched serving engine with thought-calibration early exit.
 
-The jitted ``serve_step`` fuses: one-token decode → greedy/temp sampling →
-controller update (step pooling, probe scoring, smoothing, λ̂ comparison).
-Exited lanes are predicated no-ops; the host engine runs *waves* of B
-requests, frees lanes on exit (the saved steps are the paper's reclaimed
-compute), and force-feeds ``THINK_END`` to elicit the final answer — the
-paper's budget-forcing answer extraction (Appendix A prompt → here a token).
+Two decode drivers share one controller:
 
-Early-exit policies:
-* ``calibrated``: thought-calibration probe with LTT threshold λ̂;
+* ``decode_mode="scan"`` (default): a wave decodes in jitted chunks of K
+  tokens via ``jax.lax.scan``. The scan body fuses one-token decode →
+  sampling → controller update → device-side forcing (when the probe
+  triggers or the crop budget hits, the *next* token is forced to
+  ``THINK_END`` inside the scan; answer/EOS detection flips a per-lane
+  ``lane_done`` mask on device). Per-token ``(token, smoothed, emit)``
+  stacks are emitted so the host syncs once per chunk — not once per token —
+  to decide whether the wave can stop.
+* ``decode_mode="host"``: the retained per-token reference loop. One jitted
+  single-token step per token, with forcing and lane bookkeeping done in
+  Python from synced state. Token-for-token identical to the scanned path
+  (greedy/float32: bit-identical) and the baseline for
+  ``benchmarks.bench_kernels.bench_serve_loop``.
+
+Early-exit policies (all expressed as (λ, crop_budget) pairs on device):
+* ``calibrated``: thought-calibration probe with LTT threshold λ̂ (an
+  explicit ``crop_budget`` may be combined as a safety net);
 * ``crop``: naive budget forcing at a fixed thinking-token budget
-  (the paper's Crop baseline);
+  (the paper's Crop baseline) — λ = +inf so the probe never fires;
 * ``full``: decode to the trajectory's natural end (THINK_END) or max budget.
+
+``crop_budget=N`` decodes exactly N thinking tokens before THINK_END is
+forced, and the first generated token (argmax of the prefill logits) passes
+through the controller like every other token — a first-token THINK_END ends
+the thinking phase immediately and counts zero thinking tokens.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import functools
-from dataclasses import dataclass, field
-from typing import List, Optional, Sequence
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -27,7 +43,8 @@ import numpy as np
 from repro.core import controller as ctrl_mod
 from repro.data.traces import ANS_BASE, EOS, NUM_ANSWERS, THINK_END
 from repro.models import model as model_mod
-from repro.serving.sampling import sample_tokens
+from repro.models.cache import quantize_prefill_cache
+from repro.serving.sampling import decode_key, sample_tokens
 
 
 @dataclass
@@ -43,19 +60,21 @@ class ServeResult:
     tokens: np.ndarray                  # generated tokens (thinking + answer)
     think_tokens: int                   # tokens spent thinking
     exited_early: bool
-    exit_step: int                      # closed reasoning steps at exit (-1: none)
+    exit_step: int                      # closed steps at the exit trigger (-1: none)
     answer: Optional[int]               # decoded answer id (synthetic world)
     probe_trace: np.ndarray             # smoothed probe score after each token
+    exit_pos: int = -1                  # absolute token position of the probe trigger
 
 
 def make_serve_step(cfg, ctrl: ctrl_mod.ControllerConfig, *,
                     window: int = 0, moe_impl: str = "dense",
                     compute_dtype: str = "float32", temperature: float = 0.0):
-    """Build the jitted decode+controller step."""
+    """Build the jitted single-token decode+controller step (host-loop path).
+
+    ``forced``: (B,) next-token override (-1 = sample) computed by the host.
+    """
 
     def serve_step(params, probe_params, dcache, state, tokens, key, forced):
-        """tokens: (B, 1) current input; forced: (B,) optional forced next
-        token (-1 = sample). Returns (next_tokens, dcache, state, smoothed)."""
         logits, hidden, dcache = model_mod.decode_step(
             cfg, params, dcache, tokens,
             window=window, moe_impl=moe_impl, compute_dtype=compute_dtype)
@@ -70,6 +89,43 @@ def make_serve_step(cfg, ctrl: ctrl_mod.ControllerConfig, *,
     return jax.jit(serve_step)
 
 
+def make_serve_steps(cfg, ctrl: ctrl_mod.ControllerConfig, *,
+                     window: int = 0, moe_impl: str = "dense",
+                     compute_dtype: str = "float32", temperature: float = 0.0):
+    """Build the jitted K-token chunk: decode, sampling, controller update and
+    THINK_END forcing fused into one ``lax.scan`` (K = ``num_steps``, static).
+
+    Returns per-token stacks ``(tokens, smoothed, emit)`` with shapes (K, B);
+    ``emit[t, i]`` is False once lane i had finished *before* token t (the
+    host drops those slots, matching the host loop's per-lane append).
+    Sampling keys are ``fold_in(base_key, step0 + t)`` so chunk boundaries do
+    not change the key stream.
+    """
+
+    @functools.partial(jax.jit, static_argnames=("num_steps",))
+    def serve_steps(params, probe_params, dcache, state, cur, base_key,
+                    step0, *, num_steps: int):
+        def body(carry, t):
+            cur, dcache, state = carry
+            forced, state = ctrl_mod.forced_next(ctrl, state)
+            logits, hidden, dcache = model_mod.decode_step(
+                cfg, params, dcache, cur[:, None],
+                window=window, moe_impl=moe_impl, compute_dtype=compute_dtype)
+            nxt = sample_tokens(decode_key(base_key, t), logits,
+                                temperature)[:, 0]
+            nxt = jnp.where(forced >= 0, forced, nxt)
+            emit = ~state.lane_done
+            state = ctrl_mod.update(ctrl, probe_params, state, nxt,
+                                    hidden[:, 0], dcache["pos"] - 1)
+            return (nxt, dcache, state), (nxt, state.smoothed, emit)
+
+        (cur, dcache, state), (toks, sm, emit) = jax.lax.scan(
+            body, (cur, dcache, state), step0 + jnp.arange(num_steps))
+        return cur, dcache, state, toks, sm, emit
+
+    return serve_steps
+
+
 class Engine:
     """Wave-scheduled batched server (lanes freed on exit count as reclaimed
     decode compute; see DESIGN.md §3 on TPU-predication batching)."""
@@ -79,39 +135,68 @@ class Engine:
                  policy: str = "calibrated", crop_budget: int = 10 ** 9,
                  moe_impl: str = "dense", compute_dtype: str = "float32",
                  temperature: float = 0.0, seed: int = 0,
-                 kv_quant: bool = False):
+                 kv_quant: bool = False, decode_mode: str = "scan",
+                 chunk: int = 16):
+        if policy not in ("calibrated", "crop", "full"):
+            raise ValueError(f"unknown policy {policy!r}")
+        if decode_mode not in ("scan", "host"):
+            raise ValueError(f"unknown decode_mode {decode_mode!r}")
+        if policy == "crop" and crop_budget < 1:
+            raise ValueError("crop policy needs crop_budget >= 1 "
+                             "(0 would disable the only exit trigger)")
         self.cfg = cfg
         self.params = params
         self.ctrl = ctrl
         self.probe_params = probe_params
         self.lanes = lanes
         self.policy = policy
-        self.crop_budget = crop_budget
         self.moe_impl = moe_impl
         self.compute_dtype = compute_dtype
         self.key = jax.random.PRNGKey(seed)
         self.temperature = temperature
         self.kv_quant = kv_quant
-        self._step_fn = make_serve_step(cfg, ctrl, moe_impl=moe_impl,
-                                        compute_dtype=compute_dtype,
-                                        temperature=temperature)
+        self.decode_mode = decode_mode
+        self.chunk = max(int(chunk), 1)
+        # Policies compile down to (λ, crop) on device: `full` disables both
+        # triggers, `crop` disables the probe, `calibrated` keeps both (the
+        # default crop_budget of 1e9 is inert).
+        eff_crop = crop_budget if policy in ("calibrated", "crop") else 0
+        self.wave_ctrl = dataclasses.replace(
+            ctrl, think_end_id=THINK_END, eos_id=EOS, ans_base=ANS_BASE,
+            num_answers=NUM_ANSWERS, crop_budget=eff_crop)
+        kw = dict(moe_impl=moe_impl, compute_dtype=compute_dtype,
+                  temperature=temperature)
+        self._step_fn = make_serve_step(cfg, self.wave_ctrl, **kw)
+        self._steps_fn = make_serve_steps(cfg, self.wave_ctrl, **kw)
+        # seed the controller with the prefill-argmax token (it was never
+        # checked for THINK_END/answer/EOS before this step existed)
+        self._seed_fn = jax.jit(
+            lambda pp, state, tok, hid, pos: ctrl_mod.update(
+                self.wave_ctrl, pp, state, tok, hid, pos))
 
     def _prefill(self, prompts: np.ndarray, cache_len: int):
         logits, hidden, cache = model_mod.prefill(
             self.cfg, self.params, jnp.asarray(prompts),
             cache_len=cache_len, moe_impl=self.moe_impl,
             compute_dtype=self.compute_dtype)
-        if self.kv_quant and "k" in cache:
-            from repro.models.cache import quantize_kv
-            cache["k"], cache["k_scale"] = quantize_kv(cache["k"])
-            cache["v"], cache["v_scale"] = quantize_kv(cache["v"])
+        if self.kv_quant:
+            cache = quantize_prefill_cache(cache)
         return logits, hidden, cache
+
+    def _wave_probe_params(self) -> ctrl_mod.ProbeParams:
+        if self.policy != "calibrated":
+            # λ=+inf: the probe never triggers; crop/full policies control exit
+            return self.probe_params._replace(
+                lam=jnp.asarray(jnp.inf, jnp.float32))
+        return self.probe_params
 
     def run(self, requests: Sequence[ServeRequest]) -> List[ServeResult]:
         results: List[ServeResult] = []
         for i in range(0, len(requests), self.lanes):
             results.extend(self._run_wave(requests[i : i + self.lanes]))
         return results
+
+    # ------------------------------------------------------------------ wave
 
     def _run_wave(self, reqs: Sequence[ServeRequest]) -> List[ServeResult]:
         b = len(reqs)
@@ -120,73 +205,149 @@ class Engine:
         prompts = np.zeros((b, plen), np.int32)
         for i, r in enumerate(reqs):
             prompts[i, plen - len(r.prompt):] = r.prompt     # left-pad
-        logits, hidden, dcache = self._prefill(prompts, plen + max_new + 8)
+        # +chunk headroom: the scanned driver always runs full-size chunks
+        # (one compiled graph) and may overshoot the wave budget by up to
+        # chunk-1 masked steps; same cache_len in host mode keeps shapes —
+        # and therefore float math — identical between the two drivers
+        logits, hidden, dcache = self._prefill(
+            prompts, plen + max_new + self.chunk + 8)
 
         state = ctrl_mod.init_state(b, self.cfg.d_model, self.ctrl.window)
-        if self.policy != "calibrated":
-            # λ=+inf: the probe never triggers; crop/full policies control exit
-            pp = self.probe_params._replace(lam=jnp.asarray(jnp.inf, jnp.float32))
+        # per-lane emission budget: lanes sharing a wave stop at their own
+        # request's max_new, not the wave-wide maximum
+        state = state._replace(max_tokens=jnp.asarray(
+            [r.max_new for r in reqs], jnp.int32))
+        pp = self._wave_probe_params()
+
+        # first generated token: greedy off the prefill logits, routed through
+        # the controller with the hidden state that produced it
+        tok0 = jnp.argmax(logits, -1)[:, 0].astype(jnp.int32)     # (B,)
+        state = self._seed_fn(pp, state, tok0, hidden[:, -1], dcache["pos"] - 1)
+
+        self.key, wave_key = jax.random.split(self.key)
+        steps_total = max_new - 1
+        if self.decode_mode == "scan":
+            gen, traces, state = self._drive_scan(
+                pp, dcache, state, tok0, wave_key, steps_total)
+            book = self._book_from_state(state)
         else:
-            pp = self.probe_params
+            gen, traces, state, book = self._drive_host(
+                pp, dcache, state, tok0, wave_key, steps_total)
 
-        tokens = np.asarray(jnp.argmax(logits, -1))[:, 0].astype(np.int32)  # (B,)
-        gen: List[List[int]] = [[int(tokens[i])] for i in range(b)]
-        think_done = np.zeros(b, bool)
-        lane_done = np.zeros(b, bool)
-        think_tokens = np.ones(b, np.int64)
-        answers: List[Optional[int]] = [None] * b
-        probe_traces: List[List[float]] = [[] for _ in range(b)]
-        exited_early = np.zeros(b, bool)
+        out = []
+        for i, r in enumerate(reqs):
+            exited = bool(book["forced_exit"][i])
+            ans = int(book["answer"][i])
+            out.append(ServeResult(
+                uid=r.uid,
+                tokens=np.asarray(gen[i], np.int32),
+                think_tokens=int(book["think_tokens"][i]),
+                exited_early=exited,
+                exit_step=int(book["exit_step"][i]) if exited else -1,
+                answer=ans if ans >= 0 else None,
+                probe_trace=np.asarray(traces[i], np.float32),
+                exit_pos=int(book["exit_pos"][i]),
+            ))
+        return out
 
-        cur = jnp.asarray(tokens)
-        for t in range(max_new - 1):
-            self.key, sk = jax.random.split(self.key)
+    @staticmethod
+    def _book_from_state(state: ctrl_mod.ControllerState) -> Dict[str, np.ndarray]:
+        keys = ("forced_exit", "exit_step", "think_tokens", "answer", "exit_pos")
+        vals = jax.device_get([getattr(state, k) for k in keys])
+        return dict(zip(keys, vals))
+
+    # ------------------------------------------------- scanned chunk driver
+
+    def _drive_scan(self, pp, dcache, state, tok0, wave_key, steps_total):
+        b = tok0.shape[0]
+        tok0_np, sm0 = jax.device_get((tok0, state.smoothed))
+        gen: List[List[int]] = [[int(tok0_np[i])] for i in range(b)]
+        traces: List[List[float]] = [[float(sm0[i])] for i in range(b)]
+        # always full-size chunks: a single compiled (B, K) scan graph per
+        # wave shape — the final chunk overshoots past steps_total with every
+        # lane already over budget, so the overshoot is emit-masked noise
+        cur, t = tok0, 0
+        while t < steps_total:
+            k = self.chunk
+            cur, dcache, state, toks, sm, emit = self._steps_fn(
+                self.params, pp, dcache, state, cur, wave_key,
+                jnp.int32(t), num_steps=k)
+            # one device→host sync per chunk
+            toks_np, sm_np, emit_np, all_done = jax.device_get(
+                (toks, sm, emit, state.lane_done.all()))
+            for s in range(k):
+                em = emit_np[s]
+                for i in range(b):
+                    if em[i]:
+                        gen[i].append(int(toks_np[s, i]))
+                        traces[i].append(float(sm_np[s, i]))
+            t += k
+            if all_done:
+                break
+        return gen, traces, state
+
+    # ------------------------------------------------ host-loop reference
+
+    def _drive_host(self, pp, dcache, state, tok0, wave_key, steps_total):
+        """Per-token loop: forcing and lane bookkeeping in Python, one jitted
+        step + device→host sync per token. Reference for the scanned driver."""
+        b = tok0.shape[0]
+        tok0_np, sm0, maxt = jax.device_get(
+            (tok0, state.smoothed, state.max_tokens))
+        gen: List[List[int]] = [[int(tok0_np[i])] for i in range(b)]
+        traces: List[List[float]] = [[float(sm0[i])] for i in range(b)]
+        think_done = tok0_np == THINK_END
+        lane_done = np.asarray([len(gen[i]) >= maxt[i] for i in range(b)])
+        think_tokens = np.where(think_done, 0, 1).astype(np.int64)
+        answers = np.full(b, -1, np.int64)
+        forced_exit = np.zeros(b, bool)
+        exit_step = np.full(b, -1, np.int64)
+        crop = self.wave_ctrl.crop_budget
+
+        cur = tok0
+        # one device→host sync per token: done/steps for the NEXT iteration's
+        # forcing decision ride along with this token's (nxt, smoothed) fetch
+        st_done, st_steps = jax.device_get((state.done, state.steps))
+        for t in range(steps_total):
+            if lane_done.all():
+                break
             forced = np.full(b, -1, np.int32)
-            # early exit (calibrated or crop): force THINK_END next
-            st_done = np.asarray(state.done)
             for i in range(b):
                 if lane_done[i] or think_done[i]:
                     continue
-                crop_hit = self.policy == "crop" and think_tokens[i] >= self.crop_budget
-                probe_hit = self.policy == "calibrated" and st_done[i]
-                if crop_hit or probe_hit:
+                crop_hit = crop > 0 and think_tokens[i] >= crop
+                if crop_hit or st_done[i]:
                     forced[i] = THINK_END
-                    exited_early[i] = True
+                    if not forced_exit[i]:
+                        forced_exit[i] = True
+                        exit_step[i] = st_steps[i]
             nxt, dcache, state = self._step_fn(
-                self.params, pp, dcache, state, cur[:, None], sk, jnp.asarray(forced))
-            nxt_np = np.asarray(nxt)
-            sm = np.asarray(state.smoothed)
+                self.params, pp, dcache, state, cur[:, None],
+                decode_key(wave_key, t), jnp.asarray(forced))
+            nxt_np, sm, st_done, st_steps = jax.device_get(
+                (nxt, state.smoothed, state.done, state.steps))
             for i in range(b):
                 if lane_done[i]:
                     continue
                 tok = int(nxt_np[i])
                 gen[i].append(tok)
-                probe_traces[i].append(float(sm[i]))
+                traces[i].append(float(sm[i]))
                 if not think_done[i]:
                     if tok == THINK_END:
                         think_done[i] = True
                     else:
                         think_tokens[i] += 1
                 else:
-                    if ANS_BASE <= tok < ANS_BASE + NUM_ANSWERS and answers[i] is None:
+                    if ANS_BASE <= tok < ANS_BASE + NUM_ANSWERS and answers[i] < 0:
                         answers[i] = tok - ANS_BASE
-                    if tok == EOS or answers[i] is not None:
+                    if tok == EOS or answers[i] >= 0:
                         lane_done[i] = True
+                if len(gen[i]) >= maxt[i]:       # per-request max_new
+                    lane_done[i] = True
             cur = nxt
-            if lane_done.all():
-                break
-
-        st = state
-        exit_steps = np.asarray(st.exit_pos)
-        out = []
-        for i, r in enumerate(reqs):
-            out.append(ServeResult(
-                uid=r.uid,
-                tokens=np.asarray(gen[i], np.int32),
-                think_tokens=int(think_tokens[i]),
-                exited_early=bool(exited_early[i]),
-                exit_step=int(np.asarray(st.steps)[i]) if exited_early[i] else -1,
-                answer=answers[i],
-                probe_trace=np.asarray(probe_traces[i], np.float32),
-            ))
-        return out
+        book = {
+            "forced_exit": forced_exit, "exit_step": exit_step,
+            "think_tokens": think_tokens, "answer": answers,
+            "exit_pos": np.asarray(jax.device_get(state.exit_pos)),
+        }
+        return gen, traces, state, book

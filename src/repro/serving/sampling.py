@@ -6,6 +6,16 @@ import jax
 import jax.numpy as jnp
 
 
+def decode_key(wave_key: jax.Array, step) -> jax.Array:
+    """Per-token sampling key for decode step ``step`` of a wave.
+
+    ``fold_in`` (rather than a host-side ``split`` chain) makes the key stream
+    a pure function of (wave_key, step), so a ``lax.scan`` over steps and a
+    per-token host loop draw bit-identical keys. ``step`` may be traced.
+    """
+    return jax.random.fold_in(wave_key, step)
+
+
 def sample_tokens(key, logits: jax.Array, temperature: float = 0.0) -> jax.Array:
     """logits: (B, 1, V) (or (B, 1, K, V) for codebook models) -> next ids."""
     if temperature <= 0.0:

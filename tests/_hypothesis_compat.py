@@ -1,0 +1,88 @@
+"""Property-test compatibility shim.
+
+When ``hypothesis`` is installed, re-export the real ``given`` / ``settings``
+/ ``strategies``.  When it is absent (minimal CI images, the CPU smoke
+container), degrade gracefully: ``@given`` runs the test body over a small,
+deterministic set of examples drawn from lightweight stand-in strategies, and
+``@settings`` becomes a no-op.  The suite then still collects and exercises
+every property test as fixed-example tests instead of erroring at import.
+"""
+
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import inspect
+    import zlib
+
+    import numpy as np
+
+    FIXED_EXAMPLES = 8
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng):
+            return self._draw(rng)
+
+        def map(self, fn):
+            return _Strategy(lambda rng: fn(self._draw(rng)))
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def floats(min_value, max_value, **_kw):
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value)))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def draw(rng):
+                n = int(rng.integers(min_size, max_size + 1))
+                return [elements.draw(rng) for _ in range(n)]
+
+            return _Strategy(draw)
+
+    st = _Strategies()
+
+    def settings(*_a, **_kw):
+        def deco(fn):
+            return fn
+
+        return deco
+
+    def given(*strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                # seed from the test name (not hash(): randomized per process)
+                rng = np.random.default_rng(
+                    zlib.crc32(fn.__qualname__.encode()))
+                for _ in range(FIXED_EXAMPLES):
+                    drawn = [s.draw(rng) for s in strategies]
+                    fn(*args, *drawn, **kwargs)
+
+            # strip the drawn params from the visible signature so pytest
+            # only tries to resolve the (leading) fixture params
+            sig = inspect.signature(fn)
+            keep = list(sig.parameters.values())[: -len(strategies) or None]
+            wrapper.__signature__ = sig.replace(parameters=keep)
+            return wrapper
+
+        return deco

@@ -89,6 +89,114 @@ def test_exit_freezes_lane(key):
         assert int(state.exit_pos[i]) == done_at[i]
 
 
+def _phase_ctrl(**kw):
+    from repro.data.traces import ANS_BASE, EOS, NUM_ANSWERS, THINK_END
+    base = dict(boundary_ids=BOUNDARY_IDS, marker_ids=MARKER_IDS, window=W,
+                min_steps=1, probe_dim=K, think_end_id=THINK_END, eos_id=EOS,
+                ans_base=ANS_BASE, num_answers=NUM_ANSWERS)
+    base.update(kw)
+    return C.ControllerConfig(**base)
+
+
+def _feed(ctrl, pp, tokens, state=None):
+    rng = np.random.default_rng(9)
+    b = 1
+    if state is None:
+        state = C.init_state(b, D, ctrl.window)
+    for t, tok in enumerate(tokens):
+        hid = jnp.asarray(rng.normal(size=(b, D)).astype(np.float32))
+        state = C.update(ctrl, pp, state, jnp.asarray([tok], jnp.int32),
+                         hid, jnp.full((b,), t))
+    return state
+
+
+def test_phase_tracking_think_answer_eos(key):
+    from repro.data.traces import ANS_BASE, EOS, NL2, THINK_END, WAIT
+    ctrl = _phase_ctrl()
+    pp = _probe_params(key, lam=2.0)       # probe never triggers
+    toks = [WAIT, 70, NL2, 71, THINK_END, ANS_BASE + 4, EOS]
+    state = _feed(ctrl, pp, toks)
+    assert bool(state.think_done[0])
+    assert bool(state.lane_done[0])
+    # WAIT, 70, NL2, 71 are thinking tokens; THINK_END/answer/EOS are not
+    assert int(state.think_tokens[0]) == 4
+    assert int(state.answer[0]) == 4
+    assert not bool(state.forced_exit[0])
+
+
+def test_eos_without_answer(key):
+    from repro.data.traces import EOS, THINK_END
+    ctrl = _phase_ctrl()
+    pp = _probe_params(key, lam=2.0)
+    state = _feed(ctrl, pp, [70, 71, THINK_END, EOS])
+    assert bool(state.lane_done[0])
+    assert int(state.answer[0]) == -1
+    assert int(state.think_tokens[0]) == 2
+
+
+def test_first_token_think_end_counts_zero(key):
+    """A THINK_END as the very first generated token ends thinking with a
+    zero thinking-token count (the old engine counted it as 1 and kept the
+    lane in the thinking phase)."""
+    from repro.data.traces import ANS_BASE, THINK_END
+    ctrl = _phase_ctrl()
+    pp = _probe_params(key, lam=2.0)
+    state = _feed(ctrl, pp, [THINK_END, ANS_BASE + 1])
+    assert bool(state.think_done[0])
+    assert int(state.think_tokens[0]) == 0
+    assert int(state.answer[0]) == 1
+
+
+def test_forced_next_crop_trigger_and_exit_step(key):
+    from repro.data.traces import THINK_END
+    ctrl = _phase_ctrl(crop_budget=3)
+    pp = _probe_params(key, lam=2.0)
+    state = _feed(ctrl, pp, [70, 71])
+    forced, state = C.forced_next(ctrl, state)
+    assert int(forced[0]) == -1            # 2 < 3: no force yet
+    state = _feed(ctrl, pp, [72], state)
+    forced, state = C.forced_next(ctrl, state)
+    assert int(forced[0]) == THINK_END
+    assert bool(state.forced_exit[0])
+    assert int(state.exit_step[0]) == int(state.steps[0])
+    # consume the forced THINK_END: the trigger must not re-fire
+    state = _feed(ctrl, pp, [THINK_END], state)
+    forced, state = C.forced_next(ctrl, state)
+    assert int(forced[0]) == -1
+
+
+def test_steps_freeze_after_forced_exit(key):
+    """Regression: boundary/marker tokens decoded after the exit trigger must
+    not advance ``steps`` past the recorded ``exit_step`` (the old engine
+    reported end-of-wave ``steps`` as the exit step)."""
+    from repro.data.traces import NL2, THINK_END, WAIT
+    ctrl = _phase_ctrl(crop_budget=4)
+    pp = _probe_params(key, lam=2.0)
+    state = _feed(ctrl, pp, [WAIT, 70, NL2, 71])      # one closed step
+    assert int(state.steps[0]) == 1
+    forced, state = C.forced_next(ctrl, state)        # 4 >= 4: crop fires
+    assert int(forced[0]) == THINK_END
+    assert int(state.exit_step[0]) == 1
+    # the lane keeps decoding: THINK_END then marker/boundary garbage
+    state = _feed(ctrl, pp, [THINK_END, WAIT, 72, NL2, WAIT, NL2], state)
+    assert int(state.steps[0]) == 1                   # frozen at the trigger
+    assert int(state.exit_step[0]) == 1
+
+
+def test_probe_trigger_records_exit_step(key):
+    """Calibrated exits record the step count at the trigger, first-write-wins
+    against the later forced-exit bookkeeping."""
+    from repro.data.traces import NL2, WAIT
+    ctrl = _phase_ctrl()
+    pp = _probe_params(key, lam=0.0)                  # first close triggers
+    state = _feed(ctrl, pp, [WAIT, 70, NL2])
+    assert bool(state.done[0])
+    assert int(state.exit_step[0]) == 1
+    forced, state = C.forced_next(ctrl, state)
+    assert int(forced[0]) > 0
+    assert int(state.exit_step[0]) == 1
+
+
 def test_min_steps_respected(key):
     ctrl = C.ControllerConfig(BOUNDARY_IDS, MARKER_IDS, window=W,
                               min_steps=4, probe_dim=K)

@@ -5,8 +5,7 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.calibration import (
     binom_cdf,
@@ -63,6 +62,24 @@ def test_fixed_sequence_stops_at_first_failure():
 def test_no_valid_lambda_returns_none():
     res = fixed_sequence_test([0.9, 0.5], lambda l: np.ones(50), 0.1, 0.1)
     assert res.lam is None
+
+
+def test_empty_lambda_grid_is_well_formed():
+    """Regression: an empty Λ used to raise NameError (`n` unbound)."""
+    called = []
+    res = fixed_sequence_test([], lambda l: called.append(l) or np.ones(1),
+                              delta=0.1, epsilon=0.1)
+    assert called == []
+    assert res.lam is None
+    assert res.lam_grid == [] and res.p_values == [] and res.emp_risks == []
+    assert res.n == 0
+    assert res.delta == 0.1 and res.epsilon == 0.1
+
+
+def test_calibrate_stopping_rule_empty_grid():
+    res = calibrate_stopping_rule([np.ones(5)], lambda i, t: 0.0,
+                                  delta=0.1, epsilon=0.1, lam_grid=[])
+    assert res.lam is None and res.n == 0
 
 
 def test_calibration_risk_guarantee_monte_carlo():

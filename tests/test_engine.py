@@ -1,4 +1,7 @@
-"""Serving engine policies: crop budget, calibrated exit, lane bookkeeping."""
+"""Serving engine policies: crop budget, calibrated exit, lane bookkeeping,
+and scanned-vs-host-loop decode parity."""
+
+import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -7,9 +10,12 @@ import pytest
 
 from repro.configs import get_reduced
 from repro.core import controller as C
-from repro.data.traces import BOS, BOUNDARY_IDS, MARKER_IDS
+from repro.data.traces import (ANS_BASE, BOS, EOS, NUM_ANSWERS, NL2,
+                               THINK_END, WAIT, BOUNDARY_IDS, MARKER_IDS)
 from repro.models import model as M
 from repro.serving import Engine, ServeRequest
+
+CONTENT = 100   # an inert content token for scripted traces
 
 
 @pytest.fixture(scope="module")
@@ -25,6 +31,11 @@ def setup():
 def _reqs(n, max_new=48):
     return [ServeRequest(uid=i, prompt=np.array([BOS, 100 + i], np.int32),
                          max_new=max_new) for i in range(n)]
+
+
+def _result_tuple(r):
+    return (r.tokens.tolist(), r.think_tokens, r.exited_early, r.exit_step,
+            r.answer, r.probe_trace.tolist(), r.exit_pos)
 
 
 def test_crop_budget_respected(setup):
@@ -74,6 +85,8 @@ def test_results_contain_probe_trace(setup):
     for r in res:
         assert r.probe_trace.ndim == 1
         assert len(r.probe_trace) <= 16
+        # every emitted token has a smoothed score alongside it
+        assert len(r.probe_trace) == len(r.tokens)
 
 
 def test_engine_int8_kv(setup):
@@ -84,3 +97,200 @@ def test_engine_int8_kv(setup):
     assert len(res) == 2
     for r in res:
         assert r.think_tokens <= 8
+
+
+# ---------------------------------------------------------------------------
+# scanned engine vs host-loop reference (real model)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy,kw", [
+    ("crop", {"crop_budget": 10}),
+    ("full", {}),
+    ("calibrated", {}),
+])
+def test_scan_matches_host_loop(setup, policy, kw):
+    """The chunked-scan driver must be token-for-token (and trace-for-trace,
+    bitwise at float32 greedy) identical to the per-token host loop."""
+    cfg, params, ctrl, pp = setup
+    if policy == "calibrated":
+        pp = pp._replace(lam=jnp.float32(-1.0))
+    res = {}
+    for mode in ("scan", "host"):
+        eng = Engine(cfg, params, ctrl=ctrl, probe_params=pp, lanes=4,
+                     policy=policy, decode_mode=mode, chunk=8, seed=3, **kw)
+        res[mode] = eng.run(_reqs(4, max_new=40))
+    for a, b in zip(res["scan"], res["host"]):
+        assert _result_tuple(a) == _result_tuple(b)
+
+
+def test_scan_matches_host_loop_int8_kv(setup):
+    cfg, params, ctrl, pp = setup
+    res = {}
+    for mode in ("scan", "host"):
+        eng = Engine(cfg, params, ctrl=ctrl, probe_params=pp, lanes=2,
+                     policy="crop", crop_budget=6, kv_quant=True,
+                     decode_mode=mode, chunk=5, seed=1)
+        res[mode] = eng.run(_reqs(2, max_new=20))
+    for a, b in zip(res["scan"], res["host"]):
+        assert _result_tuple(a) == _result_tuple(b)
+
+
+# ---------------------------------------------------------------------------
+# scripted-model harness: exact bookkeeping on a fully controlled wave
+# ---------------------------------------------------------------------------
+
+def _install_scripted_model(monkeypatch, script: np.ndarray, d_model: int,
+                            vocab: int = 256):
+    """Replace prefill/decode_step with a deterministic script player.
+
+    ``script[i, t]`` is the token lane i emits at generation step t (step 0 is
+    the prefill argmax). Hidden states are a fixed pseudo-random function of
+    the absolute position, shared by both decode drivers.
+    """
+    script_j = jnp.asarray(script, jnp.int32)
+    hid_tab = jax.random.normal(jax.random.PRNGKey(42), (4096, d_model),
+                                jnp.float32)
+
+    def fake_prefill(cfg, params, tokens, ctx=None, **kw):
+        b, s = tokens.shape
+        logits = jax.nn.one_hot(script_j[:, 0], vocab)[:, None, :]
+        hidden = jnp.broadcast_to(hid_tab[:s][None], (b, s, d_model))
+        cache = {"pos": jnp.full((b,), s, jnp.int32),
+                 "plen": jnp.full((b,), s, jnp.int32)}
+        return logits, hidden, cache
+
+    def fake_decode(cfg, params, dcache, tokens, **kw):
+        pos = dcache["pos"]                                   # (B,)
+        b = pos.shape[0]
+        step = jnp.clip(pos - dcache["plen"] + 1, 0, script_j.shape[1] - 1)
+        tok = script_j[jnp.arange(b), step]
+        logits = jax.nn.one_hot(tok, vocab)[:, None, :]
+        hidden = hid_tab[pos][:, None, :]
+        new = dict(dcache)
+        new["pos"] = pos + 1
+        return logits, hidden, new
+
+    monkeypatch.setattr(M, "prefill", fake_prefill)
+    monkeypatch.setattr(M, "decode_step", fake_decode)
+
+
+ANS7, ANS3, ANS5, ANS9 = (ANS_BASE + k for k in (7, 3, 5, 9))
+
+
+def _mixed_wave_script(max_new=16):
+    """Five lanes exercising every exit path at once (calibrated λ=-1 +
+    crop_budget=6 combined):
+
+    lane 0: probe early-exit — WAIT c c NL2 closes a step at token 3, probe
+            fires, THINK_END forced at token 4 *overriding the scripted
+            WAIT/NL2 that would keep closing steps* (exit_step regression);
+    lane 1: crop-hit — no step ever closes, 6 thinking tokens then forced;
+    lane 2: natural THINK_END at token 3 (no step closes first);
+    lane 3: first generated token is THINK_END (prefill-argmax path);
+    lane 4: EOS directly after THINK_END — finishes with no answer.
+    """
+    c, W = CONTENT, WAIT
+    rows = [
+        [W, c, c, NL2, W, W, NL2, ANS7] + [c] * (max_new - 8),
+        [c] * 6 + [c, ANS3] + [c] * (max_new - 8),
+        [c, c, c, THINK_END, ANS5, EOS] + [c] * (max_new - 6),
+        [THINK_END, ANS9, EOS] + [c] * (max_new - 3),
+        [c, THINK_END, EOS] + [c] * (max_new - 3),
+    ]
+    return np.asarray(rows, np.int32)
+
+
+EXPECT = {
+    #  lane: (tokens, think_tokens, exited_early, exit_step, answer)
+    0: ([WAIT, CONTENT, CONTENT, NL2, THINK_END, WAIT, NL2, ANS7],
+        4, True, 1, 7),
+    1: ([CONTENT] * 6 + [THINK_END, ANS3], 6, True, 0, 3),
+    2: ([CONTENT, CONTENT, CONTENT, THINK_END, ANS5], 3, False, -1, 5),
+    3: ([THINK_END, ANS9], 0, False, -1, 9),
+    4: ([CONTENT, THINK_END, EOS], 1, False, -1, None),
+}
+
+
+@pytest.mark.parametrize("mode", ["scan", "host"])
+@pytest.mark.parametrize("chunk", [1, 4, 16])
+def test_mixed_wave_exact_bookkeeping(monkeypatch, mode, chunk):
+    cfg = get_reduced("qwen3-8b")
+    script = _mixed_wave_script()
+    _install_scripted_model(monkeypatch, script, cfg.d_model)
+    ctrl = C.ControllerConfig(BOUNDARY_IDS, MARKER_IDS, window=10,
+                              min_steps=1, probe_dim=16)
+    pp = C.init_probe_params(cfg.d_model, 16)._replace(lam=jnp.float32(-1.0))
+    eng = Engine(cfg, None, ctrl=ctrl, probe_params=pp, lanes=5,
+                 policy="calibrated", crop_budget=6, decode_mode=mode,
+                 chunk=chunk)
+    res = eng.run(_reqs(5, max_new=16))
+    for i, r in enumerate(res):
+        toks, think, early, estep, ans = EXPECT[i]
+        assert r.tokens.tolist() == toks, f"lane {i}"
+        assert r.think_tokens == think, f"lane {i}"
+        assert r.exited_early == early, f"lane {i}"
+        assert r.exit_step == estep, f"lane {i}"
+        assert r.answer == ans, f"lane {i}"
+        assert len(r.probe_trace) == len(r.tokens)
+    # lane 0 regression: the scripted WAIT/NL2 decoded after the forced
+    # THINK_END must not advance the reported step count past the trigger
+    assert res[0].exit_step == 1
+    # lane 0 probe trigger position: NL2 is the 4th generated token, emitted
+    # at absolute position plen - 1 + 3 (prompt length 2)
+    assert res[0].exit_pos == 2 - 1 + 3
+
+
+@pytest.mark.parametrize("chunk", [3, 16])
+def test_mixed_wave_scan_equals_host(monkeypatch, chunk):
+    cfg = get_reduced("qwen3-8b")
+    script = _mixed_wave_script()
+    _install_scripted_model(monkeypatch, script, cfg.d_model)
+    ctrl = C.ControllerConfig(BOUNDARY_IDS, MARKER_IDS, window=10,
+                              min_steps=1, probe_dim=16)
+    pp = C.init_probe_params(cfg.d_model, 16)._replace(lam=jnp.float32(-1.0))
+    res = {}
+    for mode in ("scan", "host"):
+        eng = Engine(cfg, None, ctrl=ctrl, probe_params=pp, lanes=5,
+                     policy="calibrated", crop_budget=6, decode_mode=mode,
+                     chunk=chunk)
+        res[mode] = eng.run(_reqs(5, max_new=16))
+    for a, b in zip(res["scan"], res["host"]):
+        assert _result_tuple(a) == _result_tuple(b)
+
+
+@pytest.mark.parametrize("mode", ["scan", "host"])
+def test_per_request_max_new_respected(monkeypatch, mode):
+    """A small request sharing a wave with a large one stops at its own
+    max_new (the old engine decoded every lane to the wave maximum)."""
+    cfg = get_reduced("qwen3-8b")
+    script = np.full((3, 40), CONTENT, np.int32)   # never ends naturally
+    _install_scripted_model(monkeypatch, script, cfg.d_model)
+    ctrl = C.ControllerConfig(BOUNDARY_IDS, MARKER_IDS, window=10,
+                              min_steps=1, probe_dim=16)
+    pp = C.init_probe_params(cfg.d_model, 16)
+    eng = Engine(cfg, None, ctrl=ctrl, probe_params=pp, lanes=3,
+                 policy="full", decode_mode=mode, chunk=8)
+    reqs = [ServeRequest(uid=i, prompt=np.array([BOS, 100 + i], np.int32),
+                         max_new=m) for i, m in enumerate((1, 4, 24))]
+    res = eng.run(reqs)
+    assert [len(r.tokens) for r in res] == [1, 4, 24]
+    assert [r.think_tokens for r in res] == [1, 4, 24]
+    assert [len(r.probe_trace) for r in res] == [1, 4, 24]
+
+
+def test_crop_budget_exact_token_count(monkeypatch):
+    """crop_budget=N decodes exactly N thinking tokens before THINK_END."""
+    cfg = get_reduced("qwen3-8b")
+    script = np.full((2, 32), CONTENT, np.int32)   # never ends naturally
+    script[:, 20:] = ANS_BASE + 1
+    _install_scripted_model(monkeypatch, script, cfg.d_model)
+    ctrl = C.ControllerConfig(BOUNDARY_IDS, MARKER_IDS, window=10,
+                              min_steps=1, probe_dim=16)
+    pp = C.init_probe_params(cfg.d_model, 16)
+    for budget in (1, 5):
+        eng = Engine(cfg, None, ctrl=ctrl, probe_params=pp, lanes=2,
+                     policy="crop", crop_budget=budget)
+        for r in eng.run(_reqs(2, max_new=32)):
+            assert r.think_tokens == budget
+            assert r.exited_early
+            assert r.tokens.tolist()[budget] == THINK_END

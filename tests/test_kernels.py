@@ -110,3 +110,72 @@ def test_decode_attention_sliding_window(window, key):
     kc2 = kc.at[:, : max(0, 200 - window - 5)].add(7.0)
     got2 = ops.decode_attention(q, kc2, vc, lengths, window, use_kernel=True)
     np.testing.assert_allclose(np.asarray(got[1]), np.asarray(got2[1]), atol=1e-5)
+
+
+def test_probe_score_backend_autodetect(key):
+    """interpret=None resolves from the backend (compiled on TPU, interpreted
+    elsewhere), and the auto path matches controller.score_step head
+    probabilities for both probe compositions."""
+    from repro.core import controller as C
+    from repro.kernels.probe_score import default_interpret, probe_score
+
+    # off-TPU (this CI host) the kernel must interpret; on TPU it compiles
+    assert default_interpret() == (jax.default_backend() != "tpu")
+
+    d, k, n = 256, 128, 64
+    ks = jax.random.split(key, 5)
+    reps = jax.random.normal(ks[0], (n, d))
+    pp = C.init_probe_params(d, k)._replace(
+        pca_mean=jax.random.normal(ks[1], (d,)) * 0.1,
+        pca_comps=jax.random.normal(ks[2], (d, k)) * d ** -0.5,
+        w1=jax.random.normal(ks[3], (k,)),
+        b1=jnp.float32(0.25),
+        w2=jax.random.normal(ks[4], (k,)),
+        b2=jnp.float32(-0.4),
+    )
+    # default (auto-detected) path — no explicit interpret argument anywhere
+    heads = probe_score(reps, pp.pca_mean, pp.pca_comps,
+                        pp.w1, pp.b1, pp.w2, pp.b2)
+    p1_want = C.score_step(pp._replace(compose=jnp.int32(0)), reps)
+    composed_want = C.score_step(pp._replace(compose=jnp.int32(1)), reps)
+    np.testing.assert_allclose(np.asarray(heads[:, 0]), np.asarray(p1_want),
+                               atol=1e-5)
+    composed_got = heads[:, 0] * (1.0 - heads[:, 1])
+    np.testing.assert_allclose(np.asarray(composed_got),
+                               np.asarray(composed_want), atol=1e-5)
+
+
+def test_decode_step_scan_compatible_with_quantized_cache(key):
+    """decode_step must compose under lax.scan (carry = cache) with and
+    without the int8 KV path, matching sequential per-token calls."""
+    from repro.configs import get_reduced
+    from repro.models import model as M
+    from repro.models.cache import quantize_prefill_cache
+
+    cfg = get_reduced("qwen3-8b")
+    params = M.init_params(cfg, key)
+    prompts = jnp.asarray(np.array([[1, 100, 101], [1, 102, 103]], np.int32))
+    toks = jnp.asarray(np.array([[5, 7, 9, 11], [6, 8, 10, 12]], np.int32))
+
+    for quant in (False, True):
+        _, _, cache = M.prefill(cfg, params, prompts, cache_len=16,
+                                moe_impl="dense", compute_dtype="float32")
+        if quant:
+            cache = quantize_prefill_cache(cache)
+
+        def step(cache, tok):
+            logits, hidden, cache = M.decode_step(
+                cfg, params, cache, tok[:, None], moe_impl="dense",
+                compute_dtype="float32")
+            return cache, logits[:, 0]
+
+        scan_cache, scan_logits = jax.lax.scan(step, cache, toks.T)
+        seq_cache = cache
+        seq_logits = []
+        for t in range(toks.shape[1]):
+            seq_cache, lg = step(seq_cache, toks[:, t])
+            seq_logits.append(lg)
+        np.testing.assert_array_equal(np.asarray(scan_logits),
+                                      np.asarray(jnp.stack(seq_logits)))
+        np.testing.assert_array_equal(np.asarray(scan_cache["pos"]),
+                                      np.asarray(seq_cache["pos"]))

@@ -3,8 +3,7 @@ reproduction relies on (the generator IS the verifier — it must be coherent)."
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.data.traces import (
     ANS_BASE,
