@@ -6,6 +6,8 @@ kernel bodies. On TPU the same ops.py entry points run the kernels natively.
 
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
@@ -13,6 +15,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ops, ref
+
+BENCH_SERVE_PATH = os.environ.get("BENCH_SERVE_JSON", "BENCH_serve.json")
 
 
 def _time(fn, *args, iters=5):
@@ -52,6 +56,86 @@ def bench_serve_loop(emit, lane_counts=(2, 8, 16), max_new=64, iters=3):
             "tok_s_scan": round(tok_s["scan"], 1),
             "speedup": round(tok_s["scan"] / tok_s["host"], 2),
         })
+
+
+def _mixed_difficulty_requests(n_req: int, short: int, long_: int,
+                               frac_long: float, seed: int = 0):
+    """Bimodal think lengths via per-request decode budgets (policy='full'
+    decodes exactly max_new tokens): the heterogeneous-difficulty regime
+    thought calibration targets, where wave scheduling stalls every lane on
+    the slowest wave-mate."""
+    from repro.data.traces import BOS
+    from repro.serving import ServeRequest
+
+    rng = np.random.RandomState(seed)
+    n_long = max(int(round(n_req * frac_long)), 1)
+    budgets = np.array([long_] * n_long + [short] * (n_req - n_long))
+    rng.shuffle(budgets)
+    return [ServeRequest(uid=i, prompt=np.array([BOS, 40 + i % 64], np.int32),
+                         max_new=int(m)) for i, m in enumerate(budgets)]
+
+
+def bench_serve_continuous(emit, *, lanes=8, n_req=24, short=8, long_=192,
+                           frac_long=0.25, chunk=16, iters=3,
+                           smoke=False, out_path=BENCH_SERVE_PATH):
+    """Wave vs continuous scheduling tokens/sec on a mixed-difficulty stream.
+
+    Each mode emits the SAME per-request tokens (greedy/float32, parity
+    enforced by tests/test_scheduler.py); the delta is pure scheduling: wave
+    lanes idle until the slowest wave-mate finishes, continuous lanes refill
+    the moment they free.  Appends an entry to ``BENCH_serve.json`` so the
+    serving-perf trajectory is tracked across PRs.  ``smoke=True`` shrinks to
+    a 2-chunk CI canary that still exercises admit/retire/refill.
+    """
+    from benchmarks.common import serve_fixture
+    from repro.serving import Engine
+
+    if smoke:
+        lanes, n_req, short, long_, chunk, iters = 2, 4, 4, 28, 16, 1
+    cfg, params, ctrl, pp, _ = serve_fixture(lanes, max_new=long_)
+    reqs = _mixed_difficulty_requests(n_req, short, long_, frac_long)
+
+    tok_s, stats, emitted_by = {}, {}, {}
+    for mode in ("wave", "continuous"):
+        eng = Engine(cfg, params, ctrl=ctrl, probe_params=pp, lanes=lanes,
+                     policy="full", scheduler=mode, chunk=chunk)
+        res = eng.run(reqs)                    # compile + warm up
+        # the untrained fixture model may end a request naturally (THINK_END
+        # then answer/EOS) before max_new — count what was actually emitted
+        emitted_by[mode] = emitted = sum(len(r.tokens) for r in res)
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            eng.run(reqs)
+        dt = (time.perf_counter() - t0) / iters
+        tok_s[mode] = emitted / dt
+        stats[mode] = dict(eng.last_stats) if mode == "continuous" else {}
+    # schedulers must agree on WHAT was decoded; only the pace may differ
+    assert emitted_by["wave"] == emitted_by["continuous"], emitted_by
+
+    entry = {
+        "case": f"serve_continuous_lanes{lanes}_req{n_req}"
+                + ("_smoke" if smoke else ""),
+        "lanes": lanes, "requests": n_req, "short": short, "long": long_,
+        "total_tokens": emitted_by["wave"],
+        "tok_s_wave": round(tok_s["wave"], 1),
+        "tok_s_continuous": round(tok_s["continuous"], 1),
+        "speedup": round(tok_s["continuous"] / tok_s["wave"], 2),
+        "continuous_steps": stats["continuous"].get("steps"),
+        "continuous_chunks": stats["continuous"].get("chunks"),
+    }
+    emit("serve", entry["case"], {k: v for k, v in entry.items()
+                                  if k != "case"})
+    history = []
+    if os.path.exists(out_path):
+        try:
+            with open(out_path) as f:
+                history = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            history = []
+    history.append(entry)
+    with open(out_path, "w") as f:
+        json.dump(history, f, indent=2)
+    return entry
 
 
 def run(pipe, emit):
@@ -107,3 +191,5 @@ def run(pipe, emit):
 
     # serving decode loop: host-bound vs device-scanned
     bench_serve_loop(emit)
+    # (wave-vs-continuous scheduling lives in the separate "serve" bench
+    # target so --only kernels,serve runs it exactly once, with --smoke)

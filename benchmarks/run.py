@@ -15,7 +15,7 @@ import sys
 import time
 
 BENCHES = ("table1", "fig2", "fig3", "fig4", "calibration", "ablations",
-           "kernels", "roofline")
+           "kernels", "roofline", "serve")
 
 
 def main() -> None:
@@ -24,6 +24,8 @@ def main() -> None:
                     help=f"comma list of {BENCHES}")
     ap.add_argument("--fresh", action="store_true",
                     help="retrain the LM instead of using cached artifacts")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI-sized run (serve bench only)")
     ap.add_argument("--out", default="experiments/bench")
     args = ap.parse_args()
 
@@ -70,6 +72,9 @@ def main() -> None:
     if "roofline" in sel:
         from benchmarks import bench_roofline
         bench_roofline.run(pipe, emit)
+    if "serve" in sel:
+        from benchmarks import bench_kernels
+        bench_kernels.bench_serve_continuous(emit, smoke=args.smoke)
 
     path = os.path.join(args.out, "results.json")
     with open(path, "w") as f:

@@ -215,6 +215,40 @@ def update(
     )
 
 
+def _lane_where(mask: jax.Array, new, old):
+    """Per-field lane select: mask (B,) broadcast over trailing dims."""
+    m = mask.reshape(mask.shape + (1,) * (new.ndim - 1))
+    return jnp.where(m, new, old)
+
+
+def reset_lanes(state: ControllerState, mask: jax.Array,
+                max_tokens: jax.Array) -> ControllerState:
+    """Reset the lanes where ``mask`` to a fresh controller state with the
+    given per-lane emission budgets; other lanes are untouched.  This is the
+    continuous-batching refill primitive: a retired lane is re-armed for its
+    next request without touching the compiled (B,)-shaped decode graph."""
+    b, d = state.rep_sum.shape
+    fresh = init_state(b, d, state.win.shape[1])._replace(max_tokens=max_tokens)
+    return jax.tree.map(lambda n, o: _lane_where(mask, n, o), fresh, state)
+
+
+def update_lanes(
+    ctrl: ControllerConfig,
+    params: ProbeParams,
+    state: ControllerState,
+    mask: jax.Array,           # (B,) lanes that actually consume the token
+    token: jax.Array,          # (B,)
+    hidden: jax.Array,         # (B, D)
+    position: jax.Array,       # (B,)
+) -> ControllerState:
+    """Masked :func:`update`: lanes outside ``mask`` keep their state frozen
+    (their token/hidden entries are ignored).  Used to seed a freshly refilled
+    lane with its prefill-argmax token while the rest of the batch is mid-
+    stream."""
+    upd = update(ctrl, params, state, token, hidden, position)
+    return jax.tree.map(lambda n, o: _lane_where(mask, n, o), upd, state)
+
+
 def forced_next(
     ctrl: ControllerConfig, state: ControllerState
 ) -> Tuple[jax.Array, ControllerState]:

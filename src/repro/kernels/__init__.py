@@ -1,2 +1,7 @@
 from repro.kernels import ops, ref
-from repro.kernels.ops import decode_attention, probe_score, ssd_chunk_scan
+from repro.kernels.ops import (
+    decode_attention,
+    decode_attention_appended,
+    probe_score,
+    ssd_chunk_scan,
+)

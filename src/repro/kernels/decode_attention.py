@@ -7,8 +7,22 @@ tiles *sequentially* (TPU grid order), carrying the online-softmax state
 the TPU analogue of flash-decoding's split-K reduction, with BlockSpec-tiled
 HBM→VMEM streaming of K/V instead of GPU shared-memory staging.
 
-Shapes: q (B, H, Dh); k/v (B, W, Hkv, Dh); lengths (B,) valid prefix length.
+Two entry points:
+
+* :func:`decode_attention` — plain cached attention, ``lengths`` valid
+  prefix + optional sliding ``window`` over position-ordered slots.
+* :func:`decode_attention_appended` — the serving hot path: the current
+  token's (k, v) join the softmax as an extra online lane WITHOUT being
+  written to the cache first (mirroring ``layers.decode_attention_appended``,
+  so the decode layer scan never double-buffers the cache), with per-lane
+  ``lo/hi`` slot ranges plus a ``skip`` slot for ring-buffer eviction and an
+  optional logit softcap.
+
+Shapes: q (B, H, Dh); k/v (B, W, Hkv, Dh); lengths/lo/hi/skip (B,).
 Grid: (B, W // TILE_W).  Scratch: m/l (H, 1), acc (H, Dh) — f32.
+
+``interpret=None`` auto-detects the backend like ``probe_score``: compiled
+natively on TPU, interpreted elsewhere (the kernel body still executes).
 """
 
 from __future__ import annotations
@@ -20,6 +34,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.probe_score import default_interpret
 
 TILE_W = 256
 NEG_INF = -1e30
@@ -77,13 +93,24 @@ def _kernel(lo_ref, hi_ref, q_ref, k_ref, v_ref, out_ref, m_ref, l_ref, acc_ref)
         out_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(out_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret", "tile_w", "window"))
-def decode_attention(q, k_cache, v_cache, lengths, *, interpret: bool = True,
+def decode_attention(q, k_cache, v_cache, lengths, *,
+                     interpret: bool | None = None,
                      tile_w: int = TILE_W, window: int = 0):
     """q: (B, H, Dh); caches: (B, W, Hkv, Dh); lengths: (B,). -> (B, H, Dh).
 
     ``window`` > 0 restricts attention to the last ``window`` valid positions
-    (sliding-window decode; slot layout must be position-ordered)."""
+    (sliding-window decode; slot layout must be position-ordered).
+    ``interpret=None``: compiled on TPU, interpreted elsewhere."""
+    if interpret is None:
+        interpret = default_interpret()
+    return _decode_attention_jit(q, k_cache, v_cache, lengths,
+                                 interpret=interpret, tile_w=tile_w,
+                                 window=window)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "tile_w", "window"))
+def _decode_attention_jit(q, k_cache, v_cache, lengths, *, interpret: bool,
+                          tile_w: int, window: int):
     b, h, dh = q.shape
     w = k_cache.shape[1]
     hkv = k_cache.shape[2]
@@ -114,4 +141,139 @@ def decode_attention(q, k_cache, v_cache, lengths, *, interpret: bool = True,
         ],
         interpret=interpret,
     )(lo, hi, q, k_cache, v_cache)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# append-without-write variant (serving hot path)
+# ---------------------------------------------------------------------------
+
+def _make_appended_kernel(softcap: float):
+    def kernel(lo_ref, hi_ref, skip_ref, q_ref, kn_ref, vn_ref, k_ref, v_ref,
+               out_ref, m_ref, l_ref, acc_ref):
+        w_idx = pl.program_id(1)
+        n_w = pl.num_programs(1)
+
+        @pl.when(w_idx == 0)
+        def _init():
+            m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+            l_ref[...] = jnp.zeros_like(l_ref)
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        q = q_ref[0].astype(jnp.float32)                   # (H, Dh)
+        k = k_ref[0].astype(jnp.float32)                   # (TW, Hkv, Dh)
+        v = v_ref[0].astype(jnp.float32)
+        h, dh = q.shape
+        tw, hkv, _ = k.shape
+        g = h // hkv
+
+        lo, hi, skip = lo_ref[0], hi_ref[0], skip_ref[0]
+        kpos = w_idx * tw + jax.lax.broadcasted_iota(jnp.int32, (tw,), 0)
+        valid = (kpos >= lo) & (kpos < hi) & (kpos != skip)
+
+        qg = q.reshape(hkv, g, dh)
+        scores = jax.lax.dot_general(
+            qg, k.transpose(1, 2, 0),
+            (((2,), (1,)), ((0,), (0,))),
+            precision=jax.lax.Precision.HIGHEST,
+        ) / math.sqrt(dh)                                  # (Hkv, g, TW)
+        scores = scores.reshape(h, tw)
+        if softcap:
+            scores = softcap * jnp.tanh(scores / softcap)
+        scores = jnp.where(valid[None, :], scores, NEG_INF)
+
+        m_prev = m_ref[...]                                # (H, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(scores, axis=1, keepdims=True))
+        p = jnp.exp(scores - m_new)                        # (H, TW)
+        p = jnp.where(valid[None, :], p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)                    # (H, 1)
+
+        pg = p.reshape(hkv, g, tw)
+        pv = jax.lax.dot_general(
+            pg, v.transpose(1, 0, 2),
+            (((2,), (1,)), ((0,), (0,))),
+            precision=jax.lax.Precision.HIGHEST,
+        ).reshape(h, dh)
+
+        m_ref[...] = m_new
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + pv
+
+        # the current token's (k, v) join as one extra online-softmax lane on
+        # the final tile — append-without-write (cache scatter happens later)
+        @pl.when(w_idx == n_w - 1)
+        def _final():
+            kn = kn_ref[0].astype(jnp.float32)             # (Hkv, Dh)
+            vn = vn_ref[0].astype(jnp.float32)
+            sn = jnp.sum(qg * kn[:, None, :], axis=-1) / math.sqrt(dh)
+            if softcap:
+                sn = softcap * jnp.tanh(sn / softcap)
+            sn = sn.reshape(h, 1)                          # (H, 1)
+            m_fin = jnp.maximum(m_ref[...], sn)
+            alpha_f = jnp.exp(m_ref[...] - m_fin)
+            pn = jnp.exp(sn - m_fin)                       # (H, 1)
+            l_fin = l_ref[...] * alpha_f + pn
+            accg = (acc_ref[...] * alpha_f).reshape(hkv, g, dh) \
+                + pn.reshape(hkv, g, 1) * vn[:, None, :]
+            out_ref[0] = (accg.reshape(h, dh)
+                          / jnp.maximum(l_fin, 1e-30)).astype(out_ref.dtype)
+
+    return kernel
+
+
+def decode_attention_appended(q, k_cache, v_cache, lo, hi, skip, k_new, v_new,
+                              *, softcap: float = 0.0,
+                              interpret: bool | None = None,
+                              tile_w: int = TILE_W):
+    """Flash-decode over cache ∪ {current token}, without a cache write.
+
+    q: (B, H, Dh); caches: (B, W, Hkv, Dh); k_new/v_new: (B, Hkv, Dh);
+    lo/hi/skip: (B,) int32 — a slot s attends iff ``lo <= s < hi`` and
+    ``s != skip`` (skip = -1 disables; used for ring-buffer slot eviction).
+    Returns (B, H, Dh). Drop-in Pallas backend for
+    ``layers.decode_attention_appended``."""
+    if interpret is None:
+        interpret = default_interpret()
+    return _decode_attention_appended_jit(
+        q, k_cache, v_cache, lo, hi, skip, k_new, v_new,
+        softcap=float(softcap), interpret=interpret, tile_w=tile_w)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("softcap", "interpret", "tile_w"))
+def _decode_attention_appended_jit(q, k_cache, v_cache, lo, hi, skip, k_new,
+                                   v_new, *, softcap: float, interpret: bool,
+                                   tile_w: int):
+    b, h, dh = q.shape
+    w = k_cache.shape[1]
+    hkv = k_cache.shape[2]
+    tw = min(tile_w, w)
+    w_pad = (w + tw - 1) // tw * tw
+    if w_pad != w:
+        pad = ((0, 0), (0, w_pad - w), (0, 0), (0, 0))
+        k_cache = jnp.pad(k_cache, pad)
+        v_cache = jnp.pad(v_cache, pad)
+    out = pl.pallas_call(
+        _make_appended_kernel(softcap),
+        grid=(b, w_pad // tw),
+        in_specs=[
+            pl.BlockSpec((1,), lambda bi, wi: (bi,)),
+            pl.BlockSpec((1,), lambda bi, wi: (bi,)),
+            pl.BlockSpec((1,), lambda bi, wi: (bi,)),
+            pl.BlockSpec((1, h, dh), lambda bi, wi: (bi, 0, 0)),
+            pl.BlockSpec((1, hkv, dh), lambda bi, wi: (bi, 0, 0)),
+            pl.BlockSpec((1, hkv, dh), lambda bi, wi: (bi, 0, 0)),
+            pl.BlockSpec((1, tw, hkv, dh), lambda bi, wi: (bi, wi, 0, 0)),
+            pl.BlockSpec((1, tw, hkv, dh), lambda bi, wi: (bi, wi, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, dh), lambda bi, wi: (bi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((h, 1), jnp.float32),
+            pltpu.VMEM((h, 1), jnp.float32),
+            pltpu.VMEM((h, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lo.astype(jnp.int32), hi.astype(jnp.int32), skip.astype(jnp.int32),
+      q, k_new, v_new, k_cache, v_cache)
     return out

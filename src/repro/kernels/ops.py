@@ -1,9 +1,11 @@
 """Jit'd public wrappers around the Pallas kernels.
 
-``use_kernel`` selects between the Pallas path (interpret=True on CPU — the
-kernel body executes for real, validating the TPU program) and the pure-jnp
-reference.  On actual TPU deployments ``interpret`` flips to False with no
-other change.
+``use_kernel`` selects between the Pallas path and the pure-jnp reference.
+``interpret=None`` (the default everywhere) auto-detects the backend at call
+time via :func:`repro.kernels.probe_score.default_interpret`: on TPU the
+kernels compile natively; elsewhere they run interpret=True (the kernel body
+still executes for real, validating the TPU program) — no caller changes
+between CPU CI and TPU deployment.
 """
 
 from __future__ import annotations
@@ -13,6 +15,9 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention as _decode_attention
+from repro.kernels.decode_attention import (
+    decode_attention_appended as _decode_attention_appended,
+)
 from repro.kernels.probe_score import probe_score as _probe_score
 from repro.kernels.ssd_scan import ssd_chunk_scan as _ssd_chunk_scan
 
@@ -26,15 +31,27 @@ def probe_score(reps, pca_mean, pca_comps, w1, b1, w2, b2,
 
 
 def decode_attention(q, k_cache, v_cache, lengths, window: int = 0,
-                     *, use_kernel: bool = True, interpret: bool = True):
+                     *, use_kernel: bool = True, interpret: bool | None = None):
     if use_kernel:
         return _decode_attention(q, k_cache, v_cache, lengths,
                                  interpret=interpret, window=window)
     return ref.decode_attention_ref(q, k_cache, v_cache, lengths, window)
 
 
+def decode_attention_appended(q, k_cache, v_cache, lo, hi, skip, k_new, v_new,
+                              *, softcap: float = 0.0, use_kernel: bool = True,
+                              interpret: bool | None = None):
+    """Append-without-write flash decode (see kernels.decode_attention)."""
+    if use_kernel:
+        return _decode_attention_appended(
+            q, k_cache, v_cache, lo, hi, skip, k_new, v_new,
+            softcap=softcap, interpret=interpret)
+    return ref.decode_attention_appended_ref(
+        q, k_cache, v_cache, lo, hi, skip, k_new, v_new, softcap=softcap)
+
+
 def ssd_chunk_scan(x, dA, Bm, Cm, chunk: int = 256,
-                   *, use_kernel: bool = True, interpret: bool = True):
+                   *, use_kernel: bool = True, interpret: bool | None = None):
     if use_kernel:
         return _ssd_chunk_scan(x, dA, Bm, Cm, chunk, interpret=interpret)
     return ref.ssd_chunk_scan_ref(x, dA, Bm, Cm, chunk)

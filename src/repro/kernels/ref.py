@@ -42,6 +42,38 @@ def decode_attention_ref(q, k_cache, v_cache, lengths, window: int = 0):
     return out.reshape(b, h, dh).astype(q.dtype)
 
 
+def decode_attention_appended_ref(q, k_cache, v_cache, lo, hi, skip,
+                                  k_new, v_new, softcap: float = 0.0):
+    """Oracle for the append-without-write flash-decode kernel.
+
+    q: (B, H, Dh); caches: (B, W, Hkv, Dh); k_new/v_new: (B, Hkv, Dh);
+    lo/hi/skip: (B,) — slot s is valid iff lo <= s < hi and s != skip.
+    The new token's (k, v) join the softmax as one extra lane."""
+    b, h, dh = q.shape
+    w, hkv = k_cache.shape[1], k_cache.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, hkv, g, dh).astype(jnp.float32)
+    scores = jnp.einsum("bkgd,bwkd->bkgw", qg,
+                        k_cache.astype(jnp.float32)) / math.sqrt(dh)
+    score_n = jnp.einsum("bkgd,bkd->bkg", qg,
+                         k_new.astype(jnp.float32))[..., None] / math.sqrt(dh)
+    if softcap:
+        scores = softcap * jnp.tanh(scores / softcap)
+        score_n = softcap * jnp.tanh(score_n / softcap)
+    slots = jnp.arange(w)[None]
+    valid = (slots >= lo[:, None]) & (slots < hi[:, None]) \
+        & (slots != skip[:, None])
+    valid = valid[:, None, None, :]
+    scores = jnp.where(valid, scores, -1e30)
+    m = jnp.maximum(jnp.max(scores, axis=-1, keepdims=True), score_n)
+    p = jnp.where(valid, jnp.exp(scores - m), 0.0)
+    p_n = jnp.exp(score_n - m)
+    z = jnp.sum(p, axis=-1, keepdims=True) + p_n
+    out = jnp.einsum("bkgw,bwkd->bkgd", p / z, v_cache.astype(jnp.float32))
+    out = out + (p_n / z) * v_new.astype(jnp.float32)[:, :, None]
+    return out.reshape(b, h, dh).astype(q.dtype)
+
+
 def ssd_chunk_scan_ref(x, dA, Bm, Cm, chunk):
     """Oracle for the SSD kernel — delegates to the model's chunked SSD.
 

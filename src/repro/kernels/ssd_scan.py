@@ -26,6 +26,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.probe_score import default_interpret
+
 TILE_H = 8
 
 
@@ -92,13 +94,22 @@ def _kernel(x_ref, da_ref, b_ref, c_ref, y_ref, st_out_ref, state_ref):
         st_out_ref[0] = state_ref[...].astype(st_out_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("chunk", "interpret", "tile_h"))
-def ssd_chunk_scan(x, dA, Bm, Cm, chunk: int = 256, *, interpret: bool = True,
-                   tile_h: int = TILE_H):
+def ssd_chunk_scan(x, dA, Bm, Cm, chunk: int = 256, *,
+                   interpret: bool | None = None, tile_h: int = TILE_H):
     """x: (B, S, H, P) discretized; dA: (B, S, H); Bm/Cm: (B, S, N).
 
     Returns (y (B, S, H, P) f32, final_state (B, H, P, N) f32).
-    Requires S % chunk == 0 and H % tile_h == 0 (pad upstream)."""
+    Requires S % chunk == 0 and H % tile_h == 0 (pad upstream).
+    ``interpret=None``: compiled on TPU, interpreted elsewhere."""
+    if interpret is None:
+        interpret = default_interpret()
+    return _ssd_chunk_scan_jit(x, dA, Bm, Cm, chunk=chunk,
+                               interpret=interpret, tile_h=tile_h)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret", "tile_h"))
+def _ssd_chunk_scan_jit(x, dA, Bm, Cm, *, chunk: int, interpret: bool,
+                        tile_h: int):
     b, s, h, p = x.shape
     n = Bm.shape[-1]
     th = min(tile_h, h)

@@ -39,6 +39,14 @@ def main():
     ap.add_argument("--lanes", type=int, default=8)
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=256)
+    ap.add_argument("--scheduler", default="wave",
+                    choices=["wave", "continuous"],
+                    help="wave: batch waves (reference); continuous: "
+                         "per-lane admit/retire/refill slot engine")
+    ap.add_argument("--attn-impl", default=None,
+                    choices=["dense", "pallas"],
+                    help="decode attention backend (default: autodetect — "
+                         "pallas on TPU, dense elsewhere)")
     ap.add_argument("--ckpt", default="", help="params checkpoint (msgpack)")
     ap.add_argument("--probe-ckpt", default="", help="probe bundle (json+npz)")
     ap.add_argument("--lam", type=float, default=0.8)
@@ -74,7 +82,8 @@ def main():
     # would silently crop a pure calibrated run
     crop_kw = {"crop_budget": args.crop_budget} if args.policy == "crop" else {}
     eng = Engine(cfg, params, ctrl=ctrl, probe_params=pp, lanes=args.lanes,
-                 policy=args.policy, **crop_kw)
+                 policy=args.policy, scheduler=args.scheduler,
+                 attn_impl=args.attn_impl, **crop_kw)
 
     rng = np.random.default_rng(args.seed)
     traces = generate_dataset(args.requests, TraceConfig(), seed=args.seed + 7)

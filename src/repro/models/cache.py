@@ -106,6 +106,40 @@ def quantize_prefill_cache(cache: dict) -> dict:
     return out
 
 
+# ---------------------------------------------------------------------------
+# continuous-batching slot primitives
+#
+# Cache leaves follow one convention: 1-D leaves are per-lane scalars
+# ((B,) — ``pos`` and friends); every other leaf is layer-stacked with the
+# lane axis second ((L, B, ...) — k/v/scales/ssm/cross).  The two helpers
+# below rely on it so they work for every family's cache pytree (and for the
+# scripted fakes in tests) without knowing the keys.
+# ---------------------------------------------------------------------------
+
+def _lane_axis(leaf: jax.Array) -> int:
+    return 0 if leaf.ndim == 1 else 1
+
+
+def replicate_cache_lanes(small: dict, lanes: int) -> dict:
+    """Tile a batch=1 cache to ``lanes`` lanes along each leaf's lane axis.
+
+    Used once to materialize the continuous engine's persistent stacked cache
+    from the first request's prefill; every lane is subsequently overwritten
+    by :func:`scatter_cache_lane` before it decodes live tokens."""
+    return jax.tree.map(
+        lambda a: jnp.repeat(a, lanes, axis=_lane_axis(a)), small)
+
+
+def scatter_cache_lane(cache: dict, small: dict, lane) -> dict:
+    """Scatter a batch=1 cache (one prefilled request) into lane ``lane`` of
+    a live stacked cache.  ``lane`` may be traced."""
+    def one(big, sm):
+        if _lane_axis(big) == 0:
+            return big.at[lane].set(sm[0])
+        return big.at[:, lane].set(sm[:, 0])
+    return jax.tree.map(one, cache, small)
+
+
 def cache_write(k_cache: jax.Array, v_cache: jax.Array, k_new: jax.Array,
                 v_new: jax.Array, pos: jax.Array, window: int):
     """Scatter one new (k, v) per sequence. caches: (B, W, Hkv, D);

@@ -20,6 +20,9 @@ from typing import NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.decode_attention import (
+    decode_attention_appended as decode_attention_kernel,
+)
 from repro.models import cache as cache_mod
 from repro.models import layers, moe, ssm
 
@@ -455,6 +458,50 @@ def prefill(
     return logits, hidden, cache
 
 
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _slot_prefill_finalize(cfg, params, hidden, cache, plen):
+    """Pick out the true last-token logits/hidden of a right-padded prefill
+    and stamp the cache's position to the unpadded prompt length."""
+    hid = jax.lax.dynamic_slice_in_dim(hidden, plen - 1, 1, axis=1)  # (1,1,D)
+    logits = lm_logits(cfg, params, hid)
+    cache = dict(cache)
+    cache["pos"] = jnp.full_like(cache["pos"], plen)
+    return logits, hid[:, 0], cache
+
+
+def prefill_into_slot(
+    cfg,
+    params,
+    tokens: jax.Array,
+    plen,
+    *,
+    cache_len: int,
+    moe_impl: str = "dispatch",
+    compute_dtype: str = "bfloat16",
+):
+    """Prefill ONE request for continuous-batching admission.
+
+    ``tokens``: (1, S) prompt right-padded to a bucket length S >= ``plen``
+    (the true prompt length).  Because attention is causal, the trailing pads
+    are invisible to positions < plen, so logits/hidden/cache content for the
+    real prompt are bit-identical to an unpadded prefill — while the jitted
+    prefill compiles once per (bucket, cache_len) instead of once per prompt
+    length.
+
+    Returns ``(logits (1,1,V) at position plen-1, hidden_last (1, D),
+    cache)`` with ``cache["pos"] = plen``; the cache is batch=1 and
+    ``cache_len`` wide, ready for :func:`repro.models.cache.scatter_cache_lane`
+    into a free lane of a live stacked cache.  Pad K/V beyond ``plen`` sit in
+    slots the decode valid-mask excludes and the first decoded tokens
+    overwrite.
+    """
+    _, hidden, cache = prefill(
+        cfg, params, tokens, cache_len=cache_len, moe_impl=moe_impl,
+        compute_dtype=compute_dtype)
+    return _slot_prefill_finalize(cfg, params, hidden, cache,
+                                  jnp.asarray(plen, jnp.int32))
+
+
 def _ssm_block_with_state(cfg, p, xin):
     """Like ssm.ssm_block but also returns the decode state dict."""
     s = cfg.ssm
@@ -517,6 +564,27 @@ def _cross_kv(cfg, params, ctx_h) -> dict:
 # decode step
 # ---------------------------------------------------------------------------
 
+def default_attn_impl() -> str:
+    """Decode-attention backend autodetect (mirrors
+    ``probe_score.default_interpret``): the Pallas flash-decode kernel on TPU,
+    the dense jnp path elsewhere.  Resolved at trace time so tests can fake
+    backends or force either path explicitly."""
+    return "pallas" if jax.default_backend() == "tpu" else "dense"
+
+
+def _attn_ring_bounds(pos: jax.Array, w: int, window: int):
+    """(lo, hi, skip) slot bounds matching ``cache_valid_mask_pre_write``:
+    slot s is valid iff lo <= s < hi and s != skip (ring caches additionally
+    evict the slot the new token will overwrite)."""
+    hi = jnp.minimum(pos, w).astype(jnp.int32)
+    lo = jnp.zeros_like(hi)
+    if window:
+        skip = jnp.where(pos >= w, (pos % w).astype(jnp.int32), -1)
+    else:
+        skip = jnp.full_like(hi, -1)
+    return lo, hi, skip
+
+
 def decode_step(
     cfg,
     params,
@@ -527,12 +595,21 @@ def decode_step(
     moe_impl: str = "dispatch",
     compute_dtype: str = "bfloat16",
     unroll: bool = False,
+    attn_impl: str | None = None,
 ):
     """One-token decode. tokens: (B, 1) or (B, 1, K). Returns (logits, hidden, cache).
 
     ``window`` is STATIC: nonzero means the attention caches are ring buffers
     of that width (sliding-window decode); zero means full append caches.
+    ``attn_impl`` selects the self-attention backend: ``"dense"`` (jnp, with
+    ``jnp.repeat``-materialized KV heads) or ``"pallas"`` (the GQA
+    flash-decode kernel with append-without-write semantics); ``None``
+    autodetects (pallas on TPU, dense elsewhere).
     """
+    if attn_impl is None:
+        attn_impl = default_attn_impl()
+    if attn_impl not in ("dense", "pallas"):
+        raise ValueError(f"unknown attn_impl {attn_impl!r}")
     dtype = jnp.dtype(compute_dtype)
     b = tokens.shape[0]
     pos = dcache["pos"]                                             # (B,)
@@ -542,6 +619,19 @@ def decode_step(
         x = x + layers.sinusoidal_positions(pos2, cfg.d_model).astype(dtype)
 
     aux0 = jnp.zeros((), jnp.float32)
+
+    def cached_attn(q, kcache, vcache, k, v):
+        """Attention over (cache ∪ current token) without a cache write,
+        via the selected backend. q/k/v: (B, 1, H*, D)."""
+        if attn_impl == "pallas":
+            lo, hi, skip = _attn_ring_bounds(pos, kcache.shape[1], window)
+            o = decode_attention_kernel(
+                q[:, 0], kcache, vcache, lo, hi, skip, k[:, 0], v[:, 0],
+                softcap=cfg.attn_logit_softcap)
+            return o[:, None]
+        valid = cache_mod.cache_valid_mask_pre_write(pos, kcache.shape[1], window)
+        return layers.decode_attention_appended(
+            q, kcache, vcache, valid, k, v, cfg.attn_logit_softcap)
 
     def attn_sub(lp, xc, kcache, vcache):
         """Read-only attention over (old cache ∪ current token); the cache
@@ -555,9 +645,7 @@ def decode_step(
         # axis), replicate the (tiny) query so GSPMD keeps the (huge) cache
         # W-stationary instead of all-gathering it per layer.
         q = _shard_act(q, "q_decode")
-        valid = cache_mod.cache_valid_mask_pre_write(pos, kcache.shape[1], window)
-        o = layers.decode_attention_appended(
-            q, kcache, vcache, valid, k, v, cfg.attn_logit_softcap)
+        o = cached_attn(q, kcache, vcache, k, v)
         return layers.attn_output(cfg, lp["attn"], o), k, v
 
     def cross_sub(lp, xc, ck, cv):
@@ -599,9 +687,8 @@ def decode_step(
         q, k, v = layers.project_qkv(cfg, lp["attn"], h)
         q = layers.apply_rope(q, pos2, cfg.rope_theta, cfg.rope)
         k = layers.apply_rope(k, pos2, cfg.rope_theta, cfg.rope)
-        valid = cache_mod.cache_valid_mask_pre_write(pos, scanned["k"].shape[1], window)
-        ao = layers.attn_output(cfg, lp["attn"], layers.decode_attention_appended(
-            q, scanned["k"], scanned["v"], valid, k, v))
+        ao = layers.attn_output(
+            cfg, lp["attn"], cached_attn(q, scanned["k"], scanned["v"], k, v))
         so, st = ssm.ssm_decode_step(cfg, lp["ssm"], scanned["ssm"], h)
         fused = 0.5 * (layers.rmsnorm(ao, lp["fuse_a"], cfg.norm_eps)
                        + layers.rmsnorm(so, lp["fuse_s"], cfg.norm_eps))

@@ -6,3 +6,4 @@ from repro.serving.engine import (
     make_serve_steps,
 )
 from repro.serving.sampling import decode_key, sample_tokens
+from repro.serving.scheduler import SlotScheduler, bucket_length, run_continuous

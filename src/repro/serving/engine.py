@@ -44,6 +44,8 @@ from repro.core import controller as ctrl_mod
 from repro.data.traces import ANS_BASE, EOS, NUM_ANSWERS, THINK_END
 from repro.models import model as model_mod
 from repro.models.cache import quantize_prefill_cache
+from repro.models.cache import replicate_cache_lanes as cache_mod_replicate
+from repro.models.cache import scatter_cache_lane as cache_mod_scatter
 from repro.serving.sampling import decode_key, sample_tokens
 
 
@@ -68,7 +70,8 @@ class ServeResult:
 
 def make_serve_step(cfg, ctrl: ctrl_mod.ControllerConfig, *,
                     window: int = 0, moe_impl: str = "dense",
-                    compute_dtype: str = "float32", temperature: float = 0.0):
+                    compute_dtype: str = "float32", temperature: float = 0.0,
+                    attn_impl: str | None = None):
     """Build the jitted single-token decode+controller step (host-loop path).
 
     ``forced``: (B,) next-token override (-1 = sample) computed by the host.
@@ -76,8 +79,8 @@ def make_serve_step(cfg, ctrl: ctrl_mod.ControllerConfig, *,
 
     def serve_step(params, probe_params, dcache, state, tokens, key, forced):
         logits, hidden, dcache = model_mod.decode_step(
-            cfg, params, dcache, tokens,
-            window=window, moe_impl=moe_impl, compute_dtype=compute_dtype)
+            cfg, params, dcache, tokens, window=window, moe_impl=moe_impl,
+            compute_dtype=compute_dtype, attn_impl=attn_impl)
         nxt = sample_tokens(key, logits, temperature)[:, 0]        # (B,)
         nxt = jnp.where(forced >= 0, forced, nxt)
         # controller consumes the token *just generated* and its hidden state
@@ -91,7 +94,8 @@ def make_serve_step(cfg, ctrl: ctrl_mod.ControllerConfig, *,
 
 def make_serve_steps(cfg, ctrl: ctrl_mod.ControllerConfig, *,
                      window: int = 0, moe_impl: str = "dense",
-                     compute_dtype: str = "float32", temperature: float = 0.0):
+                     compute_dtype: str = "float32", temperature: float = 0.0,
+                     attn_impl: str | None = None):
     """Build the jitted K-token chunk: decode, sampling, controller update and
     THINK_END forcing fused into one ``lax.scan`` (K = ``num_steps``, static).
 
@@ -109,8 +113,9 @@ def make_serve_steps(cfg, ctrl: ctrl_mod.ControllerConfig, *,
             cur, dcache, state = carry
             forced, state = ctrl_mod.forced_next(ctrl, state)
             logits, hidden, dcache = model_mod.decode_step(
-                cfg, params, dcache, cur[:, None],
-                window=window, moe_impl=moe_impl, compute_dtype=compute_dtype)
+                cfg, params, dcache, cur[:, None], window=window,
+                moe_impl=moe_impl, compute_dtype=compute_dtype,
+                attn_impl=attn_impl)
             nxt = sample_tokens(decode_key(base_key, t), logits,
                                 temperature)[:, 0]
             nxt = jnp.where(forced >= 0, forced, nxt)
@@ -126,9 +131,31 @@ def make_serve_steps(cfg, ctrl: ctrl_mod.ControllerConfig, *,
     return serve_steps
 
 
+def append_chunk(gen: List[List[int]], traces: List[List[float]],
+                 toks_np: np.ndarray, sm_np: np.ndarray,
+                 emit_np: np.ndarray) -> None:
+    """Append one synced (K, B) chunk to per-lane buffers, dropping steps
+    where the lane had already finished.  Boolean-indexing per lane keeps the
+    host bookkeeping O(B) numpy slices instead of O(B*K) interpreted loop
+    iterations — it is on the per-chunk critical path and grows with lane
+    count."""
+    for i in range(len(gen)):
+        m = emit_np[:, i]
+        if m.any():
+            gen[i].extend(toks_np[m, i].tolist())
+            traces[i].extend(sm_np[m, i].tolist())
+
+
 class Engine:
-    """Wave-scheduled batched server (lanes freed on exit count as reclaimed
-    decode compute; see DESIGN.md §3 on TPU-predication batching)."""
+    """Batched early-exit server with two schedulers.
+
+    ``scheduler="wave"``: requests decode in waves of ``lanes``; a freed lane
+    idles (masked no-op) until the slowest lane in its wave finishes.
+    ``scheduler="continuous"``: a persistent (lanes, cache_len) decode state
+    where each lane is independently admitted, decoded, retired, and refilled
+    from a pending queue the moment it frees (probe exit, EOS, budget) — see
+    ``repro.serving.scheduler``.  The wave path is the bit-exactness
+    reference; continuous mode turns early exit into tokens/sec."""
 
     def __init__(self, cfg, params, *, ctrl: ctrl_mod.ControllerConfig,
                  probe_params: ctrl_mod.ProbeParams, lanes: int = 8,
@@ -136,11 +163,27 @@ class Engine:
                  moe_impl: str = "dense", compute_dtype: str = "float32",
                  temperature: float = 0.0, seed: int = 0,
                  kv_quant: bool = False, decode_mode: str = "scan",
-                 chunk: int = 16):
+                 chunk: int = 16, scheduler: str = "wave",
+                 attn_impl: str | None = None):
         if policy not in ("calibrated", "crop", "full"):
             raise ValueError(f"unknown policy {policy!r}")
         if decode_mode not in ("scan", "host"):
             raise ValueError(f"unknown decode_mode {decode_mode!r}")
+        if scheduler not in ("wave", "continuous"):
+            raise ValueError(f"unknown scheduler {scheduler!r}")
+        if scheduler == "continuous" and decode_mode != "scan":
+            raise ValueError("continuous scheduling drives the scanned chunk "
+                             "step; use decode_mode='scan'")
+        if scheduler == "continuous" and (cfg.uses_ssm or cfg.uses_cross_attn):
+            # Admission right-pads prompts to a bucket, which is causally
+            # invisible to attention but NOT to recurrent SSM state (the
+            # prefill scan would fold pad tokens into the carried state), and
+            # cross-attn families need a ctx plumb prefill_into_slot lacks.
+            raise ValueError(
+                "continuous scheduling currently supports attention-cache "
+                "families only (ssm/hybrid/audio/vlm prompts cannot be "
+                "bucket-padded without corrupting recurrent/cross state); "
+                "use scheduler='wave'")
         if policy == "crop" and crop_budget < 1:
             raise ValueError("crop policy needs crop_budget >= 1 "
                              "(0 would disable the only exit trigger)")
@@ -156,7 +199,9 @@ class Engine:
         self.temperature = temperature
         self.kv_quant = kv_quant
         self.decode_mode = decode_mode
+        self.scheduler = scheduler
         self.chunk = max(int(chunk), 1)
+        self.last_stats: Dict[str, object] = {}
         # Policies compile down to (λ, crop) on device: `full` disables both
         # triggers, `crop` disables the probe, `calibrated` keeps both (the
         # default crop_budget of 1e9 is inert).
@@ -165,7 +210,7 @@ class Engine:
             ctrl, think_end_id=THINK_END, eos_id=EOS, ans_base=ANS_BASE,
             num_answers=NUM_ANSWERS, crop_budget=eff_crop)
         kw = dict(moe_impl=moe_impl, compute_dtype=compute_dtype,
-                  temperature=temperature)
+                  temperature=temperature, attn_impl=attn_impl)
         self._step_fn = make_serve_step(cfg, self.wave_ctrl, **kw)
         self._steps_fn = make_serve_steps(cfg, self.wave_ctrl, **kw)
         # seed the controller with the prefill-argmax token (it was never
@@ -173,6 +218,36 @@ class Engine:
         self._seed_fn = jax.jit(
             lambda pp, state, tok, hid, pos: ctrl_mod.update(
                 self.wave_ctrl, pp, state, tok, hid, pos))
+        # continuous-batching device helpers (cheap to build, compiled lazily)
+        self._quant_fn = jax.jit(quantize_prefill_cache)
+        self._replicate_fn = jax.jit(
+            lambda small: cache_mod_replicate(small, self.lanes))
+        self._admit_fn = self._make_admit_fn()
+
+    def _make_admit_fn(self):
+        """Jitted lane refill: scatter one prefilled request into a free lane
+        of the live cache, reset that lane's controller state, and seed it
+        with the prefill-argmax token — one compiled graph for the engine's
+        lifetime (lane/plen/max_new are traced scalars)."""
+        ctrl = self.wave_ctrl
+
+        @jax.jit
+        def admit(pp, state, cache, cur, small, hid_last, logits, lane, plen,
+                  max_new):
+            b = cur.shape[0]
+            mask = jnp.arange(b) == lane
+            tok0 = jnp.argmax(logits, -1).reshape(()).astype(jnp.int32)
+            state = ctrl_mod.reset_lanes(
+                state, mask, jnp.where(mask, max_new, state.max_tokens))
+            cache = cache_mod_scatter(cache, small, lane)
+            hid_b = jnp.broadcast_to(hid_last, (b, hid_last.shape[-1]))
+            state = ctrl_mod.update_lanes(
+                ctrl, pp, state, mask, jnp.full((b,), tok0),
+                hid_b, jnp.full((b,), plen - 1, jnp.int32))
+            cur = jnp.where(mask, tok0, cur)
+            return state, cache, cur, tok0, state.smoothed
+
+        return admit
 
     def _prefill(self, prompts: np.ndarray, cache_len: int):
         logits, hidden, cache = model_mod.prefill(
@@ -191,6 +266,9 @@ class Engine:
         return self.probe_params
 
     def run(self, requests: Sequence[ServeRequest]) -> List[ServeResult]:
+        if self.scheduler == "continuous":
+            from repro.serving.scheduler import run_continuous
+            return run_continuous(self, requests)
         results: List[ServeResult] = []
         for i in range(0, len(requests), self.lanes):
             results.extend(self._run_wave(requests[i : i + self.lanes]))
@@ -275,12 +353,7 @@ class Engine:
             # one device→host sync per chunk
             toks_np, sm_np, emit_np, all_done = jax.device_get(
                 (toks, sm, emit, state.lane_done.all()))
-            for s in range(k):
-                em = emit_np[s]
-                for i in range(b):
-                    if em[i]:
-                        gen[i].append(int(toks_np[s, i]))
-                        traces[i].append(float(sm_np[s, i]))
+            append_chunk(gen, traces, toks_np, sm_np, emit_np)
             t += k
             if all_done:
                 break

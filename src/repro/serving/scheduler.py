@@ -1,0 +1,230 @@
+"""Continuous-batching slot scheduler for the serving engine.
+
+Wave scheduling wastes exactly what thought calibration saves: a lane freed
+by a probe exit idles (masked no-op) until the *slowest* lane of its wave
+finishes, so heterogeneous difficulty yields token savings without
+throughput savings.  Here the engine instead keeps one persistent
+``(lanes, cache_len)`` decode state alive for its whole run and treats lanes
+as *slots*:
+
+* **admit** — a pending request is prefilled alone (batch=1, prompt
+  right-padded to a power-of-two bucket so the jitted prefill compiles once
+  per bucket, not once per prompt length) and its KV scattered into a free
+  lane of the live stacked cache (``model.prefill_into_slot`` +
+  ``cache.scatter_cache_lane``); the lane's controller state is reset and
+  seeded with the prefill-argmax token (``controller.reset_lanes`` /
+  ``update_lanes``).  Right-padding is causally invisible to the real
+  prompt, so admission is bit-identical to an unpadded prefill.
+* **decode** — the engine's existing jitted (B, K) ``lax.scan`` chunk step
+  runs unchanged; ``lane_done`` lanes are emit-masked no-ops, so the graph
+  compiles ONCE for the engine's lifetime regardless of how lanes churn.
+* **retire** — when a lane's ``lane_done`` flips (probe exit, EOS, answer,
+  budget), its per-lane bookkeeping is snapshotted into a ``ServeResult``
+  and the lane is refilled from the pending queue at the next chunk
+  boundary.
+
+Host-side state (queues, per-lane token buffers, stats) lives in
+:class:`SlotScheduler`; :func:`run_continuous` is the drive loop the engine
+delegates to for ``scheduler="continuous"``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import controller as ctrl_mod
+from repro.models import model as model_mod
+from repro.serving.engine import ServeRequest, ServeResult, append_chunk
+
+MIN_BUCKET = 8
+
+# per-lane ControllerState fields snapshotted into a ServeResult at retire
+BOOK_KEYS = ("forced_exit", "exit_step", "think_tokens", "answer", "exit_pos")
+
+
+def bucket_length(plen: int, min_bucket: int = MIN_BUCKET) -> int:
+    """Smallest power-of-two bucket >= plen (>= min_bucket).
+
+    Prompts are right-padded to their bucket, so the jitted prefill compiles
+    once per bucket instead of once per distinct prompt length."""
+    if plen < 1:
+        raise ValueError(f"prompt length must be >= 1, got {plen}")
+    b = max(int(min_bucket), 1)
+    while b < plen:
+        b *= 2
+    return b
+
+
+@dataclasses.dataclass
+class _Active:
+    """One in-flight request pinned to a lane."""
+    req: ServeRequest
+    order: int                    # submission index (results are re-ordered)
+    lane: int
+    admitted_step: int            # engine step at admission (stats)
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    traces: List[float] = dataclasses.field(default_factory=list)
+
+
+class SlotScheduler:
+    """Host-side slot bookkeeping: pending queue + per-lane ownership.
+
+    Pure Python by design — every device-shaped decision (forcing, lane_done,
+    budgets) already lives in ``ControllerState``; the scheduler only decides
+    *which request occupies which lane* between chunks."""
+
+    def __init__(self, lanes: int):
+        self.lanes = lanes
+        self.pending: Deque[_Active] = deque()
+        self.owner: List[Optional[_Active]] = [None] * lanes
+        self.admissions: List[Dict[str, int]] = []   # stats: admission log
+        self._submitted = 0
+
+    def submit(self, requests: Sequence[ServeRequest]) -> None:
+        for r in requests:
+            self.pending.append(_Active(req=r, order=self._submitted, lane=-1,
+                                        admitted_step=-1))
+            self._submitted += 1
+
+    @property
+    def has_pending(self) -> bool:
+        return bool(self.pending)
+
+    @property
+    def any_active(self) -> bool:
+        return any(a is not None for a in self.owner)
+
+    def free_lanes(self) -> List[int]:
+        return [i for i, a in enumerate(self.owner) if a is None]
+
+    def admit_next(self, lane: int, step: int) -> Optional[_Active]:
+        """Pop the next pending request into ``lane`` (None if queue empty)."""
+        if not self.pending:
+            return None
+        act = self.pending.popleft()
+        act.lane, act.admitted_step = lane, step
+        self.owner[lane] = act
+        self.admissions.append(
+            {"lane": lane, "step": step, "uid": act.req.uid})
+        return act
+
+    def retire(self, lane: int, book: Dict[str, int]) -> tuple:
+        """Close out the lane's request; returns (order, ServeResult)."""
+        act = self.owner[lane]
+        assert act is not None, f"retire of empty lane {lane}"
+        self.owner[lane] = None
+        exited = bool(book["forced_exit"])
+        ans = int(book["answer"])
+        res = ServeResult(
+            uid=act.req.uid,
+            tokens=np.asarray(act.tokens, np.int32),
+            think_tokens=int(book["think_tokens"]),
+            exited_early=exited,
+            exit_step=int(book["exit_step"]) if exited else -1,
+            answer=ans if ans >= 0 else None,
+            probe_trace=np.asarray(act.traces, np.float32),
+            exit_pos=int(book["exit_pos"]),
+        )
+        return act.order, res
+
+
+def run_continuous(eng, requests: Sequence[ServeRequest]) -> List[ServeResult]:
+    """Drive ``eng`` (a ``repro.serving.Engine``) in continuous-batching mode.
+
+    One compiled (B, K) chunk graph decodes for the engine's whole run; lanes
+    are admitted/retired between chunks.  Per-request outputs are
+    token-identical to running the request alone in wave mode (greedy,
+    float32): admission right-padding is causally invisible, masked idle
+    lanes never touch live lanes, and the controller math is the same pure
+    per-lane state machine both schedulers share.
+    """
+    reqs = list(requests)
+    if not reqs:
+        return []
+    lanes = eng.lanes
+    sched = SlotScheduler(lanes)
+    sched.submit(reqs)
+
+    # cache sizing: the widest bucketed prompt plus the largest decode budget
+    # plus scan-chunk overshoot headroom — fixed for the engine run so the
+    # chunk step compiles exactly once
+    max_bucket = max(bucket_length(len(r.prompt)) for r in reqs)
+    w_cache = max_bucket + max(r.max_new for r in reqs) + eng.chunk + 8
+
+    pp = eng._wave_probe_params()
+    eng.key, run_key = jax.random.split(eng.key)
+
+    state = ctrl_mod.init_state(lanes, eng.cfg.d_model, eng.ctrl.window)
+    # all lanes start idle: done, zero budget, emit-masked until admission
+    state = state._replace(
+        lane_done=jnp.ones((lanes,), bool),
+        max_tokens=jnp.zeros((lanes,), jnp.int32))
+    cache = None
+    cur = jnp.zeros((lanes,), jnp.int32)
+    results: Dict[int, ServeResult] = {}
+    gstep = 0
+    chunks = 0
+
+    def admit_free_lanes():
+        nonlocal state, cache, cur
+        for lane in sched.free_lanes():
+            act = sched.admit_next(lane, gstep)
+            if act is None:
+                break
+            plen = len(act.req.prompt)
+            bucket = bucket_length(plen)
+            toks = np.zeros((1, bucket), np.int32)
+            toks[0, :plen] = act.req.prompt
+            logits, hid_last, small = model_mod.prefill_into_slot(
+                eng.cfg, eng.params, jnp.asarray(toks), plen,
+                cache_len=w_cache, moe_impl=eng.moe_impl,
+                compute_dtype=eng.compute_dtype)
+            if eng.kv_quant:
+                small = eng._quant_fn(small)
+            if cache is None:
+                cache = eng._replicate_fn(small)
+            state, cache, cur, tok0, sm = eng._admit_fn(
+                pp, state, cache, cur, small, hid_last, logits,
+                jnp.int32(lane), jnp.int32(plen),
+                jnp.int32(act.req.max_new))
+            tok0_np, sm_np = jax.device_get((tok0, sm))
+            act.tokens.append(int(tok0_np))
+            act.traces.append(float(sm_np[lane]))
+
+    admit_free_lanes()
+    while sched.any_active:
+        cur, cache, state, toks, sm, emit = eng._steps_fn(
+            eng.params, pp, cache, state, cur, run_key,
+            jnp.int32(gstep), num_steps=eng.chunk)
+        gstep += eng.chunk
+        chunks += 1
+        # one device→host sync per chunk: emitted tokens/traces plus the
+        # per-lane bookkeeping needed to retire any lane that just finished
+        fetched = jax.device_get(
+            (toks, sm, emit, state.lane_done)
+            + tuple(getattr(state, k) for k in BOOK_KEYS))
+        toks_np, sm_np, emit_np, done_np = fetched[:4]
+        book = dict(zip(BOOK_KEYS, fetched[4:]))
+        gen = [a.tokens if a is not None else [] for a in sched.owner]
+        traces = [a.traces if a is not None else [] for a in sched.owner]
+        append_chunk(gen, traces, toks_np, sm_np, emit_np)
+        for lane, act in enumerate(sched.owner):
+            if act is not None and done_np[lane]:
+                order, res = sched.retire(
+                    lane, {k: book[k][lane] for k in BOOK_KEYS})
+                results[order] = res
+        admit_free_lanes()
+
+    eng.last_stats = {
+        "scheduler": "continuous", "chunks": chunks, "steps": gstep,
+        "lanes": lanes, "requests": len(reqs),
+        "admissions": sched.admissions,
+        "emitted_tokens": int(sum(len(r.tokens) for r in results.values())),
+    }
+    return [results[i] for i in range(len(reqs))]

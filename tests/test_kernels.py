@@ -112,6 +112,135 @@ def test_decode_attention_sliding_window(window, key):
     np.testing.assert_allclose(np.asarray(got[1]), np.asarray(got2[1]), atol=1e-5)
 
 
+@pytest.mark.parametrize("b,h,kv,dh", [(2, 4, 4, 64), (3, 8, 2, 64),
+                                       (2, 16, 4, 128)])
+@pytest.mark.parametrize("w,softcap", [(96, 0.0), (300, 30.0)])
+def test_decode_attention_appended(b, h, kv, dh, w, softcap, key):
+    """Append-without-write kernel vs jnp oracle vs the dense serving path
+    (layers.decode_attention_appended) under GQA + softcap."""
+    from repro.models import layers
+    from repro.models.cache import cache_valid_mask_pre_write
+
+    ks = jax.random.split(key, 6)
+    q = jax.random.normal(ks[0], (b, h, dh))
+    kc = jax.random.normal(ks[1], (b, w, kv, dh))
+    vc = jax.random.normal(ks[2], (b, w, kv, dh))
+    kn = jax.random.normal(ks[3], (b, kv, dh))
+    vn = jax.random.normal(ks[4], (b, kv, dh))
+    pos = jax.random.randint(ks[5], (b,), 0, w + 1)
+    lo = jnp.zeros((b,), jnp.int32)
+    hi = jnp.minimum(pos, w)
+    skip = jnp.full((b,), -1, jnp.int32)
+    got = ops.decode_attention_appended(q, kc, vc, lo, hi, skip, kn, vn,
+                                        softcap=softcap, use_kernel=True)
+    want = ref.decode_attention_appended_ref(q, kc, vc, lo, hi, skip, kn, vn,
+                                             softcap=softcap)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+    valid = cache_valid_mask_pre_write(pos, w, 0)
+    dense = layers.decode_attention_appended(
+        q[:, None], kc, vc, valid, kn[:, None], vn[:, None], softcap)[:, 0]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(dense), atol=1e-5)
+
+
+def test_decode_attention_appended_ring_skip(key):
+    """Ring-buffer eviction: the skip slot (about to be overwritten by the
+    incoming token) must not attend — matching the dense path's
+    cache_valid_mask_pre_write ring semantics."""
+    from repro.models import layers
+    from repro.models.cache import cache_valid_mask_pre_write
+
+    b, h, kv, dh, w = 2, 8, 2, 64, 48          # w == sliding window
+    ks = jax.random.split(key, 6)
+    q = jax.random.normal(ks[0], (b, h, dh))
+    kc = jax.random.normal(ks[1], (b, w, kv, dh))
+    vc = jax.random.normal(ks[2], (b, w, kv, dh))
+    kn = jax.random.normal(ks[3], (b, kv, dh))
+    vn = jax.random.normal(ks[4], (b, kv, dh))
+    pos = jnp.array([w + 13, 20])               # lane 0 wrapped, lane 1 not
+    lo = jnp.zeros((b,), jnp.int32)
+    hi = jnp.minimum(pos, w)
+    skip = jnp.where(pos >= w, pos % w, -1)
+    got = ops.decode_attention_appended(q, kc, vc, lo, hi, skip, kn, vn,
+                                        use_kernel=True)
+    valid = cache_valid_mask_pre_write(pos, w, w)
+    dense = layers.decode_attention_appended(
+        q[:, None], kc, vc, valid, kn[:, None], vn[:, None])[:, 0]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(dense), atol=1e-5)
+    # the evicted slot's K must have no influence
+    kc2 = kc.at[0, int(pos[0]) % w].add(9.0)
+    got2 = ops.decode_attention_appended(q, kc2, vc, lo, hi, skip, kn, vn,
+                                         use_kernel=True)
+    np.testing.assert_allclose(np.asarray(got[0]), np.asarray(got2[0]),
+                               atol=1e-6)
+
+
+def test_decode_attention_appended_int8_dequant_inputs(key):
+    """Parity on a dequantized int8 KV cache — the engine's kv_quant serving
+    path feeds the kernel quantize→dequantize round-tripped K/V."""
+    from repro.models.cache import dequantize_kv, quantize_kv
+
+    b, h, kv, dh, w = 2, 8, 4, 64, 200
+    ks = jax.random.split(key, 6)
+    q = jax.random.normal(ks[0], (b, h, dh))
+    kq, ksc = quantize_kv(jax.random.normal(ks[1], (b, w, kv, dh)))
+    vq, vsc = quantize_kv(jax.random.normal(ks[2], (b, w, kv, dh)))
+    kc = dequantize_kv(kq, ksc, jnp.float32)
+    vc = dequantize_kv(vq, vsc, jnp.float32)
+    kn = jax.random.normal(ks[3], (b, kv, dh))
+    vn = jax.random.normal(ks[4], (b, kv, dh))
+    pos = jax.random.randint(ks[5], (b,), 1, w)
+    lo = jnp.zeros((b,), jnp.int32)
+    skip = jnp.full((b,), -1, jnp.int32)
+    got = ops.decode_attention_appended(q, kc, vc, lo, pos, skip, kn, vn,
+                                        use_kernel=True)
+    want = ref.decode_attention_appended_ref(q, kc, vc, lo, pos, skip, kn, vn)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_decode_step_attn_impl_pallas_matches_dense(key):
+    """decode_step with attn_impl='pallas' (the flash-decode kernel) must
+    match the dense backend on the real model hot path."""
+    from repro.configs import get_reduced
+    from repro.models import model as M
+
+    cfg = get_reduced("qwen3-8b")
+    params = M.init_params(cfg, key)
+    prompts = jnp.asarray(np.array([[1, 100, 101], [1, 102, 103]], np.int32))
+    toks = np.array([[5, 7, 9], [6, 8, 10]], np.int32)
+    outs = {}
+    for impl in ("dense", "pallas"):
+        _, _, cache = M.prefill(cfg, params, prompts, cache_len=12,
+                                moe_impl="dense", compute_dtype="float32")
+        logits_seq = []
+        for t in range(toks.shape[1]):
+            logits, _, cache = M.decode_step(
+                cfg, params, cache, jnp.asarray(toks[:, t : t + 1]),
+                moe_impl="dense", compute_dtype="float32", attn_impl=impl)
+            logits_seq.append(np.asarray(logits[:, 0]))
+        outs[impl] = np.stack(logits_seq)
+    np.testing.assert_allclose(outs["pallas"], outs["dense"], atol=2e-5)
+
+
+def test_ops_interpret_autodetect_off_tpu(key):
+    """ops-level interpret=None must resolve via default_interpret (True on
+    this CPU host) for every kernel — no caller changes on TPU."""
+    from repro.kernels.probe_score import default_interpret
+
+    assert default_interpret() == (jax.default_backend() != "tpu")
+    b, h, kv, dh, w = 1, 4, 2, 64, 64
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, h, dh))
+    kc = jax.random.normal(ks[1], (b, w, kv, dh))
+    vc = jax.random.normal(ks[2], (b, w, kv, dh))
+    out = ops.decode_attention(q, kc, vc, jnp.array([w]))   # no interpret arg
+    assert bool(jnp.isfinite(out).all())
+    x = jax.random.normal(ks[0], (1, 32, 8, 16)) * 0.3
+    dA = -jax.nn.softplus(jax.random.normal(ks[1], (1, 32, 8)))
+    Bm = jax.random.normal(ks[2], (1, 32, 8)) * 0.3
+    y, st = ops.ssd_chunk_scan(x, dA, Bm, Bm, 16)           # no interpret arg
+    assert bool(jnp.isfinite(y).all()) and bool(jnp.isfinite(st).all())
+
+
 def test_probe_score_backend_autodetect(key):
     """interpret=None resolves from the backend (compiled on TPU, interpreted
     elsewhere), and the auto path matches controller.score_step head
