@@ -58,42 +58,50 @@ def bench_serve_loop(emit, lane_counts=(2, 8, 16), max_new=64, iters=3):
         })
 
 
-def _mixed_difficulty_requests(n_req: int, short: int, long_: int,
-                               frac_long: float, seed: int = 0):
+def _mixed_difficulty_budgets(n_req: int, short: int, long_: int,
+                              frac_long: float, seed: int = 0):
     """Bimodal think lengths via per-request decode budgets (policy='full'
     decodes exactly max_new tokens): the heterogeneous-difficulty regime
     thought calibration targets, where wave scheduling stalls every lane on
     the slowest wave-mate."""
-    from repro.data.traces import BOS
-    from repro.serving import ServeRequest
-
     rng = np.random.RandomState(seed)
     n_long = max(int(round(n_req * frac_long)), 1)
     budgets = np.array([long_] * n_long + [short] * (n_req - n_long))
     rng.shuffle(budgets)
-    return [ServeRequest(uid=i, prompt=np.array([BOS, 40 + i % 64], np.int32),
-                         max_new=int(m)) for i, m in enumerate(budgets)]
+    return budgets
 
 
 def bench_serve_continuous(emit, *, lanes=8, n_req=24, short=8, long_=192,
                            frac_long=0.25, chunk=16, iters=3,
-                           smoke=False, out_path=BENCH_SERVE_PATH):
+                           smoke=False, out_path=BENCH_SERVE_PATH,
+                           arch="qwen3-8b"):
     """Wave vs continuous scheduling tokens/sec on a mixed-difficulty stream.
 
     Each mode emits the SAME per-request tokens (greedy/float32, parity
     enforced by tests/test_scheduler.py); the delta is pure scheduling: wave
     lanes idle until the slowest wave-mate finishes, continuous lanes refill
-    the moment they free.  Appends an entry to ``BENCH_serve.json`` so the
-    serving-perf trajectory is tracked across PRs.  ``smoke=True`` shrinks to
-    a 2-chunk CI canary that still exercises admit/retire/refill.
+    the moment they free.  ``arch`` selects the model family (the family
+    matrix sweeps ``common.SERVE_ARCHS``: dense/ssm/hybrid/audio/vlm —
+    cross-attn archs get a per-request stub encoder ctx).  Appends an entry
+    to ``BENCH_serve.json`` so the serving-perf trajectory is tracked across
+    PRs.  ``smoke=True`` shrinks to a 2-chunk CI canary that still exercises
+    admit/retire/refill.
     """
-    from benchmarks.common import serve_fixture
+    from benchmarks.common import serve_cfg, serve_requests
+    from repro.models import model as M
+    from repro.core import controller as ctrl_mod
+    from repro.data.traces import BOUNDARY_IDS, MARKER_IDS
     from repro.serving import Engine
 
     if smoke:
         lanes, n_req, short, long_, chunk, iters = 2, 4, 4, 28, 16, 1
-    cfg, params, ctrl, pp, _ = serve_fixture(lanes, max_new=long_)
-    reqs = _mixed_difficulty_requests(n_req, short, long_, frac_long)
+    cfg = serve_cfg(arch)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    ctrl = ctrl_mod.ControllerConfig(BOUNDARY_IDS, MARKER_IDS, window=10,
+                                     min_steps=2, probe_dim=16)
+    pp = ctrl_mod.init_probe_params(cfg.d_model, 16)
+    budgets = _mixed_difficulty_budgets(n_req, short, long_, frac_long)
+    reqs = serve_requests(cfg, n_req, budgets)
 
     tok_s, stats, emitted_by = {}, {}, {}
     for mode in ("wave", "continuous"):
@@ -113,8 +121,9 @@ def bench_serve_continuous(emit, *, lanes=8, n_req=24, short=8, long_=192,
     assert emitted_by["wave"] == emitted_by["continuous"], emitted_by
 
     entry = {
-        "case": f"serve_continuous_lanes{lanes}_req{n_req}"
+        "case": f"serve_continuous_{cfg.family}_lanes{lanes}_req{n_req}"
                 + ("_smoke" if smoke else ""),
+        "arch": arch, "family": cfg.family,
         "lanes": lanes, "requests": n_req, "short": short, "long": long_,
         "total_tokens": emitted_by["wave"],
         "tok_s_wave": round(tok_s["wave"], 1),

@@ -1,0 +1,75 @@
+"""CI gate: fail when the continuous/wave serving speedup regresses.
+
+``python -m benchmarks.check_serve_regression --fresh ci_serve.json``
+
+Compares every entry of a freshly produced serve-bench file (see
+``benchmarks.run --only serve``) against the latest committed baseline entry
+with the same ``case`` in ``BENCH_serve.json``.  The guarded number is the
+*scheduling* win — ``tok_s_continuous / tok_s_wave`` — which is robust to
+absolute-throughput noise on shared CI runners (both schedulers run the same
+model on the same machine back to back).  A fresh ratio more than
+``--tolerance`` (default 30%) below the baseline ratio fails the step; cases
+with no committed baseline pass with a note (new family/shape).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def load(path: str) -> list:
+    with open(path) as f:
+        data = json.load(f)
+    if not isinstance(data, list):
+        raise SystemExit(f"{path}: expected a JSON list of bench entries")
+    return data
+
+
+def latest_by_case(entries: list) -> dict:
+    out = {}
+    for e in entries:                 # file is append-only: last entry wins
+        out[e["case"]] = e
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fresh", required=True,
+                    help="serve-bench JSON produced by this run")
+    ap.add_argument("--baseline", default="BENCH_serve.json",
+                    help="committed baseline (default: BENCH_serve.json)")
+    ap.add_argument("--tolerance", type=float, default=0.30,
+                    help="allowed fractional drop in continuous/wave ratio")
+    args = ap.parse_args()
+
+    fresh = load(args.fresh)
+    base = latest_by_case(load(args.baseline))
+    if not fresh:
+        print("FAIL: fresh bench file is empty")
+        return 1
+
+    failed = False
+    for e in fresh:
+        case, got = e["case"], float(e["speedup"])
+        ref = base.get(case)
+        if ref is None:
+            print(f"  new  {case}: speedup {got:.2f}x (no committed baseline)")
+            continue
+        want = float(ref["speedup"])
+        floor = (1.0 - args.tolerance) * want
+        status = "ok  " if got >= floor else "FAIL"
+        failed |= got < floor
+        print(f"  {status} {case}: speedup {got:.2f}x "
+              f"(baseline {want:.2f}x, floor {floor:.2f}x)")
+    if failed:
+        print(f"FAIL: continuous/wave tok/s ratio regressed more than "
+              f"{args.tolerance:.0%} below the committed baseline")
+        return 1
+    print("serve-bench regression gate: green")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

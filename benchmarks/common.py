@@ -80,27 +80,56 @@ def _model_cfg():
     return get_reduced(ARCH).replace(vocab_size=512, probe_dim=PROBE_DIM)
 
 
-def serve_fixture(lanes: int, *, max_new: int = 64, seed: int = 0):
+# one serving-benchmark arch per model family (the family matrix CI sweeps
+# these; "all" in benchmarks.run fans out over the tuple)
+SERVE_ARCHS = ("qwen3-8b", "mamba2-2.7b", "hymba-1.5b", "musicgen-large",
+               "llama-3.2-vision-11b")
+
+
+def serve_cfg(arch: str = ARCH):
+    """Deliberately tiny serving config for ``arch`` so loop/scheduler
+    benchmarks measure dispatch + syncs + bookkeeping, not model FLOPs."""
+    cfg = get_reduced(arch)
+    kw = dict(vocab_size=256)
+    # vlm needs num_layers % every_n_layers == 0 with >= 1 super-block
+    kw["num_layers"] = cfg.cross_attn.every_n_layers if cfg.family == "vlm" else 1
+    if cfg.num_codebooks:
+        kw["num_codebooks"] = 0       # engine serves one token stream
+    if cfg.family == "dense":
+        kw.update(d_model=128, d_ff=256, num_heads=2, num_kv_heads=1)
+    return cfg.replace(**kw)
+
+
+def serve_requests(cfg, n: int, max_new, seed: int = 0):
+    """``n`` requests with per-request stub encoder ctx for cross-attention
+    families.  ``max_new``: int (uniform) or per-request sequence."""
+    from repro.data.traces import BOS
+    from repro.serving import ServeRequest, stub_ctx
+
+    rng = np.random.default_rng(seed)
+    budgets = [max_new] * n if isinstance(max_new, int) else list(max_new)
+    return [ServeRequest(uid=i, prompt=np.array([BOS, 40 + i % 64], np.int32),
+                         max_new=int(budgets[i]), ctx=stub_ctx(cfg, rng))
+            for i in range(n)]
+
+
+def serve_fixture(lanes: int, *, max_new: int = 64, seed: int = 0,
+                  arch: str = ARCH):
     """Toy serving setup for the decode-loop benchmarks: a deliberately tiny
-    model (1 layer, d_model=128) so the measurement isolates the *loop* —
+    model (see ``serve_cfg``) so the measurement isolates the *loop* —
     dispatch, device→host syncs, Python bookkeeping — rather than model
     FLOPs, mirroring the TPU serving regime where per-token compute is
     sub-millisecond. ``policy='full'`` decodes a fixed ``max_new`` tokens per
     lane, so tokens/sec is directly comparable between the host-loop and
     scanned drivers."""
     from repro.core import controller as ctrl_mod
-    from repro.data.traces import BOS
-    from repro.serving import ServeRequest
 
-    cfg = get_reduced(ARCH).replace(num_layers=1, d_model=128, d_ff=256,
-                                    num_heads=2, num_kv_heads=1,
-                                    vocab_size=256)
+    cfg = serve_cfg(arch)
     params = M.init_params(cfg, jax.random.PRNGKey(seed))
     ctrl = ctrl_mod.ControllerConfig(BOUNDARY_IDS, MARKER_IDS, window=WINDOW,
                                      min_steps=2, probe_dim=16)
     pp = ctrl_mod.init_probe_params(cfg.d_model, 16)
-    reqs = [ServeRequest(uid=i, prompt=np.array([BOS, 40 + i], np.int32),
-                         max_new=max_new) for i in range(lanes)]
+    reqs = serve_requests(cfg, lanes, max_new, seed)
     return cfg, params, ctrl, pp, reqs
 
 

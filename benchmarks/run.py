@@ -26,6 +26,10 @@ def main() -> None:
                     help="retrain the LM instead of using cached artifacts")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny CI-sized run (serve bench only)")
+    ap.add_argument("--serve-arch", default="all",
+                    help="serve bench arch: an arch id from "
+                         "benchmarks.common.SERVE_ARCHS, or 'all' to sweep "
+                         "the family matrix")
     ap.add_argument("--out", default="experiments/bench")
     args = ap.parse_args()
 
@@ -74,7 +78,11 @@ def main() -> None:
         bench_roofline.run(pipe, emit)
     if "serve" in sel:
         from benchmarks import bench_kernels
-        bench_kernels.bench_serve_continuous(emit, smoke=args.smoke)
+        from benchmarks.common import SERVE_ARCHS
+        archs = SERVE_ARCHS if args.serve_arch == "all" else (args.serve_arch,)
+        for arch in archs:
+            bench_kernels.bench_serve_continuous(emit, smoke=args.smoke,
+                                                 arch=arch)
 
     path = os.path.join(args.out, "results.json")
     with open(path, "w") as f:

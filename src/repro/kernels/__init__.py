@@ -4,4 +4,5 @@ from repro.kernels.ops import (
     decode_attention_appended,
     probe_score,
     ssd_chunk_scan,
+    ssd_chunk_scan_masked,
 )

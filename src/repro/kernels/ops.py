@@ -20,6 +20,7 @@ from repro.kernels.decode_attention import (
 )
 from repro.kernels.probe_score import probe_score as _probe_score
 from repro.kernels.ssd_scan import ssd_chunk_scan as _ssd_chunk_scan
+from repro.kernels.ssd_scan import ssd_chunk_scan_masked as _ssd_chunk_scan_masked
 
 
 def probe_score(reps, pca_mean, pca_comps, w1, b1, w2, b2,
@@ -55,3 +56,14 @@ def ssd_chunk_scan(x, dA, Bm, Cm, chunk: int = 256,
     if use_kernel:
         return _ssd_chunk_scan(x, dA, Bm, Cm, chunk, interpret=interpret)
     return ref.ssd_chunk_scan_ref(x, dA, Bm, Cm, chunk)
+
+
+def ssd_chunk_scan_masked(x, dA, Bm, Cm, plen, chunk: int = 256,
+                          *, use_kernel: bool = True,
+                          interpret: bool | None = None):
+    """Plen-masked SSD scan: positions >= plen are exact no-ops in the
+    recurrence (bucketed slot prefill; see kernels.ssd_scan)."""
+    if use_kernel:
+        return _ssd_chunk_scan_masked(x, dA, Bm, Cm, plen, chunk,
+                                      interpret=interpret)
+    return ref.ssd_chunk_scan_masked_ref(x, dA, Bm, Cm, plen, chunk)

@@ -82,3 +82,13 @@ def ssd_chunk_scan_ref(x, dA, Bm, Cm, chunk):
     from repro.models.ssm import ssd_scan
 
     return ssd_scan(x, dA, Bm, Cm, chunk)
+
+
+def ssd_chunk_scan_masked_ref(x, dA, Bm, Cm, plen, chunk):
+    """Oracle for the plen-masked SSD scan: zero the discretized input and
+    decay exponent past each row's ``plen`` (so pads are exact no-ops in the
+    recurrence), then run the unmasked oracle."""
+    pad = jnp.arange(x.shape[1])[None, :] >= plen[:, None]
+    x = jnp.where(pad[:, :, None, None], jnp.zeros((), x.dtype), x)
+    dA = jnp.where(pad[:, :, None], jnp.zeros((), dA.dtype), dA)
+    return ssd_chunk_scan_ref(x, dA, Bm, Cm, chunk)

@@ -107,6 +107,35 @@ def ssd_chunk_scan(x, dA, Bm, Cm, chunk: int = 256, *,
                                interpret=interpret, tile_h=tile_h)
 
 
+def ssd_chunk_scan_masked(x, dA, Bm, Cm, plen, chunk: int = 256, *,
+                          interpret: bool | None = None, tile_h: int = TILE_H):
+    """Plen-masked SSD chunk scan for right-padded (bucketed) prefill.
+
+    ``plen``: (B,) true sequence lengths.  Positions >= plen contribute
+    *nothing* to real outputs or the final state: their discretized input is
+    zeroed (no ΔS contribution) and their decay exponent is zeroed (chunk
+    decay ``exp(0) = 1``, so the carried state passes through pad chunks
+    untouched).  This is the same algebra ``model.prefill`` uses when it
+    zeroes ``dt`` past plen — folded here into (x, dA) so the Pallas program
+    is reused unchanged; outputs at positions < plen and the final state are
+    bit-identical to running the unpadded prefix.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    return _ssd_chunk_scan_masked_jit(x, dA, Bm, Cm, plen, chunk=chunk,
+                                      interpret=interpret, tile_h=tile_h)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret", "tile_h"))
+def _ssd_chunk_scan_masked_jit(x, dA, Bm, Cm, plen, *, chunk: int,
+                               interpret: bool, tile_h: int):
+    pad = jnp.arange(x.shape[1])[None, :] >= plen[:, None]          # (B, S)
+    x = jnp.where(pad[:, :, None, None], jnp.zeros((), x.dtype), x)
+    dA = jnp.where(pad[:, :, None], jnp.zeros((), dA.dtype), dA)
+    return _ssd_chunk_scan_jit(x, dA, Bm, Cm, chunk=chunk,
+                               interpret=interpret, tile_h=tile_h)
+
+
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret", "tile_h"))
 def _ssd_chunk_scan_jit(x, dA, Bm, Cm, *, chunk: int, interpret: bool,
                         tile_h: int):

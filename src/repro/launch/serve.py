@@ -20,7 +20,7 @@ from repro.configs import ARCH_IDS, get_reduced
 from repro.core import controller as ctrl_mod
 from repro.data.traces import BOS, BOUNDARY_IDS, MARKER_IDS, TraceConfig, generate_dataset
 from repro.models import model as model_mod
-from repro.serving import Engine, ServeRequest
+from repro.serving import Engine, ServeRequest, stub_ctx
 from repro.training import load_checkpoint
 
 
@@ -54,6 +54,12 @@ def main():
     args = ap.parse_args()
 
     cfg = get_reduced(args.arch).replace(vocab_size=512)
+    if cfg.num_codebooks:
+        # the engine samples one token stream per lane; serve the audio
+        # backbone single-stream (the EnCodec codebook fan-out is a stub)
+        print(f"note: serving {args.arch} with num_codebooks=0 "
+              f"(engine is single-stream)")
+        cfg = cfg.replace(num_codebooks=0)
     key = jax.random.PRNGKey(args.seed)
     params = model_mod.init_params(cfg, key)
     if args.ckpt:
@@ -87,8 +93,10 @@ def main():
 
     rng = np.random.default_rng(args.seed)
     traces = generate_dataset(args.requests, TraceConfig(), seed=args.seed + 7)
+    # cross-attn families get a per-request stub conditioning embedding, as
+    # a real frontend would attach per image/audio clip
     reqs = [ServeRequest(uid=i, prompt=t.tokens[:6].astype(np.int32),
-                         max_new=args.max_new)
+                         max_new=args.max_new, ctx=stub_ctx(cfg, rng))
             for i, t in enumerate(traces)]
     results = eng.run(reqs)
 

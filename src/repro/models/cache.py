@@ -111,28 +111,41 @@ def quantize_prefill_cache(cache: dict) -> dict:
 #
 # Cache leaves follow one convention: 1-D leaves are per-lane scalars
 # ((B,) — ``pos`` and friends); every other leaf is layer-stacked with the
-# lane axis second ((L, B, ...) — k/v/scales/ssm/cross).  The two helpers
-# below rely on it so they work for every family's cache pytree (and for the
-# scripted fakes in tests) without knowing the keys.
+# lane axis SECOND, i.e. (L, B, ...).  That covers every family's pytree:
+# attention ``k``/``v`` (+ int8 ``k_scale``/``v_scale``), the SSM state dict
+# leaves ``ssm.state`` (L, B, H, P, N) and ``ssm.conv_x/B/C``
+# (L, B, conv_width-1, C), and the per-request cross-attention context
+# ``cross_k``/``cross_v`` (L_cross, B, T, KV, D).  The helpers below rely
+# only on this axis convention (via ``jax.tree.map``), so they work for every
+# family — and for the scripted fakes in tests — without knowing the keys.
 # ---------------------------------------------------------------------------
 
 def _lane_axis(leaf: jax.Array) -> int:
+    """Lane axis of a cache leaf: 0 for per-lane scalars ((B,)), 1 for
+    layer-stacked leaves ((L, B, ...) — attention K/V + scales, ssm state
+    dict leaves, cross-K/V)."""
     return 0 if leaf.ndim == 1 else 1
 
 
 def replicate_cache_lanes(small: dict, lanes: int) -> dict:
     """Tile a batch=1 cache to ``lanes`` lanes along each leaf's lane axis.
 
-    Used once to materialize the continuous engine's persistent stacked cache
-    from the first request's prefill; every lane is subsequently overwritten
-    by :func:`scatter_cache_lane` before it decodes live tokens."""
+    Family-agnostic: applies to every leaf of the cache pytree — attention
+    K/V (+ quant scales), the nested ssm state dict (``state``,
+    ``conv_x/B/C``), and per-request ``cross_k``/``cross_v`` — via the
+    ``_lane_axis`` convention.  Used once to materialize the continuous
+    engine's persistent stacked cache from the first request's prefill; every
+    lane is subsequently overwritten by :func:`scatter_cache_lane` before it
+    decodes live tokens."""
     return jax.tree.map(
         lambda a: jnp.repeat(a, lanes, axis=_lane_axis(a)), small)
 
 
 def scatter_cache_lane(cache: dict, small: dict, lane) -> dict:
     """Scatter a batch=1 cache (one prefilled request) into lane ``lane`` of
-    a live stacked cache.  ``lane`` may be traced."""
+    a live stacked cache.  ``lane`` may be traced.  Like
+    :func:`replicate_cache_lanes` this is family-agnostic: ssm state and
+    cross-K/V leaves scatter exactly like attention K/V."""
     def one(big, sm):
         if _lane_axis(big) == 0:
             return big.at[lane].set(sm[0])

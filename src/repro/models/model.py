@@ -325,6 +325,7 @@ def prefill(
     tokens: jax.Array,
     ctx: Optional[jax.Array] = None,
     *,
+    plen: Optional[jax.Array] = None,
     use_window: bool = False,
     cache_len: int | None = None,
     moe_impl: str = "dispatch",
@@ -340,6 +341,13 @@ def prefill(
     ``cache_len``: total cache slots to allocate (>= prompt length); defaults
     to the prompt length (no decode headroom). Ignored when a sliding window
     is active (ring buffers are window-sized).
+
+    ``plen`` (optional, (B,) int32, traced): true prompt lengths when
+    ``tokens`` is RIGHT-padded to a bucket.  Attention needs no masking (the
+    trailing pads are causally invisible and their K/V slots are excluded by
+    the decode valid-mask until overwritten), but the SSM/hybrid recurrence
+    does: the SSD scan and conv tails are plen-masked so pad positions fold
+    nothing into the carried state (see ``_ssm_block_with_state``).
 
     Implemented as forward + cache construction from per-layer K/V recompute is
     wasteful; instead we thread cache writes through the same scan.
@@ -402,7 +410,7 @@ def prefill(
         ao = layers.attn_output(cfg, lp["attn"],
                                 layers.causal_attention(q, k, v, window=window or _train_window(cfg)))
         # SSD with final state for the cache
-        so, st = _ssm_block_with_state(cfg, lp["ssm"], h)
+        so, st = _ssm_block_with_state(cfg, lp["ssm"], h, plen)
         fused = 0.5 * (layers.rmsnorm(ao, lp["fuse_a"], cfg.norm_eps)
                        + layers.rmsnorm(so, lp["fuse_s"], cfg.norm_eps))
         xc = xc + cfg.residual_scale * fused
@@ -414,7 +422,7 @@ def prefill(
     def ssm_body(carry, lp):
         xc, aux = carry
         h = layers.apply_norm(cfg, lp["ln1"], xc)
-        y, st = _ssm_block_with_state(cfg, lp["ssm"], h)
+        y, st = _ssm_block_with_state(cfg, lp["ssm"], h, plen)
         return (_shard_residual(xc + cfg.residual_scale * y), aux), st
 
     cache: dict = {"pos": jnp.full((b,), s, jnp.int32)}
@@ -476,17 +484,25 @@ def prefill_into_slot(
     plen,
     *,
     cache_len: int,
+    ctx: Optional[jax.Array] = None,
     moe_impl: str = "dispatch",
     compute_dtype: str = "bfloat16",
 ):
-    """Prefill ONE request for continuous-batching admission.
+    """Prefill ONE request for continuous-batching admission (any family).
 
     ``tokens``: (1, S) prompt right-padded to a bucket length S >= ``plen``
-    (the true prompt length).  Because attention is causal, the trailing pads
-    are invisible to positions < plen, so logits/hidden/cache content for the
-    real prompt are bit-identical to an unpadded prefill — while the jitted
-    prefill compiles once per (bucket, cache_len) instead of once per prompt
-    length.
+    (the true prompt length).  For attention caches the trailing pads are
+    causally invisible to positions < plen; for SSM/hybrid the prefill runs
+    plen-masked (zero ``dt``, conv tails gathered before ``plen``) so pad
+    positions fold nothing into the carried recurrent state.  Either way
+    logits/hidden/cache content for the real prompt are bit-identical to an
+    unpadded prefill — while the jitted prefill compiles once per
+    (bucket, cache_len) instead of once per prompt length.
+
+    ``ctx``: (1, T, C) per-request encoder output (vision patches / audio
+    conditioning) for cross-attention families; the resulting per-request
+    cross-K/V live as ordinary per-lane cache leaves, so audio/vlm lanes are
+    admitted independently.
 
     Returns ``(logits (1,1,V) at position plen-1, hidden_last (1, D),
     cache)`` with ``cache["pos"] = plen``; the cache is batch=1 and
@@ -495,15 +511,51 @@ def prefill_into_slot(
     slots the decode valid-mask excludes and the first decoded tokens
     overwrite.
     """
+    plen = jnp.asarray(plen, jnp.int32)
     _, hidden, cache = prefill(
-        cfg, params, tokens, cache_len=cache_len, moe_impl=moe_impl,
-        compute_dtype=compute_dtype)
-    return _slot_prefill_finalize(cfg, params, hidden, cache,
-                                  jnp.asarray(plen, jnp.int32))
+        cfg, params, tokens, ctx,
+        plen=jnp.broadcast_to(plen, (tokens.shape[0],)) if cfg.uses_ssm else None,
+        cache_len=cache_len, moe_impl=moe_impl, compute_dtype=compute_dtype)
+    return _slot_prefill_finalize(cfg, params, hidden, cache, plen)
 
 
-def _ssm_block_with_state(cfg, p, xin):
-    """Like ssm.ssm_block but also returns the decode state dict."""
+# Families with a pad-invariant slot-prefill path (continuous batching):
+# attention caches rely on causal invisibility of right-pads, ssm/hybrid on
+# the plen-masked scan, audio/vlm additionally on per-lane cross-K/V leaves.
+SLOT_PREFILL_FAMILIES = frozenset(
+    {"dense", "moe", "ssm", "hybrid", "audio", "vlm"})
+
+
+def slot_prefill_unsupported(cfg) -> Optional[str]:
+    """Capability probe for continuous-batching admission.
+
+    Returns ``None`` when ``prefill_into_slot`` admission is exact for
+    ``cfg``, else a human-readable reason.  The serving engine consults this
+    instead of hard-coding a family list, so a new family (or a config shape
+    the slot path cannot serve) fails with the actual reason rather than a
+    stale allowlist error.
+    """
+    if cfg.family not in SLOT_PREFILL_FAMILIES:
+        return f"family {cfg.family!r} has no pad-invariant slot-prefill path"
+    if cfg.num_codebooks:
+        return (f"multi-codebook streams (num_codebooks={cfg.num_codebooks}) "
+                "decode (B, K) tokens per step; the serving engine samples a "
+                "single token stream per lane")
+    return None
+
+
+def _ssm_block_with_state(cfg, p, xin, plen=None):
+    """Like ssm.ssm_block but also returns the decode state dict.
+
+    ``plen`` (optional, (B,) int32, possibly traced): true prompt lengths of a
+    right-padded batch.  When given, the block runs *plen-masked*: the
+    effective step size ``dt`` is zeroed for positions >= plen, so pad
+    positions fold nothing into the carried SSD state (``dA = 0`` means chunk
+    decay ``exp(0) = 1`` and ``dt·x = 0`` means no input contribution), and
+    the conv tails are gathered from the last real positions instead of the
+    pad tail.  The returned state is then bit-identical to an unpadded
+    prefill — the property continuous-batching admission relies on.
+    """
     s = cfg.ssm
     d = cfg.d_model
     h, hd = s.num_heads(d), s.head_dim
@@ -520,6 +572,11 @@ def _ssm_block_with_state(cfg, p, xin):
     Cm, cc = ssm._causal_conv(Cm, p["conv_C"])
 
     dt = jax.nn.softplus(dt + p["dt_bias"])
+    if plen is not None:
+        # mask AFTER softplus: softplus is strictly positive, but an exact
+        # dt = 0 is what makes a pad position a perfect no-op in the scan
+        pad_pos = jnp.arange(xin.shape[1])[None, :] >= plen[:, None]
+        dt = jnp.where(pad_pos[..., None], 0.0, dt)
     A = -jnp.exp(p["A_log"])
     dA = dt * A
     xh = xi.reshape(*xi.shape[:-1], h, hd)
@@ -529,12 +586,20 @@ def _ssm_block_with_state(cfg, p, xin):
     y = layers.rmsnorm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
     y = jnp.einsum("bse,ed->bsd", y, p["wo"].astype(xin.dtype))
     kw = s.conv_width - 1
-    state = {
-        "state": final_state,
-        "conv_x": xi_pre[:, -kw:] if xi_pre.shape[1] >= kw else jnp.pad(xi_pre, ((0, 0), (kw - xi_pre.shape[1], 0), (0, 0))),
-        "conv_B": Bm_pre[:, -kw:] if Bm_pre.shape[1] >= kw else jnp.pad(Bm_pre, ((0, 0), (kw - Bm_pre.shape[1], 0), (0, 0))),
-        "conv_C": Cm_pre[:, -kw:] if Cm_pre.shape[1] >= kw else jnp.pad(Cm_pre, ((0, 0), (kw - Cm_pre.shape[1], 0), (0, 0))),
-    }
+    if plen is None:
+        state = {
+            "state": final_state,
+            "conv_x": xi_pre[:, -kw:] if xi_pre.shape[1] >= kw else jnp.pad(xi_pre, ((0, 0), (kw - xi_pre.shape[1], 0), (0, 0))),
+            "conv_B": Bm_pre[:, -kw:] if Bm_pre.shape[1] >= kw else jnp.pad(Bm_pre, ((0, 0), (kw - Bm_pre.shape[1], 0), (0, 0))),
+            "conv_C": Cm_pre[:, -kw:] if Cm_pre.shape[1] >= kw else jnp.pad(Cm_pre, ((0, 0), (kw - Cm_pre.shape[1], 0), (0, 0))),
+        }
+    else:
+        state = {
+            "state": final_state,
+            "conv_x": ssm.conv_tail(xi_pre, plen, kw),
+            "conv_B": ssm.conv_tail(Bm_pre, plen, kw),
+            "conv_C": ssm.conv_tail(Cm_pre, plen, kw),
+        }
     return y, state
 
 

@@ -140,6 +140,24 @@ def _causal_conv(x: jax.Array, w: jax.Array, carry: jax.Array | None = None):
     return jax.nn.silu(out), new_carry
 
 
+def conv_tail(seq: jax.Array, plen: jax.Array, kw: int) -> jax.Array:
+    """Causal-conv decode history: the last ``kw`` positions strictly before
+    ``plen``, left-zero-padded when ``plen < kw``.
+
+    ``seq``: (B, S, C) pre-activation conv inputs; ``plen``: (B,) true
+    (unpadded) sequence lengths, possibly traced.  For a right-padded prompt
+    this skips the bucket-pad positions entirely, so the first decoded token
+    convolves over exactly the history an unpadded prefill would have left.
+    """
+    if kw <= 0:
+        return seq[:, :0]
+    idx = plen[:, None] - kw + jnp.arange(kw)[None, :]            # (B, kw)
+    valid = idx >= 0
+    g = jnp.take_along_axis(
+        seq, jnp.clip(idx, 0, seq.shape[1] - 1)[..., None], axis=1)
+    return jnp.where(valid[..., None], g, jnp.zeros((), seq.dtype))
+
+
 # ---------------------------------------------------------------------------
 # full block
 # ---------------------------------------------------------------------------

@@ -4,6 +4,7 @@ from repro.serving.engine import (
     ServeResult,
     make_serve_step,
     make_serve_steps,
+    stub_ctx,
 )
 from repro.serving.sampling import decode_key, sample_tokens
 from repro.serving.scheduler import SlotScheduler, bucket_length, run_continuous

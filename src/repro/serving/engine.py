@@ -54,6 +54,22 @@ class ServeRequest:
     uid: int
     prompt: np.ndarray                  # (P,) int32
     max_new: int = 256
+    # Per-request encoder output for cross-attention families (audio/vlm):
+    # (num_context_tokens, context_dim) float. None -> zeros (unconditioned).
+    ctx: Optional[np.ndarray] = None
+
+
+def stub_ctx(cfg, rng: np.random.Generator) -> Optional[np.ndarray]:
+    """Random stub encoder output for a cross-attention request — one
+    (num_context_tokens, context_dim) float32 array, or None for families
+    without cross-attention.  The single source of the ``ServeRequest.ctx``
+    shape contract for the launch CLI, benchmarks, and tests (the real
+    ViT/T5 encoders are stubs throughout this repo)."""
+    if not cfg.uses_cross_attn:
+        return None
+    ca = cfg.cross_attn
+    return rng.standard_normal(
+        (ca.num_context_tokens, ca.context_dim)).astype(np.float32)
 
 
 @dataclass
@@ -174,16 +190,24 @@ class Engine:
         if scheduler == "continuous" and decode_mode != "scan":
             raise ValueError("continuous scheduling drives the scanned chunk "
                              "step; use decode_mode='scan'")
-        if scheduler == "continuous" and (cfg.uses_ssm or cfg.uses_cross_attn):
-            # Admission right-pads prompts to a bucket, which is causally
-            # invisible to attention but NOT to recurrent SSM state (the
-            # prefill scan would fold pad tokens into the carried state), and
-            # cross-attn families need a ctx plumb prefill_into_slot lacks.
+        if scheduler == "continuous":
+            # Capability probe, not a family allowlist: admission is exact for
+            # every family with a pad-invariant slot prefill (attention via
+            # causal invisibility, ssm/hybrid via the plen-masked scan,
+            # audio/vlm via per-lane cross-K/V); anything else reports why.
+            reason = model_mod.slot_prefill_unsupported(cfg)
+            if reason is not None:
+                raise ValueError(
+                    f"scheduler='continuous' cannot serve {cfg.arch_id}: "
+                    f"{reason}; use scheduler='wave'")
+        if kv_quant and (cfg.uses_ssm or cfg.family == "vlm"):
+            # The int8 dequant-on-read path lives in decode_step's append-
+            # cache scan; the hybrid/vlm stacked paths read K/V raw (and ssm
+            # has no attention cache at all), so kv_quant would silently
+            # decode garbage there.
             raise ValueError(
-                "continuous scheduling currently supports attention-cache "
-                "families only (ssm/hybrid/audio/vlm prompts cannot be "
-                "bucket-padded without corrupting recurrent/cross state); "
-                "use scheduler='wave'")
+                f"kv_quant is not supported for family {cfg.family!r} "
+                "(append-cache attention decode path only)")
         if policy == "crop" and crop_budget < 1:
             raise ValueError("crop policy needs crop_budget >= 1 "
                              "(0 would disable the only exit trigger)")
@@ -249,14 +273,37 @@ class Engine:
 
         return admit
 
-    def _prefill(self, prompts: np.ndarray, cache_len: int):
+    def _prefill(self, prompts: np.ndarray, cache_len: int, ctx=None):
         logits, hidden, cache = model_mod.prefill(
-            self.cfg, self.params, jnp.asarray(prompts),
+            self.cfg, self.params, jnp.asarray(prompts), ctx,
             cache_len=cache_len, moe_impl=self.moe_impl,
             compute_dtype=self.compute_dtype)
         if self.kv_quant:
             cache = quantize_prefill_cache(cache)
         return logits, hidden, cache
+
+    def request_ctx(self, req: ServeRequest) -> Optional[np.ndarray]:
+        """Per-request encoder output as a (T, C) float array, or None for
+        families without cross-attention.  A missing ``req.ctx`` serves
+        unconditioned (zeros) rather than failing the request."""
+        if not self.cfg.uses_cross_attn:
+            return None
+        ca = self.cfg.cross_attn
+        if req.ctx is None:
+            return np.zeros((ca.num_context_tokens, ca.context_dim),
+                            np.float32)
+        ctx = np.asarray(req.ctx, np.float32)
+        if ctx.shape != (ca.num_context_tokens, ca.context_dim):
+            raise ValueError(
+                f"request {req.uid}: ctx shape {ctx.shape} != "
+                f"({ca.num_context_tokens}, {ca.context_dim})")
+        return ctx
+
+    def _batch_ctx(self, reqs: Sequence[ServeRequest]):
+        """Stack per-request ctx into the (B, T, C) array prefill consumes."""
+        if not self.cfg.uses_cross_attn:
+            return None
+        return jnp.asarray(np.stack([self.request_ctx(r) for r in reqs]))
 
     def _wave_probe_params(self) -> ctrl_mod.ProbeParams:
         if self.policy != "calibrated":
@@ -288,7 +335,8 @@ class Engine:
         # chunk-1 masked steps; same cache_len in host mode keeps shapes —
         # and therefore float math — identical between the two drivers
         logits, hidden, dcache = self._prefill(
-            prompts, plen + max_new + self.chunk + 8)
+            prompts, plen + max_new + self.chunk + 8,
+            ctx=self._batch_ctx(reqs))
 
         state = ctrl_mod.init_state(b, self.cfg.d_model, self.ctrl.window)
         # per-lane emission budget: lanes sharing a wave stop at their own

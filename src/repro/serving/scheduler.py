@@ -9,12 +9,16 @@ as *slots*:
 
 * **admit** — a pending request is prefilled alone (batch=1, prompt
   right-padded to a power-of-two bucket so the jitted prefill compiles once
-  per bucket, not once per prompt length) and its KV scattered into a free
-  lane of the live stacked cache (``model.prefill_into_slot`` +
+  per bucket, not once per prompt length) and its cache scattered into a
+  free lane of the live stacked cache (``model.prefill_into_slot`` +
   ``cache.scatter_cache_lane``); the lane's controller state is reset and
   seeded with the prefill-argmax token (``controller.reset_lanes`` /
-  ``update_lanes``).  Right-padding is causally invisible to the real
-  prompt, so admission is bit-identical to an unpadded prefill.
+  ``update_lanes``).  Admission is bit-identical to an unpadded prefill for
+  EVERY family: right-padding is causally invisible to attention K/V, the
+  SSM/hybrid prefill runs plen-masked (zero ``dt`` / conv tails gathered
+  before plen, so pads fold nothing into the carried recurrent state), and
+  audio/vlm requests carry their own encoder ``ctx`` whose cross-K/V land
+  as per-lane cache leaves.
 * **decode** — the engine's existing jitted (B, K) ``lax.scan`` chunk step
   runs unchanged; ``lane_done`` lanes are emit-masked no-ops, so the graph
   compiles ONCE for the engine's lifetime regardless of how lanes churn.
@@ -181,10 +185,12 @@ def run_continuous(eng, requests: Sequence[ServeRequest]) -> List[ServeResult]:
             bucket = bucket_length(plen)
             toks = np.zeros((1, bucket), np.int32)
             toks[0, :plen] = act.req.prompt
+            ctx = eng.request_ctx(act.req)
             logits, hid_last, small = model_mod.prefill_into_slot(
                 eng.cfg, eng.params, jnp.asarray(toks), plen,
-                cache_len=w_cache, moe_impl=eng.moe_impl,
-                compute_dtype=eng.compute_dtype)
+                cache_len=w_cache,
+                ctx=None if ctx is None else jnp.asarray(ctx)[None],
+                moe_impl=eng.moe_impl, compute_dtype=eng.compute_dtype)
             if eng.kv_quant:
                 small = eng._quant_fn(small)
             if cache is None:

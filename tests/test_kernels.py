@@ -71,6 +71,37 @@ def test_ssd_chunk_scan(b, s, h, p, n, c, key):
     np.testing.assert_allclose(np.asarray(sa), np.asarray(sb), atol=1e-4)
 
 
+@pytest.mark.parametrize("use_kernel", [True, False])
+def test_ssd_chunk_scan_masked_matches_unpadded_prefix(use_kernel, key):
+    """The plen-masked scan over a right-padded batch must reproduce the
+    unmasked scan over each row's unpadded prefix exactly: outputs at
+    positions < plen AND the final carried state (the bucketed-slot-prefill
+    contract)."""
+    b, s, h, p, n, c = 3, 64, 8, 16, 8, 16
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (b, s, h, p)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (b, s, n)) * 0.3
+    Cm = jax.random.normal(ks[4], (b, s, n)) * 0.3
+    plen = jnp.array([5, 64, 17])
+    ym, sm = ops.ssd_chunk_scan_masked(x, dt * A, Bm, Cm, plen, c,
+                                       use_kernel=use_kernel)
+    for i, pl in enumerate(np.asarray(plen)):
+        # pad the row's real prefix with exact no-op positions (x=0, dA=0) up
+        # to a chunk multiple — the same algebra the mask applies
+        pad = (-int(pl)) % c
+        xi = jnp.pad(x[i : i + 1, :pl], ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dAi = jnp.pad((dt * A)[i : i + 1, :pl], ((0, 0), (0, pad), (0, 0)))
+        Bi = jnp.pad(Bm[i : i + 1, :pl], ((0, 0), (0, pad), (0, 0)))
+        Ci = jnp.pad(Cm[i : i + 1, :pl], ((0, 0), (0, pad), (0, 0)))
+        yi, si = ops.ssd_chunk_scan(xi, dAi, Bi, Ci, c, use_kernel=use_kernel)
+        np.testing.assert_allclose(np.asarray(ym[i, :pl]),
+                                   np.asarray(yi[0, :pl]), atol=1e-5)
+        np.testing.assert_allclose(np.asarray(sm[i]), np.asarray(si[0]),
+                                   atol=1e-5)
+
+
 def test_ssd_kernel_matches_naive_recurrence(key):
     """Chunked SSD (kernel) vs the O(S) per-step recurrence, the ground truth."""
     b, s, h, p, n, c = 1, 32, 2, 8, 4, 8

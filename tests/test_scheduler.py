@@ -290,12 +290,80 @@ def test_continuous_rejects_host_decode_mode(setup):
         Engine(cfg, params, ctrl=ctrl, probe_params=pp, scheduler="nope")
 
 
-def test_continuous_rejects_recurrent_state_families(setup):
-    """Bucket right-padding is causally invisible to attention but folds pad
-    tokens into SSM prefill state — continuous admission must refuse rather
-    than silently corrupt (wave mode remains available)."""
+def test_continuous_capability_probe(setup):
+    """The engine consults ``model.slot_prefill_unsupported`` instead of a
+    family allowlist: every family config is admissible; the remaining
+    unsupported shapes fail with the actual reason."""
     _, _, ctrl, pp = setup
-    ssm_cfg = get_reduced("mamba2-2.7b")
-    with pytest.raises(ValueError, match="attention-cache"):
-        Engine(ssm_cfg, None, ctrl=ctrl, probe_params=pp,
+    for arch in ("mamba2-2.7b", "hymba-1.5b", "llama-3.2-vision-11b"):
+        Engine(get_reduced(arch), None, ctrl=ctrl, probe_params=pp,
+               scheduler="continuous")                 # must not raise
+    # multi-codebook audio streams decode (B, K) tokens per step — the one
+    # config shape the single-stream serving engine still cannot admit
+    cb_cfg = get_reduced("musicgen-large")
+    assert cb_cfg.num_codebooks > 0
+    with pytest.raises(ValueError, match="codebook"):
+        Engine(cb_cfg, None, ctrl=ctrl, probe_params=pp,
                scheduler="continuous")
+    Engine(cb_cfg.replace(num_codebooks=0), None, ctrl=ctrl,
+           probe_params=pp, scheduler="continuous")    # single-stream: fine
+    # unknown future family: the probe reports it has no slot-prefill path
+    from repro.models import model as model_mod
+    assert "retnet" not in model_mod.SLOT_PREFILL_FAMILIES
+    assert model_mod.slot_prefill_unsupported(
+        cb_cfg.replace(family="retnet")) is not None
+
+
+def test_kv_quant_rejected_off_append_cache_path(setup):
+    """decode_step only dequantizes int8 K/V in its append-cache scan; the
+    hybrid/vlm stacked paths (and cache-free ssm) must refuse kv_quant."""
+    _, _, ctrl, pp = setup
+    for arch in ("mamba2-2.7b", "hymba-1.5b", "llama-3.2-vision-11b"):
+        with pytest.raises(ValueError, match="kv_quant"):
+            Engine(get_reduced(arch), None, ctrl=ctrl, probe_params=pp,
+                   kv_quant=True)
+
+
+# ---------------------------------------------------------------------------
+# all-family parity: continuous == solo wave for ssm / hybrid / audio / vlm
+# ---------------------------------------------------------------------------
+
+FAMILY_ARCHS = ("mamba2-2.7b", "hymba-1.5b", "musicgen-large",
+                "llama-3.2-vision-11b")
+
+
+def _family_requests(cfg, lens=(1, 4, 9, 2), max_new=10, seed=7):
+    """Heterogeneous prompt lengths (distinct pow2 buckets) + a distinct
+    random encoder ctx per request for cross-attention families."""
+    from repro.serving import stub_ctx
+    rng = np.random.default_rng(seed)
+    return [ServeRequest(
+        uid=i, prompt=np.r_[BOS, np.arange(100, 100 + n)].astype(np.int32),
+        max_new=max_new, ctx=stub_ctx(cfg, rng))
+        for i, n in enumerate(lens)]
+
+
+@pytest.mark.parametrize("arch", FAMILY_ARCHS)
+def test_continuous_matches_alone_all_families(arch):
+    """Request-keyed parity for every non-dense family: continuous outputs
+    (tokens, bookkeeping, probe traces) bit-identical to solo wave runs at
+    greedy/float32, with hetero-prompt bucketing and per-request ctx."""
+    cfg = get_reduced(arch)
+    if cfg.num_codebooks:
+        cfg = cfg.replace(num_codebooks=0)   # engine serves one token stream
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    ctrl = C.ControllerConfig(BOUNDARY_IDS, MARKER_IDS, window=10,
+                              min_steps=1, probe_dim=16)
+    pp = C.init_probe_params(cfg.d_model, 16)
+    reqs = _family_requests(cfg)
+    kw = dict(ctrl=ctrl, probe_params=pp, policy="crop", crop_budget=4,
+              chunk=4, seed=3)
+    alone = []
+    for r in reqs:
+        eng = Engine(cfg, params, lanes=1, **kw)
+        alone.extend(eng.run([r]))
+    eng = Engine(cfg, params, lanes=2, scheduler="continuous", **kw)
+    cont = eng.run(reqs)
+    for a, b in zip(alone, cont):
+        assert _result_tuple(a) == _result_tuple(b), f"{arch} uid {a.uid}"
+    assert {a["uid"] for a in eng.last_stats["admissions"]} == {0, 1, 2, 3}

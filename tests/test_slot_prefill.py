@@ -1,0 +1,136 @@
+"""Pad-invariance of ``prefill_into_slot`` for every model family.
+
+Continuous-batching admission right-pads prompts to a power-of-two bucket.
+The contract is that bucketing NEVER changes results: logits / last hidden /
+every cache leaf the decode step will read must be bit-identical (greedy,
+float32) across bucket sizes — attention via causal invisibility of the
+pads, ssm/hybrid via the plen-masked scan (zero ``dt``, conv tails gathered
+before ``plen``), audio/vlm via per-request cross-K/V.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.models import model as M
+
+# one arch per family (audio keeps its codebook streams: the slot prefill is
+# family-level machinery; the engine-level single-stream restriction is
+# asserted separately in test_scheduler.py)
+FAMILY_ARCHS = (
+    "qwen3-8b",            # dense
+    "qwen2-moe-a2.7b",     # moe
+    "mamba2-2.7b",         # ssm
+    "hymba-1.5b",          # hybrid
+    "musicgen-large",      # audio
+    "llama-3.2-vision-11b",  # vlm
+)
+
+CACHE_LEN = 64
+
+
+def _mk_prompt(cfg, key, plen):
+    shape = (1, plen, cfg.num_codebooks) if cfg.num_codebooks else (1, plen)
+    return jax.random.randint(key, shape, 1, cfg.vocab_size)
+
+
+def _mk_ctx(cfg, key):
+    if not cfg.uses_cross_attn:
+        return None
+    ca = cfg.cross_attn
+    return jax.random.normal(key, (1, ca.num_context_tokens, ca.context_dim))
+
+
+def _pad_to_bucket(cfg, prompt, bucket):
+    plen = prompt.shape[1]
+    pad = [(0, 0), (0, bucket - plen)] + [(0, 0)] * (prompt.ndim - 2)
+    return jnp.pad(prompt, pad)
+
+
+def _slot(cfg, params, toks, plen, ctx):
+    lg, hid, cache = M.prefill_into_slot(
+        cfg, params, toks, plen, cache_len=CACHE_LEN, ctx=ctx,
+        compute_dtype="float32", moe_impl="dense")
+    return jax.device_get((lg, hid, cache))
+
+
+def _assert_cache_equal(cfg, got: dict, want: dict, plen: int):
+    """Every leaf the decode step reads must match bitwise.  Attention K/V
+    slots >= plen hold pad junk that the decode valid-mask excludes and the
+    first decoded tokens overwrite — only slots < plen are compared."""
+    assert set(got) == set(want)
+    np.testing.assert_array_equal(got["pos"], want["pos"])
+    for k_ in ("k", "v", "k_scale", "v_scale"):
+        if k_ in want:
+            np.testing.assert_array_equal(
+                got[k_][:, :, :plen], want[k_][:, :, :plen], err_msg=k_)
+    if "ssm" in want:
+        for k_, v in want["ssm"].items():
+            np.testing.assert_array_equal(got["ssm"][k_], v, err_msg=f"ssm.{k_}")
+    for k_ in ("cross_k", "cross_v"):
+        if k_ in want:
+            np.testing.assert_array_equal(got[k_], want[k_], err_msg=k_)
+
+
+@pytest.mark.parametrize("arch", FAMILY_ARCHS)
+def test_prefill_into_slot_pad_invariant(arch, key):
+    """Logits/hidden/cache bit-identical across bucket sizes, incl. the
+    unpadded (bucket == plen) reference."""
+    cfg = get_reduced(arch)
+    params = M.init_params(cfg, key)
+    plen = 5
+    prompt = _mk_prompt(cfg, jax.random.fold_in(key, 1), plen)
+    ctx = _mk_ctx(cfg, jax.random.fold_in(key, 2))
+    ref_lg, ref_hid, ref_cache = _slot(cfg, params, prompt, plen, ctx)
+    for bucket in (8, 16):
+        toks = _pad_to_bucket(cfg, prompt, bucket)
+        lg, hid, cache = _slot(cfg, params, toks, plen, ctx)
+        np.testing.assert_array_equal(lg, ref_lg, err_msg=f"bucket {bucket}")
+        np.testing.assert_array_equal(hid, ref_hid)
+        _assert_cache_equal(cfg, cache, ref_cache, plen)
+
+
+@pytest.mark.parametrize("arch", ["mamba2-2.7b", "hymba-1.5b"])
+def test_slot_prefill_matches_plain_prefill(arch, key):
+    """The plen-masked path with zero padding must equal the plain (no-plen)
+    prefill bitwise — masking all-valid positions is a no-op."""
+    cfg = get_reduced(arch)
+    params = M.init_params(cfg, key)
+    plen = 6
+    prompt = _mk_prompt(cfg, jax.random.fold_in(key, 1), plen)
+    _, hid_full, plain = jax.device_get(M.prefill(
+        cfg, params, prompt, cache_len=CACHE_LEN,
+        compute_dtype="float32", moe_impl="dense"))
+    _, hid_last, slot = _slot(cfg, params, prompt, plen, None)
+    np.testing.assert_array_equal(hid_last, hid_full[:, -1])
+    for k_, v in plain["ssm"].items():
+        np.testing.assert_array_equal(slot["ssm"][k_], v, err_msg=f"ssm.{k_}")
+
+
+@pytest.mark.parametrize("arch", ["mamba2-2.7b", "hymba-1.5b"])
+def test_ssm_conv_tail_short_prompt(arch, key):
+    """plen < conv_width - 1: the conv tail must left-zero-pad from the real
+    positions, not read bucket pads — and the next decode step must agree
+    bitwise with the unpadded run."""
+    cfg = get_reduced(arch)
+    kw = cfg.ssm.conv_width - 1
+    plen = kw - 1
+    assert plen >= 1
+    params = M.init_params(cfg, key)
+    prompt = _mk_prompt(cfg, jax.random.fold_in(key, 1), plen)
+    ref_lg, _, ref_cache = _slot(cfg, params, prompt, plen, None)
+    toks = _pad_to_bucket(cfg, prompt, 8)
+    lg, _, cache = _slot(cfg, params, toks, plen, None)
+    np.testing.assert_array_equal(lg, ref_lg)
+    _assert_cache_equal(cfg, cache, ref_cache, plen)
+    # decode one token from both caches: conv history now matters directly
+    nxt = jnp.argmax(jnp.asarray(ref_lg), -1).astype(jnp.int32)
+    outs = []
+    for c in (ref_cache, cache):
+        dlg, _, _ = M.decode_step(cfg, params,
+                                  jax.tree.map(jnp.asarray, c), nxt,
+                                  compute_dtype="float32", moe_impl="dense")
+        outs.append(np.asarray(dlg))
+    np.testing.assert_array_equal(outs[0], outs[1])
