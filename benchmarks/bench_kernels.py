@@ -74,7 +74,7 @@ def _mixed_difficulty_budgets(n_req: int, short: int, long_: int,
 def bench_serve_continuous(emit, *, lanes=8, n_req=24, short=8, long_=192,
                            frac_long=0.25, chunk=16, iters=3,
                            smoke=False, out_path=BENCH_SERVE_PATH,
-                           arch="qwen3-8b"):
+                           arch="qwen3-8b", windowed=False):
     """Wave vs continuous scheduling tokens/sec on a mixed-difficulty stream.
 
     Each mode emits the SAME per-request tokens (greedy/float32, parity
@@ -86,6 +86,12 @@ def bench_serve_continuous(emit, *, lanes=8, n_req=24, short=8, long_=192,
     to ``BENCH_serve.json`` so the serving-perf trajectory is tracked across
     PRs.  ``smoke=True`` shrinks to a 2-chunk CI canary that still exercises
     admit/retire/refill.
+
+    ``windowed=True`` is the native-SWA long-decode case (``arch`` must be a
+    ``common.WINDOWED_SERVE_ARCHS`` member): the sliding window is shrunk so
+    the LONG decode budgets overrun it and both schedulers serve from the
+    window-sized ring cache — guarding the ring-decode correctness fix and
+    its tok/s as a distinct ``serve_window_*`` baseline case.
     """
     from benchmarks.common import serve_cfg, serve_requests
     from repro.models import model as M
@@ -96,6 +102,11 @@ def bench_serve_continuous(emit, *, lanes=8, n_req=24, short=8, long_=192,
     if smoke:
         lanes, n_req, short, long_, chunk, iters = 2, 4, 4, 28, 16, 1
     cfg = serve_cfg(arch)
+    if windowed:
+        assert cfg.native_swa and cfg.sliding_window, arch
+        win = 16 if smoke else 64
+        assert long_ > win, (long_, win)
+        cfg = cfg.replace(sliding_window=win)
     params = M.init_params(cfg, jax.random.PRNGKey(0))
     ctrl = ctrl_mod.ControllerConfig(BOUNDARY_IDS, MARKER_IDS, window=10,
                                      min_steps=2, probe_dim=16)
@@ -120,10 +131,12 @@ def bench_serve_continuous(emit, *, lanes=8, n_req=24, short=8, long_=192,
     # schedulers must agree on WHAT was decoded; only the pace may differ
     assert emitted_by["wave"] == emitted_by["continuous"], emitted_by
 
+    case = (f"serve_window_{arch}_lanes{lanes}_req{n_req}" if windowed
+            else f"serve_continuous_{cfg.family}_lanes{lanes}_req{n_req}")
     entry = {
-        "case": f"serve_continuous_{cfg.family}_lanes{lanes}_req{n_req}"
-                + ("_smoke" if smoke else ""),
+        "case": case + ("_smoke" if smoke else ""),
         "arch": arch, "family": cfg.family,
+        "sliding_window": cfg.sliding_window if windowed else 0,
         "lanes": lanes, "requests": n_req, "short": short, "long": long_,
         "total_tokens": emitted_by["wave"],
         "tok_s_wave": round(tok_s["wave"], 1),

@@ -85,6 +85,11 @@ def _model_cfg():
 SERVE_ARCHS = ("qwen3-8b", "mamba2-2.7b", "hymba-1.5b", "musicgen-large",
                "llama-3.2-vision-11b")
 
+# native-SWA archs for the windowed long-decode serve case (decode budgets
+# exceed the sliding window, so both schedulers serve from the ring cache) —
+# one dense, one hybrid
+WINDOWED_SERVE_ARCHS = ("phi3-mini-3.8b", "hymba-1.5b")
+
 
 def serve_cfg(arch: str = ARCH):
     """Deliberately tiny serving config for ``arch`` so loop/scheduler

@@ -28,8 +28,10 @@ def main() -> None:
                     help="tiny CI-sized run (serve bench only)")
     ap.add_argument("--serve-arch", default="all",
                     help="serve bench arch: an arch id from "
-                         "benchmarks.common.SERVE_ARCHS, or 'all' to sweep "
-                         "the family matrix")
+                         "benchmarks.common.SERVE_ARCHS or "
+                         ".WINDOWED_SERVE_ARCHS (native-SWA archs also run "
+                         "the ring-cache long-decode case), or 'all' to "
+                         "sweep the family matrix + windowed cases")
     ap.add_argument("--out", default="experiments/bench")
     args = ap.parse_args()
 
@@ -78,11 +80,24 @@ def main() -> None:
         bench_roofline.run(pipe, emit)
     if "serve" in sel:
         from benchmarks import bench_kernels
-        from benchmarks.common import SERVE_ARCHS
-        archs = SERVE_ARCHS if args.serve_arch == "all" else (args.serve_arch,)
+        from benchmarks.common import SERVE_ARCHS, WINDOWED_SERVE_ARCHS
+        # family matrix + the native-SWA long-decode archs (phi3 rides along
+        # only for its windowed case: its plain-dense case would duplicate
+        # qwen3's family entry)
+        all_archs = SERVE_ARCHS + tuple(
+            a for a in WINDOWED_SERVE_ARCHS if a not in SERVE_ARCHS)
+        archs = all_archs if args.serve_arch == "all" else (args.serve_arch,)
         for arch in archs:
-            bench_kernels.bench_serve_continuous(emit, smoke=args.smoke,
-                                                 arch=arch)
+            if arch not in all_archs:
+                raise SystemExit(
+                    f"unknown serve arch {arch!r}; expected one of "
+                    f"{sorted(all_archs)} or 'all'")
+            if arch in SERVE_ARCHS:
+                bench_kernels.bench_serve_continuous(emit, smoke=args.smoke,
+                                                     arch=arch)
+            if arch in WINDOWED_SERVE_ARCHS:
+                bench_kernels.bench_serve_continuous(emit, smoke=args.smoke,
+                                                     arch=arch, windowed=True)
 
     path = os.path.join(args.out, "results.json")
     with open(path, "w") as f:

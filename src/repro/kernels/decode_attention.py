@@ -16,7 +16,10 @@ Two entry points:
   written to the cache first (mirroring ``layers.decode_attention_appended``,
   so the decode layer scan never double-buffers the cache), with per-lane
   ``lo/hi`` slot ranges plus a ``skip`` slot for ring-buffer eviction and an
-  optional logit softcap.
+  optional logit softcap.  The same bounds express every windowed-decode
+  layout ``model._attn_ring_bounds`` emits: ring caches (lo=0, hi=min(pos,W),
+  skip=pos%W once warm) and full-length append caches masked to the trailing
+  window (lo=pos-window+1, hi=pos, skip=-1).
 
 Shapes: q (B, H, Dh); k/v (B, W, Hkv, Dh); lengths/lo/hi/skip (B,).
 Grid: (B, W // TILE_W).  Scratch: m/l (H, 1), acc (H, Dh) — f32.

@@ -38,11 +38,27 @@ def main():
     ap.add_argument("--crop-budget", type=int, default=64)
     ap.add_argument("--lanes", type=int, default=8)
     ap.add_argument("--requests", type=int, default=16)
-    ap.add_argument("--max-new", type=int, default=256)
+    ap.add_argument("--max-new", type=int, default=256,
+                    help="per-request decode budget. Native-SWA archs "
+                         "(phi3-mini, hymba) may exceed the sliding window: "
+                         "the engine serves from a window-sized ring cache, "
+                         "so e.g. the default 256 is correct even against "
+                         "the reduced configs' 128-token windows")
     ap.add_argument("--scheduler", default="wave",
                     choices=["wave", "continuous"],
                     help="wave: batch waves (reference); continuous: "
                          "per-lane admit/retire/refill slot engine")
+    ap.add_argument("--decode-mode", default="scan",
+                    choices=["scan", "host"],
+                    help="scan: jitted K-token lax.scan chunks (default); "
+                         "host: per-token reference loop (wave scheduler "
+                         "only)")
+    ap.add_argument("--chunk", type=int, default=16,
+                    help="tokens decoded per jitted scan chunk (one "
+                         "device->host sync per chunk)")
+    ap.add_argument("--kv-quant", action="store_true",
+                    help="serve from an int8 KV cache (append-cache "
+                         "attention families: dense/moe/audio)")
     ap.add_argument("--attn-impl", default=None,
                     choices=["dense", "pallas"],
                     help="decode attention backend (default: autodetect — "
@@ -89,7 +105,8 @@ def main():
     crop_kw = {"crop_budget": args.crop_budget} if args.policy == "crop" else {}
     eng = Engine(cfg, params, ctrl=ctrl, probe_params=pp, lanes=args.lanes,
                  policy=args.policy, scheduler=args.scheduler,
-                 attn_impl=args.attn_impl, **crop_kw)
+                 decode_mode=args.decode_mode, chunk=args.chunk,
+                 kv_quant=args.kv_quant, attn_impl=args.attn_impl, **crop_kw)
 
     rng = np.random.default_rng(args.seed)
     traces = generate_dataset(args.requests, TraceConfig(), seed=args.seed + 7)

@@ -57,8 +57,12 @@ def init_cache(
     cache: dict = {"pos": jnp.zeros((batch,), jnp.int32)}
     ls = num_self_layers(cfg)
     if ls and cfg.family != "ssm":
+        # No "window" leaf: window is static everywhere (decode_step takes it
+        # as a kwarg and infers ring vs append layout from the cache width),
+        # and a Python-int leaf would break the lane-axis convention of
+        # replicate_cache_lanes / scatter_cache_lane (`_lane_axis` reads
+        # `.ndim`).
         w = attn_cache_window(cfg, seq_len, use_window)
-        cache["window"] = w if (use_window and cfg.sliding_window and cfg.sliding_window < seq_len) else 0
         kv_dtype = jnp.int8 if kv_quant else dtype
         cache["k"] = jnp.zeros((ls, batch, w, cfg.num_kv_heads, hd), kv_dtype)
         cache["v"] = jnp.zeros((ls, batch, w, cfg.num_kv_heads, hd), kv_dtype)
@@ -153,12 +157,36 @@ def scatter_cache_lane(cache: dict, small: dict, lane) -> dict:
     return jax.tree.map(one, cache, small)
 
 
+# Windowed-cache layouts (``window`` is the STATIC attention window; ``w``
+# the static cache width):
+#   * w == window  -> RING: slot = pos % w, the incoming token overwrites the
+#     slot holding position pos - window (serving layout — O(window) memory
+#     regardless of decode length);
+#   * w >  window  -> MASKED APPEND: slot = pos, attention masked to the
+#     trailing ``window`` positions (the full-cache reference the ring parity
+#     harness checks against);
+#   * window == 0  -> plain append.
+# Prefill never builds a windowed cache whose width equals the window unless
+# it is a ring (see ``model.prefill``), so the width rule is unambiguous.
+
+
+def is_ring(w: int, window: int) -> bool:
+    """True when a windowed cache of width ``w`` is a ring buffer."""
+    return bool(window) and w == window
+
+
+def cache_slot(pos: jax.Array, w: int, window: int) -> jax.Array:
+    """Write slot for the token at absolute ``pos``: rings wrap, append
+    caches (masked-window or plain) write in order."""
+    return pos % w if is_ring(w, window) else jnp.minimum(pos, w - 1)
+
+
 def cache_write(k_cache: jax.Array, v_cache: jax.Array, k_new: jax.Array,
                 v_new: jax.Array, pos: jax.Array, window: int):
     """Scatter one new (k, v) per sequence. caches: (B, W, Hkv, D);
     k_new/v_new: (B, 1, Hkv, D); pos: (B,) absolute position."""
     w = k_cache.shape[1]
-    slot = pos % w if window else jnp.minimum(pos, w - 1)
+    slot = cache_slot(pos, w, window)
     bidx = jnp.arange(k_cache.shape[0])
     k_cache = k_cache.at[bidx, slot].set(k_new[:, 0])
     v_cache = v_cache.at[bidx, slot].set(v_new[:, 0])
@@ -166,14 +194,17 @@ def cache_write(k_cache: jax.Array, v_cache: jax.Array, k_new: jax.Array,
 
 
 def cache_valid_mask_pre_write(pos: jax.Array, w: int, window: int) -> jax.Array:
-    """(B, W) validity of the cache BEFORE inserting position ``pos``.
-    Ring caches additionally evict the slot the new token will overwrite
-    (it holds position pos - window, outside the window)."""
+    """(B, W) validity of the cache BEFORE inserting position ``pos`` — the
+    decode-read state.  Rings additionally evict the slot the new token will
+    overwrite (it holds position pos - window, outside the window); masked
+    append caches restrict to the trailing ``window`` positions."""
     slots = jnp.arange(w)[None, :]
-    if window:
+    if is_ring(w, window):
         valid = slots < jnp.minimum(pos[:, None], w)
         evict = (pos[:, None] >= w) & (slots == (pos % w)[:, None])
         return valid & ~evict
+    if window:
+        return (slots < pos[:, None]) & (slots > pos[:, None] - window)
     return slots < pos[:, None]
 
 
@@ -181,7 +212,7 @@ def cache_write_stacked(k_cache, v_cache, k_new, v_new, pos, window: int):
     """Scatter one token per sequence into L-stacked caches.
     caches: (L, B, W, KV, D); k_new/v_new: (L, B, 1, KV, D); pos: (B,)."""
     w = k_cache.shape[2]
-    slot = pos % w if window else jnp.minimum(pos, w - 1)
+    slot = cache_slot(pos, w, window)
     bidx = jnp.arange(k_cache.shape[1])
     k_cache = k_cache.at[:, bidx, slot].set(k_new[:, :, 0])
     v_cache = v_cache.at[:, bidx, slot].set(v_new[:, :, 0])
@@ -191,18 +222,21 @@ def cache_write_stacked(k_cache, v_cache, k_new, v_new, pos, window: int):
 def cache_valid_mask(pos: jax.Array, w: int, window: int) -> jax.Array:
     """(B, W) validity mask after writing position ``pos``."""
     slots = jnp.arange(w)[None, :]
-    if window:
+    if is_ring(w, window):
         return slots < jnp.minimum(pos[:, None] + 1, w)
+    if window:
+        return (slots <= pos[:, None]) & (slots > pos[:, None] - window)
     return slots <= pos[:, None]
 
 
 def cache_key_positions(pos: jax.Array, w: int, window: int) -> jax.Array:
-    """(B, W) absolute position held by each cache slot (for RoPE at insert
-    this is unused; kept for kernels that rotate at read)."""
+    """(B, W) absolute position held by each cache slot BEFORE inserting
+    position ``pos`` — the same pre-write state ``cache_valid_mask_pre_write``
+    and ``model._attn_ring_bounds`` mask (kernels that rotate K at read
+    consume this).  A ring slot holds the latest position p ≡ slot (mod w)
+    with p < pos (negative: nothing written there yet); append slots hold
+    their own index."""
     slots = jnp.arange(w)[None, :]
-    if window:
-        cur_slot = pos[:, None] % w
-        wraps = pos[:, None] - cur_slot
-        p = jnp.where(slots <= cur_slot, wraps + slots, wraps - w + slots)
-        return p
+    if is_ring(w, window):
+        return pos[:, None] - 1 - ((pos[:, None] - 1 - slots) % w)
     return jnp.broadcast_to(slots, (pos.shape[0], w))

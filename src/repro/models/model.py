@@ -316,8 +316,8 @@ def loss_fn(cfg, params, tokens, labels, ctx=None, *, remat=True,
 
 @functools.partial(
     jax.jit,
-    static_argnames=("cfg", "use_window", "cache_len", "moe_impl",
-                     "compute_dtype", "unroll"),
+    static_argnames=("cfg", "use_window", "cache_len", "ring_cache",
+                     "moe_impl", "compute_dtype", "unroll"),
 )
 def prefill(
     cfg,
@@ -328,6 +328,7 @@ def prefill(
     plen: Optional[jax.Array] = None,
     use_window: bool = False,
     cache_len: int | None = None,
+    ring_cache: bool = True,
     moe_impl: str = "dispatch",
     compute_dtype: str = "bfloat16",
     unroll: bool = False,
@@ -339,15 +340,25 @@ def prefill(
     loop on small models.
 
     ``cache_len``: total cache slots to allocate (>= prompt length); defaults
-    to the prompt length (no decode headroom). Ignored when a sliding window
-    is active (ring buffers are window-sized).
+    to the prompt length (no decode headroom).  When a sliding window is
+    active and ``ring_cache`` is True (default), the cache is a ring of
+    exactly ``sliding_window`` slots — requesting MORE slots than that raises
+    (the old code silently discarded the headroom, and a non-ring-aware
+    decode overrunning the window then read garbage): pass ``cache_len=None``
+    to acknowledge the ring (decode must thread ``window=`` into
+    ``decode_step``), or ``ring_cache=False`` for a full-length append cache
+    whose attention is masked to the trailing window at decode — the
+    reference layout the ring parity tests check against.
 
     ``plen`` (optional, (B,) int32, traced): true prompt lengths when
-    ``tokens`` is RIGHT-padded to a bucket.  Attention needs no masking (the
-    trailing pads are causally invisible and their K/V slots are excluded by
-    the decode valid-mask until overwritten), but the SSM/hybrid recurrence
-    does: the SSD scan and conv tails are plen-masked so pad positions fold
-    nothing into the carried state (see ``_ssm_block_with_state``).
+    ``tokens`` is RIGHT-padded to a bucket.  Append-cache attention needs no
+    masking (the trailing pads are causally invisible and their K/V slots are
+    excluded by the decode valid-mask until overwritten), but two paths do:
+    the SSM/hybrid recurrence plen-masks the SSD scan and conv tails so pad
+    positions fold nothing into the carried state (see
+    ``_ssm_block_with_state``), and a ring cache is gathered from the last
+    ``window`` REAL positions so bucket pads never evict prompt K/V — even
+    when the bucket exceeds the ring width.
 
     Implemented as forward + cache construction from per-layer K/V recompute is
     wasteful; instead we thread cache writes through the same scan.
@@ -361,13 +372,43 @@ def prefill(
     ctx_h = _ctx_hidden(cfg, params, ctx, dtype)
 
     window = cfg.sliding_window if (use_window or cfg.native_swa) and cfg.sliding_window else 0
-    # Ring caches must be exactly window-wide (slot = pos % window) to stay
-    # correct as decode continues past the prompt; append caches get headroom.
-    w_cache = window if window else max(cache_len or s, s)
+    if window and ring_cache:
+        # Ring caches must be exactly window-wide (slot = pos % window) to
+        # stay correct as decode continues past the prompt.
+        if cache_len is not None and cache_len > window:
+            raise ValueError(
+                f"cache_len={cache_len} exceeds the {window}-slot ring cache "
+                f"of {cfg.arch_id}: a windowed prefill lays K/V in a ring of "
+                "exactly sliding_window slots, so the requested decode "
+                "headroom cannot exist. Pass cache_len=None if the decode "
+                "path is ring-aware (threads window= into decode_step), or "
+                "ring_cache=False for a full-length append cache masked to "
+                "the trailing window.")
+        w_cache = window
+    elif window:
+        # Masked-append reference layout: full-length cache, the window is
+        # applied as a mask at decode. Width == window is what marks a cache
+        # as a ring downstream, so nudge past an accidental collision.
+        w_cache = max(cache_len or s, s)
+        if w_cache == window:
+            w_cache += 1
+    else:
+        w_cache = max(cache_len or s, s)
 
     def kv_for_cache(k, v):
         """Lay the prompt K/V into the cache: ring layout (slot = pos % w)
         when windowed, else first-s-slots of a w_cache-slot append cache."""
+        if window and ring_cache and plen is not None:
+            # Right-padded bucket: gather the ring from the last w_cache REAL
+            # positions (slot j holds the latest p ≡ j mod w with p < plen),
+            # so pads never land in — or evict K/V from — the ring, even
+            # across wrap boundaries when the bucket exceeds the window.
+            # Slots with p < 0 (plen < window) hold clipped junk the decode
+            # valid-mask excludes.
+            p = cache_mod.cache_key_positions(plen, w_cache, w_cache)
+            idx = jnp.clip(p, 0, s - 1)[:, :, None, None]
+            return (jnp.take_along_axis(k, idx, axis=1),
+                    jnp.take_along_axis(v, idx, axis=1))
         if w_cache == s:
             return k, v
         if w_cache < s:
@@ -483,39 +524,49 @@ def prefill_into_slot(
     tokens: jax.Array,
     plen,
     *,
-    cache_len: int,
+    cache_len: int | None,
     ctx: Optional[jax.Array] = None,
+    ring_cache: bool = True,
     moe_impl: str = "dispatch",
     compute_dtype: str = "bfloat16",
 ):
     """Prefill ONE request for continuous-batching admission (any family).
 
     ``tokens``: (1, S) prompt right-padded to a bucket length S >= ``plen``
-    (the true prompt length).  For attention caches the trailing pads are
-    causally invisible to positions < plen; for SSM/hybrid the prefill runs
-    plen-masked (zero ``dt``, conv tails gathered before ``plen``) so pad
-    positions fold nothing into the carried recurrent state.  Either way
-    logits/hidden/cache content for the real prompt are bit-identical to an
-    unpadded prefill — while the jitted prefill compiles once per
-    (bucket, cache_len) instead of once per prompt length.
+    (the true prompt length).  For append-layout attention caches the
+    trailing pads are causally invisible to positions < plen; for SSM/hybrid
+    the prefill runs plen-masked (zero ``dt``, conv tails gathered before
+    ``plen``) so pad positions fold nothing into the carried recurrent state;
+    for native-SWA ring caches the ring is gathered from the last real
+    positions so pads never evict prompt K/V — even when the bucket exceeds
+    the ring width.  Either way logits/hidden/cache content for the real
+    prompt are bit-identical to an unpadded prefill — while the jitted
+    prefill compiles once per (bucket, cache_len) instead of once per prompt
+    length.
 
     ``ctx``: (1, T, C) per-request encoder output (vision patches / audio
     conditioning) for cross-attention families; the resulting per-request
     cross-K/V live as ordinary per-lane cache leaves, so audio/vlm lanes are
     admitted independently.
 
+    ``cache_len``: None for native-SWA ring admission (the cache is the
+    window-sized ring); otherwise the append-cache width.
+
     Returns ``(logits (1,1,V) at position plen-1, hidden_last (1, D),
-    cache)`` with ``cache["pos"] = plen``; the cache is batch=1 and
-    ``cache_len`` wide, ready for :func:`repro.models.cache.scatter_cache_lane`
-    into a free lane of a live stacked cache.  Pad K/V beyond ``plen`` sit in
-    slots the decode valid-mask excludes and the first decoded tokens
-    overwrite.
+    cache)`` with ``cache["pos"] = plen``; the cache is batch=1, ready for
+    :func:`repro.models.cache.scatter_cache_lane` into a free lane of a live
+    stacked cache.  Pad K/V beyond ``plen`` sit in slots the decode
+    valid-mask excludes and the first decoded tokens overwrite.
     """
     plen = jnp.asarray(plen, jnp.int32)
+    windowed = bool(cfg.native_swa and cfg.sliding_window
+                    and cfg.family != "ssm")
+    need_plen = cfg.uses_ssm or (windowed and ring_cache)
     _, hidden, cache = prefill(
         cfg, params, tokens, ctx,
-        plen=jnp.broadcast_to(plen, (tokens.shape[0],)) if cfg.uses_ssm else None,
-        cache_len=cache_len, moe_impl=moe_impl, compute_dtype=compute_dtype)
+        plen=jnp.broadcast_to(plen, (tokens.shape[0],)) if need_plen else None,
+        cache_len=cache_len, ring_cache=ring_cache, moe_impl=moe_impl,
+        compute_dtype=compute_dtype)
     return _slot_prefill_finalize(cfg, params, hidden, cache, plen)
 
 
@@ -639,13 +690,18 @@ def default_attn_impl() -> str:
 
 def _attn_ring_bounds(pos: jax.Array, w: int, window: int):
     """(lo, hi, skip) slot bounds matching ``cache_valid_mask_pre_write``:
-    slot s is valid iff lo <= s < hi and s != skip (ring caches additionally
-    evict the slot the new token will overwrite)."""
+    slot s is valid iff lo <= s < hi and s != skip.  Ring caches
+    (w == window) evict the slot the new token will overwrite; wider windowed
+    caches are append layout masked to the trailing ``window`` positions."""
     hi = jnp.minimum(pos, w).astype(jnp.int32)
-    lo = jnp.zeros_like(hi)
-    if window:
+    if cache_mod.is_ring(w, window):
+        lo = jnp.zeros_like(hi)
         skip = jnp.where(pos >= w, (pos % w).astype(jnp.int32), -1)
+    elif window:
+        lo = jnp.maximum(pos - (window - 1), 0).astype(jnp.int32)
+        skip = jnp.full_like(hi, -1)
     else:
+        lo = jnp.zeros_like(hi)
         skip = jnp.full_like(hi, -1)
     return lo, hi, skip
 
@@ -664,8 +720,11 @@ def decode_step(
 ):
     """One-token decode. tokens: (B, 1) or (B, 1, K). Returns (logits, hidden, cache).
 
-    ``window`` is STATIC: nonzero means the attention caches are ring buffers
-    of that width (sliding-window decode); zero means full append caches.
+    ``window`` is STATIC: nonzero means sliding-window decode, with the cache
+    layout inferred from the cache width — a cache exactly ``window`` wide is
+    a ring buffer (slot = pos % window, the serving layout), a wider cache is
+    append layout with attention masked to the trailing ``window`` positions
+    (the full-cache reference).  Zero means plain append caches.
     ``attn_impl`` selects the self-attention backend: ``"dense"`` (jnp, with
     ``jnp.repeat``-materialized KV heads) or ``"pallas"`` (the GQA
     flash-decode kernel with append-without-write semantics); ``None``
@@ -807,7 +866,7 @@ def decode_step(
         # scales; slices are dequantized on read and re-quantized on write.
         kv_quant = "k_scale" in dcache
         w = dcache["k"].shape[2]
-        slot = pos % w if window else jnp.minimum(pos, w - 1)
+        slot = cache_mod.cache_slot(pos, w, window)
         bidx = jnp.arange(b)
 
         def body(carry, scanned):

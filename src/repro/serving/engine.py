@@ -180,13 +180,15 @@ class Engine:
                  temperature: float = 0.0, seed: int = 0,
                  kv_quant: bool = False, decode_mode: str = "scan",
                  chunk: int = 16, scheduler: str = "wave",
-                 attn_impl: str | None = None):
+                 attn_impl: str | None = None, window_cache: str = "ring"):
         if policy not in ("calibrated", "crop", "full"):
             raise ValueError(f"unknown policy {policy!r}")
         if decode_mode not in ("scan", "host"):
             raise ValueError(f"unknown decode_mode {decode_mode!r}")
         if scheduler not in ("wave", "continuous"):
             raise ValueError(f"unknown scheduler {scheduler!r}")
+        if window_cache not in ("ring", "append"):
+            raise ValueError(f"unknown window_cache {window_cache!r}")
         if scheduler == "continuous" and decode_mode != "scan":
             raise ValueError("continuous scheduling drives the scanned chunk "
                              "step; use decode_mode='scan'")
@@ -225,6 +227,19 @@ class Engine:
         self.decode_mode = decode_mode
         self.scheduler = scheduler
         self.chunk = max(int(chunk), 1)
+        # Native-SWA archs (phi3/hymba) serve from a sliding-window cache:
+        # ``window_cache="ring"`` (default) keeps a window-sized ring per lane
+        # and decode stays correct for ANY prompt + decode length;
+        # ``"append"`` keeps the full-length append cache with attention
+        # masked to the trailing window — the O(prompt+decode)-memory
+        # reference layout the ring parity tests diff against.  Either way
+        # ``window`` is threaded into the decode step (the pre-tentpole
+        # engine decoded rings as append caches, silently corrupting output
+        # once prompt + decode exceeded the window).
+        self.window = (cfg.sliding_window
+                       if cfg.native_swa and cfg.sliding_window
+                       and cfg.family != "ssm" else 0)
+        self.window_cache = window_cache
         self.last_stats: Dict[str, object] = {}
         # Policies compile down to (λ, crop) on device: `full` disables both
         # triggers, `crop` disables the probe, `calibrated` keeps both (the
@@ -233,8 +248,9 @@ class Engine:
         self.wave_ctrl = dataclasses.replace(
             ctrl, think_end_id=THINK_END, eos_id=EOS, ans_base=ANS_BASE,
             num_answers=NUM_ANSWERS, crop_budget=eff_crop)
-        kw = dict(moe_impl=moe_impl, compute_dtype=compute_dtype,
-                  temperature=temperature, attn_impl=attn_impl)
+        kw = dict(window=self.window, moe_impl=moe_impl,
+                  compute_dtype=compute_dtype, temperature=temperature,
+                  attn_impl=attn_impl)
         self._step_fn = make_serve_step(cfg, self.wave_ctrl, **kw)
         self._steps_fn = make_serve_steps(cfg, self.wave_ctrl, **kw)
         # seed the controller with the prefill-argmax token (it was never
@@ -273,14 +289,26 @@ class Engine:
 
         return admit
 
-    def _prefill(self, prompts: np.ndarray, cache_len: int, ctx=None):
+    def _prefill(self, prompts: np.ndarray, cache_len: int | None, ctx=None):
         logits, hidden, cache = model_mod.prefill(
             self.cfg, self.params, jnp.asarray(prompts), ctx,
-            cache_len=cache_len, moe_impl=self.moe_impl,
-            compute_dtype=self.compute_dtype)
+            cache_len=cache_len, ring_cache=(self.window_cache == "ring"),
+            moe_impl=self.moe_impl, compute_dtype=self.compute_dtype)
         if self.kv_quant:
             cache = quantize_prefill_cache(cache)
         return logits, hidden, cache
+
+    def decode_cache_len(self, plen: int, max_new: int) -> int | None:
+        """Cache slots a request of ``plen`` prompt + ``max_new`` decode
+        tokens needs: None for ring serving (the window-sized ring holds any
+        decode length), else prompt + budget + scan-chunk overshoot headroom
+        (the scanned driver always runs full-size chunks — one compiled
+        graph — and may overshoot the budget by up to chunk-1 masked steps;
+        the same cache_len in host mode keeps shapes, and therefore float
+        math, identical between the two drivers)."""
+        if self.window and self.window_cache == "ring":
+            return None
+        return plen + max_new + self.chunk + 8
 
     def request_ctx(self, req: ServeRequest) -> Optional[np.ndarray]:
         """Per-request encoder output as a (T, C) float array, or None for
@@ -330,12 +358,8 @@ class Engine:
         prompts = np.zeros((b, plen), np.int32)
         for i, r in enumerate(reqs):
             prompts[i, plen - len(r.prompt):] = r.prompt     # left-pad
-        # +chunk headroom: the scanned driver always runs full-size chunks
-        # (one compiled graph) and may overshoot the wave budget by up to
-        # chunk-1 masked steps; same cache_len in host mode keeps shapes —
-        # and therefore float math — identical between the two drivers
         logits, hidden, dcache = self._prefill(
-            prompts, plen + max_new + self.chunk + 8,
+            prompts, self.decode_cache_len(plen, max_new),
             ctx=self._batch_ctx(reqs))
 
         state = ctrl_mod.init_state(b, self.cfg.d_model, self.ctrl.window)

@@ -157,9 +157,13 @@ def run_continuous(eng, requests: Sequence[ServeRequest]) -> List[ServeResult]:
 
     # cache sizing: the widest bucketed prompt plus the largest decode budget
     # plus scan-chunk overshoot headroom — fixed for the engine run so the
-    # chunk step compiles exactly once
+    # chunk step compiles exactly once.  Native-SWA ring serving sizes the
+    # persistent cache at the ring width instead (None: prefill lays each
+    # admission in a window-sized ring, pad-free even when the bucket lands
+    # in or exceeds the ring), so cache memory is O(lanes * window)
+    # regardless of prompt/decode length.
     max_bucket = max(bucket_length(len(r.prompt)) for r in reqs)
-    w_cache = max_bucket + max(r.max_new for r in reqs) + eng.chunk + 8
+    w_cache = eng.decode_cache_len(max_bucket, max(r.max_new for r in reqs))
 
     pp = eng._wave_probe_params()
     eng.key, run_key = jax.random.split(eng.key)
@@ -190,6 +194,7 @@ def run_continuous(eng, requests: Sequence[ServeRequest]) -> List[ServeResult]:
                 eng.cfg, eng.params, jnp.asarray(toks), plen,
                 cache_len=w_cache,
                 ctx=None if ctx is None else jnp.asarray(ctx)[None],
+                ring_cache=(eng.window_cache == "ring"),
                 moe_impl=eng.moe_impl, compute_dtype=eng.compute_dtype)
             if eng.kv_quant:
                 small = eng._quant_fn(small)

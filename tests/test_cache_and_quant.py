@@ -8,6 +8,7 @@ from _hypothesis_compat import given, settings, st
 
 from repro.models.cache import (
     cache_key_positions,
+    cache_slot,
     cache_valid_mask,
     cache_valid_mask_pre_write,
     cache_write,
@@ -34,6 +35,67 @@ def test_append_valid_mask(w, p):
     pos = jnp.asarray([p])
     post = np.asarray(cache_valid_mask(pos, w, window=0))[0]
     assert post.sum() == min(p + 1, w)
+
+
+# ---------------------------------------------------------------------------
+# slot-position / validity parity across all three windowed-cache layouts
+# ---------------------------------------------------------------------------
+
+# (w, window): ring (w == window), masked append (w > window), plain append
+LAYOUTS = ((8, 8), (24, 8), (24, 0))
+
+
+@pytest.mark.parametrize("w,window", LAYOUTS)
+def test_mask_helpers_agree_on_slot_positions(w, window):
+    """The three mask helpers and ``cache_key_positions`` must describe the
+    SAME pre-/post-write cache state, across wrap boundaries: a slot is
+    pre-write-valid iff the absolute position it holds is written (>= 0) and
+    inside the trailing window ending at pos-1, and post-write-valid iff its
+    post-write position is inside the window ending at pos."""
+    from repro.models.model import _attn_ring_bounds
+
+    # rings sweep several wraps; append caches hold at most w positions
+    max_pos = 3 * w + 2 if window and w == window else w
+    for p in range(0, max_pos + 1):
+        pos = jnp.asarray([p])
+        kp = np.asarray(cache_key_positions(pos, w, window))[0]     # pre-write
+        win = window if window else 10 ** 9
+        want_pre = (kp >= 0) & (kp < p) & (kp > p - win)
+        pre = np.asarray(cache_valid_mask_pre_write(pos, w, window))[0]
+        np.testing.assert_array_equal(pre, want_pre, err_msg=f"pre p={p}")
+        # _attn_ring_bounds (the Pallas path) must mask identically
+        lo, hi, skip = jax.device_get(_attn_ring_bounds(pos, w, window))
+        slots = np.arange(w)
+        kernel_valid = (slots >= lo[0]) & (slots < hi[0]) & (slots != skip[0])
+        np.testing.assert_array_equal(kernel_valid, want_pre,
+                                      err_msg=f"bounds p={p}")
+        # post-write: inserting p lands at cache_slot(p); every other slot
+        # keeps its pre-write position
+        kp_post = kp.copy()
+        kp_post[int(cache_slot(pos, w, window)[0])] = p
+        want_post = (kp_post >= 0) & (kp_post <= p) & (kp_post > p - win)
+        post = np.asarray(cache_valid_mask(pos, w, window))[0]
+        np.testing.assert_array_equal(post, want_post, err_msg=f"post p={p}")
+
+
+@pytest.mark.parametrize("w,window", LAYOUTS)
+def test_cache_key_positions_match_written_slots(w, window):
+    """Write positions 0..P-1 sequentially (tagging each K with its absolute
+    position); every slot the pre-write state calls valid must hold exactly
+    the position ``cache_key_positions`` reports."""
+    total = 2 * w + 3 if window and w == window else w
+    k_cache = jnp.full((1, w, 1, 1), -1.0)
+    v_cache = jnp.full((1, w, 1, 1), -1.0)
+    for p in range(total):
+        kp = np.asarray(cache_key_positions(jnp.asarray([p]), w, window))[0]
+        valid = np.asarray(
+            cache_valid_mask_pre_write(jnp.asarray([p]), w, window))[0]
+        held = np.asarray(k_cache[0, :, 0, 0])
+        for s in np.nonzero(valid)[0]:
+            assert held[s] == kp[s], (p, s)
+        k_new = jnp.full((1, 1, 1, 1), float(p))
+        k_cache, v_cache = cache_write(k_cache, v_cache, k_new, k_new,
+                                       jnp.asarray([p]), window=window)
 
 
 def test_ring_write_then_positions(key):

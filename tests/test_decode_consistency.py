@@ -80,6 +80,158 @@ def test_sliding_window_decode_drops_old_tokens(key):
     np.testing.assert_allclose(out[0], out[1], rtol=1e-5, atol=1e-5)
 
 
+def test_prefill_refuses_oversized_ring_cache_len(key):
+    """Requesting more cache slots than the ring has must raise loudly (the
+    old behavior silently discarded the headroom, and any non-ring-aware
+    decode overrunning the window then read garbage)."""
+    cfg = get_reduced("phi3-mini-3.8b")
+    assert cfg.native_swa and cfg.sliding_window
+    params = M.init_params(cfg, key)
+    tokens, _ = _mk(cfg, key, 8)
+    with pytest.raises(ValueError, match="ring"):
+        M.prefill(cfg, params, tokens, None,
+                  cache_len=cfg.sliding_window + 64,
+                  compute_dtype="float32", moe_impl="dense")
+    # cache_len within the ring is satisfiable; None acknowledges the ring
+    for cl in (cfg.sliding_window, None):
+        _, _, cache = M.prefill(cfg, params, tokens, None, cache_len=cl,
+                                compute_dtype="float32", moe_impl="dense")
+        assert cache["k"].shape[2] == cfg.sliding_window
+    # ring_cache=False: full-length append cache masked to the window
+    _, _, cache = M.prefill(cfg, params, tokens, None,
+                            cache_len=cfg.sliding_window + 64,
+                            ring_cache=False,
+                            compute_dtype="float32", moe_impl="dense")
+    assert cache["k"].shape[2] == cfg.sliding_window + 64
+
+
+# ---------------------------------------------------------------------------
+# engine-level ring parity: serving past the sliding window
+# ---------------------------------------------------------------------------
+
+NATIVE_SWA_ARCHS = ("phi3-mini-3.8b", "hymba-1.5b")
+
+
+def _swa_engine_fixture(arch, window):
+    from repro.core import controller as C
+    from repro.data.traces import BOS, BOUNDARY_IDS, MARKER_IDS
+
+    cfg = get_reduced(arch).replace(sliding_window=window)
+    assert cfg.native_swa
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    ctrl = C.ControllerConfig(BOUNDARY_IDS, MARKER_IDS, window=10,
+                              min_steps=1, probe_dim=16)
+    pp = C.init_probe_params(cfg.d_model, 16)
+    return cfg, params, ctrl, pp, BOS
+
+
+def _result_tuple(r):
+    return (r.tokens.tolist(), r.think_tokens, r.exited_early, r.exit_step,
+            r.answer, r.probe_trace.tolist(), r.exit_pos)
+
+
+@pytest.mark.parametrize("arch", NATIVE_SWA_ARCHS)
+@pytest.mark.parametrize("attn_impl", ["dense", "pallas"])
+def test_engine_ring_parity_past_window(arch, attn_impl):
+    """prompt + decode = 3x sliding_window: ring-cache serving must be
+    token-identical (greedy, float32) to the full-length append cache whose
+    attention is masked to the trailing window (``window_cache="append"``),
+    under wave/scan, wave/host, and continuous schedulers."""
+    from repro.serving import Engine, ServeRequest
+
+    window = 8
+    cfg, params, ctrl, pp, bos = _swa_engine_fixture(arch, window)
+    plen = window
+    max_new = 3 * window - plen            # prompt + decode = 3x window
+    reqs = [ServeRequest(
+        uid=i, prompt=np.r_[bos, np.arange(100 + 10 * i,
+                                           100 + 10 * i + plen - 1)
+                            ].astype(np.int32),
+        max_new=max_new) for i in range(2)]
+    kw = dict(ctrl=ctrl, probe_params=pp, lanes=2, policy="full", chunk=4,
+              seed=3, attn_impl=attn_impl)
+    ref = Engine(cfg, params, window_cache="append", **kw).run(reqs)
+    assert any(len(r.tokens) + plen > window for r in ref)
+    for label, ekw in (("wave/scan", {}),
+                       ("wave/host", {"decode_mode": "host"}),
+                       ("continuous", {"scheduler": "continuous"})):
+        got = Engine(cfg, params, **kw, **ekw).run(reqs)
+        for a, b in zip(ref, got):
+            assert _result_tuple(a) == _result_tuple(b), (label, a.uid)
+
+
+@pytest.mark.parametrize("arch", NATIVE_SWA_ARCHS)
+def test_engine_ring_matches_teacher_forced_forward(arch):
+    """Ring serving past the window must reproduce a greedy teacher-forced
+    rollout of ``forward`` (whose native-SWA attention mask is the ground
+    truth for the windowed semantics)."""
+    from repro.serving import Engine, ServeRequest
+
+    window = 8
+    cfg, params, ctrl, pp, bos = _swa_engine_fixture(arch, window)
+    plen = window
+    max_new = 3 * window - plen
+    prompt = np.r_[bos, np.arange(100, 100 + plen - 1)].astype(np.int32)
+    res = Engine(cfg, params, ctrl=ctrl, probe_params=pp, lanes=1,
+                 policy="full", chunk=4, seed=3).run(
+        [ServeRequest(uid=0, prompt=prompt, max_new=max_new)])[0]
+    seq = list(prompt)
+    want = []
+    for _ in range(len(res.tokens)):
+        lg = M.forward(cfg, params, jnp.asarray(np.asarray(seq)[None]),
+                       compute_dtype="float32", moe_impl="dense").logits
+        nxt = int(jnp.argmax(lg[0, -1]))
+        want.append(nxt)
+        seq.append(nxt)
+    assert res.tokens.tolist() == want
+
+
+def test_continuous_ring_bucket_exceeds_window_matches_solo(key):
+    """Admission buckets larger than the ring (window=4 < MIN_BUCKET): pads
+    must never evict prompt K/V, so continuous output stays bit-identical to
+    solo wave runs across wrap boundaries."""
+    from repro.core import controller as C
+    from repro.data.traces import BOS, BOUNDARY_IDS, MARKER_IDS
+    from repro.serving import Engine, ServeRequest
+
+    cfg = get_reduced("phi3-mini-3.8b").replace(sliding_window=4)
+    params = M.init_params(cfg, key)
+    ctrl = C.ControllerConfig(BOUNDARY_IDS, MARKER_IDS, window=10,
+                              min_steps=1, probe_dim=16)
+    pp = C.init_probe_params(cfg.d_model, 16)
+    prompts = [np.r_[BOS, np.arange(100, 100 + n)].astype(np.int32)
+               for n in (2, 6, 10, 4)]
+    reqs = [ServeRequest(uid=i, prompt=p, max_new=12)
+            for i, p in enumerate(prompts)]
+    kw = dict(ctrl=ctrl, probe_params=pp, policy="full", chunk=4, seed=3)
+    alone = []
+    for r in reqs:
+        alone.extend(Engine(cfg, params, lanes=1, **kw).run([r]))
+    cont = Engine(cfg, params, lanes=2, scheduler="continuous", **kw).run(reqs)
+    for a, b in zip(alone, cont):
+        assert _result_tuple(a) == _result_tuple(b), f"uid {a.uid}"
+
+
+def test_engine_ring_int8_kv_parity():
+    """kv_quant serving from a ring cache (int8 scatter at slot = pos % w):
+    scan/host/continuous must stay bit-identical past the window."""
+    from repro.serving import Engine, ServeRequest
+
+    window = 8
+    cfg, params, ctrl, pp, bos = _swa_engine_fixture("phi3-mini-3.8b", window)
+    reqs = [ServeRequest(
+        uid=i, prompt=np.r_[bos, np.arange(100 + 10 * i,
+                                           107 + 10 * i)].astype(np.int32),
+        max_new=2 * window) for i in range(2)]
+    kw = dict(ctrl=ctrl, probe_params=pp, lanes=2, policy="full", chunk=4,
+              seed=3, kv_quant=True)
+    ref = Engine(cfg, params, **kw).run(reqs)
+    for ekw in ({"decode_mode": "host"}, {"scheduler": "continuous"}):
+        got = Engine(cfg, params, **kw, **ekw).run(reqs)
+        for a, b in zip(ref, got):
+            assert _result_tuple(a) == _result_tuple(b)
+
+
 def test_int8_kv_decode_close_to_fp(key):
     """int8-quantized KV decode must track the fp cache closely."""
     from repro.models import cache as cache_mod

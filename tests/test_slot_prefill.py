@@ -109,6 +109,76 @@ def test_slot_prefill_matches_plain_prefill(arch, key):
         np.testing.assert_array_equal(slot["ssm"][k_], v, err_msg=f"ssm.{k_}")
 
 
+@pytest.mark.parametrize("arch", ["phi3-mini-3.8b", "hymba-1.5b"])
+def test_slot_prefill_bucket_exceeds_ring(arch, key):
+    """Native-SWA ring admission with the bucket LARGER than the ring
+    (window=4 < bucket=8/16): the ring must hold the last ``window`` REAL
+    positions at slot = pos % window — bucket pads must neither land in the
+    ring nor evict prompt K/V across the wrap — bit-identical to an unpadded
+    prefill, and each ring slot must hold exactly the K/V of the absolute
+    position ``cache_key_positions`` reports."""
+    from repro.models.cache import cache_key_positions
+
+    win = 4
+    cfg = get_reduced(arch).replace(sliding_window=win)
+    assert cfg.native_swa
+    params = M.init_params(cfg, key)
+    plen = 6                                   # bucket 8 > window 4
+    prompt = _mk_prompt(cfg, jax.random.fold_in(key, 1), plen)
+
+    def slot_prefill(toks):
+        lg, hid, cache = M.prefill_into_slot(
+            cfg, params, toks, plen, cache_len=None,
+            compute_dtype="float32", moe_impl="dense")
+        return jax.device_get((lg, hid, cache))
+
+    ref_lg, ref_hid, ref_cache = slot_prefill(prompt)
+    assert ref_cache["k"].shape[2] == win      # ring-width cache
+    for bucket in (8, 16):
+        lg, hid, cache = slot_prefill(_pad_to_bucket(cfg, prompt, bucket))
+        np.testing.assert_array_equal(lg, ref_lg, err_msg=f"bucket {bucket}")
+        np.testing.assert_array_equal(hid, ref_hid)
+        # ALL ring slots hold real positions here (plen > window): the whole
+        # ring must match bitwise, not just the first plen slots
+        for k_ in ("k", "v"):
+            np.testing.assert_array_equal(cache[k_], ref_cache[k_],
+                                          err_msg=f"{k_} bucket {bucket}")
+        if "ssm" in ref_cache:
+            for k_, v in ref_cache["ssm"].items():
+                np.testing.assert_array_equal(cache["ssm"][k_], v,
+                                              err_msg=f"ssm.{k_}")
+
+    # slot-position parity: ring slot j must hold the K/V of the absolute
+    # position cache_key_positions maps it to, as laid out by a full-length
+    # append prefill (ring_cache=False) of the same prompt
+    _, _, full = jax.device_get(M.prefill(
+        cfg, params, prompt, cache_len=plen + 4, ring_cache=False,
+        compute_dtype="float32", moe_impl="dense"))
+    kp = np.asarray(cache_key_positions(
+        jnp.full((1,), plen, jnp.int32), win, win))[0]
+    assert sorted(kp.tolist()) == list(range(plen - win, plen))
+    for j, p in enumerate(kp):
+        np.testing.assert_array_equal(ref_cache["k"][:, :, j],
+                                      full["k"][:, :, p], err_msg=f"slot {j}")
+
+    # decode across the wrap from both caches: next tokens must agree bitwise
+    nxt = jnp.argmax(jnp.asarray(ref_lg), -1).astype(jnp.int32)
+    outs = []
+    for c in (ref_cache, jax.device_get(slot_prefill(
+            _pad_to_bucket(cfg, prompt, 8))[2])):
+        cache = jax.tree.map(jnp.asarray, c)
+        lgs = []
+        tok = nxt
+        for _ in range(2 * win):
+            dlg, _, cache = M.decode_step(cfg, params, cache, tok, window=win,
+                                          compute_dtype="float32",
+                                          moe_impl="dense")
+            lgs.append(np.asarray(dlg))
+            tok = jnp.argmax(dlg[:, 0], -1).astype(jnp.int32)[:, None]
+        outs.append(np.stack(lgs))
+    np.testing.assert_array_equal(outs[0], outs[1])
+
+
 @pytest.mark.parametrize("arch", ["mamba2-2.7b", "hymba-1.5b"])
 def test_ssm_conv_tail_short_prompt(arch, key):
     """plen < conv_width - 1: the conv tail must left-zero-pad from the real
