@@ -136,6 +136,9 @@ def bench_serve_continuous(emit, *, lanes=8, n_req=24, short=8, long_=192,
     entry = {
         "case": case + ("_smoke" if smoke else ""),
         "arch": arch, "family": cfg.family,
+        # audio runs its real (B, 1, K) delay-pattern fan-out; total_tokens
+        # then counts frame-aligned rows, not delayed steps
+        "num_codebooks": cfg.num_codebooks,
         "sliding_window": cfg.sliding_window if windowed else 0,
         "lanes": lanes, "requests": n_req, "short": short, "long": long_,
         "total_tokens": emitted_by["wave"],

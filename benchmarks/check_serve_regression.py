@@ -10,6 +10,11 @@ absolute-throughput noise on shared CI runners (both schedulers run the same
 model on the same machine back to back).  A fresh ratio more than
 ``--tolerance`` (default 30%) below the baseline ratio fails the step; cases
 with no committed baseline pass with a note (new family/shape).
+
+``--require PREFIX`` (repeatable) additionally fails when the fresh file has
+no case starting with PREFIX — so a family silently dropping out of the
+sweep (e.g. the musicgen ``serve_continuous_audio`` codebook path) is a red
+gate, not a shrinking green one.
 """
 
 from __future__ import annotations
@@ -42,6 +47,11 @@ def main() -> int:
                     help="committed baseline (default: BENCH_serve.json)")
     ap.add_argument("--tolerance", type=float, default=0.30,
                     help="allowed fractional drop in continuous/wave ratio")
+    ap.add_argument("--require", action="append", default=[],
+                    metavar="PREFIX",
+                    help="fail unless a fresh case starts with PREFIX "
+                         "(repeatable; guards against families silently "
+                         "dropping out of the sweep)")
     args = ap.parse_args()
 
     fresh = load(args.fresh)
@@ -51,6 +61,11 @@ def main() -> int:
         return 1
 
     failed = False
+    for prefix in args.require:
+        if not any(e["case"].startswith(prefix) for e in fresh):
+            print(f"  FAIL required case prefix {prefix!r}: "
+                  "no fresh entry matches")
+            failed = True
     for e in fresh:
         case, got = e["case"], float(e["speedup"])
         ref = base.get(case)

@@ -98,8 +98,8 @@ def serve_cfg(arch: str = ARCH):
     kw = dict(vocab_size=256)
     # vlm needs num_layers % every_n_layers == 0 with >= 1 super-block
     kw["num_layers"] = cfg.cross_attn.every_n_layers if cfg.family == "vlm" else 1
-    if cfg.num_codebooks:
-        kw["num_codebooks"] = 0       # engine serves one token stream
+    # audio keeps its num_codebooks=2 test fan-out: the serve bench measures
+    # the real (B, 1, K) delay-pattern decode path, not a single-stream stub
     if cfg.family == "dense":
         kw.update(d_model=128, d_ff=256, num_heads=2, num_kv_heads=1)
     return cfg.replace(**kw)

@@ -3,6 +3,10 @@
 Backbone only: the EnCodec conv codec + T5 text encoder are STUBS —
 ``input_specs`` provides K=4 codebook token streams and precomputed text
 conditioning embeddings consumed via cross-attention (every layer).
+
+Serving decodes the full (B, 1, K) codebook fan-out under the MusicGen
+delay-pattern interleaving (``repro.serving.delay``) through both engine
+schedulers; the ``reduced()`` K=2 shape is the CI family-matrix smoke case.
 """
 from repro.configs.base import CrossAttnConfig, ModelConfig
 

@@ -15,6 +15,28 @@ per generated token:
 
 Exited lanes keep a frozen state (masked updates) so the batched decode step
 stays shape-stable — SIMD predication, the TPU-idiomatic form of eviction.
+
+Multi-codebook streams (MusicGen delay pattern)
+-----------------------------------------------
+For ``num_codebooks = K > 1`` models every decode step carries a (B, K)
+token plane; under the MusicGen delay pattern codebook k's stream is the
+frame stream delayed by k steps.  The probe machinery and the semantic
+bookkeeping (think_tokens, answer, exit_step) follow codebook 0 — the
+undelayed *primary* stream — while the per-codebook fields ``cb_think_done``
+and ``cb_end`` track each codebook's own phase.  :func:`forced_next` builds
+the delay staircase on device:
+
+* codebook 0 is forced to THINK_END by the probe/crop trigger (as in the
+  single-stream case); codebook k > 0 is forced to THINK_END exactly one
+  step after codebook k-1 consumed its own (delay propagation);
+* when the primary stream closes (answer/EOS), codebook k is forced to EOS
+  one step after codebook k-1 closed, and closed codebooks emit ``pad_id``
+  while the lane drains — so a lane is ``lane_done`` only once ALL K
+  codebooks have emitted their EOS/pad under the interleaving (the K-1
+  drain steps complete the frame-aligned rectangle the engine un-shifts).
+
+Single-stream models are the K = 1 degenerate case: the cb fields collapse
+to the old (B,) booleans and no pad/EOS staircase ever fires.
 """
 
 from __future__ import annotations
@@ -41,6 +63,8 @@ class ControllerConfig:
     ans_base: int = -1        # answer tokens live in [ans_base, ans_base+num_answers)
     num_answers: int = 0
     crop_budget: int = 0      # force THINK_END after this many thinking tokens (0: off)
+    pad_id: int = -1          # codebook pad token emitted by closed codebook
+                              # streams while the lane drains (K > 1 only)
 
 
 class ProbeParams(NamedTuple):
@@ -75,9 +99,15 @@ class ControllerState(NamedTuple):
     exit_step: jax.Array      # (B,)   i32 closed steps at the exit trigger (-1)
     emitted: jax.Array        # (B,)   i32 tokens emitted to this lane's output
     max_tokens: jax.Array     # (B,)   i32 per-lane emission budget (max_new)
+    # --- per-codebook lanes (K = 1 for single-stream models) ---------------
+    cb_think_done: jax.Array  # (B, K) bool codebook k consumed its THINK_END
+    cb_end: jax.Array         # (B, K) bool codebook k's stream closed
+                              #        (final frame / EOS emitted)
 
 
-def init_state(batch: int, d_model: int, window: int) -> ControllerState:
+def init_state(batch: int, d_model: int, window: int,
+               num_codebooks: int = 1) -> ControllerState:
+    ncb = max(int(num_codebooks), 1)
     return ControllerState(
         rep_sum=jnp.zeros((batch, d_model), jnp.float32),
         tok_cnt=jnp.zeros((batch,), jnp.float32),
@@ -96,6 +126,8 @@ def init_state(batch: int, d_model: int, window: int) -> ControllerState:
         exit_step=jnp.full((batch,), -1, jnp.int32),
         emitted=jnp.zeros((batch,), jnp.int32),
         max_tokens=jnp.full((batch,), 2 ** 31 - 1, jnp.int32),
+        cb_think_done=jnp.zeros((batch, ncb), bool),
+        cb_end=jnp.zeros((batch, ncb), bool),
     )
 
 
@@ -131,11 +163,16 @@ def update(
     ctrl: ControllerConfig,
     params: ProbeParams,
     state: ControllerState,
-    token: jax.Array,          # (B,) token just generated
+    token: jax.Array,          # (B,) — or (B, K) for multi-codebook streams
     hidden: jax.Array,         # (B, D) its last-layer hidden state
     position: jax.Array,       # (B,) absolute position of that token
 ) -> ControllerState:
     b, d = hidden.shape
+    # (B, K) token plane; codebook 0 is the primary (undelayed) stream that
+    # drives the probe and the semantic bookkeeping.  Single-stream callers
+    # pass (B,) and land on K = 1.
+    tok2 = token if token.ndim == 2 else token[:, None]
+    token = tok2[:, 0]
     # Probe accumulation runs only while the lane is thinking and the probe
     # has not triggered: boundary tokens decoded after THINK_END (the model
     # free-runs until an answer/EOS appears) must not close steps, or the
@@ -180,10 +217,21 @@ def update(
     # ---- serving-phase transitions (disabled when the ids are unset) -------
     td_prev, lane_prev = state.think_done, state.lane_done
     if ctrl.think_end_id >= 0:
-        is_end = token == ctrl.think_end_id
+        is_end_cb = tok2 == ctrl.think_end_id                  # (B, K)
     else:
-        is_end = jnp.zeros(token.shape, bool)
-    think_done = td_prev | (is_end & ~lane_prev)
+        is_end_cb = jnp.zeros(tok2.shape, bool)
+    is_end = is_end_cb[:, 0]
+    # Per-codebook THINK_END consumption; column 0 IS think_done (single
+    # source — the (B,) field below is a view of it).  Codebook k > 0 only
+    # counts a THINK_END once codebook k-1 consumed its own (the same
+    # predecessor gate as the EOS staircase below): audio codes range over
+    # the full vocab, so an organic token that happens to equal the
+    # THINK_END id mid-stream must not trigger the delay staircase early.
+    td_gate = jnp.concatenate(
+        [jnp.ones((b, 1), bool), state.cb_think_done[:, :-1]], axis=1)
+    cb_think_done = state.cb_think_done | (
+        is_end_cb & td_gate & ~lane_prev[:, None])
+    think_done = cb_think_done[:, 0]
     # a token counts against the thinking budget iff the lane was still
     # thinking when it was generated and it is not THINK_END itself — this is
     # what makes crop_budget=N decode exactly N thinking tokens (and makes a
@@ -198,20 +246,29 @@ def update(
     ans_now = td_prev & is_ans & (state.answer < 0) & ~lane_prev
     answer = jnp.where(ans_now, token - ctrl.ans_base, state.answer)
     if ctrl.eos_id >= 0:
-        is_eos = token == ctrl.eos_id
+        is_eos_cb = tok2 == ctrl.eos_id                        # (B, K)
     else:
-        is_eos = jnp.zeros(token.shape, bool)
+        is_eos_cb = jnp.zeros(tok2.shape, bool)
+    # Per-codebook stream close.  The primary closes exactly as the old
+    # single-stream lane_done trigger did (answer or EOS after THINK_END);
+    # codebook k > 0 closes on its EOS one step after codebook k-1 closed —
+    # the delay staircase :func:`forced_next` forces, so the lane drains K-1
+    # extra steps completing every codebook's delayed frames.
+    end0 = td_prev & (is_eos_cb[:, 0] | ans_now)
+    close_cb = jnp.concatenate(
+        [end0[:, None], state.cb_end[:, :-1] & is_eos_cb[:, 1:]], axis=1)
+    cb_end = state.cb_end | (close_cb & ~lane_prev[:, None])
     # every token processed while the lane is live counts against its own
     # emission budget (per-request max_new): a lane sharing a wave with a
     # larger request stops at *its* budget, not the wave-wide maximum
     emitted = state.emitted + (~lane_prev).astype(jnp.int32)
-    lane_done = lane_prev | (td_prev & (is_eos | ans_now)) \
-        | (emitted >= state.max_tokens)
+    lane_done = lane_prev | cb_end[:, -1] | (emitted >= state.max_tokens)
 
     return ControllerState(
         rep_sum, tok_cnt, has_marker, win, win_n, smoothed, steps, done,
         exit_pos, think_done, lane_done, think_tokens, answer,
         state.forced_exit, exit_step, emitted, state.max_tokens,
+        cb_think_done, cb_end,
     )
 
 
@@ -228,7 +285,9 @@ def reset_lanes(state: ControllerState, mask: jax.Array,
     continuous-batching refill primitive: a retired lane is re-armed for its
     next request without touching the compiled (B,)-shaped decode graph."""
     b, d = state.rep_sum.shape
-    fresh = init_state(b, d, state.win.shape[1])._replace(max_tokens=max_tokens)
+    fresh = init_state(b, d, state.win.shape[1],
+                       num_codebooks=state.cb_end.shape[1])._replace(
+        max_tokens=max_tokens)
     return jax.tree.map(lambda n, o: _lane_where(mask, n, o), fresh, state)
 
 
@@ -252,23 +311,60 @@ def update_lanes(
 def forced_next(
     ctrl: ControllerConfig, state: ControllerState
 ) -> Tuple[jax.Array, ControllerState]:
-    """Device-side budget forcing: decide, per lane, whether the *next* token
-    must be THINK_END (-1 = sample freely).
+    """Device-side budget forcing: decide, per lane (and per codebook), which
+    *next* tokens must be overridden (-1 = sample freely).
 
-    A lane is forced when it is still thinking and either the probe triggered
-    (``state.done``) or the crop budget is exhausted.  The returned state
-    records ``forced_exit`` and the step count at the trigger (``exit_step``,
-    first-write-wins so a probe trigger recorded by :func:`update` is kept).
+    Codebook 0 is forced to THINK_END when the lane is still thinking and
+    either the probe triggered (``state.done``) or the crop budget is
+    exhausted.  The returned state records ``forced_exit`` and the step count
+    at the trigger (``exit_step``, first-write-wins so a probe trigger
+    recorded by :func:`update` is kept).
+
+    For multi-codebook streams (K > 1) the delay-pattern staircase rides the
+    same mechanism: codebook k > 0 is forced to THINK_END one step after
+    codebook k-1 consumed its own, forced to EOS one step after codebook k-1
+    closed its stream, and forced to ``pad_id`` once its own stream closed
+    while the lane drains the remaining codebooks.  Returns (B,) for K = 1
+    (the historical shape), else (B, K).
     """
+    ncb = state.cb_end.shape[1]
     if ctrl.crop_budget > 0:
         crop_hit = state.think_tokens >= ctrl.crop_budget
     else:
         crop_hit = jnp.zeros(state.think_tokens.shape, bool)
     want = ~state.think_done & ~state.lane_done & (state.done | crop_hit)
-    if ctrl.think_end_id < 0:
-        return jnp.full(state.think_tokens.shape, -1, jnp.int32), state
-    forced = jnp.where(want, jnp.int32(ctrl.think_end_id), jnp.int32(-1))
-    exit_step = jnp.where(want & (state.exit_step < 0), state.steps,
-                          state.exit_step)
-    return forced, state._replace(forced_exit=state.forced_exit | want,
-                                  exit_step=exit_step)
+    if ctrl.think_end_id >= 0:
+        exit_step = jnp.where(want & (state.exit_step < 0), state.steps,
+                              state.exit_step)
+        state = state._replace(forced_exit=state.forced_exit | want,
+                               exit_step=exit_step)
+    if ncb == 1:
+        if ctrl.think_end_id < 0:
+            return jnp.full(state.think_tokens.shape, -1, jnp.int32), state
+        forced = jnp.where(want, jnp.int32(ctrl.think_end_id), jnp.int32(-1))
+        return forced, state
+    live = ~state.lane_done
+    false_col = jnp.zeros_like(want)[:, None]
+    forced = jnp.full(state.cb_end.shape, -1, jnp.int32)
+    # THINK_END: probe/crop on codebook 0; delay propagation for k > 0 (one
+    # step after codebook k-1 consumed its own, while k's stream is open)
+    if ctrl.think_end_id >= 0:
+        want_te = jnp.concatenate(
+            [want[:, None],
+             state.cb_think_done[:, :-1] & ~state.cb_think_done[:, 1:]
+             & ~state.cb_end[:, 1:]], axis=1) & live[:, None]
+        forced = jnp.where(want_te, jnp.int32(ctrl.think_end_id), forced)
+    # EOS staircase: codebook k closes one step after codebook k-1 closed
+    # (wins over a simultaneous THINK_END propagation — the stream must
+    # end).  Independent of think_end_id so a probe-less controller still
+    # drains its codebooks.
+    if ctrl.eos_id >= 0:
+        want_eos = jnp.concatenate(
+            [false_col, state.cb_end[:, :-1] & ~state.cb_end[:, 1:]],
+            axis=1) & live[:, None]
+        forced = jnp.where(want_eos, jnp.int32(ctrl.eos_id), forced)
+    # pad phase: a closed codebook emits pad_id while the lane drains
+    if ctrl.pad_id >= 0:
+        forced = jnp.where(state.cb_end & live[:, None],
+                           jnp.int32(ctrl.pad_id), forced)
+    return forced, state

@@ -160,7 +160,8 @@ def build_case(cfg, shape, mesh, *, moe_impl: str = "dispatch",
                                      kv_quant=kv_quant))
     cache_specs = sharding.cache_specs(cfg, cache_shapes, shape.global_batch, mesh)
     state_shapes = jax.eval_shape(
-        lambda: ctrl_mod.init_state(shape.global_batch, cfg.d_model, 10))
+        lambda: ctrl_mod.init_state(shape.global_batch, cfg.d_model, 10,
+                                    num_codebooks=max(cfg.num_codebooks, 1)))
     state_specs = sharding.cache_specs(cfg, state_shapes, shape.global_batch, mesh)
     probe_shapes = jax.eval_shape(
         lambda: ctrl_mod.init_probe_params(cfg.d_model, cfg.probe_dim))
@@ -173,7 +174,9 @@ def build_case(cfg, shape, mesh, *, moe_impl: str = "dispatch",
         logits, hidden, dcache = model_mod.decode_step(
             cfg, p, dcache, t, window=window, moe_impl=moe_impl, unroll=unroll)
         nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        tok = nxt[:, 0, 0] if cfg.num_codebooks else nxt[:, 0]
+        # full (B, K) token plane into the per-codebook controller lanes
+        # (the old loop fed nxt[:, 0, 0] — one codebook's id — to all K)
+        tok = nxt[:, 0]
         state = ctrl_mod.update(ctrl, probe, state, tok, hidden[:, 0],
                                 dcache["pos"] - 1)
         return nxt, dcache, state

@@ -71,11 +71,12 @@ def main():
 
     cfg = get_reduced(args.arch).replace(vocab_size=512)
     if cfg.num_codebooks:
-        # the engine samples one token stream per lane; serve the audio
-        # backbone single-stream (the EnCodec codebook fan-out is a stub)
-        print(f"note: serving {args.arch} with num_codebooks=0 "
-              f"(engine is single-stream)")
-        cfg = cfg.replace(num_codebooks=0)
+        # multi-codebook audio serves its REAL EnCodec fan-out: (B, 1, K)
+        # delay-pattern decode with per-codebook controller lanes; results
+        # come back as frame-aligned (F, K) token rows (the historical
+        # num_codebooks=0 coercion is gone)
+        print(f"note: serving {args.arch} with num_codebooks="
+              f"{cfg.num_codebooks} (delay-pattern (B, K) decode)")
     key = jax.random.PRNGKey(args.seed)
     params = model_mod.init_params(cfg, key)
     if args.ckpt:
@@ -124,6 +125,9 @@ def main():
         for i, r in enumerate(results)])
     print(json.dumps({
         "policy": args.policy,
+        # rows of .tokens: delayed steps for single-stream models, complete
+        # frame-aligned (F, K) rows for codebook models
+        "mean_emitted_rows": float(np.mean([len(r.tokens) for r in results])),
         "mean_think_tokens": float(think.mean()),
         "early_exit_rate": float(early.mean()),
         "answer_rate": float(np.mean([r.answer is not None for r in results])),

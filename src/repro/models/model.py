@@ -588,10 +588,10 @@ def slot_prefill_unsupported(cfg) -> Optional[str]:
     """
     if cfg.family not in SLOT_PREFILL_FAMILIES:
         return f"family {cfg.family!r} has no pad-invariant slot-prefill path"
-    if cfg.num_codebooks:
-        return (f"multi-codebook streams (num_codebooks={cfg.num_codebooks}) "
-                "decode (B, K) tokens per step; the serving engine samples a "
-                "single token stream per lane")
+    # Multi-codebook streams (num_codebooks > 0) are fully served: the engine
+    # decodes (B, 1, K) token planes with per-codebook controller lanes and
+    # MusicGen delay-pattern shifting/un-shifting (repro.serving.delay), so
+    # no config shape remains unsupported.
     return None
 
 

@@ -1,3 +1,8 @@
+from repro.serving.delay import (
+    broadcast_prompt_frames,
+    delay_pattern_shift,
+    undelay_frames,
+)
 from repro.serving.engine import (
     Engine,
     ServeRequest,

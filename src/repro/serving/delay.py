@@ -1,0 +1,80 @@
+"""MusicGen delay-pattern interleaving for multi-codebook serving.
+
+A K-codebook model decodes a (B, 1, K) token plane per step.  Under the
+delay pattern (arXiv:2306.05284 §2.1) codebook k's stream is the frame
+stream delayed by k steps, so one causal decode step advances every codebook
+while codebook k only ever conditions on frames <= t - k:
+
+    delayed[t, k] = frames[t - k, k]        (pad for t < k)
+
+The serving engine works entirely in the delayed token domain — prompts are
+shifted on the way in (:func:`delay_pattern_shift`), and the emitted
+per-codebook streams are un-shifted back to frame-aligned rows on the way
+out (:func:`undelay_frames`).  The controller's drain staircase
+(``repro.core.controller.forced_next``) guarantees that a naturally finished
+lane emits exactly the K-1 extra delayed steps needed to complete the frame
+rectangle, so the un-shift of a drained lane loses nothing.
+"""
+
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import numpy as np
+
+
+def delay_pattern_shift(frames: np.ndarray, pad_id: int = 0) -> np.ndarray:
+    """Frame-aligned (P, K) codebook tokens -> (P, K) delayed-domain tokens.
+
+    Position t of the result holds codebook k's frame t - k; the first k
+    positions of codebook k are ``pad_id``.  Frames P-k..P-1 of codebook
+    k > 0 do not fit in a P-step delayed prompt — the model (re)generates
+    them during the first k decode steps, exactly as MusicGen inference
+    does."""
+    frames = np.asarray(frames)
+    if frames.ndim != 2:
+        raise ValueError(f"frames must be (P, K), got {frames.shape}")
+    p, k = frames.shape
+    out = np.full((p, k), pad_id, frames.dtype)
+    for cb in range(k):
+        out[cb:, cb] = frames[: p - cb, cb]
+    return out
+
+
+def undelay_frames(streams: Sequence[Sequence[int]],
+                   dtype=np.int32) -> np.ndarray:
+    """Per-codebook delayed streams -> frame-aligned (F, K) token rows.
+
+    ``streams[k][t]`` is the token codebook k emitted at delayed decode step
+    t; frame row f of codebook k was emitted at step f + k, so only the
+    complete rectangle ``F = min_k(len(streams[k]) - k)`` is returned (the
+    first k tokens of codebook k are pre-prompt catch-up frames and are
+    dropped).  A lane that finished naturally satisfies
+    ``len(streams[k]) = F + k`` thanks to the controller's drain staircase;
+    a budget-capped lane simply loses its ragged tail."""
+    k = len(streams)
+    if k == 0:
+        return np.zeros((0, 0), dtype)
+    f = max(min(len(s) - cb for cb, s in enumerate(streams)), 0)
+    out = np.zeros((f, k), dtype)
+    for cb, s in enumerate(streams):
+        out[:, cb] = np.asarray(list(s[cb:cb + f]), dtype)
+    return out
+
+
+def broadcast_prompt_frames(prompt: np.ndarray, num_codebooks: int) -> np.ndarray:
+    """Normalize a request prompt to (P, K) frames: a (P,) semantic stream is
+    broadcast across codebooks (the synthetic world's conditioning), a
+    (P, K) array passes through."""
+    p = np.asarray(prompt, np.int32)
+    if p.ndim == 1:
+        return np.repeat(p[:, None], num_codebooks, axis=1)
+    if p.ndim == 2 and p.shape[1] == num_codebooks:
+        return p
+    raise ValueError(
+        f"codebook prompt must be (P,) or (P, {num_codebooks}), got {p.shape}")
+
+
+def streams_empty(num_codebooks: int) -> List[list]:
+    """Fresh per-codebook token buffers for one lane."""
+    return [[] for _ in range(num_codebooks)]

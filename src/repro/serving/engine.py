@@ -11,9 +11,10 @@ Two decode drivers share one controller:
   stacks are emitted so the host syncs once per chunk — not once per token —
   to decide whether the wave can stop.
 * ``decode_mode="host"``: the retained per-token reference loop. One jitted
-  single-token step per token, with forcing and lane bookkeeping done in
-  Python from synced state. Token-for-token identical to the scanned path
-  (greedy/float32: bit-identical) and the baseline for
+  single-token step per token — the SAME fused decode → sample → force →
+  controller-update math as the scan body — with a device→host sync and the
+  append bookkeeping done per token. Token-for-token identical to the
+  scanned path (greedy/float32: bit-identical) and the baseline for
   ``benchmarks.bench_kernels.bench_serve_loop``.
 
 Early-exit policies (all expressed as (λ, crop_budget) pairs on device):
@@ -27,6 +28,16 @@ Early-exit policies (all expressed as (λ, crop_budget) pairs on device):
 forced, and the first generated token (argmax of the prefill logits) passes
 through the controller like every other token — a first-token THINK_END ends
 the thinking phase immediately and counts zero thinking tokens.
+
+Multi-codebook streams (``cfg.num_codebooks = K > 0``, MusicGen): every
+decode step carries a (B, 1, K) token plane. Prompts are shifted into the
+MusicGen delay-pattern domain on the way in (``serving.delay``), the
+controller forces the per-codebook THINK_END/EOS/pad staircase on device
+(codebook k trails codebook k-1 by one step), emit masks are K-wide (a
+codebook stops emitting once its own stream closed), and retired lanes
+un-shift their per-codebook streams back into frame-aligned (F, K) rows.
+The per-lane probe/bookkeeping follows codebook 0, the undelayed primary
+stream.
 """
 
 from __future__ import annotations
@@ -41,18 +52,21 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import controller as ctrl_mod
-from repro.data.traces import ANS_BASE, EOS, NUM_ANSWERS, THINK_END
+from repro.data.traces import ANS_BASE, EOS, NUM_ANSWERS, PAD, THINK_END
 from repro.models import model as model_mod
 from repro.models.cache import quantize_prefill_cache
 from repro.models.cache import replicate_cache_lanes as cache_mod_replicate
 from repro.models.cache import scatter_cache_lane as cache_mod_scatter
+from repro.serving import delay as delay_mod
 from repro.serving.sampling import decode_key, sample_tokens
 
 
 @dataclass
 class ServeRequest:
     uid: int
-    prompt: np.ndarray                  # (P,) int32
+    prompt: np.ndarray                  # (P,) int32 — or (P, K) frame-aligned
+                                        # codebook rows for num_codebooks=K
+                                        # models ((P,) is broadcast across K)
     max_new: int = 256
     # Per-request encoder output for cross-attention families (audio/vlm):
     # (num_context_tokens, context_dim) float. None -> zeros (unconditioned).
@@ -75,7 +89,9 @@ def stub_ctx(cfg, rng: np.random.Generator) -> Optional[np.ndarray]:
 @dataclass
 class ServeResult:
     uid: int
-    tokens: np.ndarray                  # generated tokens (thinking + answer)
+    tokens: np.ndarray                  # generated tokens (thinking + answer):
+                                        # (T,) — or frame-aligned (F, K) rows
+                                        # for multi-codebook streams
     think_tokens: int                   # tokens spent thinking
     exited_early: bool
     exit_step: int                      # closed steps at the exit trigger (-1: none)
@@ -84,26 +100,45 @@ class ServeResult:
     exit_pos: int = -1                  # absolute token position of the probe trigger
 
 
+def _emit_mask(state: ctrl_mod.ControllerState, ncb: int):
+    """Which (lane[, codebook]) slots emit the token of this step: (B,) for
+    single-stream models, (B, K) for codebook models — a codebook stops
+    emitting once its own stream closed (its forced drain pads are dropped),
+    while the lane stays live until ALL codebooks closed."""
+    if ncb:
+        return (~state.lane_done)[:, None] & ~state.cb_end
+    return ~state.lane_done
+
+
 def make_serve_step(cfg, ctrl: ctrl_mod.ControllerConfig, *,
                     window: int = 0, moe_impl: str = "dense",
                     compute_dtype: str = "float32", temperature: float = 0.0,
                     attn_impl: str | None = None):
     """Build the jitted single-token decode+controller step (host-loop path).
 
-    ``forced``: (B,) next-token override (-1 = sample) computed by the host.
+    Forcing — probe/crop THINK_END plus the codebook delay staircase — is
+    fused on device via :func:`repro.core.controller.forced_next`, exactly
+    the math the scanned chunk runs, so the two drivers differ only in
+    dispatch/sync granularity.  Returns ``(next_tokens, cache, state,
+    emit)`` with ``emit`` the (B,) or (B, K) emission mask of this step.
     """
+    ncb = cfg.num_codebooks
 
-    def serve_step(params, probe_params, dcache, state, tokens, key, forced):
+    def serve_step(params, probe_params, dcache, state, tokens, key):
+        forced, state = ctrl_mod.forced_next(ctrl, state)
         logits, hidden, dcache = model_mod.decode_step(
             cfg, params, dcache, tokens, window=window, moe_impl=moe_impl,
             compute_dtype=compute_dtype, attn_impl=attn_impl)
-        nxt = sample_tokens(key, logits, temperature)[:, 0]        # (B,)
+        nxt = sample_tokens(key, logits, temperature)[:, 0]   # (B,) | (B, K)
+        if ncb:
+            # forced_next returns (B,) for K=1 state; align with the (B, K)
+            # token plane of a codebook model (no-op for K > 1)
+            forced = forced.reshape(nxt.shape)
         nxt = jnp.where(forced >= 0, forced, nxt)
-        # controller consumes the token *just generated* and its hidden state
-        pos = dcache["pos"] - 1
+        emit = _emit_mask(state, ncb)
         state = ctrl_mod.update(ctrl, probe_params, state, nxt,
-                                hidden[:, 0], pos)
-        return nxt, dcache, state
+                                hidden[:, 0], dcache["pos"] - 1)
+        return nxt, dcache, state, emit
 
     return jax.jit(serve_step)
 
@@ -115,12 +150,14 @@ def make_serve_steps(cfg, ctrl: ctrl_mod.ControllerConfig, *,
     """Build the jitted K-token chunk: decode, sampling, controller update and
     THINK_END forcing fused into one ``lax.scan`` (K = ``num_steps``, static).
 
-    Returns per-token stacks ``(tokens, smoothed, emit)`` with shapes (K, B);
-    ``emit[t, i]`` is False once lane i had finished *before* token t (the
-    host drops those slots, matching the host loop's per-lane append).
+    Returns per-token stacks ``(tokens, smoothed, emit)`` with shapes
+    (K, B[, ncb]); ``emit[t, i]`` is False once lane i had finished *before*
+    token t (the host drops those slots, matching the host loop's per-lane
+    append; for codebook models the mask is additionally per-codebook).
     Sampling keys are ``fold_in(base_key, step0 + t)`` so chunk boundaries do
     not change the key stream.
     """
+    ncb = cfg.num_codebooks
 
     @functools.partial(jax.jit, static_argnames=("num_steps",))
     def serve_steps(params, probe_params, dcache, state, cur, base_key,
@@ -134,8 +171,11 @@ def make_serve_steps(cfg, ctrl: ctrl_mod.ControllerConfig, *,
                 attn_impl=attn_impl)
             nxt = sample_tokens(decode_key(base_key, t), logits,
                                 temperature)[:, 0]
+            if ncb:
+                # (B,) -> (B, 1) for a K=1 codebook model (no-op for K > 1)
+                forced = forced.reshape(nxt.shape)
             nxt = jnp.where(forced >= 0, forced, nxt)
-            emit = ~state.lane_done
+            emit = _emit_mask(state, ncb)
             state = ctrl_mod.update(ctrl, probe_params, state, nxt,
                                     hidden[:, 0], dcache["pos"] - 1)
             return (nxt, dcache, state), (nxt, state.smoothed, emit)
@@ -147,14 +187,24 @@ def make_serve_steps(cfg, ctrl: ctrl_mod.ControllerConfig, *,
     return serve_steps
 
 
-def append_chunk(gen: List[List[int]], traces: List[List[float]],
+def append_chunk(gen: List[list], traces: List[List[float]],
                  toks_np: np.ndarray, sm_np: np.ndarray,
                  emit_np: np.ndarray) -> None:
-    """Append one synced (K, B) chunk to per-lane buffers, dropping steps
-    where the lane had already finished.  Boolean-indexing per lane keeps the
-    host bookkeeping O(B) numpy slices instead of O(B*K) interpreted loop
-    iterations — it is on the per-chunk critical path and grows with lane
-    count."""
+    """Append one synced chunk to per-lane buffers, dropping steps where the
+    lane had already finished.  Single-stream chunks are (K, B) and ``gen[i]``
+    a flat token list; codebook chunks are (K, B, ncb) with a K-wide emit
+    mask and ``gen[i]`` a list of ncb per-codebook streams.  Boolean-indexing
+    per lane keeps the host bookkeeping O(B) numpy slices instead of O(B*K)
+    interpreted loop iterations — it is on the per-chunk critical path and
+    grows with lane count."""
+    if emit_np.ndim == 3:                       # codebook: (K, B, ncb)
+        for i in range(len(gen)):
+            m = emit_np[:, i, :]
+            if m.any():
+                traces[i].extend(sm_np[m.any(axis=1), i].tolist())
+                for cb in range(m.shape[1]):
+                    gen[i][cb].extend(toks_np[m[:, cb], i, cb].tolist())
+        return
     for i in range(len(gen)):
         m = emit_np[:, i]
         if m.any():
@@ -171,7 +221,9 @@ class Engine:
     where each lane is independently admitted, decoded, retired, and refilled
     from a pending queue the moment it frees (probe exit, EOS, budget) — see
     ``repro.serving.scheduler``.  The wave path is the bit-exactness
-    reference; continuous mode turns early exit into tokens/sec."""
+    reference; continuous mode turns early exit into tokens/sec.  Both
+    schedulers serve multi-codebook (MusicGen delay-pattern) streams: every
+    token is a (K,) plane and results are frame-aligned (F, K) rows."""
 
     def __init__(self, cfg, params, *, ctrl: ctrl_mod.ControllerConfig,
                  probe_params: ctrl_mod.ProbeParams, lanes: int = 8,
@@ -227,6 +279,9 @@ class Engine:
         self.decode_mode = decode_mode
         self.scheduler = scheduler
         self.chunk = max(int(chunk), 1)
+        # Multi-codebook fan-out: 0 for single-stream models, else the K of
+        # every (B, 1, K) decode plane / (B, K) controller lane.
+        self.ncb = cfg.num_codebooks
         # Native-SWA archs (phi3/hymba) serve from a sliding-window cache:
         # ``window_cache="ring"`` (default) keeps a window-sized ring per lane
         # and decode stays correct for ANY prompt + decode length;
@@ -247,7 +302,7 @@ class Engine:
         eff_crop = crop_budget if policy in ("calibrated", "crop") else 0
         self.wave_ctrl = dataclasses.replace(
             ctrl, think_end_id=THINK_END, eos_id=EOS, ans_base=ANS_BASE,
-            num_answers=NUM_ANSWERS, crop_budget=eff_crop)
+            num_answers=NUM_ANSWERS, crop_budget=eff_crop, pad_id=PAD)
         kw = dict(window=self.window, moe_impl=moe_impl,
                   compute_dtype=compute_dtype, temperature=temperature,
                   attn_impl=attn_impl)
@@ -270,21 +325,28 @@ class Engine:
         with the prefill-argmax token — one compiled graph for the engine's
         lifetime (lane/plen/max_new are traced scalars)."""
         ctrl = self.wave_ctrl
+        ncb = self.ncb
 
         @jax.jit
         def admit(pp, state, cache, cur, small, hid_last, logits, lane, plen,
                   max_new):
             b = cur.shape[0]
             mask = jnp.arange(b) == lane
-            tok0 = jnp.argmax(logits, -1).reshape(()).astype(jnp.int32)
             state = ctrl_mod.reset_lanes(
                 state, mask, jnp.where(mask, max_new, state.max_tokens))
             cache = cache_mod_scatter(cache, small, lane)
             hid_b = jnp.broadcast_to(hid_last, (b, hid_last.shape[-1]))
+            if ncb:
+                tok0 = jnp.argmax(logits, -1).reshape((ncb,)).astype(jnp.int32)
+                tok_b = jnp.broadcast_to(tok0[None], (b, ncb))
+                cur = jnp.where(mask[:, None], tok0[None], cur)
+            else:
+                tok0 = jnp.argmax(logits, -1).reshape(()).astype(jnp.int32)
+                tok_b = jnp.full((b,), tok0)
+                cur = jnp.where(mask, tok0, cur)
             state = ctrl_mod.update_lanes(
-                ctrl, pp, state, mask, jnp.full((b,), tok0),
+                ctrl, pp, state, mask, tok_b,
                 hid_b, jnp.full((b,), plen - 1, jnp.int32))
-            cur = jnp.where(mask, tok0, cur)
             return state, cache, cur, tok0, state.smoothed
 
         return admit
@@ -309,6 +371,36 @@ class Engine:
         if self.window and self.window_cache == "ring":
             return None
         return plen + max_new + self.chunk + 8
+
+    def delayed_prompt(self, req: ServeRequest) -> np.ndarray:
+        """Per-request prompt in the model's input token domain: (P,) as-is
+        for single-stream models, the (P, K) MusicGen delay-pattern shift of
+        the frame-aligned rows for codebook models."""
+        if not self.ncb:
+            return np.asarray(req.prompt, np.int32)
+        frames = delay_mod.broadcast_prompt_frames(req.prompt, self.ncb)
+        return delay_mod.delay_pattern_shift(frames, PAD)
+
+    def result_tokens(self, gen_lane) -> np.ndarray:
+        """A retired lane's buffered emissions as the ServeResult payload:
+        the flat (T,) token list, or — for codebook models — the per-codebook
+        delayed streams un-shifted into frame-aligned (F, K) rows."""
+        if self.ncb:
+            return delay_mod.undelay_frames(gen_lane)
+        return np.asarray(gen_lane, np.int32)
+
+    def _seed_buffers(self, tok0_np: np.ndarray, sm0: np.ndarray):
+        """Per-lane token/trace buffers seeded with the prefill-argmax token
+        (flat lists for single-stream, K per-codebook streams otherwise)."""
+        b = tok0_np.shape[0]
+        if self.ncb:
+            gen: List[list] = [
+                [[int(tok0_np[i, cb])] for cb in range(self.ncb)]
+                for i in range(b)]
+        else:
+            gen = [[int(tok0_np[i])] for i in range(b)]
+        traces: List[List[float]] = [[float(sm0[i])] for i in range(b)]
+        return gen, traces
 
     def request_ctx(self, req: ServeRequest) -> Optional[np.ndarray]:
         """Per-request encoder output as a (T, C) float array, or None for
@@ -355,14 +447,16 @@ class Engine:
         b = len(reqs)
         plen = max(len(r.prompt) for r in reqs)
         max_new = max(r.max_new for r in reqs)
-        prompts = np.zeros((b, plen), np.int32)
+        shape = (b, plen, self.ncb) if self.ncb else (b, plen)
+        prompts = np.full(shape, PAD, np.int32)
         for i, r in enumerate(reqs):
-            prompts[i, plen - len(r.prompt):] = r.prompt     # left-pad
+            prompts[i, plen - len(r.prompt):] = self.delayed_prompt(r)
         logits, hidden, dcache = self._prefill(
             prompts, self.decode_cache_len(plen, max_new),
             ctx=self._batch_ctx(reqs))
 
-        state = ctrl_mod.init_state(b, self.cfg.d_model, self.ctrl.window)
+        state = ctrl_mod.init_state(b, self.cfg.d_model, self.ctrl.window,
+                                    num_codebooks=max(self.ncb, 1))
         # per-lane emission budget: lanes sharing a wave stop at their own
         # request's max_new, not the wave-wide maximum
         state = state._replace(max_tokens=jnp.asarray(
@@ -371,7 +465,7 @@ class Engine:
 
         # first generated token: greedy off the prefill logits, routed through
         # the controller with the hidden state that produced it
-        tok0 = jnp.argmax(logits, -1)[:, 0].astype(jnp.int32)     # (B,)
+        tok0 = jnp.argmax(logits, -1)[:, 0].astype(jnp.int32)  # (B,) | (B, K)
         state = self._seed_fn(pp, state, tok0, hidden[:, -1], dcache["pos"] - 1)
 
         self.key, wave_key = jax.random.split(self.key)
@@ -379,10 +473,10 @@ class Engine:
         if self.decode_mode == "scan":
             gen, traces, state = self._drive_scan(
                 pp, dcache, state, tok0, wave_key, steps_total)
-            book = self._book_from_state(state)
         else:
-            gen, traces, state, book = self._drive_host(
+            gen, traces, state = self._drive_host(
                 pp, dcache, state, tok0, wave_key, steps_total)
+        book = self._book_from_state(state)
 
         out = []
         for i, r in enumerate(reqs):
@@ -390,7 +484,7 @@ class Engine:
             ans = int(book["answer"][i])
             out.append(ServeResult(
                 uid=r.uid,
-                tokens=np.asarray(gen[i], np.int32),
+                tokens=self.result_tokens(gen[i]),
                 think_tokens=int(book["think_tokens"][i]),
                 exited_early=exited,
                 exit_step=int(book["exit_step"][i]) if exited else -1,
@@ -409,10 +503,8 @@ class Engine:
     # ------------------------------------------------- scanned chunk driver
 
     def _drive_scan(self, pp, dcache, state, tok0, wave_key, steps_total):
-        b = tok0.shape[0]
         tok0_np, sm0 = jax.device_get((tok0, state.smoothed))
-        gen: List[List[int]] = [[int(tok0_np[i])] for i in range(b)]
-        traces: List[List[float]] = [[float(sm0[i])] for i in range(b)]
+        gen, traces = self._seed_buffers(tok0_np, sm0)
         # always full-size chunks: a single compiled (B, K) scan graph per
         # wave shape — the final chunk overshoots past steps_total with every
         # lane already over budget, so the overshoot is emit-masked noise
@@ -434,65 +526,19 @@ class Engine:
     # ------------------------------------------------ host-loop reference
 
     def _drive_host(self, pp, dcache, state, tok0, wave_key, steps_total):
-        """Per-token loop: forcing and lane bookkeeping in Python, one jitted
-        step + device→host sync per token. Reference for the scanned driver."""
-        b = tok0.shape[0]
-        tok0_np, sm0, maxt = jax.device_get(
-            (tok0, state.smoothed, state.max_tokens))
-        gen: List[List[int]] = [[int(tok0_np[i])] for i in range(b)]
-        traces: List[List[float]] = [[float(sm0[i])] for i in range(b)]
-        think_done = tok0_np == THINK_END
-        lane_done = np.asarray([len(gen[i]) >= maxt[i] for i in range(b)])
-        think_tokens = np.where(think_done, 0, 1).astype(np.int64)
-        answers = np.full(b, -1, np.int64)
-        forced_exit = np.zeros(b, bool)
-        exit_step = np.full(b, -1, np.int64)
-        crop = self.wave_ctrl.crop_budget
-
+        """Per-token reference loop: one jitted single-token step — the same
+        fused forcing/controller math as the scan body — plus one
+        device→host sync and per-token Python append per token."""
+        tok0_np, sm0 = jax.device_get((tok0, state.smoothed))
+        gen, traces = self._seed_buffers(tok0_np, sm0)
         cur = tok0
-        # one device→host sync per token: done/steps for the NEXT iteration's
-        # forcing decision ride along with this token's (nxt, smoothed) fetch
-        st_done, st_steps = jax.device_get((state.done, state.steps))
         for t in range(steps_total):
-            if lane_done.all():
-                break
-            forced = np.full(b, -1, np.int32)
-            for i in range(b):
-                if lane_done[i] or think_done[i]:
-                    continue
-                crop_hit = crop > 0 and think_tokens[i] >= crop
-                if crop_hit or st_done[i]:
-                    forced[i] = THINK_END
-                    if not forced_exit[i]:
-                        forced_exit[i] = True
-                        exit_step[i] = st_steps[i]
-            nxt, dcache, state = self._step_fn(
+            cur, dcache, state, emit = self._step_fn(
                 self.params, pp, dcache, state, cur[:, None],
-                decode_key(wave_key, t), jnp.asarray(forced))
-            nxt_np, sm, st_done, st_steps = jax.device_get(
-                (nxt, state.smoothed, state.done, state.steps))
-            for i in range(b):
-                if lane_done[i]:
-                    continue
-                tok = int(nxt_np[i])
-                gen[i].append(tok)
-                traces[i].append(float(sm[i]))
-                if not think_done[i]:
-                    if tok == THINK_END:
-                        think_done[i] = True
-                    else:
-                        think_tokens[i] += 1
-                else:
-                    if ANS_BASE <= tok < ANS_BASE + NUM_ANSWERS and answers[i] < 0:
-                        answers[i] = tok - ANS_BASE
-                    if tok == EOS or answers[i] >= 0:
-                        lane_done[i] = True
-                if len(gen[i]) >= maxt[i]:       # per-request max_new
-                    lane_done[i] = True
-            cur = nxt
-        book = {
-            "forced_exit": forced_exit, "exit_step": exit_step,
-            "think_tokens": think_tokens, "answer": answers,
-            "exit_pos": np.asarray(jax.device_get(state.exit_pos)),
-        }
-        return gen, traces, state, book
+                decode_key(wave_key, t))
+            nxt_np, sm_np, emit_np, all_done = jax.device_get(
+                (cur, state.smoothed, emit, state.lane_done.all()))
+            append_chunk(gen, traces, nxt_np[None], sm_np[None], emit_np[None])
+            if all_done:
+                break
+        return gen, traces, state

@@ -17,7 +17,15 @@ def decode_key(wave_key: jax.Array, step) -> jax.Array:
 
 
 def sample_tokens(key, logits: jax.Array, temperature: float = 0.0) -> jax.Array:
-    """logits: (B, 1, V) (or (B, 1, K, V) for codebook models) -> next ids."""
+    """logits: (B, 1, V) (or (B, 1, K, V) for codebook models) -> next ids.
+
+    Multi-codebook logits sample all K lanes from ONE (B, 1, K, V) gumbel
+    draw keyed only by (wave_key, step): per-codebook samples are independent
+    yet a pure function of the step, so the scanned chunk driver, the
+    per-token host loop, and the continuous scheduler draw bit-identical
+    (B, K) planes at any temperature (tests/test_engine.py asserts the
+    scan-vs-host key-stream parity).
+    """
     if temperature <= 0.0:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
     g = jax.random.gumbel(key, logits.shape, jnp.float32)

@@ -44,6 +44,7 @@ import numpy as np
 
 from repro.core import controller as ctrl_mod
 from repro.models import model as model_mod
+from repro.serving import delay as delay_mod
 from repro.serving.engine import ServeRequest, ServeResult, append_chunk
 
 MIN_BUCKET = 8
@@ -67,12 +68,14 @@ def bucket_length(plen: int, min_bucket: int = MIN_BUCKET) -> int:
 
 @dataclasses.dataclass
 class _Active:
-    """One in-flight request pinned to a lane."""
+    """One in-flight request pinned to a lane.  ``tokens`` is a flat token
+    list for single-stream models, a list of K per-codebook delayed streams
+    for codebook models (un-shifted into frame rows at retire)."""
     req: ServeRequest
     order: int                    # submission index (results are re-ordered)
     lane: int
     admitted_step: int            # engine step at admission (stats)
-    tokens: List[int] = dataclasses.field(default_factory=list)
+    tokens: list = dataclasses.field(default_factory=list)
     traces: List[float] = dataclasses.field(default_factory=list)
 
 
@@ -81,10 +84,19 @@ class SlotScheduler:
 
     Pure Python by design — every device-shaped decision (forcing, lane_done,
     budgets) already lives in ``ControllerState``; the scheduler only decides
-    *which request occupies which lane* between chunks."""
+    *which request occupies which lane* between chunks.  ``num_codebooks``
+    sizes the per-lane token buffers (K per-codebook streams when > 0);
+    ``result_tokens`` converts a retired lane's buffer into the
+    ``ServeResult.tokens`` payload (``Engine.result_tokens`` in serving —
+    the single implementation of the un-shift contract — with a flat
+    ``np.asarray`` default for standalone scheduler use)."""
 
-    def __init__(self, lanes: int):
+    def __init__(self, lanes: int, num_codebooks: int = 0,
+                 result_tokens=None):
         self.lanes = lanes
+        self.ncb = num_codebooks
+        self.result_tokens = result_tokens or (
+            lambda gen: np.asarray(gen, np.int32))
         self.pending: Deque[_Active] = deque()
         self.owner: List[Optional[_Active]] = [None] * lanes
         self.admissions: List[Dict[str, int]] = []   # stats: admission log
@@ -92,8 +104,9 @@ class SlotScheduler:
 
     def submit(self, requests: Sequence[ServeRequest]) -> None:
         for r in requests:
+            toks = delay_mod.streams_empty(self.ncb) if self.ncb else []
             self.pending.append(_Active(req=r, order=self._submitted, lane=-1,
-                                        admitted_step=-1))
+                                        admitted_step=-1, tokens=toks))
             self._submitted += 1
 
     @property
@@ -127,7 +140,7 @@ class SlotScheduler:
         ans = int(book["answer"])
         res = ServeResult(
             uid=act.req.uid,
-            tokens=np.asarray(act.tokens, np.int32),
+            tokens=self.result_tokens(act.tokens),
             think_tokens=int(book["think_tokens"]),
             exited_early=exited,
             exit_step=int(book["exit_step"]) if exited else -1,
@@ -152,7 +165,8 @@ def run_continuous(eng, requests: Sequence[ServeRequest]) -> List[ServeResult]:
     if not reqs:
         return []
     lanes = eng.lanes
-    sched = SlotScheduler(lanes)
+    sched = SlotScheduler(lanes, num_codebooks=eng.ncb,
+                          result_tokens=eng.result_tokens)
     sched.submit(reqs)
 
     # cache sizing: the widest bucketed prompt plus the largest decode budget
@@ -168,13 +182,15 @@ def run_continuous(eng, requests: Sequence[ServeRequest]) -> List[ServeResult]:
     pp = eng._wave_probe_params()
     eng.key, run_key = jax.random.split(eng.key)
 
-    state = ctrl_mod.init_state(lanes, eng.cfg.d_model, eng.ctrl.window)
+    state = ctrl_mod.init_state(lanes, eng.cfg.d_model, eng.ctrl.window,
+                                num_codebooks=max(eng.ncb, 1))
     # all lanes start idle: done, zero budget, emit-masked until admission
     state = state._replace(
         lane_done=jnp.ones((lanes,), bool),
         max_tokens=jnp.zeros((lanes,), jnp.int32))
     cache = None
-    cur = jnp.zeros((lanes,), jnp.int32)
+    cur_shape = (lanes, eng.ncb) if eng.ncb else (lanes,)
+    cur = jnp.zeros(cur_shape, jnp.int32)
     results: Dict[int, ServeResult] = {}
     gstep = 0
     chunks = 0
@@ -187,8 +203,9 @@ def run_continuous(eng, requests: Sequence[ServeRequest]) -> List[ServeResult]:
                 break
             plen = len(act.req.prompt)
             bucket = bucket_length(plen)
-            toks = np.zeros((1, bucket), np.int32)
-            toks[0, :plen] = act.req.prompt
+            shape = (1, bucket, eng.ncb) if eng.ncb else (1, bucket)
+            toks = np.zeros(shape, np.int32)
+            toks[0, :plen] = eng.delayed_prompt(act.req)
             ctx = eng.request_ctx(act.req)
             logits, hid_last, small = model_mod.prefill_into_slot(
                 eng.cfg, eng.params, jnp.asarray(toks), plen,
@@ -205,7 +222,11 @@ def run_continuous(eng, requests: Sequence[ServeRequest]) -> List[ServeResult]:
                 jnp.int32(lane), jnp.int32(plen),
                 jnp.int32(act.req.max_new))
             tok0_np, sm_np = jax.device_get((tok0, sm))
-            act.tokens.append(int(tok0_np))
+            if eng.ncb:
+                for cb in range(eng.ncb):
+                    act.tokens[cb].append(int(tok0_np[cb]))
+            else:
+                act.tokens.append(int(tok0_np))
             act.traces.append(float(sm_np[lane]))
 
     admit_free_lanes()

@@ -197,6 +197,56 @@ def test_probe_trigger_records_exit_step(key):
     assert int(state.exit_step[0]) == 1
 
 
+def _feed_cb(ctrl, pp, planes, state, ncb):
+    rng = np.random.default_rng(9)
+    for t, plane in enumerate(planes):
+        hid = jnp.asarray(rng.normal(size=(1, D)).astype(np.float32))
+        state = C.update(ctrl, pp, state,
+                         jnp.asarray([plane], jnp.int32), hid,
+                         jnp.full((1,), t))
+    return state
+
+
+def test_codebook_delay_staircase(key):
+    """K=3 delay-pattern forcing: THINK_END propagates one codebook per
+    step; after the primary closes (answer), codebook k is forced to EOS one
+    step after codebook k-1 closed while closed codebooks emit pad — the
+    lane is done only once ALL codebooks closed."""
+    from repro.data.traces import ANS_BASE, EOS, PAD, THINK_END
+    ctrl = _phase_ctrl(crop_budget=2, pad_id=PAD)
+    pp = _probe_params(key, lam=2.0)
+    c = 70
+    state = C.init_state(1, D, ctrl.window, num_codebooks=3)
+    # an ORGANIC token equal to the THINK_END id on a later codebook (audio
+    # codes range over the whole vocab) must NOT arm the staircase early:
+    # codebook k only counts a THINK_END once codebook k-1 consumed its own
+    state = _feed_cb(ctrl, pp, [[c, THINK_END, 91], [c, 90, THINK_END]],
+                     state, 3)
+    assert state.cb_think_done[0].tolist() == [False, False, False]
+    forced, state = C.forced_next(ctrl, state)        # crop: 2 >= 2
+    assert forced.shape == (1, 3)
+    assert forced[0].tolist() == [THINK_END, -1, -1]
+    assert bool(state.forced_exit[0])
+    state = _feed_cb(ctrl, pp, [[THINK_END, 90, 91]], state, 3)
+    assert state.cb_think_done[0].tolist() == [True, False, False]
+    forced, state = C.forced_next(ctrl, state)        # TE propagates to cb1
+    assert forced[0].tolist() == [-1, THINK_END, -1]
+    # primary emits its answer while cb1 consumes its THINK_END
+    state = _feed_cb(ctrl, pp, [[ANS_BASE + 3, THINK_END, 91]], state, 3)
+    assert state.cb_end[0].tolist() == [True, False, False]
+    assert int(state.answer[0]) == 3
+    assert not bool(state.lane_done[0])               # draining
+    forced, state = C.forced_next(ctrl, state)        # pad / EOS / TE
+    assert forced[0].tolist() == [PAD, EOS, THINK_END]
+    state = _feed_cb(ctrl, pp, [[PAD, EOS, THINK_END]], state, 3)
+    assert state.cb_end[0].tolist() == [True, True, False]
+    forced, state = C.forced_next(ctrl, state)
+    assert forced[0].tolist() == [PAD, PAD, EOS]
+    state = _feed_cb(ctrl, pp, [[PAD, PAD, EOS]], state, 3)
+    assert state.cb_end[0].tolist() == [True, True, True]
+    assert bool(state.lane_done[0])                   # all K codebooks closed
+
+
 def test_min_steps_respected(key):
     ctrl = C.ControllerConfig(BOUNDARY_IDS, MARKER_IDS, window=W,
                               min_steps=4, probe_dim=K)

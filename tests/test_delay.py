@@ -1,0 +1,58 @@
+"""MusicGen delay-pattern shift/un-shift helpers (`repro.serving.delay`)."""
+
+import numpy as np
+import pytest
+
+from repro.serving import delay as D
+
+
+def test_delay_pattern_shift_staircase():
+    frames = np.arange(1, 13, dtype=np.int32).reshape(4, 3)  # rows 1..12
+    out = D.delay_pattern_shift(frames, pad_id=0)
+    # position t holds codebook k's frame t - k (pad for t < k)
+    assert out[:, 0].tolist() == frames[:, 0].tolist()
+    assert out[:, 1].tolist() == [0] + frames[:3, 1].tolist()
+    assert out[:, 2].tolist() == [0, 0] + frames[:2, 2].tolist()
+    with pytest.raises(ValueError):
+        D.delay_pattern_shift(frames[:, 0])                  # 1-D: not (P, K)
+
+
+def test_undelay_frames_complete_rectangle_only():
+    # drained streams: codebook k carries frames 0..3 at steps k..k+3
+    frames = np.arange(12, dtype=np.int32).reshape(4, 3)
+    drained = [[int(frames[t - k, k]) if t >= k else -1
+                for t in range(4 + k)] for k in range(3)]
+    np.testing.assert_array_equal(D.undelay_frames(drained), frames)
+    # budget-capped: every stream cut at T=4 steps -> only F = T - K + 1
+    # complete rows survive
+    capped = [s[:4] for s in drained]
+    got = D.undelay_frames(capped)
+    assert got.shape == (2, 3)
+    np.testing.assert_array_equal(got, frames[:2])
+    # degenerate: fewer steps than codebooks -> zero complete rows
+    assert D.undelay_frames([[1], [2], [3]]).shape == (0, 3)
+    assert D.undelay_frames([]).shape == (0, 0)
+
+
+def test_shift_undelay_roundtrip():
+    rng = np.random.default_rng(0)
+    frames = rng.integers(1, 250, size=(9, 4)).astype(np.int32)
+    shifted = D.delay_pattern_shift(frames, pad_id=0)
+    # a P-step delayed prompt holds frames 0..P-1-k of codebook k; extending
+    # each stream with its missing k tail frames (what decode regenerates)
+    # makes the un-shift recover the full frame rows
+    streams = [shifted[:, k].tolist()
+               + frames[9 - k:, k].tolist() for k in range(4)]
+    np.testing.assert_array_equal(D.undelay_frames(streams), frames)
+
+
+def test_broadcast_prompt_frames():
+    flat = np.array([5, 6, 7], np.int32)
+    out = D.broadcast_prompt_frames(flat, 3)
+    assert out.shape == (3, 3)
+    assert (out == flat[:, None]).all()
+    full = np.zeros((3, 2), np.int32)
+    assert D.broadcast_prompt_frames(full, 2) is not None
+    with pytest.raises(ValueError):
+        D.broadcast_prompt_frames(full, 3)                   # K mismatch
+    assert D.streams_empty(2) == [[], []]

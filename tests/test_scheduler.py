@@ -292,23 +292,20 @@ def test_continuous_rejects_host_decode_mode(setup):
 
 def test_continuous_capability_probe(setup):
     """The engine consults ``model.slot_prefill_unsupported`` instead of a
-    family allowlist: every family config is admissible; the remaining
-    unsupported shapes fail with the actual reason."""
+    family allowlist: EVERY shipped config — including multi-codebook audio,
+    the last shape the probe used to reject — is admissible."""
     _, _, ctrl, pp = setup
-    for arch in ("mamba2-2.7b", "hymba-1.5b", "llama-3.2-vision-11b"):
+    from repro.configs import ARCH_IDS
+    from repro.models import model as model_mod
+    for arch in ARCH_IDS:
+        assert model_mod.slot_prefill_unsupported(get_reduced(arch)) is None
+    for arch in ("mamba2-2.7b", "hymba-1.5b", "llama-3.2-vision-11b",
+                 "musicgen-large"):
         Engine(get_reduced(arch), None, ctrl=ctrl, probe_params=pp,
                scheduler="continuous")                 # must not raise
-    # multi-codebook audio streams decode (B, K) tokens per step — the one
-    # config shape the single-stream serving engine still cannot admit
     cb_cfg = get_reduced("musicgen-large")
     assert cb_cfg.num_codebooks > 0
-    with pytest.raises(ValueError, match="codebook"):
-        Engine(cb_cfg, None, ctrl=ctrl, probe_params=pp,
-               scheduler="continuous")
-    Engine(cb_cfg.replace(num_codebooks=0), None, ctrl=ctrl,
-           probe_params=pp, scheduler="continuous")    # single-stream: fine
     # unknown future family: the probe reports it has no slot-prefill path
-    from repro.models import model as model_mod
     assert "retnet" not in model_mod.SLOT_PREFILL_FAMILIES
     assert model_mod.slot_prefill_unsupported(
         cb_cfg.replace(family="retnet")) is not None
@@ -326,6 +323,7 @@ def test_kv_quant_rejected_off_append_cache_path(setup):
 
 # ---------------------------------------------------------------------------
 # all-family parity: continuous == solo wave for ssm / hybrid / audio / vlm
+# (audio serves its REAL num_codebooks=2 delay-pattern fan-out)
 # ---------------------------------------------------------------------------
 
 FAMILY_ARCHS = ("mamba2-2.7b", "hymba-1.5b", "musicgen-large",
@@ -349,8 +347,6 @@ def test_continuous_matches_alone_all_families(arch):
     (tokens, bookkeeping, probe traces) bit-identical to solo wave runs at
     greedy/float32, with hetero-prompt bucketing and per-request ctx."""
     cfg = get_reduced(arch)
-    if cfg.num_codebooks:
-        cfg = cfg.replace(num_codebooks=0)   # engine serves one token stream
     params = M.init_params(cfg, jax.random.PRNGKey(0))
     ctrl = C.ControllerConfig(BOUNDARY_IDS, MARKER_IDS, window=10,
                               min_steps=1, probe_dim=16)
@@ -367,3 +363,126 @@ def test_continuous_matches_alone_all_families(arch):
     for a, b in zip(alone, cont):
         assert _result_tuple(a) == _result_tuple(b), f"{arch} uid {a.uid}"
     assert {a["uid"] for a in eng.last_stats["admissions"]} == {0, 1, 2, 3}
+
+
+# ---------------------------------------------------------------------------
+# multi-codebook (MusicGen delay-pattern) serving
+# ---------------------------------------------------------------------------
+
+def test_musicgen_codebooks_three_way_parity():
+    """musicgen (num_codebooks=2 test config) serves through wave/scan,
+    wave/host AND continuous with per-request outputs — frame-aligned
+    (F, K) token rows, bookkeeping, probe traces — bit-identical across all
+    three drivers (greedy/float32)."""
+    cfg = get_reduced("musicgen-large")
+    assert cfg.num_codebooks == 2
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    ctrl = C.ControllerConfig(BOUNDARY_IDS, MARKER_IDS, window=10,
+                              min_steps=1, probe_dim=16)
+    pp = C.init_probe_params(cfg.d_model, 16)
+    reqs = _family_requests(cfg, lens=(1, 4, 9), max_new=12)
+    kw = dict(ctrl=ctrl, probe_params=pp, policy="crop", crop_budget=4,
+              chunk=4, seed=3)
+    res = {"scan": [], "host": []}
+    for r in reqs:                                   # solo waves: no left-pad
+        for mode in ("scan", "host"):
+            eng = Engine(cfg, params, lanes=1, decode_mode=mode, **kw)
+            res[mode].extend(eng.run([r]))
+    eng = Engine(cfg, params, lanes=2, scheduler="continuous", **kw)
+    res["continuous"] = eng.run(reqs)
+    for a, b, c in zip(res["scan"], res["host"], res["continuous"]):
+        assert _result_tuple(a) == _result_tuple(b), f"scan!=host uid {a.uid}"
+        assert _result_tuple(a) == _result_tuple(c), f"scan!=cont uid {a.uid}"
+        assert np.asarray(a.tokens).ndim == 2          # frame-aligned (F, K)
+        assert np.asarray(a.tokens).shape[1] == cfg.num_codebooks
+
+
+def test_codebook_k1_degenerate_serves():
+    """num_codebooks=1 (a user-reachable shape now that the capability probe
+    admits every codebook count) decodes (B, 1, 1) planes: forced_next's
+    (B,) single-stream return must align with the (B, 1) token plane rather
+    than broadcasting to (B, B)."""
+    cfg = get_reduced("musicgen-large").replace(num_codebooks=1)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    ctrl = C.ControllerConfig(BOUNDARY_IDS, MARKER_IDS, window=10,
+                              min_steps=1, probe_dim=16)
+    pp = C.init_probe_params(cfg.d_model, 16)
+    reqs = _family_requests(cfg, lens=(1, 4), max_new=8)
+    kw = dict(ctrl=ctrl, probe_params=pp, policy="crop", crop_budget=3,
+              chunk=4, seed=3)
+    alone = []
+    for r in reqs:
+        alone.extend(Engine(cfg, params, lanes=1, **kw).run([r]))
+    cont = Engine(cfg, params, lanes=2, scheduler="continuous", **kw).run(reqs)
+    for a, b in zip(alone, cont):
+        assert _result_tuple(a) == _result_tuple(b), f"uid {a.uid}"
+        assert np.asarray(a.tokens).shape[1] == 1
+
+
+def test_musicgen_drain_completes_frame_rectangle(monkeypatch):
+    """A naturally finished codebook lane drains K-1 extra delayed steps —
+    the forced EOS/pad staircase — so the un-shifted output is the full frame
+    rectangle ending in an all-codebook EOS row."""
+    from repro.data.traces import PAD
+    from repro.serving import delay as D
+
+    cfg = get_reduced("musicgen-large").replace(num_codebooks=3)
+    ncb = 3
+    # script only codebook 0 (the primary): think, THINK_END, answer.  The
+    # other codebooks play inert content; the staircase must force their
+    # THINK_END/EOS/pad tails.
+    prim = [CONTENT, CONTENT, THINK_END, ANS_BASE + 5] + [CONTENT] * 12
+    script = jnp.asarray(prim, jnp.int32)
+    HID = jax.random.normal(jax.random.PRNGKey(1), (4096, cfg.d_model))
+
+    def fake_prefill(cfg_, params, tokens, ctx=None, **kw):
+        b, s = tokens.shape[:2]
+        logits = jax.nn.one_hot(
+            jnp.stack([script[0], jnp.int32(200), jnp.int32(201)]), 256
+        )[None, None]                                  # (1, 1, K, V)
+        hidden = jnp.broadcast_to(HID[:s][None], (b, s, cfg.d_model))
+        return logits, hidden, {"pos": jnp.full((b,), s, jnp.int32),
+                                "plen": jnp.full((b,), s, jnp.int32)}
+
+    def fake_decode(cfg_, params, dcache, tokens, **kw):
+        pos = dcache["pos"]
+        b = pos.shape[0]
+        step = jnp.clip(pos - dcache["plen"] + 1, 0, script.shape[0] - 1)
+        tok = jnp.stack([script[step[0]], jnp.int32(200), jnp.int32(201)])
+        logits = jax.nn.one_hot(tok, 256)[None, None]  # (1, 1, K, V)
+        hidden = HID[pos][:, None, :]
+        new = dict(dcache)
+        new["pos"] = pos + 1
+        return logits, hidden, new
+
+    monkeypatch.setattr(M, "prefill", fake_prefill)
+    monkeypatch.setattr(M, "decode_step", fake_decode)
+    ctrl = C.ControllerConfig(BOUNDARY_IDS, MARKER_IDS, window=10,
+                              min_steps=1, probe_dim=16)
+    pp = C.init_probe_params(cfg.d_model, 16)
+    eng = Engine(cfg, None, ctrl=ctrl, probe_params=pp, lanes=1,
+                 policy="full", chunk=4)
+    r, = eng.run([ServeRequest(uid=0, prompt=np.array([BOS], np.int32),
+                               max_new=16)])
+    # primary stream: c c THINK_END ans — 4 frames; the staircase drains the
+    # delayed codebooks (THINK_END at +k, EOS at +k after the answer row)
+    assert r.tokens.shape == (4, ncb)
+    assert r.tokens[:, 0].tolist() == prim[:4]
+    assert r.think_tokens == 2 and r.answer == 5
+    # codebook k consumed its THINK_END one step after codebook k-1: frame
+    # row 2 holds THINK_END on cb0; cb1's THINK_END was emitted one delayed
+    # step later, which un-shifts to the SAME frame row
+    assert r.tokens[2].tolist() == [THINK_END] * ncb
+    # final frame row: answer on the primary, forced EOS on the others
+    assert r.tokens[3, 0] == ANS_BASE + 5
+    assert r.tokens[3, 1] == EOS and r.tokens[3, 2] == EOS
+    # delay round-trip sanity on the same shapes: shifting frames into the
+    # delayed domain and un-shifting the (drained) per-codebook streams
+    # recovers the frame rows exactly
+    frames = np.arange(12, dtype=np.int32).reshape(4, 3)
+    shifted = D.delay_pattern_shift(frames, PAD)
+    assert shifted[0].tolist() == [0, PAD, PAD]
+    assert shifted[3].tolist() == [9, 7, 5]
+    drained = [[int(frames[t - k, k]) if t >= k else PAD
+                for t in range(4 + k)] for k in range(3)]
+    np.testing.assert_array_equal(D.undelay_frames(drained), frames)

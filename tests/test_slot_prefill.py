@@ -16,9 +16,8 @@ import pytest
 from repro.configs import get_reduced
 from repro.models import model as M
 
-# one arch per family (audio keeps its codebook streams: the slot prefill is
-# family-level machinery; the engine-level single-stream restriction is
-# asserted separately in test_scheduler.py)
+# one arch per family (audio keeps its codebook streams — the same (1, S, K)
+# planes the engine's delay-pattern admission feeds this path)
 FAMILY_ARCHS = (
     "qwen3-8b",            # dense
     "qwen2-moe-a2.7b",     # moe
