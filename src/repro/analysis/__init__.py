@@ -1,0 +1,24 @@
+"""Dynamic trace-hygiene tooling: transfer-guard sanitizers and the
+host-sync ledger that turns "one host sync per chunk" into an asserted
+invariant (see :mod:`repro.analysis.guards`).  The static half lives in
+``tools/tracelint`` at the repo root."""
+
+from repro.analysis.guards import (
+    TransferLedger,
+    attach_ledger,
+    chunk_guard,
+    device_scalar,
+    host_sync,
+    sanitize_enabled,
+    sanitize_scope,
+)
+
+__all__ = [
+    "TransferLedger",
+    "attach_ledger",
+    "chunk_guard",
+    "device_scalar",
+    "host_sync",
+    "sanitize_enabled",
+    "sanitize_scope",
+]

@@ -51,6 +51,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import guards
 from repro.core import controller as ctrl_mod
 from repro.data.traces import ANS_BASE, EOS, NUM_ANSWERS, PAD, THINK_END
 from repro.models import model as model_mod
@@ -296,6 +297,7 @@ class Engine:
                        and cfg.family != "ssm" else 0)
         self.window_cache = window_cache
         self.last_stats: Dict[str, object] = {}
+        self._run_chunks = self._run_steps = 0  # wave-mode run counters
         # Policies compile down to (λ, crop) on device: `full` disables both
         # triggers, `crop` disables the probe, `calibrated` keeps both (the
         # default crop_budget of 1e9 is inert).
@@ -433,13 +435,25 @@ class Engine:
         return self.probe_params
 
     def run(self, requests: Sequence[ServeRequest]) -> List[ServeResult]:
-        if self.scheduler == "continuous":
-            from repro.serving.scheduler import run_continuous
-            return run_continuous(self, requests)
-        results: List[ServeResult] = []
-        for i in range(0, len(requests), self.lanes):
-            results.extend(self._run_wave(requests[i : i + self.lanes]))
-        return results
+        """Serve ``requests``; under ``REPRO_SANITIZE=1`` the whole run
+        executes inside :func:`repro.analysis.guards.sanitize_scope`
+        (implicit-d2h transfer guard + NaN checking)."""
+        with guards.sanitize_scope():
+            if self.scheduler == "continuous":
+                from repro.serving.scheduler import run_continuous
+                return run_continuous(self, requests)
+            results: List[ServeResult] = []
+            self._run_chunks = self._run_steps = waves = 0
+            for i in range(0, len(requests), self.lanes):
+                results.extend(self._run_wave(requests[i : i + self.lanes]))
+                waves += 1
+            self.last_stats = {
+                "scheduler": "wave", "decode_mode": self.decode_mode,
+                "waves": waves, "chunks": self._run_chunks,
+                "steps": self._run_steps, "lanes": self.lanes,
+                "requests": len(requests),
+            }
+            return results
 
     # ------------------------------------------------------------------ wave
 
@@ -497,13 +511,13 @@ class Engine:
     @staticmethod
     def _book_from_state(state: ctrl_mod.ControllerState) -> Dict[str, np.ndarray]:
         keys = ("forced_exit", "exit_step", "think_tokens", "answer", "exit_pos")
-        vals = jax.device_get([getattr(state, k) for k in keys])
+        vals = guards.host_sync([getattr(state, k) for k in keys], "book")
         return dict(zip(keys, vals))
 
     # ------------------------------------------------- scanned chunk driver
 
     def _drive_scan(self, pp, dcache, state, tok0, wave_key, steps_total):
-        tok0_np, sm0 = jax.device_get((tok0, state.smoothed))
+        tok0_np, sm0 = guards.host_sync((tok0, state.smoothed), "seed")
         gen, traces = self._seed_buffers(tok0_np, sm0)
         # always full-size chunks: a single compiled (B, K) scan graph per
         # wave shape — the final chunk overshoots past steps_total with every
@@ -511,14 +525,20 @@ class Engine:
         cur, t = tok0, 0
         while t < steps_total:
             k = self.chunk
-            cur, dcache, state, toks, sm, emit = self._steps_fn(
-                self.params, pp, dcache, state, cur, wave_key,
-                jnp.int32(t), num_steps=k)
-            # one device→host sync per chunk
-            toks_np, sm_np, emit_np, all_done = jax.device_get(
-                (toks, sm, emit, state.lane_done.all()))
+            # steady state runs transfer-guarded: the step counter crosses
+            # h2d explicitly (device_scalar), results cross d2h through the
+            # single sanctioned host_sync — anything else raises
+            with guards.chunk_guard():
+                cur, dcache, state, toks, sm, emit = self._steps_fn(
+                    self.params, pp, dcache, state, cur, wave_key,
+                    guards.device_scalar(t, jnp.int32), num_steps=k)
+                # one device→host sync per chunk
+                toks_np, sm_np, emit_np, all_done = guards.host_sync(
+                    (toks, sm, emit, state.lane_done.all()), "chunk")
             append_chunk(gen, traces, toks_np, sm_np, emit_np)
             t += k
+            self._run_chunks += 1
+            self._run_steps += k
             if all_done:
                 break
         return gen, traces, state
@@ -529,16 +549,22 @@ class Engine:
         """Per-token reference loop: one jitted single-token step — the same
         fused forcing/controller math as the scan body — plus one
         device→host sync and per-token Python append per token."""
-        tok0_np, sm0 = jax.device_get((tok0, state.smoothed))
+        tok0_np, sm0 = guards.host_sync((tok0, state.smoothed), "seed")
         gen, traces = self._seed_buffers(tok0_np, sm0)
         cur = tok0
         for t in range(steps_total):
-            cur, dcache, state, emit = self._step_fn(
-                self.params, pp, dcache, state, cur[:, None],
-                decode_key(wave_key, t))
-            nxt_np, sm_np, emit_np, all_done = jax.device_get(
-                (cur, state.smoothed, emit, state.lane_done.all()))
+            # same bracket as the scanned driver, at token granularity: the
+            # step index is an explicit device_scalar (fold_in draws
+            # bit-identical keys either way) and the per-token fetch is the
+            # one sanctioned sync of the iteration
+            with guards.chunk_guard():
+                cur, dcache, state, emit = self._step_fn(
+                    self.params, pp, dcache, state, cur[:, None],
+                    decode_key(wave_key, guards.device_scalar(t, jnp.int32)))
+                nxt_np, sm_np, emit_np, all_done = guards.host_sync(
+                    (cur, state.smoothed, emit, state.lane_done.all()), "token")
             append_chunk(gen, traces, nxt_np[None], sm_np[None], emit_np[None])
+            self._run_steps += 1
             if all_done:
                 break
         return gen, traces, state

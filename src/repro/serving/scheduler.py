@@ -42,6 +42,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import guards
 from repro.core import controller as ctrl_mod
 from repro.models import model as model_mod
 from repro.serving import delay as delay_mod
@@ -219,9 +220,9 @@ def run_continuous(eng, requests: Sequence[ServeRequest]) -> List[ServeResult]:
                 cache = eng._replicate_fn(small)
             state, cache, cur, tok0, sm = eng._admit_fn(
                 pp, state, cache, cur, small, hid_last, logits,
-                jnp.int32(lane), jnp.int32(plen),
-                jnp.int32(act.req.max_new))
-            tok0_np, sm_np = jax.device_get((tok0, sm))
+                guards.device_scalar(lane), guards.device_scalar(plen),
+                guards.device_scalar(act.req.max_new))
+            tok0_np, sm_np = guards.host_sync((tok0, sm), "admit")
             if eng.ncb:
                 for cb in range(eng.ncb):
                     act.tokens[cb].append(int(tok0_np[cb]))
@@ -231,16 +232,21 @@ def run_continuous(eng, requests: Sequence[ServeRequest]) -> List[ServeResult]:
 
     admit_free_lanes()
     while sched.any_active:
-        cur, cache, state, toks, sm, emit = eng._steps_fn(
-            eng.params, pp, cache, state, cur, run_key,
-            jnp.int32(gstep), num_steps=eng.chunk)
+        # steady state runs transfer-guarded (same bracket as the wave
+        # drivers): the step counter crosses h2d explicitly, and the chunk's
+        # only d2h point is the sanctioned host_sync below
+        with guards.chunk_guard():
+            cur, cache, state, toks, sm, emit = eng._steps_fn(
+                eng.params, pp, cache, state, cur, run_key,
+                guards.device_scalar(gstep), num_steps=eng.chunk)
+            # one device→host sync per chunk: emitted tokens/traces plus the
+            # per-lane bookkeeping needed to retire any lane that just
+            # finished
+            fetched = guards.host_sync(
+                (toks, sm, emit, state.lane_done)
+                + tuple(getattr(state, k) for k in BOOK_KEYS), "chunk")
         gstep += eng.chunk
         chunks += 1
-        # one device→host sync per chunk: emitted tokens/traces plus the
-        # per-lane bookkeeping needed to retire any lane that just finished
-        fetched = jax.device_get(
-            (toks, sm, emit, state.lane_done)
-            + tuple(getattr(state, k) for k in BOOK_KEYS))
         toks_np, sm_np, emit_np, done_np = fetched[:4]
         book = dict(zip(BOOK_KEYS, fetched[4:]))
         gen = [a.tokens if a is not None else [] for a in sched.owner]

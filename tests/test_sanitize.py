@@ -1,0 +1,211 @@
+"""Sanitizer-tier tests: the "one host sync per chunk" invariant as exact
+ledger counts across both schedulers, transfer-guard behavior of the hot
+loop, and ``REPRO_SANITIZE=1`` parity for an attention and an SSM family.
+
+The ledger tests use the scripted-model harness from ``test_engine`` so
+counts are deterministic and fast; the cross-check that every
+``jax.device_get`` on the serving path goes through the sanctioned
+``host_sync`` wrapper is done by patching ``jax.device_get`` itself.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import guards
+from repro.configs import get_reduced
+from repro.core import controller as C
+from repro.data.traces import BOUNDARY_IDS, MARKER_IDS
+from repro.models import model as M
+from repro.serving import Engine
+
+from test_engine import CONTENT, _install_scripted_model, _reqs, _result_tuple
+
+
+def _ctrl_pp(cfg):
+    ctrl = C.ControllerConfig(BOUNDARY_IDS, MARKER_IDS, window=10,
+                              min_steps=1, probe_dim=16)
+    pp = C.init_probe_params(cfg.d_model, 16)
+    return ctrl, pp
+
+
+# ---------------------------------------------------------------------------
+# guards unit tests
+
+
+def test_ledger_records_and_nests():
+    outer, inner = guards.TransferLedger(), guards.TransferLedger()
+    x = jnp.arange(3)
+    with guards.attach_ledger(outer):
+        guards.host_sync(x, "a")
+        with guards.attach_ledger(inner):
+            guards.host_sync(x, "a")
+            guards.host_sync(x, "b")
+    guards.host_sync(x, "a")  # no ledger attached: not recorded anywhere
+    assert outer.counts == {"a": 2, "b": 1} and outer.total == 3
+    assert inner.counts == {"a": 1, "b": 1}
+    outer.reset()
+    assert outer.counts == {} and outer.total == 0
+
+
+def test_host_sync_returns_device_get_result():
+    toks, flag = guards.host_sync((jnp.arange(4), jnp.bool_(True)))
+    assert isinstance(toks, np.ndarray) and toks.tolist() == [0, 1, 2, 3]
+    assert bool(flag) is True
+
+
+def test_device_scalar_is_explicit_and_typed():
+    s = guards.device_scalar(7)
+    assert isinstance(s, jax.Array) and s.dtype == jnp.int32 and int(s) == 7
+    f = guards.device_scalar(1.5, jnp.float32)
+    assert f.dtype == jnp.float32
+
+
+def test_chunk_guard_blocks_implicit_h2d_allows_explicit():
+    # the exact leak classes the guard exists for: a Python scalar silently
+    # converted at a jit boundary / jnp call
+    with pytest.raises(Exception, match="[Dd]isallow"):
+        with guards.chunk_guard():
+            jnp.asarray(3)
+    # the sanctioned explicit paths pass
+    with guards.chunk_guard():
+        s = guards.device_scalar(3)
+        out = jax.jit(lambda v: v + 1)(s)
+        assert int(guards.host_sync(out, "test")) == 4
+
+
+def test_sanitize_enabled_parsing(monkeypatch):
+    for val, expect in [("1", True), ("true", True), ("on", True),
+                        ("0", False), ("", False), ("no", False)]:
+        monkeypatch.setenv("REPRO_SANITIZE", val)
+        assert guards.sanitize_enabled() is expect
+    monkeypatch.delenv("REPRO_SANITIZE")
+    assert guards.sanitize_enabled() is False
+
+
+# ---------------------------------------------------------------------------
+# engine transfer counts (scripted model: deterministic, fast)
+
+
+@pytest.fixture
+def counted_device_get(monkeypatch):
+    """Patch jax.device_get so every d2h fetch on the serving path is
+    counted — host_sync performs exactly one, so any direct device_get that
+    bypasses the sanctioned wrapper shows up as a count mismatch."""
+    calls = {"n": 0}
+    real = jax.device_get
+
+    def counting(tree):
+        calls["n"] += 1
+        return real(tree)
+
+    monkeypatch.setattr(jax, "device_get", counting)
+    return calls
+
+
+def _scripted_engine(monkeypatch, cfg, lanes, **kw):
+    script = np.full((lanes, 64), CONTENT, np.int32)  # never ends naturally
+    _install_scripted_model(monkeypatch, script, cfg.d_model)
+    ctrl, pp = _ctrl_pp(cfg)
+    return Engine(cfg, None, ctrl=ctrl, probe_params=pp, lanes=lanes,
+                  policy="full", **kw)
+
+
+def test_wave_scan_exactly_one_sync_per_chunk(monkeypatch, counted_device_get):
+    cfg = get_reduced("qwen3-8b")
+    eng = _scripted_engine(monkeypatch, cfg, lanes=3, decode_mode="scan",
+                           chunk=4)
+    ledger = guards.TransferLedger()
+    with guards.attach_ledger(ledger):
+        res = eng.run(_reqs(3, max_new=17))
+    assert len(res) == 3
+    # max_new=17: 1 seed token + 16 scanned steps = exactly 4 chunks of 4
+    assert eng.last_stats["chunks"] == 4
+    assert ledger.counts["chunk"] == eng.last_stats["chunks"] == 4
+    # per wave: one seed fetch, one bookkeeping fetch — nothing else
+    assert ledger.counts["seed"] == 1 and ledger.counts["book"] == 1
+    assert set(ledger.counts) == {"chunk", "seed", "book"}
+    # every device_get went through the sanctioned host_sync
+    assert counted_device_get["n"] == ledger.total
+
+
+def test_wave_host_exactly_one_sync_per_token(monkeypatch, counted_device_get):
+    cfg = get_reduced("qwen3-8b")
+    eng = _scripted_engine(monkeypatch, cfg, lanes=2, decode_mode="host")
+    ledger = guards.TransferLedger()
+    with guards.attach_ledger(ledger):
+        eng.run(_reqs(2, max_new=9))
+    # 1 seed + 8 per-token steps (budget exhausts on the last one)
+    assert eng.last_stats["steps"] == 8
+    assert ledger.counts["token"] == eng.last_stats["steps"]
+    assert set(ledger.counts) == {"token", "seed", "book"}
+    assert counted_device_get["n"] == ledger.total
+
+
+def test_wave_scan_chunk_counts_across_waves(monkeypatch, counted_device_get):
+    """Two waves (4 requests, 2 lanes): counters aggregate across waves and
+    the ledger still matches exactly."""
+    cfg = get_reduced("qwen3-8b")
+    eng = _scripted_engine(monkeypatch, cfg, lanes=2, decode_mode="scan",
+                           chunk=8)
+    ledger = guards.TransferLedger()
+    with guards.attach_ledger(ledger):
+        res = eng.run(_reqs(4, max_new=17))
+    assert len(res) == 4 and eng.last_stats["waves"] == 2
+    assert eng.last_stats["chunks"] == 4  # 2 chunks of 8 per wave
+    assert ledger.counts["chunk"] == 4
+    assert ledger.counts["seed"] == 2 and ledger.counts["book"] == 2
+    assert counted_device_get["n"] == ledger.total
+
+
+def test_continuous_exactly_one_sync_per_chunk(counted_device_get, key):
+    """Continuous scheduler: one 'chunk' sync per decode chunk, one 'admit'
+    sync per admission, nothing unsanctioned (real reduced model)."""
+    cfg = get_reduced("qwen3-8b")
+    params = M.init_params(cfg, key)
+    ctrl, pp = _ctrl_pp(cfg)
+    eng = Engine(cfg, params, ctrl=ctrl, probe_params=pp, lanes=2,
+                 policy="crop", crop_budget=4, scheduler="continuous",
+                 chunk=4)
+    ledger = guards.TransferLedger()
+    with guards.attach_ledger(ledger):
+        res = eng.run(_reqs(3, max_new=12))
+    assert len(res) == 3
+    assert eng.last_stats["chunks"] >= 1
+    assert ledger.counts["chunk"] == eng.last_stats["chunks"]
+    assert ledger.counts["admit"] == 3  # one per admitted request
+    assert set(ledger.counts) == {"chunk", "admit"}
+    assert counted_device_get["n"] == ledger.total
+
+
+# ---------------------------------------------------------------------------
+# REPRO_SANITIZE=1 parity (one attention family, one SSM family)
+
+
+@pytest.mark.parametrize("arch", ["qwen3-8b", "mamba2-2.7b"])
+def test_sanitize_mode_parity(monkeypatch, arch, key):
+    """The full serving path runs green under the sanitize tier (implicit
+    d2h transfer guard + debug_nans) and produces identical results."""
+    cfg = get_reduced(arch)
+    params = M.init_params(cfg, key)
+    ctrl, pp = _ctrl_pp(cfg)
+    res = {}
+    for sanitize in (False, True):
+        if sanitize:
+            monkeypatch.setenv("REPRO_SANITIZE", "1")
+        else:
+            monkeypatch.delenv("REPRO_SANITIZE", raising=False)
+        eng = Engine(cfg, params, ctrl=ctrl, probe_params=pp, lanes=2,
+                     policy="crop", crop_budget=6, chunk=5, seed=2)
+        res[sanitize] = eng.run(_reqs(2, max_new=16))
+    for a, b in zip(res[False], res[True]):
+        assert _result_tuple(a) == _result_tuple(b)
+
+
+def test_sanitize_scope_flags_nan(monkeypatch):
+    """debug_nans is actually live inside sanitize_scope."""
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    with pytest.raises(FloatingPointError):
+        with guards.sanitize_scope():
+            jax.jit(lambda x: jnp.log(x))(jnp.float32(-1.0)).block_until_ready()

@@ -1,0 +1,197 @@
+"""Tests for tools/tracelint: every rule fires on its bad fixture, stays
+quiet on its good fixture, and the pragma/baseline machinery round-trips.
+
+Fixtures live in tests/tracelint_fixtures/ — they are parsed, never
+imported or executed.
+"""
+
+import json
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+if str(REPO_ROOT) not in sys.path:
+    sys.path.insert(0, str(REPO_ROOT))
+
+from tools.tracelint import core  # noqa: E402
+
+FIXTURES = Path(__file__).resolve().parent / "tracelint_fixtures"
+RULES = ("R001", "R002", "R003", "R004", "R005")
+
+
+def lint(path: Path):
+    return core.lint_file(path, root=REPO_ROOT)
+
+
+# ---------------------------------------------------------------------------
+# per-rule fixtures
+
+
+@pytest.mark.parametrize("rule", RULES)
+def test_bad_fixture_fires(rule):
+    findings = lint(FIXTURES / f"{rule.lower()}_bad.py")
+    assert findings, f"{rule} bad fixture produced no findings"
+    codes = {f.rule for f in findings}
+    assert codes == {rule}, f"expected only {rule}, got {codes}"
+
+
+@pytest.mark.parametrize("rule", RULES)
+def test_good_fixture_clean(rule):
+    findings = lint(FIXTURES / f"{rule.lower()}_good.py")
+    assert findings == [], [f"{f.rule} {f.path}:{f.line} {f.message}" for f in findings]
+
+
+def test_bad_fixtures_cover_distinct_shapes():
+    # each bad fixture exercises >= 2 distinct offending lines of its rule
+    for rule in RULES:
+        findings = lint(FIXTURES / f"{rule.lower()}_bad.py")
+        assert len({(f.line, f.message) for f in findings} | set()) >= 2, rule
+
+
+# ---------------------------------------------------------------------------
+# pragmas
+
+
+def test_pragma_suppression(tmp_path):
+    src = textwrap.dedent(
+        """
+        import jax
+
+        @jax.jit
+        def f(x):
+            a = int(x)  # tracelint: disable=R001
+            b = float(x)  # tracelint: disable
+            c = bool(x)  # tracelint: disable=R005
+            d = int(x)
+            return a, b, c, d
+        """
+    )
+    p = tmp_path / "prag.py"
+    p.write_text(src)
+    findings = core.lint_file(p, root=tmp_path)
+    # R001 pragma and bare pragma suppress; R005 pragma does NOT suppress R001
+    lines = sorted(f.line for f in findings)
+    assert all(f.rule == "R001" for f in findings)
+    assert len(findings) == 2, findings
+    snippets = {f.snippet for f in findings}
+    assert any("bool(x)" in s for s in snippets)
+    assert any("d = int(x)" in s for s in snippets)
+
+
+# ---------------------------------------------------------------------------
+# baseline
+
+
+def test_baseline_round_trip(tmp_path):
+    bad = FIXTURES / "r001_bad.py"
+    findings = lint(bad)
+    assert findings
+    bl_path = tmp_path / "baseline.json"
+    core.write_baseline(bl_path, findings, justification="fixture grandfathering")
+    baseline = core.load_baseline(bl_path)
+    assert len(baseline) == len(findings)
+    assert all(e.justification == "fixture grandfathering" for e in baseline)
+
+    new, grandfathered, stale = core.apply_baseline(findings, baseline)
+    assert new == []
+    assert len(grandfathered) == len(findings)
+    assert stale == []
+
+
+def test_baseline_survives_line_drift(tmp_path):
+    """Baseline identity is (rule, path, line content) — inserting lines
+    above a finding must not invalidate its baseline entry."""
+    src = "import jax\n\n@jax.jit\ndef f(x):\n    return int(x)\n"
+    p = tmp_path / "mod.py"
+    p.write_text(src)
+    findings = core.lint_file(p, root=tmp_path)
+    assert len(findings) == 1
+    bl_path = tmp_path / "baseline.json"
+    core.write_baseline(bl_path, findings)
+
+    p.write_text("import jax\n\n# a new comment shifts everything down\n\n" + src[12:])
+    shifted = core.lint_file(p, root=tmp_path)
+    assert len(shifted) == 1 and shifted[0].line != findings[0].line
+    new, grandfathered, stale = core.apply_baseline(shifted, core.load_baseline(bl_path))
+    assert new == [] and len(grandfathered) == 1 and stale == []
+
+
+def test_stale_baseline_reported(tmp_path):
+    src = "import jax\n\n@jax.jit\ndef f(x):\n    return int(x)\n"
+    p = tmp_path / "mod.py"
+    p.write_text(src)
+    findings = core.lint_file(p, root=tmp_path)
+    bl_path = tmp_path / "baseline.json"
+    core.write_baseline(bl_path, findings)
+
+    p.write_text("import jax\n\n@jax.jit\ndef f(x):\n    return x\n")  # fixed
+    new, grandfathered, stale = core.apply_baseline(
+        core.lint_file(p, root=tmp_path), core.load_baseline(bl_path)
+    )
+    assert new == [] and grandfathered == [] and len(stale) == 1
+
+
+def test_duplicate_lines_need_duplicate_entries(tmp_path):
+    src = "import jax\n\n@jax.jit\ndef f(x):\n    a = int(x)\n    a = int(x)\n    return a\n"
+    p = tmp_path / "mod.py"
+    p.write_text(src)
+    findings = core.lint_file(p, root=tmp_path)
+    assert len(findings) == 2
+    bl_path = tmp_path / "baseline.json"
+    core.write_baseline(bl_path, findings[:1])
+    # multiset matching: one entry covers one of the two identical lines
+    new, grandfathered, _ = core.apply_baseline(findings, core.load_baseline(bl_path))
+    assert len(new) == 1 and len(grandfathered) == 1
+
+
+# ---------------------------------------------------------------------------
+# CLI / repo gate
+
+
+def _run_cli(*args, cwd=REPO_ROOT):
+    return subprocess.run(
+        [sys.executable, "-m", "tools.tracelint", *args],
+        cwd=cwd,
+        capture_output=True,
+        text=True,
+    )
+
+
+def test_cli_src_is_clean_vs_baseline():
+    """The CI gate: src/ must be clean against the checked-in baseline."""
+    proc = _run_cli("src/")
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_cli_exit_codes_and_json(tmp_path):
+    out_json = tmp_path / "report.json"
+    proc = _run_cli(
+        str(FIXTURES / "r001_bad.py"), "--no-baseline", "--json", str(out_json)
+    )
+    assert proc.returncode == 1
+    report = json.loads(out_json.read_text())
+    assert report["new_findings"] and report["files_checked"] == 1
+    assert all(f["rule"] == "R001" for f in report["new_findings"])
+
+    proc = _run_cli(str(FIXTURES / "r001_good.py"), "--no-baseline")
+    assert proc.returncode == 0
+
+    proc = _run_cli(str(tmp_path / "does_not_exist.py"))
+    assert proc.returncode == 2
+
+    proc = _run_cli("--list-rules")
+    assert proc.returncode == 0
+    for rule in RULES:
+        assert rule in proc.stdout
+
+
+def test_syntax_error_reported_not_crash(tmp_path):
+    p = tmp_path / "broken.py"
+    p.write_text("def f(:\n")
+    findings = core.lint_file(p, root=tmp_path)
+    assert len(findings) == 1 and findings[0].rule == "R000"
+    assert "syntax error" in findings[0].message

@@ -1,0 +1,10 @@
+"""Paired good/bad fixture snippets for every tracelint rule.
+
+Each ``rXXX_bad.py`` must produce at least one RXXX finding and each
+``rXXX_good.py`` must be completely clean — ``tests/test_tracelint.py``
+asserts both directions, so these files double as executable documentation
+of what every rule does and does not flag.
+
+The fixtures are parsed, never imported, so they are free to reference
+modules without guarding availability.
+"""

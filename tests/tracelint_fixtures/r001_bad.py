@@ -1,0 +1,50 @@
+"""R001 bad: host materialization of traced values inside traced code."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def cast_in_jit(x):
+    return int(x)  # int() concretizes the tracer
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def branch_in_jit(x, n):
+    if x > 0:  # traced branch condition
+        return x * n
+    return x
+
+
+@jax.jit
+def numpy_in_jit(x):
+    return np.asarray(x) + 1  # np materializes to host
+
+
+@jax.jit
+def device_get_in_jit(x):
+    return jax.device_get(x)  # host sync inside jit
+
+
+def scan_body(carry, x):
+    t = carry.item()  # .item() host sync inside a scan body
+    return carry + x, t
+
+
+def drive(xs):
+    return jax.lax.scan(scan_body, jnp.float32(0), xs)
+
+
+def while_cond(v):
+    return v[0] < 10
+
+
+def while_body(v):
+    return v + float(v[0])  # float() inside while_loop body
+
+
+def drive_while(v0):
+    return jax.lax.while_loop(while_cond, while_body, v0)

@@ -1,0 +1,53 @@
+"""R001 good: the device-resident versions of the same shapes, plus the
+host-side idioms R001 must NOT flag (shape arithmetic, statics, post-jit
+fetches, string-key membership on traced dicts)."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def cast_on_device(x):
+    return x.astype(jnp.int32)  # device-side cast, no materialization
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def branch_on_device(x, n):
+    # static `n` may drive Python control flow; traced data uses jnp.where
+    if n > 4:
+        return jnp.where(x > 0, x * n, x)
+    return x
+
+
+@jax.jit
+def shape_arithmetic(x):
+    # .shape / .ndim / len() yield Python ints — legit host math inside jit
+    pad = int(np.ceil(x.shape[-1] / 8)) * 8 - x.shape[-1]
+    if x.ndim > 2 and len(x) > 1:
+        pad += 1
+    return jnp.pad(x, ((0, 0),) * (x.ndim - 1) + ((0, pad),))
+
+
+@jax.jit
+def dict_membership(cache):
+    # `"k" in cache` on a traced pytree dict is Python dict membership
+    if "k_scale" in cache:
+        return cache["k"] * cache["k_scale"]
+    return cache["k"]
+
+
+def scan_body(carry, x):
+    return carry + x, carry
+
+
+def drive(xs):
+    final, ys = jax.lax.scan(scan_body, jnp.float32(0), xs)
+    return float(final)  # host materialization OUTSIDE jit is fine
+
+
+def fetch(x):
+    y = jax.jit(lambda v: v * 2)(x)
+    return jax.device_get(y)  # sanctioned sync outside jitted code

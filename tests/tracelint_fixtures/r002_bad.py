@@ -1,0 +1,39 @@
+"""R002 bad: Python scalars/None stored into jit-flowing pytree state.
+
+This is the PR-4 bug class: a Python-int ``"window"`` leaf in the decode
+cache made every leaf-axis inspection see a scalar and silently broke
+``_lane_axis``.
+"""
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class DecodeState(NamedTuple):
+    pos: jax.Array
+    smoothed: jax.Array
+    max_tokens: jax.Array
+
+
+def init_cache(lanes: int, window: int):
+    cache = {
+        "k": jnp.zeros((lanes, window, 8)),
+        "pos": 0,  # Python int leaf — breaks lane-axis bookkeeping
+    }
+    cache["window"] = window  # the literal PR-4 bug
+    cache["scale"] = None  # None leaf changes the treedef
+    return cache
+
+
+def init_state(lanes: int) -> DecodeState:
+    return DecodeState(
+        pos=jnp.zeros((lanes,), jnp.int32),
+        smoothed=jnp.zeros((lanes,), jnp.float32),
+        max_tokens=5,  # Python int NamedTuple leaf
+    )
+
+
+def bump(state: DecodeState) -> DecodeState:
+    return state._replace(smoothed=0.0)  # Python float via _replace

@@ -1,0 +1,46 @@
+"""R002 good: every leaf an explicit-dtype jnp array; Python scalars live
+in configs (static, hashable), never in the traced pytree."""
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheConfig:
+    # Python ints belong in the (static) config, not the pytree
+    window: int = 128
+    lanes: int = 8
+
+
+class DecodeState(NamedTuple):
+    pos: jax.Array
+    smoothed: jax.Array
+    max_tokens: jax.Array
+
+
+def init_cache(cfg: CacheConfig):
+    return {
+        "k": jnp.zeros((cfg.lanes, cfg.window, 8)),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def init_state(cfg: CacheConfig) -> DecodeState:
+    return DecodeState(
+        pos=jnp.zeros((cfg.lanes,), jnp.int32),
+        smoothed=jnp.zeros((cfg.lanes,), jnp.float32),
+        max_tokens=jnp.full((cfg.lanes,), 5, jnp.int32),
+    )
+
+
+def bump(state: DecodeState) -> DecodeState:
+    return state._replace(smoothed=jnp.zeros_like(state.smoothed))
+
+
+def host_stats(results):
+    # dicts that do NOT flow through jit (stats, results) may hold scalars
+    run_stats = {"chunks": 3, "steps": 24, "note": None}
+    return run_stats

@@ -1,0 +1,34 @@
+"""R003 bad: static_argnames drift and jitted bound methods."""
+
+import functools
+
+import jax
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "num_steps"))
+def step(params, cache, cfg):  # 'num_steps' drifted out of the signature
+    return params, cache, cfg
+
+
+@functools.partial(jax.jit, static_argnames=("shapes",))
+def pad_all(x, shapes: list):  # unhashable static annotation
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("opts",))
+def configure(x, opts={}):  # unhashable static default
+    return x
+
+
+@functools.partial(jax.jit, static_argnums=(5,))
+def indexed(a, b):  # static_argnums out of range
+    return a + b
+
+
+class Engine:
+    @jax.jit
+    def decode_step(self, tokens):  # bound method: self captured by jit
+        return tokens
+
+    def build(self):
+        self._fn = jax.jit(self.decode_step)  # call-form bound method jit

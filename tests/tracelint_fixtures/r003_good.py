@@ -1,0 +1,39 @@
+"""R003 good: statics that exist, hash, and jit applied to free functions
+(the engine pattern: jit a closure in __init__, never a bound method)."""
+
+import functools
+from typing import Tuple
+
+import jax
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "num_steps"))
+def step(params, cache, cfg, num_steps: int):
+    return params, cache, cfg, num_steps
+
+
+@functools.partial(jax.jit, static_argnames=("shapes",))
+def pad_all(x, shapes: Tuple[int, ...] = ()):  # hashable static
+    return x
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def indexed(a, b: int):
+    return a
+
+
+def make_decode_step(cfg):
+    def decode_step(params, tokens):
+        return tokens
+
+    return jax.jit(decode_step)  # free function / closure — no self capture
+
+
+class Engine:
+    def __init__(self, cfg):
+        self._fn = make_decode_step(cfg)
+
+    @staticmethod
+    @jax.jit
+    def normalize(tokens):  # staticmethod has no bound self
+        return tokens

@@ -1,0 +1,32 @@
+"""R004 bad: per-iteration statics/shapes at jit call sites in Python loops."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("num_steps",))
+def chunk_step(params, cache, num_steps):
+    return params, cache
+
+
+def drive(params, cache, total):
+    out = []
+    remaining = total
+    while remaining > 0:
+        k = min(remaining, 8)
+        # k varies per iteration -> a fresh executable every chunk
+        out.append(chunk_step(params, cache, num_steps=k))
+        remaining -= k
+    return out
+
+
+def prefill_all(prompts):
+    caches = []
+    for p in prompts:
+        plen = len(p)
+        # per-prompt shapes -> one compile per distinct prompt length
+        buf = jnp.zeros((1, plen), jnp.int32)
+        caches.append(buf)
+    return caches

@@ -1,0 +1,43 @@
+"""R004 good: loop-invariant statics and pow2-bucketed shapes (the
+scheduler's admission pattern — compile once per bucket, not per length)."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("num_steps",))
+def chunk_step(params, cache, num_steps):
+    return params, cache
+
+
+def drive(params, cache, total, chunk: int = 8):
+    out = []
+    for _ in range(0, total, chunk):
+        # `chunk` is loop-invariant: exactly one compile for the whole drive
+        out.append(chunk_step(params, cache, num_steps=chunk))
+    return out
+
+
+def bucket_length(plen: int, min_bucket: int = 8) -> int:
+    b = min_bucket
+    while b < plen:
+        b *= 2
+    return b
+
+
+def prefill_all(prompts):
+    caches = []
+    for p in prompts:
+        bucket = bucket_length(len(p))
+        # pow2 bucket: the jnp shape set is tiny and reused across prompts
+        buf = jnp.zeros((1, bucket), jnp.int32)  # tracelint: disable=R004
+        caches.append(buf)
+    return caches
+
+
+def per_token_values(params, xs):
+    # loop-varying *traced* args are fine — same signature, no recompile
+    step = jax.jit(lambda p, t: p * t)
+    return [step(params, t) for t in range(len(xs))]

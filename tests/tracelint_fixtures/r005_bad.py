@@ -1,0 +1,54 @@
+"""R005 bad: pallas_call contract violations."""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def scale_kernel(x_ref, o_ref):
+    o_ref[...] = (x_ref[...] * 2.0).astype(jnp.float32)
+
+
+def arity_mismatch(x):
+    return pl.pallas_call(
+        scale_kernel,
+        grid=(4, 4),
+        # index_map takes 1 index but the grid has rank 2
+        in_specs=[pl.BlockSpec((8, 8), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((8, 8), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((32, 32), jnp.float32),
+        interpret=True,  # hardcoded: kernel can never run in compiled mode
+    )(x)
+
+
+def rank_mismatch(x, interpret):
+    return pl.pallas_call(
+        scale_kernel,
+        grid=(4,),
+        # block rank 2 but index_map returns 3 indices
+        in_specs=[pl.BlockSpec((8, 8), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((8, 8), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((32, 8), jnp.float32),
+        interpret=interpret,
+    )(x)
+
+
+def dtype_mismatch(x, interpret):
+    return pl.pallas_call(
+        scale_kernel,  # stores float32 but out_shape says bfloat16
+        grid=(4,),
+        in_specs=[pl.BlockSpec((8, 8), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((8, 8), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((32, 8), jnp.bfloat16),
+        interpret=interpret,
+    )(x)
+
+
+def no_interpret(x):
+    return pl.pallas_call(  # interpret not plumbed at all
+        scale_kernel,
+        grid=(4,),
+        in_specs=[pl.BlockSpec((8, 8), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((8, 8), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((32, 8), jnp.float32),
+    )(x)

@@ -1,0 +1,41 @@
+"""R005 good: the repo's canonical pallas_call shape — index_map arity ==
+grid rank == block rank, out dtype consistent, interpret plumbed through
+from the wrapper (``None`` means autodetect via default_interpret())."""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def scale_kernel(x_ref, o_ref):
+    o_ref[...] = (x_ref[...] * 2.0).astype(jnp.float32)
+
+
+def scale(x, *, interpret=None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return pl.pallas_call(
+        scale_kernel,
+        grid=(4, 4),
+        in_specs=[pl.BlockSpec((8, 8), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((8, 8), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((32, 32), jnp.float32),
+        interpret=interpret,
+    )(x)
+
+
+def accum_kernel(x_ref, o_ref, acc_ref):
+    acc_ref[...] = acc_ref[...] + x_ref[...]
+    o_ref[...] = acc_ref[...].astype(jnp.bfloat16)
+
+
+def accum(x, interpret):
+    # matching dtypes between the store and out_shape
+    return pl.pallas_call(
+        accum_kernel,
+        grid=(8,),
+        in_specs=[pl.BlockSpec((16, 128), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((16, 128), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((128, 128), jnp.bfloat16),
+        interpret=interpret,
+    )(x)

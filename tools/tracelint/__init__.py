@@ -1,0 +1,29 @@
+"""tracelint — AST-based trace-hygiene analyzer for this repo's JAX/Pallas idioms.
+
+The serving stack's throughput claim rests on the decode hot path staying
+device-resident (one host sync per chunk, zero recompiles at steady state).
+tracelint statically checks the bug classes that have actually bitten us:
+
+* **R001** host materialization (``int()``/``float()``/``.item()``/``np.*``/
+  ``jax.device_get``) applied to values reachable from traced arguments
+  inside ``@jax.jit`` functions, ``lax.scan``/``while_loop``/``fori_loop``
+  bodies, and Pallas kernels.
+* **R002** pytree-leaf hygiene: Python scalars / ``None`` stored into
+  NamedTuple state or cache dicts that flow through jit (the PR-4
+  ``"window"`` Python-int leaf bug class).
+* **R003** ``static_argnames`` drift: declared names missing from the
+  signature, unhashable statics, jitted bound methods capturing ``self``.
+* **R004** recompile hazards: jit call sites inside Python loops feeding
+  per-iteration Python scalars/shapes into static arguments.
+* **R005** Pallas contracts: grid/BlockSpec rank mismatches, ``out_shape``
+  dtype disagreements, kernels that don't plumb ``interpret`` through.
+
+Run ``python -m tools.tracelint src/`` from the repo root.  Findings can be
+suppressed inline with ``# tracelint: disable=R001`` (or a bare
+``# tracelint: disable`` for all rules) or grandfathered in the checked-in
+baseline (``tools/tracelint/baseline.json``) with a written justification.
+"""
+
+from tools.tracelint.core import Finding, available_rules, lint_paths
+
+__all__ = ["Finding", "available_rules", "lint_paths"]

@@ -1,0 +1,86 @@
+"""CLI: ``python -m tools.tracelint src/ [options]``.
+
+Exit codes: 0 = clean (vs baseline), 1 = new findings, 2 = usage error.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from tools.tracelint import core
+from tools.tracelint.reporters import json_report, text_report
+
+DEFAULT_BASELINE = Path(__file__).resolve().parent / "baseline.json"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="tools.tracelint",
+        description="JAX/Pallas trace-hygiene analyzer for this repo",
+    )
+    ap.add_argument("paths", nargs="*", type=Path, help="files or directories to lint")
+    ap.add_argument(
+        "--baseline",
+        type=Path,
+        default=DEFAULT_BASELINE,
+        help=f"baseline file (default: {DEFAULT_BASELINE})",
+    )
+    ap.add_argument(
+        "--no-baseline", action="store_true", help="report every finding, ignore the baseline"
+    )
+    ap.add_argument(
+        "--write-baseline",
+        action="store_true",
+        help="grandfather ALL current findings into the baseline file and exit 0",
+    )
+    ap.add_argument("--json", type=Path, default=None, help="also write a JSON report here")
+    ap.add_argument("--list-rules", action="store_true", help="print the rule set and exit")
+    ap.add_argument(
+        "--root",
+        type=Path,
+        default=Path.cwd(),
+        help="path findings are reported relative to (default: cwd)",
+    )
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rule in core.available_rules():
+            print(f"{rule.code} {rule.name}: {rule.description}")
+        return 0
+    if not args.paths:
+        ap.print_usage(sys.stderr)
+        print("tracelint: no paths given", file=sys.stderr)
+        return 2
+    for p in args.paths:
+        if not p.exists():
+            print(f"tracelint: path does not exist: {p}", file=sys.stderr)
+            return 2
+
+    files = list(core.iter_python_files(args.paths))
+    findings = []
+    for f in files:
+        findings.extend(core.lint_file(f, root=args.root))
+    findings.sort(key=core.Finding.sort_key)
+
+    if args.write_baseline:
+        core.write_baseline(args.baseline, findings)
+        print(
+            f"tracelint: wrote {len(findings)} finding(s) to {args.baseline} — "
+            f"add a justification to every entry before committing"
+        )
+        return 0
+
+    baseline = [] if args.no_baseline else core.load_baseline(args.baseline)
+    new, grandfathered, stale = core.apply_baseline(findings, baseline)
+
+    if args.json is not None:
+        args.json.parent.mkdir(parents=True, exist_ok=True)
+        args.json.write_text(json_report(new, grandfathered, stale, len(files)) + "\n")
+    print(text_report(new, grandfathered, stale, len(files)))
+    return 1 if new else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,291 @@
+"""Rule framework: findings, pragmas, baseline, and the file runner.
+
+Design notes
+------------
+* A :class:`Finding` is identified for baseline purposes by
+  ``(rule, path, stripped source line)`` — line *content*, not line number,
+  so baselines survive unrelated edits above the finding.  Identical lines
+  in one file are matched as a multiset (two identical offending lines need
+  two baseline entries).
+* Pragmas are collected from the token stream so they work on any line,
+  including continuation lines: ``# tracelint: disable=R001,R005`` or a
+  bare ``# tracelint: disable`` (all rules).  A pragma suppresses findings
+  reported *on its line*.
+* Rules register themselves via :func:`register`; each rule sees a parsed
+  :class:`ModuleContext` and yields findings.  A rule crashing on one file
+  is reported as an ``R000`` internal finding rather than aborting the run,
+  so one odd file can't mask findings elsewhere.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import io
+import json
+import re
+import tokenize
+from pathlib import Path
+from typing import Dict, Iterable, Iterator, List, Optional, Sequence, Set, Tuple
+
+PRAGMA_RE = re.compile(r"#\s*tracelint:\s*disable(?:=(?P<codes>[A-Za-z0-9_,\s]+))?")
+
+#: rule code -> Rule instance (populated by @register at import time)
+RULES: Dict[str, "Rule"] = {}
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str  # posix-style, relative to the lint root when possible
+    line: int
+    col: int
+    message: str
+    snippet: str  # stripped source of the offending line (baseline identity)
+    symbol: str = ""  # enclosing function/class qualname, for humans
+
+    def identity(self) -> Tuple[str, str, str]:
+        return (self.rule, self.path, self.snippet)
+
+    def sort_key(self):
+        return (self.path, self.line, self.col, self.rule)
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class ModuleContext:
+    """Everything a rule needs about one source file."""
+
+    path: Path
+    relpath: str
+    source: str
+    tree: ast.Module
+    lines: List[str]
+
+    def line_snippet(self, lineno: int) -> str:
+        if 1 <= lineno <= len(self.lines):
+            return self.lines[lineno - 1].strip()
+        return ""
+
+    def finding(self, rule: str, node: ast.AST, message: str, symbol: str = "") -> Finding:
+        line = getattr(node, "lineno", 1)
+        col = getattr(node, "col_offset", 0)
+        return Finding(
+            rule=rule,
+            path=self.relpath,
+            line=line,
+            col=col,
+            message=message,
+            snippet=self.line_snippet(line),
+            symbol=symbol,
+        )
+
+
+class Rule:
+    """Base class.  Subclasses set ``code``/``name``/``description`` and
+    implement :meth:`check`."""
+
+    code: str = "R000"
+    name: str = "internal"
+    description: str = ""
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:  # pragma: no cover
+        raise NotImplementedError
+
+
+def register(rule_cls):
+    """Class decorator adding a rule to the global registry."""
+    inst = rule_cls()
+    if inst.code in RULES:
+        raise ValueError(f"duplicate tracelint rule code {inst.code}")
+    RULES[inst.code] = inst
+    return rule_cls
+
+
+def available_rules() -> List[Rule]:
+    _ensure_rules_loaded()
+    return [RULES[c] for c in sorted(RULES)]
+
+
+def _ensure_rules_loaded() -> None:
+    # Imported lazily so `core` has no import cycle with `rules`.
+    if not RULES:
+        from tools.tracelint import rules  # noqa: F401
+
+
+# ---------------------------------------------------------------------------
+# pragmas
+
+
+def collect_pragmas(source: str) -> Dict[int, Optional[Set[str]]]:
+    """line -> set of disabled codes (None means "all rules")."""
+    pragmas: Dict[int, Optional[Set[str]]] = {}
+    try:
+        tokens = tokenize.generate_tokens(io.StringIO(source).readline)
+        for tok in tokens:
+            if tok.type != tokenize.COMMENT:
+                continue
+            m = PRAGMA_RE.search(tok.string)
+            if not m:
+                continue
+            codes = m.group("codes")
+            if codes is None:
+                pragmas[tok.start[0]] = None
+            else:
+                parsed = {c.strip().upper() for c in codes.split(",") if c.strip()}
+                prev = pragmas.get(tok.start[0], set())
+                pragmas[tok.start[0]] = None if prev is None else (prev | parsed)
+    except tokenize.TokenizeError:
+        pass
+    return pragmas
+
+
+def _suppressed(f: Finding, pragmas: Dict[int, Optional[Set[str]]]) -> bool:
+    codes = pragmas.get(f.line, set())
+    return codes is None or f.rule in codes
+
+
+# ---------------------------------------------------------------------------
+# baseline
+
+
+@dataclasses.dataclass
+class BaselineEntry:
+    rule: str
+    path: str
+    snippet: str
+    justification: str = ""
+    line: int = 0  # informational only; identity ignores it
+
+    def identity(self) -> Tuple[str, str, str]:
+        return (self.rule, self.path, self.snippet)
+
+
+def load_baseline(path: Path) -> List[BaselineEntry]:
+    if not path.exists():
+        return []
+    data = json.loads(path.read_text())
+    entries = data["findings"] if isinstance(data, dict) else data
+    return [
+        BaselineEntry(
+            rule=e["rule"],
+            path=e["path"],
+            snippet=e["snippet"],
+            justification=e.get("justification", ""),
+            line=e.get("line", 0),
+        )
+        for e in entries
+    ]
+
+
+def write_baseline(path: Path, findings: Sequence[Finding], justification: str = "") -> None:
+    entries = [
+        {
+            "rule": f.rule,
+            "path": f.path,
+            "line": f.line,
+            "snippet": f.snippet,
+            "justification": justification or "grandfathered by --write-baseline",
+        }
+        for f in sorted(findings, key=Finding.sort_key)
+    ]
+    path.write_text(json.dumps({"findings": entries}, indent=2) + "\n")
+
+
+def apply_baseline(
+    findings: Sequence[Finding], baseline: Sequence[BaselineEntry]
+) -> Tuple[List[Finding], List[Finding], List[BaselineEntry]]:
+    """Split findings into (new, baselined); also return stale entries.
+
+    Matching is a multiset over ``identity()`` so N identical offending
+    lines consume N baseline entries.
+    """
+    budget: Dict[Tuple[str, str, str], int] = {}
+    for e in baseline:
+        budget[e.identity()] = budget.get(e.identity(), 0) + 1
+    new: List[Finding] = []
+    grandfathered: List[Finding] = []
+    for f in sorted(findings, key=Finding.sort_key):
+        key = f.identity()
+        if budget.get(key, 0) > 0:
+            budget[key] -= 1
+            grandfathered.append(f)
+        else:
+            new.append(f)
+    stale = []
+    remaining = dict(budget)
+    for e in baseline:
+        if remaining.get(e.identity(), 0) > 0:
+            remaining[e.identity()] -= 1
+            stale.append(e)
+    return new, grandfathered, stale
+
+
+# ---------------------------------------------------------------------------
+# runner
+
+
+def iter_python_files(paths: Sequence[Path]) -> Iterator[Path]:
+    seen: Set[Path] = set()
+    for p in paths:
+        if p.is_dir():
+            candidates: Iterable[Path] = sorted(p.rglob("*.py"))
+        else:
+            candidates = [p]
+        for f in candidates:
+            if "__pycache__" in f.parts or any(part.startswith(".") for part in f.parts):
+                continue
+            r = f.resolve()
+            if r not in seen:
+                seen.add(r)
+                yield f
+
+
+def lint_file(path: Path, root: Optional[Path] = None) -> List[Finding]:
+    """Run every registered rule over one file; pragma-suppressed findings
+    are dropped here."""
+    _ensure_rules_loaded()
+    try:
+        relpath = path.resolve().relative_to((root or Path.cwd()).resolve()).as_posix()
+    except ValueError:
+        relpath = path.as_posix()
+    try:
+        source = path.read_text()
+    except (OSError, UnicodeDecodeError) as exc:
+        return [Finding("R000", relpath, 1, 0, f"unreadable file: {exc}", "")]
+    try:
+        tree = ast.parse(source, filename=str(path))
+    except SyntaxError as exc:
+        return [
+            Finding("R000", relpath, exc.lineno or 1, 0, f"syntax error: {exc.msg}", "")
+        ]
+    ctx = ModuleContext(
+        path=path,
+        relpath=relpath,
+        source=source,
+        tree=tree,
+        lines=source.splitlines(),
+    )
+    pragmas = collect_pragmas(source)
+    findings: List[Finding] = []
+    for rule in available_rules():
+        try:
+            findings.extend(rule.check(ctx))
+        except Exception as exc:  # one bad rule/file must not mask the rest
+            findings.append(
+                Finding("R000", relpath, 1, 0, f"rule {rule.code} crashed: {exc!r}", "")
+            )
+    # de-dup (nested traced scopes can surface the same node twice)
+    uniq = {}
+    for f in findings:
+        uniq.setdefault((f.rule, f.line, f.col, f.message), f)
+    return [f for f in uniq.values() if not _suppressed(f, pragmas)]
+
+
+def lint_paths(paths: Sequence[Path], root: Optional[Path] = None) -> List[Finding]:
+    findings: List[Finding] = []
+    for f in iter_python_files(paths):
+        findings.extend(lint_file(f, root=root))
+    return sorted(findings, key=Finding.sort_key)

@@ -1,0 +1,463 @@
+"""Shared analysis infrastructure: import-alias resolution, traced-scope
+discovery (jit / lax control-flow bodies / Pallas kernels), and a simple
+forward taint analysis from traced parameters.
+
+The taint model is deliberately conservative-but-useful:
+
+* roots are the function's parameters minus ``static_argnames`` (for jit
+  scopes) — for lax bodies and Pallas kernels every parameter is traced;
+* assignments propagate taint from value to targets (two fixpoint passes
+  cover out-of-order helper reads in practice);
+* taint STOPS at ``.shape`` / ``.ndim`` / ``.dtype`` / ``.size`` attribute
+  chains and ``len()`` calls — those produce Python values, and
+  shape-driven host arithmetic inside jit is the *correct* idiom here;
+* ``"key" in cache`` membership tests on tainted dicts are Python dict
+  lookups, not tracer concretizations, so string-literal ``in`` compares
+  are pruned too.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Dict, Iterator, List, Optional, Sequence, Set, Tuple
+
+# Attributes that yield Python (untraced) values when read off a tracer.
+SHAPE_ATTRS = {"shape", "ndim", "dtype", "size", "itemsize", "sharding", "aval", "weak_type"}
+
+JIT_FNS = {"jax.jit", "jax.pjit", "jax.experimental.pjit.pjit"}
+TRANSFORM_FNS = {
+    "jax.vmap",
+    "jax.grad",
+    "jax.value_and_grad",
+    "jax.checkpoint",
+    "jax.remat",
+    "jax.linearize",
+    "jax.jvp",
+    "jax.vjp",
+}
+PALLAS_CALL = "jax.experimental.pallas.pallas_call"
+
+# canonical module paths for common aliases even without seeing the import
+_DEFAULT_ROOTS = {
+    "jnp": "jax.numpy",
+    "lax": "jax.lax",
+    "np": "numpy",
+    "pl": "jax.experimental.pallas",
+    "pltpu": "jax.experimental.pallas.tpu",
+    "functools": "functools",
+    "jax": "jax",
+    "numpy": "numpy",
+}
+
+
+def build_alias_map(tree: ast.Module) -> Dict[str, str]:
+    """local name -> canonical dotted path, from imports (with fallbacks)."""
+    aliases = dict(_DEFAULT_ROOTS)
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                aliases[a.asname or a.name.split(".")[0]] = (
+                    a.name if a.asname else a.name.split(".")[0]
+                )
+        elif isinstance(node, ast.ImportFrom) and node.module and node.level == 0:
+            for a in node.names:
+                aliases[a.asname or a.name] = f"{node.module}.{a.name}"
+    return aliases
+
+
+def dotted_name(node: ast.AST, aliases: Dict[str, str]) -> Optional[str]:
+    """Resolve ``pl.pallas_call`` / ``jax.lax.scan`` style expressions to a
+    canonical dotted path, or None for non-name expressions."""
+    parts: List[str] = []
+    cur = node
+    while isinstance(cur, ast.Attribute):
+        parts.append(cur.attr)
+        cur = cur.value
+    if not isinstance(cur, ast.Name):
+        return None
+    root = aliases.get(cur.id, cur.id)
+    parts.append(root)
+    return ".".join(reversed(parts))
+
+
+def const_str_tuple(node: ast.AST) -> Optional[Tuple[str, ...]]:
+    """Extract a literal static_argnames value: "x" | ("x", "y") | ["x"]."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return (node.value,)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for e in node.elts:
+            if not (isinstance(e, ast.Constant) and isinstance(e.value, str)):
+                return None
+            out.append(e.value)
+        return tuple(out)
+    return None
+
+
+def param_names(fn: ast.AST) -> List[str]:
+    a = fn.args
+    names = [p.arg for p in a.posonlyargs + a.args + a.kwonlyargs]
+    if a.vararg:
+        names.append(a.vararg.arg)
+    if a.kwarg:
+        names.append(a.kwarg.arg)
+    return names
+
+
+@dataclasses.dataclass
+class JitApplication:
+    """One place jit is applied: a decorator, a ``jax.jit(fn, ...)`` call, or
+    a ``functools.partial(jax.jit, ...)`` decorator."""
+
+    node: ast.AST  # the Call/decorator node (for line numbers)
+    target: Optional[ast.AST]  # FunctionDef / Lambda being jitted, if resolvable
+    static_argnames: Optional[Tuple[str, ...]]  # None if unresolvable/dynamic
+    static_argnums: Optional[Tuple[int, ...]]
+    bound_name: Optional[str] = None  # name the jitted callable is bound to
+
+
+@dataclasses.dataclass
+class TracedScope:
+    fn: ast.AST  # FunctionDef | AsyncFunctionDef | Lambda
+    kind: str  # "jit" | "scan" | "while" | "fori" | "cond" | "pallas" | "nested"
+    reason: str  # human-readable provenance for messages
+    static_names: frozenset
+    tainted: Set[str] = dataclasses.field(default_factory=set)
+
+    @property
+    def name(self) -> str:
+        return getattr(self.fn, "name", "<lambda>")
+
+
+_BODY_ARGS = {
+    # canonical fn -> positions of function-valued args that are traced bodies
+    "jax.lax.scan": (0,),
+    "jax.lax.while_loop": (0, 1),
+    "jax.lax.fori_loop": (2,),
+    "jax.lax.cond": (1, 2, 3),
+    "jax.lax.switch": (1, 2, 3, 4, 5, 6),
+    "jax.lax.map": (0,),
+    "jax.lax.associative_scan": (0,),
+}
+_KIND_FOR = {
+    "jax.lax.scan": "scan",
+    "jax.lax.while_loop": "while",
+    "jax.lax.fori_loop": "fori",
+    "jax.lax.cond": "cond",
+    "jax.lax.switch": "cond",
+    "jax.lax.map": "scan",
+    "jax.lax.associative_scan": "scan",
+}
+
+
+def _int_tuple(node: ast.AST) -> Optional[Tuple[int, ...]]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return (node.value,)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for e in node.elts:
+            if not (isinstance(e, ast.Constant) and isinstance(e.value, int)):
+                return None
+            out.append(e.value)
+        return tuple(out)
+    return None
+
+
+def _jit_call_statics(call: ast.Call) -> Tuple[Optional[Tuple[str, ...]], Optional[Tuple[int, ...]]]:
+    names: Optional[Tuple[str, ...]] = ()
+    nums: Optional[Tuple[int, ...]] = ()
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            names = const_str_tuple(kw.value)
+        elif kw.arg == "static_argnums":
+            nums = _int_tuple(kw.value)
+    return names, nums
+
+
+class JitIndex:
+    """Per-module index of jit applications and traced scopes."""
+
+    def __init__(self, tree: ast.Module, aliases: Optional[Dict[str, str]] = None):
+        self.tree = tree
+        self.aliases = aliases if aliases is not None else build_alias_map(tree)
+        # name -> FunctionDef for module- and class-level defs (last wins)
+        self.defs: Dict[str, ast.AST] = {}
+        # local defs nested in functions, by bare name (used for body lookup)
+        self.local_defs: Dict[int, ast.AST] = {}
+        self.applications: List[JitApplication] = []
+        self.scopes: List[TracedScope] = []
+        # names (incl. "self.x" attrs) bound to jitted callables -> application
+        self.jitted_names: Dict[str, JitApplication] = {}
+        self._collect_defs()
+        self._collect_applications()
+        self._collect_traced_bodies()
+        self._absorb_nested()
+        for scope in self.scopes:
+            scope.tainted = compute_taint(scope, self.aliases)
+
+    # -- discovery ----------------------------------------------------------
+
+    def _collect_defs(self) -> None:
+        for node in ast.walk(self.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self.defs.setdefault(node.name, node)
+
+    def _resolve_fn_arg(self, node: ast.AST, parent_fn: Optional[ast.AST]) -> Optional[ast.AST]:
+        if isinstance(node, ast.Lambda):
+            return node
+        if isinstance(node, ast.Name):
+            # prefer a def local to the enclosing function
+            if parent_fn is not None:
+                for sub in ast.walk(parent_fn):
+                    if (
+                        isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef))
+                        and sub.name == node.id
+                    ):
+                        return sub
+            return self.defs.get(node.id)
+        if isinstance(node, ast.Call):
+            # functools.partial(body_fn, ...) — trace the underlying def
+            if dotted_name(node.func, self.aliases) == "functools.partial" and node.args:
+                return self._resolve_fn_arg(node.args[0], parent_fn)
+        return None
+
+    def _collect_applications(self) -> None:
+        # decorators
+        for node in ast.walk(self.tree):
+            if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            for dec in node.decorator_list:
+                app = self._classify_decorator(dec, node)
+                if app is not None:
+                    self.applications.append(app)
+                    self.jitted_names[node.name] = app
+                    self._add_scope(node, "jit", f"@jit function '{node.name}'", app)
+        # call-form: x = jax.jit(fn, ...) / self.x = jax.jit(fn, ...)
+        for node in ast.walk(self.tree):
+            if not (isinstance(node, ast.Call) and dotted_name(node.func, self.aliases) in JIT_FNS):
+                continue
+            target = self._resolve_fn_arg(node.args[0], None) if node.args else None
+            names, nums = _jit_call_statics(node)
+            app = JitApplication(node, target, names, nums)
+            self.applications.append(app)
+            if target is not None and not any(
+                s.fn is target for s in self.scopes
+            ):
+                label = getattr(target, "name", "<lambda>")
+                self._add_scope(target, "jit", f"jax.jit-wrapped '{label}'", app)
+        # record bound names for call-form applications
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+                if dotted_name(node.value.func, self.aliases) in JIT_FNS:
+                    for t in node.targets:
+                        bound = _target_name(t)
+                        if bound:
+                            for app in self.applications:
+                                if app.node is node.value:
+                                    app.bound_name = bound
+                                    self.jitted_names[bound] = app
+
+    def _classify_decorator(self, dec: ast.AST, fn: ast.AST) -> Optional[JitApplication]:
+        name = dotted_name(dec, self.aliases)
+        if name in JIT_FNS:
+            return JitApplication(dec, fn, (), ())
+        if isinstance(dec, ast.Call):
+            cname = dotted_name(dec.func, self.aliases)
+            if cname in JIT_FNS:
+                names, nums = _jit_call_statics(dec)
+                return JitApplication(dec, fn, names, nums)
+            if cname == "functools.partial" and dec.args:
+                inner = dotted_name(dec.args[0], self.aliases)
+                if inner in JIT_FNS:
+                    names, nums = _jit_call_statics(dec)
+                    return JitApplication(dec, fn, names, nums)
+        return None
+
+    def _collect_traced_bodies(self) -> None:
+        # map every Call node to its innermost enclosing function for local
+        # def resolution
+        enclosing: Dict[int, ast.AST] = {}
+
+        def visit(node: ast.AST, fn: Optional[ast.AST]) -> None:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+                fn = node
+            for child in ast.iter_child_nodes(node):
+                enclosing[id(child)] = fn
+                visit(child, fn)
+
+        visit(self.tree, None)
+
+        for node in ast.walk(self.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            cname = dotted_name(node.func, self.aliases)
+            if cname in _BODY_ARGS:
+                parent = enclosing.get(id(node))
+                for pos in _BODY_ARGS[cname]:
+                    if pos < len(node.args):
+                        body = self._resolve_fn_arg(node.args[pos], parent)
+                        if body is not None:
+                            kind = _KIND_FOR[cname]
+                            label = getattr(body, "name", "<lambda>")
+                            self._add_scope(
+                                body, kind, f"{cname.split('.')[-1]} body '{label}'", None
+                            )
+            elif cname in TRANSFORM_FNS:
+                parent = enclosing.get(id(node))
+                if node.args:
+                    body = self._resolve_fn_arg(node.args[0], parent)
+                    if body is not None:
+                        label = getattr(body, "name", "<lambda>")
+                        self._add_scope(
+                            body, "jit", f"{cname}-transformed '{label}'", None
+                        )
+            elif cname == PALLAS_CALL and node.args:
+                parent = enclosing.get(id(node))
+                body = self._resolve_fn_arg(node.args[0], parent)
+                if body is not None:
+                    label = getattr(body, "name", "<lambda>")
+                    self._add_scope(body, "pallas", f"Pallas kernel '{label}'", None)
+
+    def _absorb_nested(self) -> None:
+        """Function defs lexically inside a traced scope are traced too."""
+        known = {id(s.fn) for s in self.scopes}
+        added = True
+        while added:
+            added = False
+            for scope in list(self.scopes):
+                for sub in ast.walk(scope.fn):
+                    if (
+                        isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda))
+                        and sub is not scope.fn
+                        and id(sub) not in known
+                    ):
+                        known.add(id(sub))
+                        label = getattr(sub, "name", "<lambda>")
+                        self.scopes.append(
+                            TracedScope(
+                                sub,
+                                "nested",
+                                f"'{label}' nested in {scope.reason}",
+                                frozenset(),
+                            )
+                        )
+                        added = True
+
+    def _add_scope(
+        self, fn: ast.AST, kind: str, reason: str, app: Optional[JitApplication]
+    ) -> None:
+        if any(s.fn is fn for s in self.scopes):
+            return
+        statics: frozenset = frozenset()
+        if app is not None:
+            names = set(app.static_argnames or ())
+            if app.static_argnums:
+                ps = param_names(fn)
+                for i in app.static_argnums:
+                    if 0 <= i < len(ps):
+                        names.add(ps[i])
+            statics = frozenset(names)
+        self.scopes.append(TracedScope(fn, kind, reason, statics))
+
+
+def _target_name(t: ast.AST) -> Optional[str]:
+    if isinstance(t, ast.Name):
+        return t.id
+    if isinstance(t, ast.Attribute) and isinstance(t.value, ast.Name):
+        return f"{t.value.id}.{t.attr}"
+    return None
+
+
+# ---------------------------------------------------------------------------
+# taint
+
+
+def _assigned_names(target: ast.AST) -> Iterator[str]:
+    for node in ast.walk(target):
+        if isinstance(node, ast.Name):
+            yield node.id
+
+
+def expr_tainted(expr: ast.AST, tainted: Set[str]) -> bool:
+    """True if ``expr`` can carry a tracer, given tainted names.
+
+    Prunes subtrees that always yield Python values (shape/dtype reads,
+    ``len()``, string-literal ``in`` membership)."""
+    return _first_tainted(expr, tainted) is not None
+
+
+def _first_tainted(expr: ast.AST, tainted: Set[str]) -> Optional[str]:
+    if isinstance(expr, ast.Attribute) and expr.attr in SHAPE_ATTRS:
+        return None
+    if isinstance(expr, ast.Call):
+        fname = expr.func
+        if isinstance(fname, ast.Name) and fname.id in {"len", "range", "enumerate", "zip"}:
+            # len(traced) et al. yield Python values — prune the whole call
+            return None
+        # still recurse into other calls below
+    if isinstance(expr, ast.Compare):
+        ops_py = all(isinstance(op, (ast.Is, ast.IsNot)) for op in expr.ops)
+        if ops_py:
+            return None
+        if all(isinstance(op, (ast.In, ast.NotIn)) for op in expr.ops) and isinstance(
+            expr.left, ast.Constant
+        ):
+            # `"k_scale" in cache` — Python dict membership, not a tracer op
+            return None
+    if isinstance(expr, ast.Name):
+        return expr.id if expr.id in tainted else None
+    for child in ast.iter_child_nodes(expr):
+        hit = _first_tainted(child, tainted)
+        if hit is not None:
+            return hit
+    return None
+
+
+def compute_taint(scope: TracedScope, aliases: Dict[str, str]) -> Set[str]:
+    fn = scope.fn
+    tainted: Set[str] = set()
+    for p in param_names(fn):
+        if p not in scope.static_names and p not in {"self", "cls"}:
+            tainted.add(p)
+    body = fn.body if isinstance(fn.body, list) else [fn.body]
+    # two fixpoint passes over simple assignments
+    for _ in range(2):
+        for node in _walk_skipping_nested(body, fn):
+            if isinstance(node, ast.Assign):
+                if expr_tainted(node.value, tainted):
+                    for t in node.targets:
+                        tainted.update(_assigned_names(t))
+            elif isinstance(node, ast.AugAssign):
+                if expr_tainted(node.value, tainted) or expr_tainted(node.target, tainted):
+                    tainted.update(_assigned_names(node.target))
+            elif isinstance(node, ast.AnnAssign) and node.value is not None:
+                if expr_tainted(node.value, tainted):
+                    tainted.update(_assigned_names(node.target))
+            elif isinstance(node, ast.NamedExpr):
+                if expr_tainted(node.value, tainted):
+                    tainted.update(_assigned_names(node.target))
+            elif isinstance(node, (ast.For, ast.AsyncFor)):
+                if expr_tainted(node.iter, tainted):
+                    tainted.update(_assigned_names(node.target))
+    return tainted
+
+
+def _walk_skipping_nested(body: Sequence[ast.AST], owner: ast.AST) -> Iterator[ast.AST]:
+    """Walk statements of ``owner`` without descending into nested function
+    definitions (those are separate scopes with their own taint)."""
+    stack = list(body)
+    while stack:
+        node = stack.pop()
+        yield node
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+                continue
+            stack.append(child)
+
+
+def walk_scope(scope: TracedScope) -> Iterator[ast.AST]:
+    """All nodes in a scope body, excluding nested function definitions
+    (they are registered as their own traced scopes)."""
+    body = scope.fn.body if isinstance(scope.fn.body, list) else [scope.fn.body]
+    yield from _walk_skipping_nested(body, scope.fn)

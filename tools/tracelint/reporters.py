@@ -1,0 +1,60 @@
+"""Text and JSON reporters for tracelint findings."""
+
+from __future__ import annotations
+
+import json
+from typing import Dict, List, Sequence
+
+from tools.tracelint.core import BaselineEntry, Finding
+
+
+def text_report(
+    new: Sequence[Finding],
+    baselined: Sequence[Finding],
+    stale: Sequence[BaselineEntry],
+    n_files: int,
+) -> str:
+    lines: List[str] = []
+    for f in new:
+        sym = f" [in {f.symbol}]" if f.symbol else ""
+        lines.append(f"{f.path}:{f.line}:{f.col + 1} {f.rule} {f.message}{sym}")
+        if f.snippet:
+            lines.append(f"    {f.snippet}")
+    if new:
+        lines.append("")
+    counts: Dict[str, int] = {}
+    for f in new:
+        counts[f.rule] = counts.get(f.rule, 0) + 1
+    by_rule = ", ".join(f"{r}={n}" for r, n in sorted(counts.items())) or "none"
+    lines.append(
+        f"tracelint: {len(new)} new finding(s) ({by_rule}) in {n_files} file(s); "
+        f"{len(baselined)} baselined"
+    )
+    if stale:
+        lines.append(
+            f"tracelint: {len(stale)} stale baseline entr(y/ies) no longer match "
+            f"any finding — prune them:"
+        )
+        for e in stale:
+            lines.append(f"    {e.path}: {e.rule} {e.snippet!r}")
+    return "\n".join(lines)
+
+
+def json_report(
+    new: Sequence[Finding],
+    baselined: Sequence[Finding],
+    stale: Sequence[BaselineEntry],
+    n_files: int,
+) -> str:
+    return json.dumps(
+        {
+            "version": 1,
+            "files_checked": n_files,
+            "new_findings": [f.to_json() for f in new],
+            "baselined_findings": [f.to_json() for f in baselined],
+            "stale_baseline": [
+                {"rule": e.rule, "path": e.path, "snippet": e.snippet} for e in stale
+            ],
+        },
+        indent=2,
+    )

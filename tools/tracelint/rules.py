@@ -1,0 +1,721 @@
+"""The initial tracelint rule set (R001–R005).
+
+Every rule targets a bug class this repo has actually shipped or reviewed
+away; see ``tools/tracelint/__init__`` for the one-line summaries and
+``tests/tracelint_fixtures/`` for paired good/bad examples of each.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+from tools.tracelint.core import Finding, ModuleContext, Rule, register
+from tools.tracelint.jitscope import (
+    JIT_FNS,
+    JitIndex,
+    const_str_tuple,
+    dotted_name,
+    expr_tainted,
+    param_names,
+    walk_scope,
+)
+
+# builtins that materialize a tracer onto the host
+HOST_CASTS = {"int", "float", "bool", "complex"}
+# methods that pull device values to host
+HOST_METHODS = {"item", "tolist", "__array__"}
+# jax functions that force a device->host transfer
+HOST_FNS = {"jax.device_get"}
+
+
+def _index(ctx: ModuleContext) -> JitIndex:
+    cached = getattr(ctx, "_jit_index", None)
+    if cached is None:
+        cached = JitIndex(ctx.tree)
+        ctx._jit_index = cached
+    return cached
+
+
+@register
+class HostMaterializationRule(Rule):
+    """R001: host materialization of traced values inside traced code."""
+
+    code = "R001"
+    name = "host-materialization"
+    description = (
+        "int()/float()/bool()/.item()/np.* applied to a value reachable from "
+        "traced arguments inside @jax.jit functions, lax control-flow bodies, "
+        "or Pallas kernels (concretizes the tracer or forces a host sync)"
+    )
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        idx = _index(ctx)
+        for scope in idx.scopes:
+            tainted = scope.tainted
+            for node in walk_scope(scope):
+                if isinstance(node, ast.Call):
+                    yield from self._check_call(ctx, scope, node, tainted, idx)
+                elif isinstance(node, (ast.If, ast.While)):
+                    if expr_tainted(node.test, tainted):
+                        yield ctx.finding(
+                            self.code,
+                            node.test,
+                            f"branch condition concretizes traced value inside "
+                            f"{scope.reason} (TracerBoolConversionError at trace "
+                            f"time; use lax.cond/jnp.where)",
+                            symbol=scope.name,
+                        )
+                elif isinstance(node, ast.Assert):
+                    if expr_tainted(node.test, tainted):
+                        yield ctx.finding(
+                            self.code,
+                            node.test,
+                            f"assert concretizes traced value inside {scope.reason} "
+                            f"(use checkify or move the check outside jit)",
+                            symbol=scope.name,
+                        )
+
+    def _check_call(
+        self,
+        ctx: ModuleContext,
+        scope,
+        node: ast.Call,
+        tainted: Set[str],
+        idx: JitIndex,
+    ) -> Iterator[Finding]:
+        fname = dotted_name(node.func, idx.aliases)
+        # int(x) / float(x) / bool(x) on traced values
+        if (
+            isinstance(node.func, ast.Name)
+            and node.func.id in HOST_CASTS
+            and any(expr_tainted(a, tainted) for a in node.args)
+        ):
+            yield ctx.finding(
+                self.code,
+                node,
+                f"{node.func.id}() materializes a traced value inside "
+                f"{scope.reason}",
+                symbol=scope.name,
+            )
+            return
+        # .item() / .tolist() on traced values
+        if (
+            isinstance(node.func, ast.Attribute)
+            and node.func.attr in HOST_METHODS
+            and expr_tainted(node.func.value, tainted)
+        ):
+            yield ctx.finding(
+                self.code,
+                node,
+                f".{node.func.attr}() forces a host sync on a traced value "
+                f"inside {scope.reason}",
+                symbol=scope.name,
+            )
+            return
+        if fname is None:
+            return
+        # jax.device_get anywhere in traced code
+        if fname in HOST_FNS:
+            yield ctx.finding(
+                self.code,
+                node,
+                f"{fname.split('.')[-1]} inside {scope.reason} — host syncs "
+                f"belong outside jitted code (one sanctioned sync per chunk)",
+                symbol=scope.name,
+            )
+            return
+        # numpy ops on traced values (np.asarray / np.array / any np.* reduce)
+        if fname.split(".")[0] == "numpy" and any(
+            expr_tainted(a, tainted) for a in list(node.args) + [k.value for k in node.keywords]
+        ):
+            yield ctx.finding(
+                self.code,
+                node,
+                f"numpy call '{fname}' materializes a traced value inside "
+                f"{scope.reason} (use jnp)",
+                symbol=scope.name,
+            )
+
+
+# names whose dict literals / stores we treat as jit-flowing pytree state
+_CACHE_NAME_SUFFIXES = ("cache", "dcache", "state", "carry")
+
+
+def _is_cache_name(name: str) -> bool:
+    low = name.lower()
+    if low.endswith("stats") or low.startswith("stats"):
+        return False
+    return any(low == s or low.endswith("_" + s) or low.startswith(s) for s in _CACHE_NAME_SUFFIXES)
+
+
+def _python_scalar_reason(
+    node: ast.AST, scalar_funcs: Set[str], aliases: Dict[str, str]
+) -> Optional[str]:
+    """Why ``node`` is a Python scalar/None leaf (None if it is not)."""
+    if isinstance(node, ast.Constant):
+        v = node.value
+        if v is None:
+            return "None"
+        if isinstance(v, bool):
+            return f"Python bool {v!r}"
+        if isinstance(v, (int, float)):
+            return f"Python {type(v).__name__} {v!r}"
+        return None
+    if isinstance(node, ast.UnaryOp) and isinstance(node.operand, ast.Constant):
+        v = node.operand.value
+        if isinstance(v, (int, float)) and not isinstance(v, bool):
+            return f"Python {type(v).__name__}"
+        return None
+    if isinstance(node, ast.Call):
+        fname = dotted_name(node.func, aliases)
+        if isinstance(node.func, ast.Name) and node.func.id in HOST_CASTS:
+            return f"{node.func.id}(...) Python scalar"
+        if fname is not None and fname.split(".")[-1] in scalar_funcs:
+            return f"call to '{fname.split('.')[-1]}' (returns a Python scalar per its annotation)"
+    return None
+
+
+@register
+class PytreeLeafRule(Rule):
+    """R002: Python scalars/None stored into jit-flowing pytree state."""
+
+    code = "R002"
+    name = "pytree-leaf-hygiene"
+    description = (
+        "Python scalars/None stored into NamedTuple state or cache dicts that "
+        "flow through jit — a weak-typed or non-array leaf changes the pytree "
+        "treedef/avals and silently breaks axis bookkeeping (the PR-4 "
+        "'window' Python-int leaf bug class)"
+    )
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        idx = _index(ctx)
+        aliases = idx.aliases
+        scalar_funcs = self._scalar_returning_funcs(ctx)
+        state_types = self._state_types(ctx, aliases)
+        for node in ast.walk(ctx.tree):
+            # {"pos": 0, ...} dict literals assigned to cache-like names
+            if isinstance(node, ast.Assign) and isinstance(node.value, ast.Dict):
+                for t in node.targets:
+                    name = _bare_name(t)
+                    if name and _is_cache_name(name):
+                        yield from self._check_dict(
+                            ctx, node.value, name, scalar_funcs, aliases
+                        )
+            # cache["key"] = <python scalar>
+            elif isinstance(node, ast.Assign):
+                for t in node.targets:
+                    if (
+                        isinstance(t, ast.Subscript)
+                        and (name := _bare_name(t.value))
+                        and _is_cache_name(name)
+                        and isinstance(t.slice, ast.Constant)
+                        and isinstance(t.slice.value, str)
+                    ):
+                        reason = _python_scalar_reason(node.value, scalar_funcs, aliases)
+                        if reason is not None:
+                            yield ctx.finding(
+                                self.code,
+                                node,
+                                f"{reason} stored into pytree leaf "
+                                f"{name}[{t.slice.value!r}] — wrap in jnp.asarray "
+                                f"with an explicit dtype (or keep it out of the tree)",
+                            )
+            # StateType(..., field=<python scalar>) and x._replace(field=...)
+            if isinstance(node, ast.Call):
+                ctor = self._ctor_name(node, state_types, aliases)
+                if ctor is not None:
+                    for kw in node.keywords:
+                        if kw.arg is None:
+                            continue
+                        reason = _python_scalar_reason(kw.value, scalar_funcs, aliases)
+                        if reason is not None:
+                            yield ctx.finding(
+                                self.code,
+                                kw.value,
+                                f"{reason} passed as pytree leaf '{kw.arg}' of "
+                                f"{ctor} — use a jnp array leaf with an explicit "
+                                f"dtype",
+                            )
+
+    def _check_dict(
+        self, ctx: ModuleContext, d: ast.Dict, name: str, scalar_funcs, aliases
+    ) -> Iterator[Finding]:
+        for k, v in zip(d.keys, d.values):
+            if not (isinstance(k, ast.Constant) and isinstance(k.value, str)):
+                continue
+            reason = _python_scalar_reason(v, scalar_funcs, aliases)
+            if reason is not None:
+                yield ctx.finding(
+                    self.code,
+                    v,
+                    f"{reason} as leaf {name}[{k.value!r}] of a cache/state dict — "
+                    f"non-array leaves break pytree axis bookkeeping under jit",
+                )
+
+    def _ctor_name(self, node: ast.Call, state_types: Set[str], aliases) -> Optional[str]:
+        if isinstance(node.func, ast.Attribute) and node.func.attr == "_replace":
+            return "._replace(...) NamedTuple state"
+        fname = dotted_name(node.func, aliases)
+        leaf = (fname or "").split(".")[-1]
+        if leaf in state_types:
+            return f"'{leaf}'"
+        return None
+
+    def _state_types(self, ctx: ModuleContext, aliases) -> Set[str]:
+        """NamedTuple subclasses defined here, plus any imported/attr name
+        ending in 'State' or 'Params' (ControllerState, ProbeParams, ...)."""
+        types: Set[str] = set()
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.ClassDef):
+                for base in node.bases:
+                    bname = dotted_name(base, aliases) or ""
+                    if bname.split(".")[-1] == "NamedTuple":
+                        types.add(node.name)
+            elif isinstance(node, ast.Call):
+                fname = dotted_name(node.func, aliases) or ""
+                leaf = fname.split(".")[-1]
+                if leaf.endswith(("State", "Params")) and leaf[:1].isupper():
+                    types.add(leaf)
+        return types
+
+    def _scalar_returning_funcs(self, ctx: ModuleContext) -> Set[str]:
+        """Functions annotated ``-> int/float/bool`` (their results are
+        Python scalars, e.g. ``attn_cache_window``)."""
+        out: Set[str] = set()
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                r = node.returns
+                if isinstance(r, ast.Name) and r.id in {"int", "float", "bool"}:
+                    out.add(node.name)
+        return out
+
+
+def _bare_name(t: ast.AST) -> Optional[str]:
+    if isinstance(t, ast.Name):
+        return t.id
+    if isinstance(t, ast.Attribute):
+        return t.attr
+    return None
+
+
+_UNHASHABLE_ANNS = {"list", "dict", "set", "List", "Dict", "Set", "bytearray"}
+
+
+@register
+class StaticArgnamesRule(Rule):
+    """R003: static_argnames drift and jitted bound methods."""
+
+    code = "R003"
+    name = "static-argnames-drift"
+    description = (
+        "static_argnames entries missing from the jitted signature (silently "
+        "ignored by jax => silent recompiles), statics with unhashable "
+        "annotations/defaults, and jax.jit applied to bound methods (captures "
+        "self => leaks/recompiles per instance)"
+    )
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        idx = _index(ctx)
+        # method map: functions defined directly inside a ClassDef
+        methods: Set[int] = set()
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.ClassDef):
+                for stmt in node.body:
+                    if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                        methods.add(id(stmt))
+        for app in idx.applications:
+            fn = app.target
+            if fn is not None and not isinstance(fn, ast.Lambda):
+                yield from self._check_signature(ctx, app, fn)
+                if id(fn) in methods and param_names(fn)[:1] in (["self"], ["cls"]):
+                    # staticmethod-decorated defs are fine
+                    decs = {
+                        dotted_name(d, idx.aliases) for d in fn.decorator_list
+                    }
+                    if "staticmethod" not in decs:
+                        yield ctx.finding(
+                            self.code,
+                            app.node,
+                            f"jax.jit applied to bound method '{fn.name}' — the "
+                            f"implicit 'self' is captured as a static constant "
+                            f"(recompiles per instance, pins the instance "
+                            f"alive); jit a free function or a closure built "
+                            f"in __init__",
+                            symbol=fn.name,
+                        )
+            # jax.jit(self.method) call-form
+            if fn is None and isinstance(app.node, ast.Call) and app.node.args:
+                a0 = app.node.args[0]
+                if (
+                    isinstance(a0, ast.Attribute)
+                    and isinstance(a0.value, ast.Name)
+                    and a0.value.id == "self"
+                ):
+                    yield ctx.finding(
+                        self.code,
+                        app.node,
+                        f"jax.jit(self.{a0.attr}) jits a bound method — 'self' "
+                        f"becomes a captured constant (recompiles per instance)",
+                    )
+
+    def _check_signature(self, ctx: ModuleContext, app, fn) -> Iterator[Finding]:
+        params = param_names(fn)
+        has_kwargs = fn.args.kwarg is not None
+        anns: Dict[str, Optional[ast.AST]] = {}
+        a = fn.args
+        for p in a.posonlyargs + a.args + a.kwonlyargs:
+            anns[p.arg] = p.annotation
+        defaults: Dict[str, ast.AST] = {}
+        pos_params = [p.arg for p in a.posonlyargs + a.args]
+        for p, d in zip(reversed(pos_params), reversed(a.defaults)):
+            defaults[p] = d
+        for p, d in zip(a.kwonlyargs, a.kw_defaults):
+            if d is not None:
+                defaults[p.arg] = d
+        for sname in app.static_argnames or ():
+            if sname not in params and not has_kwargs:
+                yield ctx.finding(
+                    self.code,
+                    app.node,
+                    f"static_argnames entry '{sname}' is not a parameter of "
+                    f"'{fn.name}' ({', '.join(params) or 'no params'}) — jax "
+                    f"ignores it silently and the argument is traced (or the "
+                    f"call fails)",
+                    symbol=fn.name,
+                )
+                continue
+            ann = anns.get(sname)
+            ann_name = None
+            if isinstance(ann, ast.Name):
+                ann_name = ann.id
+            elif isinstance(ann, ast.Subscript) and isinstance(ann.value, ast.Name):
+                ann_name = ann.value.id
+            if ann_name in _UNHASHABLE_ANNS:
+                yield ctx.finding(
+                    self.code,
+                    ann,
+                    f"static arg '{sname}' of '{fn.name}' is annotated "
+                    f"'{ann_name}' — statics must be hashable (use a tuple or "
+                    f"a frozen dataclass)",
+                    symbol=fn.name,
+                )
+            dflt = defaults.get(sname)
+            if isinstance(dflt, (ast.List, ast.Dict, ast.Set)):
+                yield ctx.finding(
+                    self.code,
+                    dflt,
+                    f"static arg '{sname}' of '{fn.name}' has an unhashable "
+                    f"default — jit raises at call time",
+                    symbol=fn.name,
+                )
+        if app.static_argnums:
+            n_pos = len(a.posonlyargs) + len(a.args)
+            for i in app.static_argnums:
+                if (i >= n_pos or i < -n_pos) and a.vararg is None:
+                    yield ctx.finding(
+                        self.code,
+                        app.node,
+                        f"static_argnums index {i} is out of range for "
+                        f"'{fn.name}' ({n_pos} positional params)",
+                        symbol=fn.name,
+                    )
+
+
+# jnp array constructors whose shape argument must be loop-invariant
+_SHAPE_CTORS = {
+    "jax.numpy.zeros",
+    "jax.numpy.ones",
+    "jax.numpy.full",
+    "jax.numpy.empty",
+    "jax.numpy.arange",
+}
+
+
+@register
+class RecompileHazardRule(Rule):
+    """R004: per-iteration statics / shapes at jit call sites in Python loops."""
+
+    code = "R004"
+    name = "recompile-hazard"
+    description = (
+        "jit call sites inside Python loops passing loop-varying values into "
+        "static arguments, and jnp array constructors with loop-varying "
+        "shapes — every iteration compiles a fresh executable"
+    )
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        idx = _index(ctx)
+        traced_fns = {id(s.fn) for s in idx.scopes}
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                if id(node) in traced_fns:
+                    continue  # loops inside jit are unrolled, not recompiled
+                yield from self._check_fn(ctx, idx, node)
+
+    def _check_fn(self, ctx: ModuleContext, idx: JitIndex, fn) -> Iterator[Finding]:
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.For, ast.While)) and not _in_nested_fn(fn, node):
+                loop_vars = self._loop_varying(node)
+                if loop_vars:
+                    yield from self._check_loop(ctx, idx, node, loop_vars)
+
+    def _loop_varying(self, loop) -> Set[str]:
+        varying: Set[str] = set()
+        if isinstance(loop, ast.For):
+            varying.update(n.id for n in ast.walk(loop.target) if isinstance(n, ast.Name))
+        # names reassigned in the body from expressions referencing themselves
+        # or other varying names (two passes for chains)
+        for _ in range(2):
+            for node in ast.walk(loop):
+                if isinstance(node, ast.AugAssign) and isinstance(node.target, ast.Name):
+                    varying.add(node.target.id)
+                elif isinstance(node, ast.Assign):
+                    names = {
+                        t.id for t in node.targets if isinstance(t, ast.Name)
+                    }
+                    refs = {
+                        n.id for n in ast.walk(node.value) if isinstance(n, ast.Name)
+                    }
+                    if refs & (varying | names):
+                        varying.update(names)
+        return varying
+
+    def _check_loop(
+        self, ctx: ModuleContext, idx: JitIndex, loop, loop_vars: Set[str]
+    ) -> Iterator[Finding]:
+        for node in ast.walk(loop):
+            if not isinstance(node, ast.Call):
+                continue
+            fname = dotted_name(node.func, idx.aliases)
+            # loop-varying shapes into jnp constructors
+            if fname in _SHAPE_CTORS:
+                shape_arg = node.args[0] if node.args else None
+                for kw in node.keywords:
+                    if kw.arg == "shape":
+                        shape_arg = kw.value
+                if shape_arg is not None and expr_tainted(shape_arg, loop_vars):
+                    yield ctx.finding(
+                        self.code,
+                        node,
+                        f"'{fname.split('.')[-1]}' shape varies per loop "
+                        f"iteration — every downstream jit recompiles per "
+                        f"shape (pad to a fixed bucket instead)",
+                    )
+                continue
+            # loop-varying values into known-static args of known-jitted fns
+            app = self._resolve_jitted(idx, node)
+            if app is None or not app.static_argnames:
+                continue
+            statics = set(app.static_argnames)
+            for kw in node.keywords:
+                if kw.arg in statics and expr_tainted(kw.value, loop_vars):
+                    yield ctx.finding(
+                        self.code,
+                        kw.value,
+                        f"loop-varying value passed as static arg "
+                        f"'{kw.arg}' of jitted "
+                        f"'{self._callee_label(node)}' — recompiles every "
+                        f"iteration (hoist it, or bucket the values)",
+                    )
+            if app.target is not None and not isinstance(app.target, ast.Lambda):
+                params = param_names(app.target)
+                for i, a in enumerate(node.args):
+                    if i < len(params) and params[i] in statics and expr_tainted(a, loop_vars):
+                        yield ctx.finding(
+                            self.code,
+                            a,
+                            f"loop-varying value passed as static arg "
+                            f"'{params[i]}' of jitted "
+                            f"'{self._callee_label(node)}' — recompiles every "
+                            f"iteration (hoist it, or bucket the values)",
+                        )
+
+    def _resolve_jitted(self, idx: JitIndex, node: ast.Call):
+        if isinstance(node.func, ast.Name):
+            return idx.jitted_names.get(node.func.id)
+        if isinstance(node.func, ast.Attribute) and isinstance(node.func.value, ast.Name):
+            return idx.jitted_names.get(f"{node.func.value.id}.{node.func.attr}")
+        return None
+
+    @staticmethod
+    def _callee_label(node: ast.Call) -> str:
+        if isinstance(node.func, ast.Name):
+            return node.func.id
+        if isinstance(node.func, ast.Attribute):
+            return node.func.attr
+        return "<call>"
+
+
+def _in_nested_fn(owner, node) -> bool:
+    """True if ``node`` sits inside a function nested in ``owner``."""
+    for sub in ast.walk(owner):
+        if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef)) and sub is not owner:
+            if any(n is node for n in ast.walk(sub)):
+                return True
+    return False
+
+
+@register
+class PallasContractRule(Rule):
+    """R005: pallas_call grid/BlockSpec/out_shape/interpret contracts."""
+
+    code = "R005"
+    name = "pallas-contracts"
+    description = (
+        "pallas_call structural checks: index_map arity must equal grid rank, "
+        "BlockSpec block rank must match its index_map, out_specs/out_shape "
+        "counts must agree, store dtype must match out_shape, and interpret= "
+        "must be plumbed (not missing or hardcoded)"
+    )
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        idx = _index(ctx)
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            if dotted_name(node.func, idx.aliases) != "jax.experimental.pallas.pallas_call":
+                continue
+            yield from self._check_pallas_call(ctx, idx, node)
+
+    def _check_pallas_call(self, ctx: ModuleContext, idx: JitIndex, node: ast.Call):
+        kwargs = {k.arg: k.value for k in node.keywords if k.arg}
+        grid = kwargs.get("grid")
+        grid_rank: Optional[int] = None
+        if isinstance(grid, (ast.Tuple, ast.List)):
+            grid_rank = len(grid.elts)
+        elif grid is not None and isinstance(grid, ast.Constant) and isinstance(grid.value, int):
+            grid_rank = 1
+
+        specs: List[Tuple[str, ast.Call]] = []
+        for key in ("in_specs", "out_specs"):
+            v = kwargs.get(key)
+            if isinstance(v, (ast.Tuple, ast.List)):
+                specs.extend((key, e) for e in v.elts if isinstance(e, ast.Call))
+            elif isinstance(v, ast.Call):
+                specs.append((key, v))
+        for key, spec in specs:
+            if (dotted_name(spec.func, idx.aliases) or "").split(".")[-1] != "BlockSpec":
+                continue
+            block_shape, index_map = self._blockspec_parts(spec)
+            if isinstance(index_map, ast.Lambda) and grid_rank is not None:
+                arity = len(param_names(index_map))
+                if arity != grid_rank:
+                    yield ctx.finding(
+                        self.code,
+                        index_map,
+                        f"BlockSpec index_map takes {arity} grid indices but "
+                        f"grid has rank {grid_rank} — pallas_call raises at "
+                        f"trace time",
+                    )
+            if (
+                isinstance(index_map, ast.Lambda)
+                and isinstance(block_shape, (ast.Tuple, ast.List))
+                and isinstance(index_map.body, (ast.Tuple, ast.List))
+                and len(index_map.body.elts) != len(block_shape.elts)
+            ):
+                yield ctx.finding(
+                    self.code,
+                    index_map,
+                    f"BlockSpec block_shape has rank {len(block_shape.elts)} "
+                    f"but its index_map returns "
+                    f"{len(index_map.body.elts)} indices",
+                )
+
+        # out_specs / out_shape count agreement (only when both are literal lists)
+        out_specs = kwargs.get("out_specs")
+        out_shape = kwargs.get("out_shape")
+        if isinstance(out_specs, (ast.Tuple, ast.List)) and isinstance(
+            out_shape, (ast.Tuple, ast.List)
+        ):
+            if len(out_specs.elts) != len(out_shape.elts):
+                yield ctx.finding(
+                    self.code,
+                    out_shape,
+                    f"out_specs declares {len(out_specs.elts)} outputs but "
+                    f"out_shape declares {len(out_shape.elts)}",
+                )
+
+        # store dtype vs out_shape dtype (literal jnp dtypes only)
+        out_dtype = self._single_out_dtype(out_shape, idx)
+        if out_dtype is not None and node.args:
+            kernel = idx._resolve_fn_arg(node.args[0], None)
+            if kernel is not None and not isinstance(kernel, ast.Lambda):
+                for store_dtype, store_node in self._store_dtypes(kernel, idx):
+                    if store_dtype != out_dtype:
+                        yield ctx.finding(
+                            self.code,
+                            store_node,
+                            f"kernel stores .astype({store_dtype}) but "
+                            f"out_shape declares {out_dtype} — pallas_call "
+                            f"raises a dtype mismatch",
+                            symbol=getattr(kernel, "name", "<kernel>"),
+                        )
+
+        # interpret plumbing
+        interp = kwargs.get("interpret")
+        if interp is None:
+            yield ctx.finding(
+                self.code,
+                node,
+                "pallas_call does not plumb interpret= — the kernel cannot run "
+                "on CPU/interpret mode (pass the wrapper's interpret flag "
+                "through)",
+            )
+        elif isinstance(interp, ast.Constant) and isinstance(interp.value, bool):
+            yield ctx.finding(
+                self.code,
+                interp,
+                f"interpret={interp.value} is hardcoded — plumb the wrapper's "
+                f"interpret flag (or default_interpret()) so the kernel runs "
+                f"on both TPU and CPU",
+            )
+
+    @staticmethod
+    def _blockspec_parts(spec: ast.Call) -> Tuple[Optional[ast.AST], Optional[ast.AST]]:
+        block_shape = spec.args[0] if len(spec.args) >= 1 else None
+        index_map = spec.args[1] if len(spec.args) >= 2 else None
+        for kw in spec.keywords:
+            if kw.arg == "block_shape":
+                block_shape = kw.value
+            elif kw.arg == "index_map":
+                index_map = kw.value
+        return block_shape, index_map
+
+    def _single_out_dtype(self, out_shape, idx: JitIndex) -> Optional[str]:
+        if not isinstance(out_shape, ast.Call):
+            return None
+        if (dotted_name(out_shape.func, idx.aliases) or "").split(".")[-1] != "ShapeDtypeStruct":
+            return None
+        dtype = out_shape.args[1] if len(out_shape.args) >= 2 else None
+        for kw in out_shape.keywords:
+            if kw.arg == "dtype":
+                dtype = kw.value
+        dname = dotted_name(dtype, idx.aliases) if dtype is not None else None
+        if dname is not None and dname.startswith("jax.numpy."):
+            return dname.split(".")[-1]
+        return None
+
+    def _store_dtypes(self, kernel, idx: JitIndex):
+        params = set(param_names(kernel))
+        for node in ast.walk(kernel):
+            if not (isinstance(node, ast.Assign) and len(node.targets) == 1):
+                continue
+            t = node.targets[0]
+            if not (
+                isinstance(t, ast.Subscript)
+                and isinstance(t.value, ast.Name)
+                and t.value.id in params
+            ):
+                continue
+            v = node.value
+            if (
+                isinstance(v, ast.Call)
+                and isinstance(v.func, ast.Attribute)
+                and v.func.attr == "astype"
+                and v.args
+            ):
+                dname = dotted_name(v.args[0], idx.aliases)
+                if dname is not None and dname.startswith("jax.numpy."):
+                    yield dname.split(".")[-1], v
