@@ -119,6 +119,10 @@ def bench_serve_continuous(emit, *, lanes=8, n_req=24, short=8, long_=192,
         eng = Engine(cfg, params, ctrl=ctrl, probe_params=pp, lanes=lanes,
                      policy="full", scheduler=mode, chunk=chunk)
         res = eng.run(reqs)                    # compile + warm up
+        # a bench run must be fault-free end to end: any rejected/poisoned/
+        # deadline result means the measurement is not comparing full decodes
+        bad = [(r.uid, r.status) for r in res if r.status != "ok"]
+        assert not bad, bad
         # the untrained fixture model may end a request naturally (THINK_END
         # then answer/EOS) before max_new — count what was actually emitted
         emitted_by[mode] = emitted = sum(len(r.tokens) for r in res)
@@ -147,6 +151,7 @@ def bench_serve_continuous(emit, *, lanes=8, n_req=24, short=8, long_=192,
         "speedup": round(tok_s["continuous"] / tok_s["wave"], 2),
         "continuous_steps": stats["continuous"].get("steps"),
         "continuous_chunks": stats["continuous"].get("chunks"),
+        "statuses": stats["continuous"].get("statuses"),
     }
     emit("serve", entry["case"], {k: v for k, v in entry.items()
                                   if k != "case"})

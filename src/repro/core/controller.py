@@ -47,6 +47,10 @@ from typing import NamedTuple, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
+# "No deadline" sentinel for the per-lane step deadline (and the init value
+# of per-lane emission budgets): emitted counters can never reach it.
+INF_STEPS = 2 ** 31 - 1
+
 
 @dataclass(frozen=True)
 class ControllerConfig:
@@ -103,6 +107,12 @@ class ControllerState(NamedTuple):
     cb_think_done: jax.Array  # (B, K) bool codebook k consumed its THINK_END
     cb_end: jax.Array         # (B, K) bool codebook k's stream closed
                               #        (final frame / EOS emitted)
+    # --- fault tolerance (pure jnp so enforcement fuses into the scan) -----
+    deadline: jax.Array       # (B,)   i32 per-lane step deadline
+                              #        (INF_STEPS: no deadline)
+    deadline_hit: jax.Array   # (B,)   bool lane retired by its deadline
+    poisoned: jax.Array       # (B,)   bool lane quarantined (non-finite
+                              #        logits or probe state detected)
 
 
 def init_state(batch: int, d_model: int, window: int,
@@ -125,9 +135,12 @@ def init_state(batch: int, d_model: int, window: int,
         forced_exit=jnp.zeros((batch,), bool),
         exit_step=jnp.full((batch,), -1, jnp.int32),
         emitted=jnp.zeros((batch,), jnp.int32),
-        max_tokens=jnp.full((batch,), 2 ** 31 - 1, jnp.int32),
+        max_tokens=jnp.full((batch,), INF_STEPS, jnp.int32),
         cb_think_done=jnp.zeros((batch, ncb), bool),
         cb_end=jnp.zeros((batch, ncb), bool),
+        deadline=jnp.full((batch,), INF_STEPS, jnp.int32),
+        deadline_hit=jnp.zeros((batch,), bool),
+        poisoned=jnp.zeros((batch,), bool),
     )
 
 
@@ -262,13 +275,21 @@ def update(
     # emission budget (per-request max_new): a lane sharing a wave with a
     # larger request stops at *its* budget, not the wave-wide maximum
     emitted = state.emitted + (~lane_prev).astype(jnp.int32)
-    lane_done = lane_prev | cb_end[:, -1] | (emitted >= state.max_tokens)
+    natural = cb_end[:, -1] | (emitted >= state.max_tokens)
+    # per-request step deadline: a live lane that did not finish on its own
+    # this step retires with whatever it has produced once `emitted` reaches
+    # its deadline.  A natural finish on the deadline step wins (the request
+    # completed in time); `deadline_hit` is what becomes status="deadline"
+    # when the lane is snapshotted at retire.
+    dl_now = ~lane_prev & ~natural & (emitted >= state.deadline)
+    lane_done = lane_prev | natural | dl_now
 
     return ControllerState(
         rep_sum, tok_cnt, has_marker, win, win_n, smoothed, steps, done,
         exit_pos, think_done, lane_done, think_tokens, answer,
         state.forced_exit, exit_step, emitted, state.max_tokens,
         cb_think_done, cb_end,
+        state.deadline, state.deadline_hit | dl_now, state.poisoned,
     )
 
 
@@ -279,16 +300,33 @@ def _lane_where(mask: jax.Array, new, old):
 
 
 def reset_lanes(state: ControllerState, mask: jax.Array,
-                max_tokens: jax.Array) -> ControllerState:
+                max_tokens: jax.Array,
+                deadline: jax.Array | None = None) -> ControllerState:
     """Reset the lanes where ``mask`` to a fresh controller state with the
-    given per-lane emission budgets; other lanes are untouched.  This is the
-    continuous-batching refill primitive: a retired lane is re-armed for its
-    next request without touching the compiled (B,)-shaped decode graph."""
+    given per-lane emission budgets (and, optionally, per-lane step
+    deadlines — default: no deadline); other lanes are untouched.  This is
+    the continuous-batching refill primitive: a retired lane is re-armed for
+    its next request without touching the compiled (B,)-shaped decode graph.
+    A fresh lane clears ``deadline_hit``/``poisoned``, so re-arming a
+    quarantined lane is exactly this call."""
     b, d = state.rep_sum.shape
     fresh = init_state(b, d, state.win.shape[1],
                        num_codebooks=state.cb_end.shape[1])._replace(
         max_tokens=max_tokens)
+    if deadline is not None:
+        fresh = fresh._replace(deadline=deadline)
     return jax.tree.map(lambda n, o: _lane_where(mask, n, o), fresh, state)
+
+
+def quarantine_lanes(state: ControllerState,
+                     bad: jax.Array) -> ControllerState:
+    """Retire the lanes where ``bad`` with the poisoned flag set — the
+    device half of NaN quarantine.  The caller masks ``bad`` to lanes that
+    were live before the offending step; a lane that finished naturally on
+    the same step is still poisoned (its closing token came from corrupt
+    logits), so this deliberately does not re-check ``lane_done``."""
+    return state._replace(poisoned=state.poisoned | bad,
+                          lane_done=state.lane_done | bad)
 
 
 def update_lanes(

@@ -63,6 +63,16 @@ def main():
                     choices=["dense", "pallas"],
                     help="decode attention backend (default: autodetect — "
                          "pallas on TPU, dense elsewhere)")
+    ap.add_argument("--deadline-steps", type=int, default=0,
+                    help="per-request step deadline: retire a lane with "
+                         "whatever it produced (status 'deadline') after "
+                         "this many emitted tokens; 0 disables. A latency "
+                         "bound on top of --max-new, not a budget")
+    ap.add_argument("--max-pending", type=int, default=None,
+                    help="admission backpressure: accept at most "
+                         "lanes + max-pending requests per run (beyond: "
+                         "status 'rejected', code 'backpressure'); default "
+                         "unbounded")
     ap.add_argument("--ckpt", default="", help="params checkpoint (msgpack)")
     ap.add_argument("--probe-ckpt", default="", help="probe bundle (json+npz)")
     ap.add_argument("--lam", type=float, default=0.8)
@@ -107,14 +117,16 @@ def main():
     eng = Engine(cfg, params, ctrl=ctrl, probe_params=pp, lanes=args.lanes,
                  policy=args.policy, scheduler=args.scheduler,
                  decode_mode=args.decode_mode, chunk=args.chunk,
-                 kv_quant=args.kv_quant, attn_impl=args.attn_impl, **crop_kw)
+                 kv_quant=args.kv_quant, attn_impl=args.attn_impl,
+                 max_pending=args.max_pending, **crop_kw)
 
     rng = np.random.default_rng(args.seed)
     traces = generate_dataset(args.requests, TraceConfig(), seed=args.seed + 7)
     # cross-attn families get a per-request stub conditioning embedding, as
     # a real frontend would attach per image/audio clip
     reqs = [ServeRequest(uid=i, prompt=t.tokens[:6].astype(np.int32),
-                         max_new=args.max_new, ctx=stub_ctx(cfg, rng))
+                         max_new=args.max_new, ctx=stub_ctx(cfg, rng),
+                         deadline_steps=args.deadline_steps)
             for i, t in enumerate(traces)]
     results = eng.run(reqs)
 
@@ -123,6 +135,7 @@ def main():
     correct = np.array([
         (r.answer is not None and r.answer == traces[i].true_answer)
         for i, r in enumerate(results)])
+    stats = eng.last_stats
     print(json.dumps({
         "policy": args.policy,
         # rows of .tokens: delayed steps for single-stream models, complete
@@ -132,6 +145,18 @@ def main():
         "early_exit_rate": float(early.mean()),
         "answer_rate": float(np.mean([r.answer is not None for r in results])),
         "accuracy_vs_world": float(correct.mean()),
+        # request lifecycle (both schedulers record the same counter family)
+        "lifecycle": {
+            "chunks": stats.get("chunks", 0),
+            "admitted": stats.get("admitted", 0),
+            "retired": stats.get("retired", 0),
+            "rejected": stats.get("rejected", 0),
+            "poisoned": stats.get("poisoned", 0),
+            "deadline": stats.get("deadline", 0),
+            "drained": stats.get("drained", 0),
+            "statuses": stats.get("statuses", {}),
+        },
+        "warnings": stats.get("warnings", []),
     }, indent=2))
 
 

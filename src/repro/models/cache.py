@@ -157,6 +157,22 @@ def scatter_cache_lane(cache: dict, small: dict, lane) -> dict:
     return jax.tree.map(one, cache, small)
 
 
+def scrub_cache_lane(cache: dict, lane) -> dict:
+    """Zero lane ``lane``'s content in a live stacked cache (quarantine of a
+    poisoned lane).  ``lane`` may be traced.  Only layer-stacked content
+    leaves (K/V, quant scales, ssm state, cross-K/V) are zeroed; per-lane
+    1-D scalars (``pos``/``plen``) are kept — they are finite ints by
+    construction, and zeroing ``pos`` would leave the idle lane's masked
+    attention with zero valid keys (an all ``-inf`` softmax row, i.e. fresh
+    NaN).  The scrubbed lane keeps decoding masked no-ops over zeros until
+    :func:`scatter_cache_lane` refills it."""
+    def one(leaf):
+        if _lane_axis(leaf) == 0:
+            return leaf
+        return leaf.at[:, lane].set(jnp.zeros_like(leaf[:, lane]))
+    return jax.tree.map(one, cache)
+
+
 # Windowed-cache layouts (``window`` is the STATIC attention window; ``w``
 # the static cache width):
 #   * w == window  -> RING: slot = pos % w, the incoming token overwrites the

@@ -9,7 +9,10 @@ from repro.serving.engine import (
     ServeResult,
     make_serve_step,
     make_serve_steps,
+    status_counts,
+    status_from_book,
     stub_ctx,
 )
+from repro.serving.faults import Fault, FaultPlan
 from repro.serving.sampling import decode_key, sample_tokens
 from repro.serving.scheduler import SlotScheduler, bucket_length, run_continuous

@@ -58,7 +58,9 @@ from repro.models import model as model_mod
 from repro.models.cache import quantize_prefill_cache
 from repro.models.cache import replicate_cache_lanes as cache_mod_replicate
 from repro.models.cache import scatter_cache_lane as cache_mod_scatter
+from repro.models.cache import scrub_cache_lane as cache_mod_scrub
 from repro.serving import delay as delay_mod
+from repro.serving import faults as faults_mod
 from repro.serving.sampling import decode_key, sample_tokens
 
 
@@ -72,6 +74,11 @@ class ServeRequest:
     # Per-request encoder output for cross-attention families (audio/vlm):
     # (num_context_tokens, context_dim) float. None -> zeros (unconditioned).
     ctx: Optional[np.ndarray] = None
+    # Per-request step deadline: retire the lane with whatever it produced
+    # (status "deadline") once this many tokens were emitted; 0 disables.
+    # Unlike max_new — a budget the engine sizes cache for — the deadline is
+    # a latency bound: it can only shorten a request, never size anything.
+    deadline_steps: int = 0
 
 
 def stub_ctx(cfg, rng: np.random.Generator) -> Optional[np.ndarray]:
@@ -99,6 +106,45 @@ class ServeResult:
     answer: Optional[int]               # decoded answer id (synthetic world)
     probe_trace: np.ndarray             # smoothed probe score after each token
     exit_pos: int = -1                  # absolute token position of the probe trigger
+    # request lifecycle: "ok" | "rejected" | "deadline" | "poisoned" |
+    # "drained" — anything but "ok" carries a structured ``error`` payload
+    # ({"code": ..., "message": ...}) instead of raising mid-run
+    status: str = "ok"
+    error: Optional[dict] = None
+
+
+# Per-lane ControllerState fields snapshotted into a ServeResult at retire.
+# The fault-tolerance fields (poisoned / deadline_hit) ride the same fetch
+# tuple as the historical bookkeeping, so the status contract adds no sync
+# points — tests/test_sanitize.py pins the exact ledger counts.
+BOOK_KEYS = ("forced_exit", "exit_step", "think_tokens", "answer",
+             "exit_pos", "poisoned", "deadline_hit")
+
+
+def status_from_book(book: Dict[str, object]):
+    """(status, error) for one retired lane's bookkeeping snapshot.
+
+    Poisoned wins over deadline: a lane that went non-finite is quarantined
+    even if its deadline expired the same chunk.  Missing keys read as ok so
+    pre-robustness snapshots (standalone SlotScheduler callers) still
+    retire cleanly."""
+    if bool(book.get("poisoned", False)):
+        return "poisoned", {
+            "code": "non_finite",
+            "message": "non-finite logits or probe score; lane quarantined"}
+    if bool(book.get("deadline_hit", False)):
+        return "deadline", {
+            "code": "deadline_exceeded",
+            "message": "deadline_steps reached before completion"}
+    return "ok", None
+
+
+def status_counts(results) -> Dict[str, int]:
+    """Histogram of ``ServeResult.status`` over ``results`` (stats payload)."""
+    counts: Dict[str, int] = {}
+    for r in results:
+        counts[r.status] = counts.get(r.status, 0) + 1
+    return counts
 
 
 def _emit_mask(state: ctrl_mod.ControllerState, ncb: int):
@@ -111,34 +157,72 @@ def _emit_mask(state: ctrl_mod.ControllerState, ncb: int):
     return ~state.lane_done
 
 
+def _nonfinite_logit_lanes(logits: jax.Array) -> jax.Array:
+    """(B,) True where a lane's logits contain any NaN/Inf this step."""
+    return ~jnp.isfinite(logits).all(axis=tuple(range(1, logits.ndim)))
+
+
+def _quarantine_after_update(state: ctrl_mod.ControllerState,
+                             prev_done: jax.Array,
+                             bad_logits: jax.Array) -> ctrl_mod.ControllerState:
+    """Per-lane non-finite detector, evaluated after the controller update.
+
+    A lane is quarantined when its logits went non-finite this step or its
+    probe state (smoothed score / step accumulator) holds NaN/Inf — each a
+    per-lane reduction, so detection is pure jnp on the decode path and the
+    verdict rides the existing per-chunk ``lane_done``/bookkeeping fetch
+    (no new sync points).  Lanes already done before this step are exempt:
+    an idle/retired lane's masked no-op math cannot re-poison it."""
+    bad = (bad_logits
+           | ~jnp.isfinite(state.smoothed)
+           | ~jnp.isfinite(state.rep_sum).all(axis=-1)) & ~prev_done
+    return ctrl_mod.quarantine_lanes(state, bad)
+
+
 def make_serve_step(cfg, ctrl: ctrl_mod.ControllerConfig, *,
                     window: int = 0, moe_impl: str = "dense",
                     compute_dtype: str = "float32", temperature: float = 0.0,
-                    attn_impl: str | None = None):
+                    attn_impl: str | None = None,
+                    faults: tuple = ()):
     """Build the jitted single-token decode+controller step (host-loop path).
 
     Forcing — probe/crop THINK_END plus the codebook delay staircase — is
     fused on device via :func:`repro.core.controller.forced_next`, exactly
     the math the scanned chunk runs, so the two drivers differ only in
-    dispatch/sync granularity.  Returns ``(next_tokens, cache, state,
-    emit)`` with ``emit`` the (B,) or (B, K) emission mask of this step.
+    dispatch/sync granularity.  ``step`` is the decode-step counter (the
+    sampling key is ``fold_in(base_key, step)``, matching the scan body);
+    ``faults`` is the static device-fault tuple of the engine's FaultPlan.
+    Returns ``(next_tokens, cache, state, emit)`` with ``emit`` the (B,) or
+    (B, K) emission mask of this step.
     """
     ncb = cfg.num_codebooks
+    faults = faults_mod.FaultPlan(faults).device_faults
 
-    def serve_step(params, probe_params, dcache, state, tokens, key):
+    def serve_step(params, probe_params, dcache, state, tokens, base_key,
+                   step):
         forced, state = ctrl_mod.forced_next(ctrl, state)
+        prev_done = state.lane_done
         logits, hidden, dcache = model_mod.decode_step(
             cfg, params, dcache, tokens, window=window, moe_impl=moe_impl,
             compute_dtype=compute_dtype, attn_impl=attn_impl)
-        nxt = sample_tokens(key, logits, temperature)[:, 0]   # (B,) | (B, K)
+        logits, hidden = faults_mod.apply_device_faults(
+            faults, logits, hidden, step)
+        nxt = sample_tokens(decode_key(base_key, step), logits,
+                            temperature)[:, 0]            # (B,) | (B, K)
         if ncb:
             # forced_next returns (B,) for K=1 state; align with the (B, K)
             # token plane of a codebook model (no-op for K > 1)
             forced = forced.reshape(nxt.shape)
         nxt = jnp.where(forced >= 0, forced, nxt)
+        bad_logits = _nonfinite_logit_lanes(logits)
+        # the poisoning step's own token is garbage (argmax over NaN/Inf) and
+        # is never emitted; all-finite lanes see an unchanged emit mask, so
+        # fault-free runs stay bit-exact
         emit = _emit_mask(state, ncb)
+        emit = emit & ~(bad_logits[:, None] if ncb else bad_logits)
         state = ctrl_mod.update(ctrl, probe_params, state, nxt,
                                 hidden[:, 0], dcache["pos"] - 1)
+        state = _quarantine_after_update(state, prev_done, bad_logits)
         return nxt, dcache, state, emit
 
     return jax.jit(serve_step)
@@ -147,7 +231,8 @@ def make_serve_step(cfg, ctrl: ctrl_mod.ControllerConfig, *,
 def make_serve_steps(cfg, ctrl: ctrl_mod.ControllerConfig, *,
                      window: int = 0, moe_impl: str = "dense",
                      compute_dtype: str = "float32", temperature: float = 0.0,
-                     attn_impl: str | None = None):
+                     attn_impl: str | None = None,
+                     faults: tuple = ()):
     """Build the jitted K-token chunk: decode, sampling, controller update and
     THINK_END forcing fused into one ``lax.scan`` (K = ``num_steps``, static).
 
@@ -156,9 +241,13 @@ def make_serve_steps(cfg, ctrl: ctrl_mod.ControllerConfig, *,
     token t (the host drops those slots, matching the host loop's per-lane
     append; for codebook models the mask is additionally per-codebook).
     Sampling keys are ``fold_in(base_key, step0 + t)`` so chunk boundaries do
-    not change the key stream.
+    not change the key stream.  ``faults`` (static) injects the engine
+    FaultPlan's device faults at their (lane, step) coordinates; the same
+    per-lane non-finite detector as the host step quarantines poisoned lanes
+    in-scan, so the verdict reaches the host on the existing chunk sync.
     """
     ncb = cfg.num_codebooks
+    faults = faults_mod.FaultPlan(faults).device_faults
 
     @functools.partial(jax.jit, static_argnames=("num_steps",))
     def serve_steps(params, probe_params, dcache, state, cur, base_key,
@@ -166,19 +255,25 @@ def make_serve_steps(cfg, ctrl: ctrl_mod.ControllerConfig, *,
         def body(carry, t):
             cur, dcache, state = carry
             forced, state = ctrl_mod.forced_next(ctrl, state)
+            prev_done = state.lane_done
             logits, hidden, dcache = model_mod.decode_step(
                 cfg, params, dcache, cur[:, None], window=window,
                 moe_impl=moe_impl, compute_dtype=compute_dtype,
                 attn_impl=attn_impl)
+            logits, hidden = faults_mod.apply_device_faults(
+                faults, logits, hidden, t)
             nxt = sample_tokens(decode_key(base_key, t), logits,
                                 temperature)[:, 0]
             if ncb:
                 # (B,) -> (B, 1) for a K=1 codebook model (no-op for K > 1)
                 forced = forced.reshape(nxt.shape)
             nxt = jnp.where(forced >= 0, forced, nxt)
+            bad_logits = _nonfinite_logit_lanes(logits)
             emit = _emit_mask(state, ncb)
+            emit = emit & ~(bad_logits[:, None] if ncb else bad_logits)
             state = ctrl_mod.update(ctrl, probe_params, state, nxt,
                                     hidden[:, 0], dcache["pos"] - 1)
+            state = _quarantine_after_update(state, prev_done, bad_logits)
             return (nxt, dcache, state), (nxt, state.smoothed, emit)
 
         (cur, dcache, state), (toks, sm, emit) = jax.lax.scan(
@@ -233,9 +328,19 @@ class Engine:
                  temperature: float = 0.0, seed: int = 0,
                  kv_quant: bool = False, decode_mode: str = "scan",
                  chunk: int = 16, scheduler: str = "wave",
-                 attn_impl: str | None = None, window_cache: str = "ring"):
+                 attn_impl: str | None = None, window_cache: str = "ring",
+                 max_pending: Optional[int] = None,
+                 max_cache_len: Optional[int] = None,
+                 fault_plan: Optional[faults_mod.FaultPlan] = None):
         if policy not in ("calibrated", "crop", "full"):
             raise ValueError(f"unknown policy {policy!r}")
+        if max_pending is not None and max_pending < 0:
+            raise ValueError("max_pending must be >= 0 (None: unbounded)")
+        if max_cache_len is not None and max_cache_len < 1:
+            raise ValueError("max_cache_len must be >= 1 (None: unbounded)")
+        if fault_plan is not None and not isinstance(fault_plan,
+                                                    faults_mod.FaultPlan):
+            raise ValueError("fault_plan must be a serving.faults.FaultPlan")
         if decode_mode not in ("scan", "host"):
             raise ValueError(f"unknown decode_mode {decode_mode!r}")
         if scheduler not in ("wave", "continuous"):
@@ -296,6 +401,14 @@ class Engine:
                        if cfg.native_swa and cfg.sliding_window
                        and cfg.family != "ssm" else 0)
         self.window_cache = window_cache
+        # Admission control: accept at most lanes + max_pending requests per
+        # run (beyond: status="rejected", code "backpressure"); reject any
+        # request whose prompt + max_new needs more than max_cache_len cache
+        # slots (code "cache_capacity").  None disables either cap.
+        self.max_pending = max_pending
+        self.max_cache_len = max_cache_len
+        # Deterministic fault injection (chaos testing): None in production.
+        self.fault_plan = fault_plan
         self.last_stats: Dict[str, object] = {}
         self._run_chunks = self._run_steps = 0  # wave-mode run counters
         # Policies compile down to (λ, crop) on device: `full` disables both
@@ -307,7 +420,8 @@ class Engine:
             num_answers=NUM_ANSWERS, crop_budget=eff_crop, pad_id=PAD)
         kw = dict(window=self.window, moe_impl=moe_impl,
                   compute_dtype=compute_dtype, temperature=temperature,
-                  attn_impl=attn_impl)
+                  attn_impl=attn_impl,
+                  faults=(fault_plan.device_faults if fault_plan else ()))
         self._step_fn = make_serve_step(cfg, self.wave_ctrl, **kw)
         self._steps_fn = make_serve_steps(cfg, self.wave_ctrl, **kw)
         # seed the controller with the prefill-argmax token (it was never
@@ -320,6 +434,7 @@ class Engine:
         self._replicate_fn = jax.jit(
             lambda small: cache_mod_replicate(small, self.lanes))
         self._admit_fn = self._make_admit_fn()
+        self._quarantine_fn = self._make_quarantine_fn()
 
     def _make_admit_fn(self):
         """Jitted lane refill: scatter one prefilled request into a free lane
@@ -331,11 +446,12 @@ class Engine:
 
         @jax.jit
         def admit(pp, state, cache, cur, small, hid_last, logits, lane, plen,
-                  max_new):
+                  max_new, deadline):
             b = cur.shape[0]
             mask = jnp.arange(b) == lane
             state = ctrl_mod.reset_lanes(
-                state, mask, jnp.where(mask, max_new, state.max_tokens))
+                state, mask, jnp.where(mask, max_new, state.max_tokens),
+                jnp.where(mask, deadline, state.deadline))
             cache = cache_mod_scatter(cache, small, lane)
             hid_b = jnp.broadcast_to(hid_last, (b, hid_last.shape[-1]))
             if ncb:
@@ -352,6 +468,26 @@ class Engine:
             return state, cache, cur, tok0, state.smoothed
 
         return admit
+
+    def _make_quarantine_fn(self):
+        """Jitted quarantine for a poisoned lane at retire: re-arm the lane's
+        controller state (its probe accumulators hold NaN/Inf) with zero
+        budget so it idles done, and scrub the lane's cache content so the
+        poison cannot reach later math.  One compiled graph, ``lane`` is a
+        traced scalar, and nothing crosses back to the host — the ledger
+        invariant (one sync per chunk + one per admit) is untouched."""
+
+        @jax.jit
+        def quarantine(state, cache, lane):
+            b = state.lane_done.shape[0]
+            mask = jnp.arange(b) == lane
+            state = ctrl_mod.reset_lanes(
+                state, mask, jnp.where(mask, 0, state.max_tokens))
+            state = state._replace(lane_done=state.lane_done | mask)
+            cache = cache_mod_scrub(cache, lane)
+            return state, cache
+
+        return quarantine
 
     def _prefill(self, prompts: np.ndarray, cache_len: int | None, ctx=None):
         logits, hidden, cache = model_mod.prefill(
@@ -434,26 +570,150 @@ class Engine:
                 lam=jnp.asarray(jnp.inf, jnp.float32))
         return self.probe_params
 
+    # ------------------------------------------------------- admission gate
+
+    def validate_request(self, req: ServeRequest) -> Optional[dict]:
+        """Admission screening: a structured error payload ({"code",
+        "message"}) for a request the engine must not decode, None when
+        admissible.  Every malformed shape that used to raise mid-run — and
+        destroy every other in-flight lane's work — is rejected here,
+        before any prefill compile or lane assignment."""
+        prompt = np.asarray(req.prompt)
+        if prompt.size == 0:
+            return {"code": "empty_prompt",
+                    "message": "prompt must contain at least one token"}
+        if prompt.ndim != 1 and not (self.ncb and prompt.ndim == 2):
+            return {"code": "bad_prompt_shape",
+                    "message": f"prompt shape {prompt.shape} is not a token "
+                               "stream this engine can serve"}
+        if self.ncb and prompt.ndim == 2 and prompt.shape[1] != self.ncb:
+            return {"code": "bad_prompt_shape",
+                    "message": f"prompt has {prompt.shape[1]} codebook "
+                               f"columns, model decodes {self.ncb}"}
+        if not np.issubdtype(prompt.dtype, np.integer):
+            return {"code": "bad_prompt_dtype",
+                    "message": f"prompt dtype {prompt.dtype} is not integral"}
+        vocab = int(self.cfg.vocab_size)
+        lo, hi = int(prompt.min()), int(prompt.max())
+        if lo < 0 or hi >= vocab:
+            return {"code": "token_out_of_range",
+                    "message": f"prompt token ids span [{lo}, {hi}]; vocab "
+                               f"size is {vocab}"}
+        if int(req.max_new) < 1:
+            return {"code": "bad_max_new",
+                    "message": f"max_new={req.max_new} (must be >= 1)"}
+        if self.cfg.uses_cross_attn and req.ctx is not None:
+            ca = self.cfg.cross_attn
+            shape = np.asarray(req.ctx).shape
+            if shape != (ca.num_context_tokens, ca.context_dim):
+                return {"code": "bad_ctx_shape",
+                        "message": f"ctx shape {shape} != "
+                                   f"({ca.num_context_tokens}, "
+                                   f"{ca.context_dim})"}
+        if self.max_cache_len is not None:
+            plen = int(prompt.shape[0])
+            if self.scheduler == "continuous":
+                from repro.serving.scheduler import bucket_length
+                plen = bucket_length(plen)
+            need = self.decode_cache_len(plen, int(req.max_new))
+            if need is not None and need > self.max_cache_len:
+                return {"code": "cache_capacity",
+                        "message": f"request needs {need} cache slots "
+                                   f"(prompt {prompt.shape[0]} + max_new "
+                                   f"{req.max_new}); capacity is "
+                                   f"{self.max_cache_len}"}
+        if self.fault_plan is not None and self.fault_plan.rejects(req.uid):
+            return {"code": "fault_injected",
+                    "message": "rejected by the active FaultPlan"}
+        return None
+
+    def screen_requests(self, requests: Sequence[ServeRequest],
+                        results: Dict[int, ServeResult]):
+        """Admission control: every inadmissible request becomes a
+        ``status="rejected"`` result in ``results`` (keyed by submission
+        order) without consuming a lane, a prefill compile, or queue space;
+        returns the accepted ``(order, request)`` pairs.  With
+        ``max_pending=N`` the engine additionally sheds load beyond
+        ``lanes + N`` concurrently accepted requests per run (code
+        "backpressure")."""
+        accepted = []
+        cap = (None if self.max_pending is None
+               else self.lanes + self.max_pending)
+        for order, req in enumerate(requests):
+            err = self.validate_request(req)
+            if err is None and cap is not None and len(accepted) >= cap:
+                err = {"code": "backpressure",
+                       "message": f"pending queue full ({cap} accepted: "
+                                  f"{self.lanes} lanes + {self.max_pending} "
+                                  "pending)"}
+            if err is not None:
+                results[order] = self.failed_result(req, "rejected", err)
+            else:
+                accepted.append((order, req))
+        return accepted
+
+    def failed_result(self, req: ServeRequest, status: str,
+                      error: dict) -> ServeResult:
+        """A ServeResult for a request that never decoded (rejected at
+        admission, or drained before a lane freed): empty token payload,
+        empty probe trace, structured ``error``."""
+        shape = (0, self.ncb) if self.ncb else (0,)
+        return ServeResult(
+            uid=req.uid, tokens=np.zeros(shape, np.int32), think_tokens=0,
+            exited_early=False, exit_step=-1, answer=None,
+            probe_trace=np.zeros((0,), np.float32), exit_pos=-1,
+            status=status, error=dict(error))
+
     def run(self, requests: Sequence[ServeRequest]) -> List[ServeResult]:
         """Serve ``requests``; under ``REPRO_SANITIZE=1`` the whole run
         executes inside :func:`repro.analysis.guards.sanitize_scope`
-        (implicit-d2h transfer guard + NaN checking)."""
-        with guards.sanitize_scope():
+        (implicit-d2h transfer guard + NaN checking).  When the active
+        FaultPlan deliberately injects non-finite values the NaN check is
+        skipped — quarantine IS the behavior under test — while the
+        transfer guards stay enforced."""
+        nan_faults = (self.fault_plan is not None
+                      and self.fault_plan.injects_nonfinite)
+        with guards.sanitize_scope(nan_checks=not nan_faults):
             if self.scheduler == "continuous":
                 from repro.serving.scheduler import run_continuous
                 return run_continuous(self, requests)
-            results: List[ServeResult] = []
-            self._run_chunks = self._run_steps = waves = 0
-            for i in range(0, len(requests), self.lanes):
-                results.extend(self._run_wave(requests[i : i + self.lanes]))
-                waves += 1
-            self.last_stats = {
-                "scheduler": "wave", "decode_mode": self.decode_mode,
-                "waves": waves, "chunks": self._run_chunks,
-                "steps": self._run_steps, "lanes": self.lanes,
-                "requests": len(requests),
-            }
-            return results
+            return self._run_waves(requests)
+
+    def _run_waves(self, requests: Sequence[ServeRequest]) -> List[ServeResult]:
+        results: Dict[int, ServeResult] = {}
+        accepted = self.screen_requests(requests, results)
+        self._run_chunks = self._run_steps = waves = started = 0
+        drain_at = self.fault_plan.drain_step if self.fault_plan else None
+        i = 0
+        while i < len(accepted):
+            if drain_at is not None and self._run_steps >= drain_at:
+                for order, r in accepted[i:]:
+                    results[order] = self.failed_result(
+                        r, "drained",
+                        {"code": "drained",
+                         "message": "engine drained before admission"})
+                break
+            wave = accepted[i : i + self.lanes]
+            for (order, _), res in zip(
+                    wave, self._run_wave([r for _, r in wave])):
+                results[order] = res
+            started += len(wave)
+            waves += 1
+            i += self.lanes
+        statuses = status_counts(results.values())
+        self.last_stats = {
+            "scheduler": "wave", "decode_mode": self.decode_mode,
+            "waves": waves, "chunks": self._run_chunks,
+            "steps": self._run_steps, "lanes": self.lanes,
+            "requests": len(requests),
+            "admitted": started, "retired": started,
+            "rejected": statuses.get("rejected", 0),
+            "poisoned": statuses.get("poisoned", 0),
+            "deadline": statuses.get("deadline", 0),
+            "drained": statuses.get("drained", 0),
+            "statuses": statuses,
+        }
+        return [results[k] for k in range(len(requests))]
 
     # ------------------------------------------------------------------ wave
 
@@ -472,9 +732,13 @@ class Engine:
         state = ctrl_mod.init_state(b, self.cfg.d_model, self.ctrl.window,
                                     num_codebooks=max(self.ncb, 1))
         # per-lane emission budget: lanes sharing a wave stop at their own
-        # request's max_new, not the wave-wide maximum
-        state = state._replace(max_tokens=jnp.asarray(
-            [r.max_new for r in reqs], jnp.int32))
+        # request's max_new, not the wave-wide maximum; per-lane deadlines
+        # ride the same budget math (INF_STEPS: no deadline)
+        state = state._replace(
+            max_tokens=jnp.asarray([r.max_new for r in reqs], jnp.int32),
+            deadline=jnp.asarray(
+                [r.deadline_steps if r.deadline_steps > 0
+                 else ctrl_mod.INF_STEPS for r in reqs], jnp.int32))
         pp = self._wave_probe_params()
 
         # first generated token: greedy off the prefill logits, routed through
@@ -496,6 +760,8 @@ class Engine:
         for i, r in enumerate(reqs):
             exited = bool(book["forced_exit"][i])
             ans = int(book["answer"][i])
+            status, error = status_from_book(
+                {k: book[k][i] for k in BOOK_KEYS})
             out.append(ServeResult(
                 uid=r.uid,
                 tokens=self.result_tokens(gen[i]),
@@ -505,14 +771,15 @@ class Engine:
                 answer=ans if ans >= 0 else None,
                 probe_trace=np.asarray(traces[i], np.float32),
                 exit_pos=int(book["exit_pos"][i]),
+                status=status, error=error,
             ))
         return out
 
     @staticmethod
     def _book_from_state(state: ctrl_mod.ControllerState) -> Dict[str, np.ndarray]:
-        keys = ("forced_exit", "exit_step", "think_tokens", "answer", "exit_pos")
-        vals = guards.host_sync([getattr(state, k) for k in keys], "book")
-        return dict(zip(keys, vals))
+        vals = guards.host_sync(
+            [getattr(state, k) for k in BOOK_KEYS], "book")
+        return dict(zip(BOOK_KEYS, vals))
 
     # ------------------------------------------------- scanned chunk driver
 
@@ -560,7 +827,7 @@ class Engine:
             with guards.chunk_guard():
                 cur, dcache, state, emit = self._step_fn(
                     self.params, pp, dcache, state, cur[:, None],
-                    decode_key(wave_key, guards.device_scalar(t, jnp.int32)))
+                    wave_key, guards.device_scalar(t, jnp.int32))
                 nxt_np, sm_np, emit_np, all_done = guards.host_sync(
                     (cur, state.smoothed, emit, state.lane_done.all()), "token")
             append_chunk(gen, traces, nxt_np[None], sm_np[None], emit_np[None])

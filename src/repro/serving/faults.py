@@ -1,0 +1,174 @@
+"""Deterministic fault injection for the serving engine (chaos harness).
+
+A :class:`FaultPlan` is an explicit, seedable description of what goes wrong
+and when — the engine threads it through fixed hooks instead of tests
+monkeypatching internals, so the chaos suite can assert the isolation
+invariant (every lane NOT named in the plan is bit-identical to the
+fault-free run, and the engine always drains) across all three drivers.
+
+Fault taxonomy
+--------------
+Device faults (``nan_logits`` / ``inf_logits`` / ``probe_nan``) are fused
+into the jitted decode step as pure ``jnp.where`` edits keyed on
+``(lane, step)``: the fault list is static, so a fault-free engine compiles
+the identical graph it always did (the injection loop unrolls to nothing),
+and a faulted graph stays one compile for the engine's lifetime.  ``step``
+is the engine's decode-step counter — the same value folded into the
+sampling key stream (wave-local for the wave scheduler, run-global for
+continuous); the seed token (prefill argmax) precedes step 0 and cannot be
+faulted.
+
+Host faults never touch the device:
+
+* ``reject_admit`` — admission screening rejects the request with uid
+  ``uid`` (``status="rejected"``, code ``fault_injected``);
+* ``stall`` — continuous admission is held closed for ``chunks`` chunk
+  boundaries starting at the first boundary with step >= ``step``
+  (admission timing never changes outputs, so this must be invisible in
+  results — only in stats);
+* ``drain`` — from step >= ``step`` the engine stops admitting and sheds
+  the pending queue as ``status="drained"`` results; in-flight lanes
+  complete normally.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+DEVICE_KINDS = frozenset({"nan_logits", "inf_logits", "probe_nan"})
+HOST_KINDS = frozenset({"reject_admit", "stall", "drain"})
+KINDS = DEVICE_KINDS | HOST_KINDS
+
+
+@dataclasses.dataclass(frozen=True)
+class Fault:
+    """One injected failure.  Field use by kind:
+
+    * ``nan_logits`` / ``inf_logits``: poison lane ``lane``'s logits at
+      decode step ``step``;
+    * ``probe_nan``: poison lane ``lane``'s last-layer hidden state (and
+      through it the probe accumulator) at step ``step``;
+    * ``reject_admit``: reject the request with uid ``uid`` at admission;
+    * ``stall``: hold admission closed for ``chunks`` chunk boundaries
+      starting at step ``step`` (continuous scheduler only);
+    * ``drain``: stop admitting from step ``step`` on, shedding the queue.
+    """
+
+    kind: str
+    lane: int = -1
+    step: int = -1
+    uid: int = -1
+    chunks: int = 0
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(
+                f"unknown fault kind {self.kind!r} (one of {sorted(KINDS)})")
+        if self.kind in DEVICE_KINDS and (self.lane < 0 or self.step < 0):
+            raise ValueError(f"{self.kind} needs lane >= 0 and step >= 0")
+        if self.kind == "reject_admit" and self.uid < 0:
+            raise ValueError("reject_admit needs uid >= 0")
+        if self.kind == "stall" and (self.step < 0 or self.chunks < 1):
+            raise ValueError("stall needs step >= 0 and chunks >= 1")
+        if self.kind == "drain" and self.step < 0:
+            raise ValueError("drain needs step >= 0")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """An immutable set of :class:`Fault` injections for one engine."""
+
+    faults: Tuple[Fault, ...] = ()
+
+    def __post_init__(self):
+        object.__setattr__(self, "faults", tuple(self.faults))
+        for f in self.faults:
+            if not isinstance(f, Fault):
+                raise TypeError(f"FaultPlan takes Fault entries, got {f!r}")
+
+    @property
+    def device_faults(self) -> Tuple[Fault, ...]:
+        """The subset applied inside the jitted decode step."""
+        return tuple(f for f in self.faults if f.kind in DEVICE_KINDS)
+
+    @property
+    def injects_nonfinite(self) -> bool:
+        """True when the plan deliberately creates NaN/Inf on device — the
+        engine then runs any ``REPRO_SANITIZE`` tier without ``debug_nans``
+        (the transfer guards stay on)."""
+        return bool(self.device_faults)
+
+    def rejects(self, uid: int) -> bool:
+        return any(f.kind == "reject_admit" and f.uid == uid
+                   for f in self.faults)
+
+    @property
+    def drain_step(self) -> Optional[int]:
+        steps = [f.step for f in self.faults if f.kind == "drain"]
+        return min(steps) if steps else None
+
+    @property
+    def stall_spec(self) -> Optional[Fault]:
+        for f in self.faults:
+            if f.kind == "stall":
+                return f
+        return None
+
+    @staticmethod
+    def random(seed: int, *, lanes: int, steps: int,
+               uids: Sequence[int] = (), n_faults: int = 3,
+               kinds: Sequence[str] = tuple(sorted(DEVICE_KINDS))
+               ) -> "FaultPlan":
+        """A seeded, reproducible plan: same seed, same faults — the chaos
+        suite's randomized cases stay bit-replayable from their seed."""
+        rng = np.random.default_rng(seed)
+        kinds = tuple(kinds)
+        for k in kinds:
+            if k not in KINDS:
+                raise ValueError(f"unknown fault kind {k!r}")
+        faults = []
+        for _ in range(n_faults):
+            kind = kinds[int(rng.integers(len(kinds)))]
+            if kind in DEVICE_KINDS:
+                faults.append(Fault(kind, lane=int(rng.integers(lanes)),
+                                    step=int(rng.integers(steps))))
+            elif kind == "reject_admit":
+                if uids:
+                    faults.append(Fault(kind, uid=int(
+                        np.asarray(uids)[rng.integers(len(uids))])))
+            elif kind == "stall":
+                faults.append(Fault(kind, step=int(rng.integers(steps)),
+                                    chunks=int(rng.integers(1, 4))))
+            else:
+                faults.append(Fault(kind, step=int(rng.integers(steps))))
+        return FaultPlan(tuple(faults))
+
+
+def apply_device_faults(faults: Tuple[Fault, ...], logits: jax.Array,
+                        hidden: jax.Array, step: jax.Array):
+    """Fuse device faults into the traced decode step.
+
+    ``logits``/``hidden`` are the decode step's per-lane outputs; ``step``
+    the traced decode-step counter.  With an empty fault tuple this is the
+    identity and adds nothing to the graph.  Poison is written only into the
+    target lane's slice — the elementwise ``where`` is what the isolation
+    invariant rests on."""
+    if not faults:
+        return logits, hidden
+    b = logits.shape[0]
+    lanes = jnp.arange(b)
+    for f in faults:
+        hit = (lanes == f.lane) & (step == f.step)
+        if f.kind == "probe_nan":
+            m = hit.reshape((b,) + (1,) * (hidden.ndim - 1))
+            hidden = jnp.where(m, jnp.float32(jnp.nan), hidden)
+        else:
+            val = jnp.float32(jnp.nan if f.kind == "nan_logits" else jnp.inf)
+            m = hit.reshape((b,) + (1,) * (logits.ndim - 1))
+            logits = jnp.where(m, val, logits)
+    return logits, hidden

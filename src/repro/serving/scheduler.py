@@ -46,12 +46,11 @@ from repro.analysis import guards
 from repro.core import controller as ctrl_mod
 from repro.models import model as model_mod
 from repro.serving import delay as delay_mod
-from repro.serving.engine import ServeRequest, ServeResult, append_chunk
+from repro.serving.engine import (BOOK_KEYS, ServeRequest, ServeResult,
+                                  append_chunk, status_counts,
+                                  status_from_book)
 
 MIN_BUCKET = 8
-
-# per-lane ControllerState fields snapshotted into a ServeResult at retire
-BOOK_KEYS = ("forced_exit", "exit_step", "think_tokens", "answer", "exit_pos")
 
 
 def bucket_length(plen: int, min_bucket: int = MIN_BUCKET) -> int:
@@ -133,12 +132,16 @@ class SlotScheduler:
         return act
 
     def retire(self, lane: int, book: Dict[str, int]) -> tuple:
-        """Close out the lane's request; returns (order, ServeResult)."""
+        """Close out the lane's request; returns (order, ServeResult).  The
+        result's status/error come from :func:`engine.status_from_book`, so
+        a lane retired by its deadline or quarantined as poisoned carries
+        its partial output plus the structured failure payload."""
         act = self.owner[lane]
         assert act is not None, f"retire of empty lane {lane}"
         self.owner[lane] = None
         exited = bool(book["forced_exit"])
         ans = int(book["answer"])
+        status, error = status_from_book(book)
         res = ServeResult(
             uid=act.req.uid,
             tokens=self.result_tokens(act.tokens),
@@ -148,6 +151,7 @@ class SlotScheduler:
             answer=ans if ans >= 0 else None,
             probe_trace=np.asarray(act.traces, np.float32),
             exit_pos=int(book["exit_pos"]),
+            status=status, error=error,
         )
         return act.order, res
 
@@ -161,24 +165,104 @@ def run_continuous(eng, requests: Sequence[ServeRequest]) -> List[ServeResult]:
     float32): admission right-padding is causally invisible, masked idle
     lanes never touch live lanes, and the controller math is the same pure
     per-lane state machine both schedulers share.
+
+    Request lifecycle: admission screening turns inadmissible requests into
+    ``status="rejected"`` results before any device work; a lane whose
+    ``deadline_steps`` expires retires with partial output (``deadline``); a
+    lane that goes non-finite is quarantined (``poisoned`` — controller lane
+    re-armed, cache lane scrubbed — both on device, zero extra host syncs)
+    and its slot refilled; an injected drain fault sheds the pending queue
+    as ``drained``.  Every submitted request gets exactly one result, in
+    submission order, and the engine always drains.
+
+    Cache-sizing contract: the persistent cache is sized ONCE per run at
+    ``max_i decode_cache_len(bucket_length(plen_i), max_new_i)`` over the
+    *accepted* requests — each request's own bucketed prompt plus its own
+    decode budget, NOT the cross-product ``max(bucket) + max(max_new)`` of
+    mismatched requests (a long-prompt/short-decode mix no longer pays for a
+    long-prompt/long-decode phantom).  The size is fixed for the run so the
+    chunk step compiles exactly once; when a single request drives more than
+    2x the median requirement the run records a ``cache_outlier`` warning in
+    ``eng.last_stats["warnings"]`` (split such outliers into their own run —
+    or cap them with ``Engine(max_cache_len=...)``, which rejects them at
+    admission instead).  Native-SWA ring serving sizes the persistent cache
+    at the ring width instead (None: prefill lays each admission in a
+    window-sized ring), so cache memory is O(lanes * window) regardless.
     """
     reqs = list(requests)
     if not reqs:
+        eng.last_stats = {
+            "scheduler": "continuous", "chunks": 0, "steps": 0,
+            "lanes": eng.lanes, "requests": 0, "admitted": 0, "retired": 0,
+            "rejected": 0, "poisoned": 0, "deadline": 0, "drained": 0,
+            "quarantined_lanes": 0, "statuses": {}, "admissions": [],
+            "emitted_tokens": 0, "cache_len": None,
+            "stalled_admissions": 0, "warnings": [],
+        }
         return []
     lanes = eng.lanes
+    results: Dict[int, ServeResult] = {}
+    accepted = eng.screen_requests(reqs, results)
+    warnings: List[Dict[str, object]] = []
+    retired = 0
+    quarantined = 0
+    stalled_admissions = 0
+    gstep = 0
+    chunks = 0
+
+    def _finish() -> List[ServeResult]:
+        statuses = status_counts(results.values())
+        eng.last_stats = {
+            "scheduler": "continuous", "chunks": chunks, "steps": gstep,
+            "lanes": lanes, "requests": len(reqs),
+            "admitted": len(sched.admissions) if accepted else 0,
+            "retired": retired,
+            "rejected": statuses.get("rejected", 0),
+            "poisoned": statuses.get("poisoned", 0),
+            "deadline": statuses.get("deadline", 0),
+            "drained": statuses.get("drained", 0),
+            "quarantined_lanes": quarantined,
+            "statuses": statuses,
+            "admissions": sched.admissions if accepted else [],
+            "emitted_tokens": int(sum(
+                np.asarray(r.tokens).size for r in results.values())),
+            "cache_len": w_cache,
+            "stalled_admissions": stalled_admissions,
+            "warnings": warnings,
+        }
+        return [results[i] for i in range(len(reqs))]
+
+    if not accepted:
+        w_cache = None
+        sched = None
+        return _finish()
+
+    # submission order of each accepted request: SlotScheduler numbers the
+    # accepted stream 0..n-1, results are keyed by position in `requests`
+    orders = [order for order, _ in accepted]
     sched = SlotScheduler(lanes, num_codebooks=eng.ncb,
                           result_tokens=eng.result_tokens)
-    sched.submit(reqs)
+    sched.submit([r for _, r in accepted])
 
-    # cache sizing: the widest bucketed prompt plus the largest decode budget
-    # plus scan-chunk overshoot headroom — fixed for the engine run so the
-    # chunk step compiles exactly once.  Native-SWA ring serving sizes the
-    # persistent cache at the ring width instead (None: prefill lays each
-    # admission in a window-sized ring, pad-free even when the bucket lands
-    # in or exceeds the ring), so cache memory is O(lanes * window)
-    # regardless of prompt/decode length.
-    max_bucket = max(bucket_length(len(r.prompt)) for r in reqs)
-    w_cache = eng.decode_cache_len(max_bucket, max(r.max_new for r in reqs))
+    # per-run cache sizing (see the docstring contract); decode_cache_len is
+    # None exactly when ring serving sizes the cache at the window
+    needs = [eng.decode_cache_len(bucket_length(len(r.prompt)), r.max_new)
+             for _, r in accepted]
+    if needs[0] is None:
+        w_cache = None
+    else:
+        w_cache = max(needs)
+        median = float(np.median(needs))
+        if median > 0 and w_cache > 2 * median:
+            worst = accepted[int(np.argmax(needs))][1]
+            warnings.append({
+                "code": "cache_outlier", "uid": worst.uid,
+                "need": int(w_cache), "median": median,
+                "message": (
+                    f"request uid={worst.uid} needs {w_cache} cache slots, "
+                    f">2x the {median:.0f} median — every lane's cache is "
+                    "sized for it; split it into its own run or cap with "
+                    "max_cache_len")})
 
     pp = eng._wave_probe_params()
     eng.key, run_key = jax.random.split(eng.key)
@@ -192,9 +276,38 @@ def run_continuous(eng, requests: Sequence[ServeRequest]) -> List[ServeResult]:
     cache = None
     cur_shape = (lanes, eng.ncb) if eng.ncb else (lanes,)
     cur = jnp.zeros(cur_shape, jnp.int32)
-    results: Dict[int, ServeResult] = {}
-    gstep = 0
-    chunks = 0
+
+    # injected host faults (None in production): drain stops admission and
+    # sheds the queue from its step on; stall holds admission closed for
+    # `chunks` chunk boundaries starting at its step — admission timing never
+    # changes per-request outputs (greedy), only stats
+    plan = eng.fault_plan
+    drain_at = plan.drain_step if plan else None
+    stall = plan.stall_spec if plan else None
+    stall_armed = stall is not None
+    stall_left = 0
+
+    def drain_pending():
+        nonlocal retired
+        while sched.pending:
+            act = sched.pending.popleft()
+            results[orders[act.order]] = eng.failed_result(
+                act.req, "drained",
+                {"code": "drained",
+                 "message": "engine drained before admission"})
+            retired += 1
+
+    def admission_open() -> bool:
+        nonlocal stall_armed, stall_left, stalled_admissions
+        if stall_armed and gstep >= stall.step:
+            stall_armed = False
+            stall_left = stall.chunks
+        if stall_left > 0:
+            stall_left -= 1
+            if sched.has_pending and sched.free_lanes():
+                stalled_admissions += 1
+            return False
+        return True
 
     def admit_free_lanes():
         nonlocal state, cache, cur
@@ -218,10 +331,13 @@ def run_continuous(eng, requests: Sequence[ServeRequest]) -> List[ServeResult]:
                 small = eng._quant_fn(small)
             if cache is None:
                 cache = eng._replicate_fn(small)
+            deadline = (act.req.deadline_steps
+                        if act.req.deadline_steps > 0 else ctrl_mod.INF_STEPS)
             state, cache, cur, tok0, sm = eng._admit_fn(
                 pp, state, cache, cur, small, hid_last, logits,
                 guards.device_scalar(lane), guards.device_scalar(plen),
-                guards.device_scalar(act.req.max_new))
+                guards.device_scalar(act.req.max_new),
+                guards.device_scalar(deadline))
             tok0_np, sm_np = guards.host_sync((tok0, sm), "admit")
             if eng.ncb:
                 for cb in range(eng.ncb):
@@ -230,8 +346,18 @@ def run_continuous(eng, requests: Sequence[ServeRequest]) -> List[ServeResult]:
                 act.tokens.append(int(tok0_np))
             act.traces.append(float(sm_np[lane]))
 
-    admit_free_lanes()
-    while sched.any_active:
+    while sched.any_active or sched.has_pending:
+        if drain_at is not None and gstep >= drain_at:
+            drain_pending()
+            if not sched.any_active:
+                break
+        elif admission_open():
+            admit_free_lanes()
+        if not sched.any_active:
+            # admission held closed with zero live lanes (stall fault): the
+            # boundary still passes — stall_left strictly decreases each
+            # admission_open() call, so the spin terminates
+            continue
         # steady state runs transfer-guarded (same bracket as the wave
         # drivers): the step counter crosses h2d explicitly, and the chunk's
         # only d2h point is the sanctioned host_sync below
@@ -241,7 +367,7 @@ def run_continuous(eng, requests: Sequence[ServeRequest]) -> List[ServeResult]:
                 guards.device_scalar(gstep), num_steps=eng.chunk)
             # one device→host sync per chunk: emitted tokens/traces plus the
             # per-lane bookkeeping needed to retire any lane that just
-            # finished
+            # finished (poisoned/deadline verdicts ride the same tuple)
             fetched = guards.host_sync(
                 (toks, sm, emit, state.lane_done)
                 + tuple(getattr(state, k) for k in BOOK_KEYS), "chunk")
@@ -256,13 +382,15 @@ def run_continuous(eng, requests: Sequence[ServeRequest]) -> List[ServeResult]:
             if act is not None and done_np[lane]:
                 order, res = sched.retire(
                     lane, {k: book[k][lane] for k in BOOK_KEYS})
-                results[order] = res
-        admit_free_lanes()
+                results[orders[order]] = res
+                retired += 1
+                if res.status == "poisoned":
+                    # quarantine before the slot refills: re-arm the lane's
+                    # controller state (its probe accumulators hold NaN/Inf)
+                    # and scrub the lane's cache content — all on device,
+                    # zero extra host syncs
+                    quarantined += 1
+                    state, cache = eng._quarantine_fn(
+                        state, cache, guards.device_scalar(lane))
 
-    eng.last_stats = {
-        "scheduler": "continuous", "chunks": chunks, "steps": gstep,
-        "lanes": lanes, "requests": len(reqs),
-        "admissions": sched.admissions,
-        "emitted_tokens": int(sum(len(r.tokens) for r in results.values())),
-    }
-    return [results[i] for i in range(len(reqs))]
+    return _finish()

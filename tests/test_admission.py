@@ -1,0 +1,273 @@
+"""Adversarial admission: property-style tests that malformed requests are
+rejected as results — never as mid-run exceptions — and that rejection is
+free (no lane, no prefill compile, no queue space).
+
+Runs under the ``_hypothesis_compat`` shim: with hypothesis installed these
+are real property tests; without it each ``@given`` body runs over a fixed
+deterministic example set.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.core import controller as C
+from repro.data.traces import (ANS_BASE, BOS, EOS, THINK_END, BOUNDARY_IDS,
+                               MARKER_IDS)
+from repro.models import model as M
+from repro.serving import Engine, ServeRequest
+
+from _hypothesis_compat import given, settings, st
+from test_engine import CONTENT, _install_scripted_model
+from test_scheduler import _install_scripted_slots
+
+# request-shape kinds the generator mixes; "valid" must be admitted, the
+# rest must be rejected with exactly this error code
+INVALID_KINDS = {
+    "empty": "empty_prompt",
+    "big_token": "token_out_of_range",
+    "negative_token": "token_out_of_range",
+    "float_prompt": "bad_prompt_dtype",
+    "matrix_prompt": "bad_prompt_shape",
+    "zero_max_new": "bad_max_new",
+}
+KINDS = ["valid"] + sorted(INVALID_KINDS)
+
+
+def _make_request(kind: str, uid: int, rid: int) -> ServeRequest:
+    """One request of the given shape; valid prompts end in 100 + rid so the
+    rid-keyed scripted harness can serve them."""
+    if kind == "valid":
+        return ServeRequest(uid=uid,
+                            prompt=np.array([BOS, 100 + rid], np.int32),
+                            max_new=16)
+    if kind == "empty":
+        prompt = np.array([], np.int32)
+    elif kind == "big_token":
+        prompt = np.array([BOS, 10_000], np.int32)
+    elif kind == "negative_token":
+        prompt = np.array([BOS, -3], np.int32)
+    elif kind == "float_prompt":
+        prompt = np.array([1.0, 2.5], np.float32)
+    elif kind == "matrix_prompt":
+        prompt = np.array([[BOS, 2], [3, 4]], np.int32)
+    else:                                              # zero_max_new
+        return ServeRequest(uid=uid, prompt=np.array([BOS], np.int32),
+                            max_new=0)
+    return ServeRequest(uid=uid, prompt=prompt, max_new=16)
+
+
+def _mk_engine(lanes=2, scheduler="wave", **kw):
+    cfg = get_reduced("qwen3-8b").replace(d_model=32)
+    ctrl = C.ControllerConfig(BOUNDARY_IDS, MARKER_IDS, window=10,
+                              min_steps=1, probe_dim=16)
+    pp = C.init_probe_params(cfg.d_model, 16)
+    return Engine(cfg, None, ctrl=ctrl, probe_params=pp, lanes=lanes,
+                  policy="full", scheduler=scheduler, chunk=4, **kw)
+
+
+# ---------------------------------------------------------------------------
+# screening properties (no device work at all)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.integers(0, len(KINDS) - 1), min_size=0, max_size=12))
+def test_screening_statuses_and_order(kind_ids):
+    """Any mix of valid/invalid requests screens to: one entry per invalid
+    request with the right code, accepted requests in submission order, and
+    uids never reshuffled."""
+    kinds = [KINDS[k] for k in kind_ids]
+    rid = 0
+    reqs = []
+    for uid, kind in enumerate(kinds):
+        reqs.append(_make_request(kind, uid, rid))
+        rid += kind == "valid"
+    eng = _mk_engine()
+    results = {}
+    accepted = eng.screen_requests(reqs, results)
+    assert len(results) + len(accepted) == len(reqs)
+    assert [order for order, _ in accepted] == \
+        [i for i, k in enumerate(kinds) if k == "valid"]
+    for order, res in results.items():
+        kind = kinds[order]
+        assert res.status == "rejected"
+        assert res.error["code"] == INVALID_KINDS[kind]
+        assert res.uid == reqs[order].uid
+        assert len(res.tokens) == 0 and len(res.probe_trace) == 0
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 6), st.integers(0, 3))
+def test_backpressure_cap(n_requests, max_pending):
+    """With max_pending set, exactly lanes + max_pending requests are
+    accepted; the overflow is shed as 'backpressure' in submission order."""
+    lanes = 2
+    eng = _mk_engine(lanes=lanes, max_pending=max_pending)
+    reqs = [_make_request("valid", uid, uid) for uid in range(n_requests)]
+    results = {}
+    accepted = eng.screen_requests(reqs, results)
+    cap = lanes + max_pending
+    assert len(accepted) == min(n_requests, cap)
+    assert [o for o, _ in accepted] == list(range(len(accepted)))
+    for order, res in results.items():
+        assert order >= cap
+        assert res.error["code"] == "backpressure"
+
+
+def test_cache_capacity_rejection():
+    eng = _mk_engine(max_cache_len=64)
+    ok = ServeRequest(uid=0, prompt=np.array([BOS, 100], np.int32), max_new=8)
+    toobig = ServeRequest(uid=1, prompt=np.array([BOS, 100], np.int32),
+                          max_new=500)
+    assert eng.validate_request(ok) is None
+    err = eng.validate_request(toobig)
+    assert err["code"] == "cache_capacity"
+    with pytest.raises(ValueError):
+        _mk_engine(max_cache_len=0)
+    with pytest.raises(ValueError):
+        _mk_engine(max_pending=-1)
+
+
+def test_ctx_shape_screening():
+    cfg = get_reduced("musicgen-large")
+    ctrl = C.ControllerConfig(BOUNDARY_IDS, MARKER_IDS, window=10,
+                              min_steps=1, probe_dim=16)
+    pp = C.init_probe_params(cfg.d_model, 16)
+    eng = Engine(cfg, None, ctrl=ctrl, probe_params=pp, lanes=2)
+    assert cfg.uses_cross_attn
+    bad = ServeRequest(uid=0, prompt=np.array([BOS], np.int32),
+                       ctx=np.zeros((3, 3), np.float32))
+    assert eng.validate_request(bad)["code"] == "bad_ctx_shape"
+    # codebook models accept (P, K) prompts but reject other widths
+    wide = ServeRequest(uid=1, prompt=np.zeros((4, 7), np.int32))
+    assert eng.validate_request(wide)["code"] == "bad_prompt_shape"
+    okcb = ServeRequest(
+        uid=2, prompt=np.zeros((4, cfg.num_codebooks), np.int32))
+    assert eng.validate_request(okcb) is None
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: mixed batches always drain, rejects consume nothing
+# ---------------------------------------------------------------------------
+
+def _slot_script(n=6, max_new=16):
+    rows = []
+    for rid in range(n):
+        k = 2 + rid
+        rows.append([CONTENT] * k + [THINK_END, ANS_BASE + rid, EOS]
+                    + [CONTENT] * (max_new - k - 3))
+    return np.asarray(rows, np.int32)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.lists(st.integers(0, len(KINDS) - 1), min_size=1, max_size=6))
+def test_continuous_mixed_batch_drains_in_order(kind_ids):
+    """Full continuous runs over random valid/invalid mixes: always
+    len(requests) results, in submission order, with correct statuses."""
+    kinds = [KINDS[k] for k in kind_ids]
+    with pytest.MonkeyPatch.context() as mp:
+        _install_scripted_slots(mp, _slot_script())
+        eng = _mk_engine(scheduler="continuous")
+        rid = 0
+        reqs = []
+        for uid, kind in enumerate(kinds):
+            reqs.append(_make_request(kind, uid, rid))
+            rid += kind == "valid"
+        res = eng.run(reqs)
+    assert len(res) == len(reqs)
+    assert [r.uid for r in res] == [r.uid for r in reqs]
+    for kind, r in zip(kinds, res):
+        if kind == "valid":
+            assert r.status == "ok"
+            assert len(r.tokens) > 0
+        else:
+            assert r.status == "rejected"
+            assert r.error["code"] == INVALID_KINDS[kind]
+    assert eng.last_stats["rejected"] == sum(k != "valid" for k in kinds)
+    assert eng.last_stats["admitted"] == rid
+
+
+def test_wave_mixed_batch_drains_in_order(monkeypatch):
+    cfg = get_reduced("qwen3-8b")
+    script = np.asarray([[CONTENT] * 3 + [THINK_END, ANS_BASE + 1, EOS]
+                         + [CONTENT] * 10] * 2, np.int32)
+    _install_scripted_model(monkeypatch, script, cfg.d_model)
+    ctrl = C.ControllerConfig(BOUNDARY_IDS, MARKER_IDS, window=10,
+                              min_steps=1, probe_dim=16)
+    pp = C.init_probe_params(cfg.d_model, 16)
+    eng = Engine(cfg, None, ctrl=ctrl, probe_params=pp, lanes=2,
+                 policy="full", chunk=4)
+    reqs = [_make_request("valid", 0, 0),
+            _make_request("empty", 1, 0),
+            _make_request("valid", 2, 1),
+            _make_request("big_token", 3, 0)]
+    res = eng.run(reqs)
+    assert [r.uid for r in res] == [0, 1, 2, 3]
+    assert [r.status for r in res] == ["ok", "rejected", "ok", "rejected"]
+    # the two accepted requests fit ONE wave (rejects freed their slots)
+    assert eng.last_stats["waves"] == 1
+    assert eng.last_stats["rejected"] == 2
+
+
+def test_rejected_never_consumes_prefill(monkeypatch):
+    """A rejected request costs no prefill dispatch (and an all-rejected
+    batch costs no device work at all) in either scheduler."""
+    calls = {"prefill": 0, "slot": 0}
+
+    cfg = get_reduced("qwen3-8b")
+    script = np.full((2, 32), CONTENT, np.int32)
+    _install_scripted_model(monkeypatch, script, cfg.d_model)
+    scripted_prefill = M.prefill
+
+    def counting_prefill(*a, **kw):
+        calls["prefill"] += 1
+        return scripted_prefill(*a, **kw)
+
+    monkeypatch.setattr(M, "prefill", counting_prefill)
+    bad = [_make_request(k, i, 0)
+           for i, k in enumerate(sorted(INVALID_KINDS))]
+    ctrl = C.ControllerConfig(BOUNDARY_IDS, MARKER_IDS, window=10,
+                              min_steps=1, probe_dim=16)
+    pp = C.init_probe_params(cfg.d_model, 16)
+    eng = Engine(cfg, None, ctrl=ctrl, probe_params=pp, lanes=2,
+                 policy="full", chunk=4)
+    res = eng.run(bad)
+    assert all(r.status == "rejected" for r in res)
+    assert calls["prefill"] == 0
+    assert eng.last_stats["chunks"] == 0
+
+    # wave: one prefill per wave of accepted requests, rejects add none
+    eng = Engine(cfg, None, ctrl=ctrl, probe_params=pp, lanes=2,
+                 policy="full", chunk=4)
+    eng.run([_make_request("valid", 0, 0), _make_request("empty", 1, 0),
+             _make_request("valid", 2, 1)])
+    assert calls["prefill"] == 1
+
+    # continuous: one slot prefill per ACCEPTED request only
+    _install_scripted_slots(monkeypatch, _slot_script())
+    scripted_slot = M.prefill_into_slot
+
+    def counting_slot(*a, **kw):
+        calls["slot"] += 1
+        return scripted_slot(*a, **kw)
+
+    monkeypatch.setattr(M, "prefill_into_slot", counting_slot)
+    eng = _mk_engine(scheduler="continuous")
+    mixed = [_make_request("valid", 0, 0), _make_request("empty", 1, 0),
+             _make_request("valid", 2, 1), _make_request("zero_max_new", 3, 0)]
+    res = eng.run(mixed)
+    assert [r.status for r in res] == ["ok", "rejected", "ok", "rejected"]
+    assert calls["slot"] == 2
+
+
+def test_all_rejected_continuous_returns_stats(monkeypatch):
+    eng = _mk_engine(scheduler="continuous")
+    res = eng.run([_make_request("empty", 0, 0),
+                   _make_request("zero_max_new", 1, 0)])
+    assert [r.status for r in res] == ["rejected", "rejected"]
+    assert eng.last_stats["chunks"] == 0
+    assert eng.last_stats["rejected"] == 2
+    assert eng.last_stats["admitted"] == 0
+    assert eng.run([]) == []
+    assert eng.last_stats["requests"] == 0

@@ -261,3 +261,78 @@ def test_min_steps_respected(key):
     if bool(state.done[0]):
         # exit could only have happened at or after the 4th closed step
         assert int(state.steps[0]) >= 4
+
+
+# ---------------------------------------------------------------------------
+# fault-tolerance state machine: deadlines, quarantine, lane re-arm
+# ---------------------------------------------------------------------------
+
+def test_deadline_retires_after_exact_emitted(key):
+    """A lane with deadline=3 fed endless content retires via deadline_hit
+    after exactly 3 emitted tokens; the default deadline never fires."""
+    ctrl = _phase_ctrl()
+    pp = _probe_params(key, lam=0.0)
+    state = C.init_state(1, D, W)
+    assert int(state.deadline[0]) == C.INF_STEPS
+    state = state._replace(deadline=jnp.asarray([3], jnp.int32))
+    toks = [70, 71, 72, 73, 74]
+    st_ = state
+    done_after = []
+    for t, tok in enumerate(toks):
+        st_ = _feed(ctrl, pp, [tok], st_)
+        done_after.append(bool(st_.lane_done[0]))
+    # the step reaching the deadline still processes (emitted == 3), then
+    # the lane is closed for every later step
+    assert done_after == [False, False, True, True, True]
+    assert bool(st_.deadline_hit[0])
+    assert not bool(st_.poisoned[0])
+    assert int(st_.emitted[0]) == 3
+
+
+def test_natural_finish_on_deadline_step_wins(key):
+    """A request that completes exactly on its deadline step is a natural
+    completion, not a deadline retirement."""
+    from repro.data.traces import ANS_BASE, THINK_END
+    ctrl = _phase_ctrl()
+    pp = _probe_params(key, lam=0.0)
+    state = C.init_state(1, D, W)._replace(
+        deadline=jnp.asarray([2], jnp.int32))
+    state = _feed(ctrl, pp, [THINK_END, ANS_BASE + 1], state)
+    assert bool(state.lane_done[0])
+    assert not bool(state.deadline_hit[0])      # finished in time
+    assert int(state.answer[0]) == 1
+
+
+def test_quarantine_lanes_masks_only_bad():
+    state = C.init_state(3, D, W)
+    bad = jnp.asarray([False, True, False])
+    q = C.quarantine_lanes(state, bad)
+    assert q.poisoned.tolist() == [False, True, False]
+    assert q.lane_done.tolist() == [False, True, False]
+    # already-done lanes stay done; poisoning is additive
+    q2 = C.quarantine_lanes(q, jnp.asarray([True, False, False]))
+    assert q2.poisoned.tolist() == [True, True, False]
+    assert q2.lane_done.tolist() == [True, True, False]
+
+
+def test_reset_lanes_rearms_deadline_and_clears_flags():
+    """reset_lanes with the 4-arg deadline form installs new deadlines and
+    clears deadline_hit/poisoned on masked lanes only."""
+    state = C.init_state(2, D, W)._replace(
+        deadline=jnp.asarray([3, 3], jnp.int32),
+        deadline_hit=jnp.asarray([True, True]),
+        poisoned=jnp.asarray([True, False]),
+        lane_done=jnp.asarray([True, True]),
+        emitted=jnp.asarray([3, 3], jnp.int32))
+    mask = jnp.asarray([True, False])
+    out = C.reset_lanes(state, mask, jnp.asarray([16, 16], jnp.int32),
+                        jnp.asarray([7, 7], jnp.int32))
+    assert out.deadline.tolist() == [7, 3]
+    assert out.deadline_hit.tolist() == [False, True]
+    assert out.poisoned.tolist() == [False, False]
+    assert out.lane_done.tolist() == [False, True]
+    assert out.emitted.tolist() == [0, 3]
+    assert out.max_tokens.tolist() == [16, C.INF_STEPS]
+    # 3-arg form (no deadline) re-arms with no deadline at all
+    out2 = C.reset_lanes(state, mask, jnp.asarray([16, 16], jnp.int32))
+    assert out2.deadline.tolist() == [C.INF_STEPS, 3]

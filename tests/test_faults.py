@@ -1,0 +1,380 @@
+"""Chaos suite: deterministic fault injection through the serving engine.
+
+The isolation invariant under test: for every FaultPlan, every lane NOT
+named in the plan produces bit-identical tokens / traces / bookkeeping to
+the fault-free run — across wave/scan, wave/host, and continuous — and the
+engine always drains to one result per submitted request.  Scripted models
+(the ``test_engine`` / ``test_scheduler`` harnesses) keep the runs exact
+and fast; the faults themselves are fused into the real jitted decode
+steps, so the device detection/quarantine path is the production one.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.core import controller as C
+from repro.data.traces import (ANS_BASE, BOS, EOS, THINK_END, BOUNDARY_IDS,
+                               MARKER_IDS)
+from repro.serving import Engine, ServeRequest
+from repro.serving.faults import (DEVICE_KINDS, Fault, FaultPlan,
+                                  apply_device_faults)
+
+from test_engine import CONTENT, _install_scripted_model, _reqs, _result_tuple
+from test_scheduler import _install_scripted_slots
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan unit tests
+# ---------------------------------------------------------------------------
+
+def test_fault_validation():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        Fault("meteor_strike")
+    with pytest.raises(ValueError, match="lane"):
+        Fault("nan_logits", step=3)                    # missing lane
+    with pytest.raises(ValueError, match="uid"):
+        Fault("reject_admit")
+    with pytest.raises(ValueError, match="chunks"):
+        Fault("stall", step=2)                         # chunks < 1
+    with pytest.raises(ValueError, match="step"):
+        Fault("drain")
+    with pytest.raises(TypeError):
+        FaultPlan(("nan_logits",))                     # not Fault instances
+
+
+def test_fault_plan_accessors():
+    plan = FaultPlan((Fault("nan_logits", lane=0, step=2),
+                      Fault("reject_admit", uid=7),
+                      Fault("stall", step=4, chunks=2),
+                      Fault("drain", step=9),
+                      Fault("drain", step=5)))
+    assert len(plan.device_faults) == 1
+    assert plan.injects_nonfinite
+    assert plan.rejects(7) and not plan.rejects(8)
+    assert plan.drain_step == 5
+    assert plan.stall_spec.chunks == 2
+    assert not FaultPlan().injects_nonfinite
+    assert FaultPlan().drain_step is None and FaultPlan().stall_spec is None
+
+
+def test_fault_plan_random_deterministic():
+    a = FaultPlan.random(3, lanes=4, steps=16, uids=(0, 1, 2),
+                         kinds=sorted(DEVICE_KINDS | {"reject_admit"}))
+    b = FaultPlan.random(3, lanes=4, steps=16, uids=(0, 1, 2),
+                         kinds=sorted(DEVICE_KINDS | {"reject_admit"}))
+    assert a == b                                      # same seed, same plan
+    c = FaultPlan.random(4, lanes=4, steps=16)
+    assert isinstance(c, FaultPlan) and len(c.faults) == 3
+    for f in c.faults:                                 # always valid faults
+        assert 0 <= f.lane < 4 and 0 <= f.step < 16
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultPlan.random(0, lanes=2, steps=4, kinds=("bogus",))
+
+
+def test_apply_device_faults_targets_only_named_slice():
+    logits = jnp.zeros((3, 1, 8), jnp.float32)
+    hidden = jnp.zeros((3, 1, 4), jnp.float32)
+    faults = (Fault("nan_logits", lane=1, step=5),
+              Fault("probe_nan", lane=2, step=5))
+    lg, hd = apply_device_faults(faults, logits, hidden, jnp.int32(5))
+    assert bool(jnp.isnan(lg[1]).all()) and bool(jnp.isfinite(lg[0]).all())
+    assert bool(jnp.isfinite(lg[2]).all())             # probe fault: logits ok
+    assert bool(jnp.isnan(hd[2]).all()) and bool(jnp.isfinite(hd[:2]).all())
+    # wrong step: identity
+    lg, hd = apply_device_faults(faults, logits, hidden, jnp.int32(4))
+    assert bool(jnp.isfinite(lg).all()) and bool(jnp.isfinite(hd).all())
+    # empty tuple: identity objects, no graph edits
+    assert apply_device_faults((), logits, hidden, jnp.int32(0))[0] is logits
+
+
+# ---------------------------------------------------------------------------
+# scripted wave: poison one lane, every other lane bit-identical
+# ---------------------------------------------------------------------------
+
+def _natural_script(lanes=4, max_new=24):
+    """Lane i thinks for 6 + 2i tokens, then THINK_END / answer / EOS —
+    every lane ends naturally well inside max_new."""
+    rows = []
+    for i in range(lanes):
+        n = 6 + 2 * i
+        rows.append([CONTENT] * n + [THINK_END, ANS_BASE + i, EOS]
+                    + [CONTENT] * (max_new - n - 3))
+    return np.asarray(rows, np.int32)
+
+
+def _scripted_wave_engine(monkeypatch, lanes, plan=None, **kw):
+    cfg = get_reduced("qwen3-8b")
+    _install_scripted_model(monkeypatch, _natural_script(lanes), cfg.d_model)
+    ctrl = C.ControllerConfig(BOUNDARY_IDS, MARKER_IDS, window=10,
+                              min_steps=1, probe_dim=16)
+    pp = C.init_probe_params(cfg.d_model, 16)
+    return Engine(cfg, None, ctrl=ctrl, probe_params=pp, lanes=lanes,
+                  policy="full", fault_plan=plan, **kw)
+
+
+@pytest.mark.parametrize("mode,chunk", [("scan", 4), ("scan", 16),
+                                        ("host", 4)])
+@pytest.mark.parametrize("kind", sorted(DEVICE_KINDS))
+def test_wave_poison_isolates_to_target_lane(monkeypatch, mode, chunk, kind):
+    lanes, target, step = 4, 1, 4
+    base = _scripted_wave_engine(monkeypatch, lanes, decode_mode=mode,
+                                 chunk=chunk).run(_reqs(lanes, max_new=24))
+    plan = FaultPlan((Fault(kind, lane=target, step=step),))
+    eng = _scripted_wave_engine(monkeypatch, lanes, plan=plan,
+                                decode_mode=mode, chunk=chunk)
+    res = eng.run(_reqs(lanes, max_new=24))
+    assert len(res) == lanes                           # the engine drained
+    for i in range(lanes):
+        if i == target:
+            continue
+        assert _result_tuple(res[i]) == _result_tuple(base[i]), f"lane {i}"
+        assert res[i].status == "ok" and res[i].error is None
+    bad = res[target]
+    assert bad.status == "poisoned"
+    assert bad.error["code"] == "non_finite"
+    # partial output: the seed token plus steps before the fault; a logits
+    # fault drops the poisoning step's garbage token, a probe fault keeps its
+    # (finite) token and poisons only the probe state
+    keep = step + 1 if kind in ("nan_logits", "inf_logits") else step + 2
+    assert bad.tokens.tolist() == base[target].tokens.tolist()[:keep]
+    assert eng.last_stats["poisoned"] == 1
+    assert eng.last_stats["statuses"]["ok"] == lanes - 1
+
+
+def test_wave_all_lanes_poisoned_still_drains(monkeypatch):
+    lanes = 3
+    plan = FaultPlan(tuple(Fault("nan_logits", lane=i, step=1)
+                           for i in range(lanes)))
+    eng = _scripted_wave_engine(monkeypatch, lanes, plan=plan, chunk=4)
+    res = eng.run(_reqs(lanes, max_new=24))
+    assert [r.status for r in res] == ["poisoned"] * lanes
+    assert all(len(r.tokens) == 2 for r in res)        # seed + step 0
+
+
+def test_wave_poison_after_natural_end_is_noop(monkeypatch):
+    """A fault aimed at a step after the lane finished naturally must not
+    re-poison the retired lane (idle-lane masked math is exempt)."""
+    lanes = 2
+    base = _scripted_wave_engine(monkeypatch, lanes,
+                                 chunk=4).run(_reqs(lanes, max_new=24))
+    # lane 0 ends naturally at step 8 (6 think + end + answer + EOS)
+    plan = FaultPlan((Fault("nan_logits", lane=0, step=20),))
+    res = _scripted_wave_engine(monkeypatch, lanes, plan=plan,
+                                chunk=4).run(_reqs(lanes, max_new=24))
+    for a, b in zip(res, base):
+        assert _result_tuple(a) == _result_tuple(b)
+        assert a.status == "ok"
+
+
+def test_random_plans_isolation_invariant(monkeypatch):
+    """Seeded random plans: every non-targeted lane stays bit-identical and
+    the engine always drains — the chaos invariant, replayable by seed."""
+    lanes = 4
+    base = _scripted_wave_engine(monkeypatch, lanes,
+                                 chunk=4).run(_reqs(lanes, max_new=24))
+    for seed in range(4):
+        plan = FaultPlan.random(seed, lanes=lanes, steps=12)
+        targeted = {f.lane for f in plan.device_faults}
+        res = _scripted_wave_engine(monkeypatch, lanes, plan=plan,
+                                    chunk=4).run(_reqs(lanes, max_new=24))
+        assert len(res) == lanes, f"seed {seed}: engine did not drain"
+        for i in range(lanes):
+            if i in targeted:
+                continue
+            assert _result_tuple(res[i]) == _result_tuple(base[i]), \
+                f"seed {seed} lane {i}"
+
+
+# ---------------------------------------------------------------------------
+# continuous: quarantine + scrub + refill, non-targeted requests identical
+# ---------------------------------------------------------------------------
+
+def _slot_script(n=4, max_new=20):
+    """Request rid thinks 4 + 2*rid tokens then ends naturally."""
+    rows = []
+    for rid in range(n):
+        k = 4 + 2 * rid
+        rows.append([CONTENT] * k + [THINK_END, ANS_BASE + rid, EOS]
+                    + [CONTENT] * (max_new - k - 3))
+    return np.asarray(rows, np.int32)
+
+
+def _continuous_engine(monkeypatch, plan=None, lanes=2, **kw):
+    cfg = get_reduced("qwen3-8b").replace(d_model=32)
+    _install_scripted_slots(monkeypatch, _slot_script())
+    ctrl = C.ControllerConfig(BOUNDARY_IDS, MARKER_IDS, window=10,
+                              min_steps=1, probe_dim=16)
+    pp = C.init_probe_params(cfg.d_model, 16)
+    return Engine(cfg, None, ctrl=ctrl, probe_params=pp, lanes=lanes,
+                  policy="full", scheduler="continuous", chunk=4,
+                  fault_plan=plan, **kw)
+
+
+@pytest.mark.parametrize("kind", sorted(DEVICE_KINDS))
+def test_continuous_quarantine_scrub_refill(monkeypatch, kind):
+    n = 4
+    base = _continuous_engine(monkeypatch).run(_reqs(n, max_new=20))
+    # lane 1 holds uid 1 (admitted at gstep 0, thinks 6 tokens) at step 2
+    plan = FaultPlan((Fault(kind, lane=1, step=2),))
+    eng = _continuous_engine(monkeypatch, plan=plan)
+    res = eng.run(_reqs(n, max_new=20))
+    assert [r.uid for r in res] == list(range(n))      # order + full drain
+    assert res[1].status == "poisoned"
+    assert res[1].error["code"] == "non_finite"
+    for i in (0, 2, 3):
+        # the freed (scrubbed) lane was refilled and those requests decoded
+        # bit-identically to the fault-free run
+        assert _result_tuple(res[i]) == _result_tuple(base[i]), f"uid {i}"
+        assert res[i].status == "ok"
+    stats = eng.last_stats
+    assert stats["poisoned"] == 1 and stats["quarantined_lanes"] == 1
+    assert stats["retired"] == n and stats["admitted"] == n
+    assert {a["uid"] for a in stats["admissions"]} == set(range(n))
+
+
+def test_continuous_quarantine_under_sanitize_tier(monkeypatch):
+    """REPRO_SANITIZE=1 + a NaN-injecting plan: the engine must skip
+    debug_nans (the poison is the behavior under test) while keeping the
+    transfer guards — the run completes instead of aborting."""
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    plan = FaultPlan((Fault("nan_logits", lane=0, step=2),))
+    eng = _continuous_engine(monkeypatch, plan=plan)
+    res = eng.run(_reqs(4, max_new=20))
+    assert len(res) == 4
+    assert sum(r.status == "poisoned" for r in res) == 1
+
+
+# ---------------------------------------------------------------------------
+# deadlines
+# ---------------------------------------------------------------------------
+
+def _endless_engine(monkeypatch, lanes, **kw):
+    cfg = get_reduced("qwen3-8b")
+    script = np.full((lanes, 64), CONTENT, np.int32)   # never ends naturally
+    _install_scripted_model(monkeypatch, script, cfg.d_model)
+    ctrl = C.ControllerConfig(BOUNDARY_IDS, MARKER_IDS, window=10,
+                              min_steps=1, probe_dim=16)
+    pp = C.init_probe_params(cfg.d_model, 16)
+    return Engine(cfg, None, ctrl=ctrl, probe_params=pp, lanes=lanes,
+                  policy="full", **kw)
+
+
+@pytest.mark.parametrize("mode", ["scan", "host"])
+def test_deadline_retires_with_partial_output(monkeypatch, mode):
+    eng = _endless_engine(monkeypatch, lanes=2, decode_mode=mode, chunk=4)
+    reqs = [ServeRequest(uid=0, prompt=np.array([BOS, 100], np.int32),
+                         max_new=20, deadline_steps=5),
+            ServeRequest(uid=1, prompt=np.array([BOS, 101], np.int32),
+                         max_new=20)]
+    r0, r1 = eng.run(reqs)
+    assert r0.status == "deadline"
+    assert r0.error["code"] == "deadline_exceeded"
+    assert len(r0.tokens) == 5                         # exactly the deadline
+    assert len(r0.probe_trace) == 5
+    assert r1.status == "ok" and len(r1.tokens) == 20  # unaffected neighbor
+    assert eng.last_stats["deadline"] == 1
+
+
+def test_deadline_scan_host_parity(monkeypatch):
+    res = {}
+    for mode in ("scan", "host"):
+        eng = _endless_engine(monkeypatch, lanes=2, decode_mode=mode, chunk=3)
+        reqs = [ServeRequest(uid=i, prompt=np.array([BOS, 100 + i], np.int32),
+                             max_new=16, deadline_steps=7) for i in range(2)]
+        res[mode] = eng.run(reqs)
+    for a, b in zip(res["scan"], res["host"]):
+        assert _result_tuple(a) == _result_tuple(b)
+        assert a.status == b.status == "deadline"
+
+
+def test_deadline_after_natural_end_is_ok(monkeypatch):
+    """A deadline far beyond the natural end never fires."""
+    eng = _scripted_wave_engine(monkeypatch, 2, chunk=4)
+    reqs = [ServeRequest(uid=i, prompt=np.array([BOS, 100 + i], np.int32),
+                         max_new=24, deadline_steps=23) for i in range(2)]
+    for r in eng.run(reqs):
+        assert r.status == "ok" and r.error is None
+
+
+def test_deadline_continuous_frees_lane(monkeypatch):
+    """A deadlined lane retires at a chunk boundary and its slot refills."""
+    cfg = get_reduced("qwen3-8b").replace(d_model=32)
+    script = np.full((4, 64), CONTENT, np.int32)
+    _install_scripted_slots(monkeypatch, script)
+    ctrl = C.ControllerConfig(BOUNDARY_IDS, MARKER_IDS, window=10,
+                              min_steps=1, probe_dim=16)
+    pp = C.init_probe_params(cfg.d_model, 16)
+    eng = Engine(cfg, None, ctrl=ctrl, probe_params=pp, lanes=2,
+                 policy="full", scheduler="continuous", chunk=4)
+    reqs = [ServeRequest(uid=i, prompt=np.array([BOS, 100 + i], np.int32),
+                         max_new=12, deadline_steps=6) for i in range(4)]
+    res = eng.run(reqs)
+    assert [r.status for r in res] == ["deadline"] * 4
+    assert all(len(r.tokens) == 6 for r in res)
+    assert eng.last_stats["admitted"] == 4             # slots were refilled
+
+
+# ---------------------------------------------------------------------------
+# host faults: reject / drain / stall
+# ---------------------------------------------------------------------------
+
+def test_reject_admit_fault(monkeypatch):
+    """An injected admission rejection sheds exactly its uid; every other
+    request is bit-identical to the fault-free run (rid-keyed continuous
+    harness, so results stay comparable per request as lanes shift)."""
+    base = _continuous_engine(monkeypatch).run(_reqs(4, max_new=20))
+    plan = FaultPlan((Fault("reject_admit", uid=2),))
+    eng = _continuous_engine(monkeypatch, plan=plan)
+    res = eng.run(_reqs(4, max_new=20))
+    assert res[2].status == "rejected"
+    assert res[2].error["code"] == "fault_injected"
+    assert len(res[2].tokens) == 0
+    for i in (0, 1, 3):
+        assert res[i].status == "ok"
+        assert _result_tuple(res[i]) == _result_tuple(base[i]), f"uid {i}"
+    assert eng.last_stats["rejected"] == 1
+    assert eng.last_stats["admitted"] == 3
+
+
+def test_drain_fault_wave(monkeypatch):
+    lanes = 2
+    plan = FaultPlan((Fault("drain", step=1),))
+    eng = _scripted_wave_engine(monkeypatch, lanes, plan=plan, chunk=4)
+    res = eng.run(_reqs(4, max_new=24))                # 2 waves of 2
+    assert [r.status for r in res] == ["ok", "ok", "drained", "drained"]
+    assert res[2].error["code"] == "drained"
+    assert eng.last_stats["drained"] == 2
+    # drain at step 0: nothing decodes at all
+    plan0 = FaultPlan((Fault("drain", step=0),))
+    eng0 = _scripted_wave_engine(monkeypatch, lanes, plan=plan0, chunk=4)
+    res0 = eng0.run(_reqs(4, max_new=24))
+    assert all(r.status == "drained" for r in res0)
+    assert eng0.last_stats["chunks"] == 0
+
+
+def test_drain_fault_continuous(monkeypatch):
+    plan = FaultPlan((Fault("drain", step=4),))
+    eng = _continuous_engine(monkeypatch, plan=plan)
+    res = eng.run(_reqs(4, max_new=20))
+    assert len(res) == 4
+    # uids 0/1 were admitted before the drain step and completed; the queue
+    # was shed
+    assert res[0].status == "ok" and res[1].status == "ok"
+    assert res[2].status == "drained" and res[3].status == "drained"
+    assert eng.last_stats["drained"] == 2
+
+
+def test_stall_fault_continuous_changes_stats_not_outputs(monkeypatch):
+    base = _continuous_engine(monkeypatch).run(_reqs(4, max_new=20))
+    plan = FaultPlan((Fault("stall", step=0, chunks=3),))
+    eng = _continuous_engine(monkeypatch, plan=plan)
+    res = eng.run(_reqs(4, max_new=20))
+    # admission timing is invisible in per-request outputs (greedy)...
+    for a, b in zip(res, base):
+        assert _result_tuple(a) == _result_tuple(b), f"uid {a.uid}"
+        assert a.status == "ok"
+    # ...but the stall shows up in stats
+    assert eng.last_stats["stalled_admissions"] >= 1
+    assert eng.last_stats["chunks"] >= 1

@@ -179,6 +179,58 @@ def test_continuous_exactly_one_sync_per_chunk(counted_device_get, key):
     assert counted_device_get["n"] == ledger.total
 
 
+def test_quarantine_adds_no_syncs(monkeypatch, counted_device_get):
+    """Poisoned-lane quarantine (detect, scrub, re-arm, refill) is pure
+    device work riding the existing chunk sync: the ledger still shows
+    exactly one 'chunk' per chunk + one 'admit' per admission, nothing
+    else, and every device_get went through the sanctioned host_sync."""
+    from repro.serving.faults import Fault, FaultPlan
+    from test_scheduler import _install_scripted_slots
+
+    cfg = get_reduced("qwen3-8b").replace(d_model=32)
+    script = np.asarray(
+        [([CONTENT] * (4 + 2 * rid) + [6, 8 + rid, 2]
+          + [CONTENT] * 16)[:20] for rid in range(4)], np.int32)
+    _install_scripted_slots(monkeypatch, script)
+    ctrl, pp = _ctrl_pp(cfg)
+    plan = FaultPlan((Fault("nan_logits", lane=1, step=2),))
+    eng = Engine(cfg, None, ctrl=ctrl, probe_params=pp, lanes=2,
+                 policy="full", scheduler="continuous", chunk=4,
+                 fault_plan=plan)
+    ledger = guards.TransferLedger()
+    with guards.attach_ledger(ledger):
+        res = eng.run(_reqs(4, max_new=16))
+    assert len(res) == 4
+    assert eng.last_stats["poisoned"] == 1
+    assert eng.last_stats["quarantined_lanes"] == 1
+    assert ledger.counts["chunk"] == eng.last_stats["chunks"]
+    assert ledger.counts["admit"] == eng.last_stats["admitted"] == 4
+    assert set(ledger.counts) == {"chunk", "admit"}
+    assert counted_device_get["n"] == ledger.total
+
+
+def test_wave_fault_path_keeps_exact_ledger(monkeypatch, counted_device_get):
+    """The wave driver's fault/status plumbing (device faults in the scan,
+    BOOK_KEYS-widened bookkeeping fetch) adds no sync points: same exact
+    per-chunk ledger as the fault-free engine."""
+    from repro.serving.faults import Fault, FaultPlan
+
+    cfg = get_reduced("qwen3-8b")
+    plan = FaultPlan((Fault("nan_logits", lane=1, step=5),))
+    eng = _scripted_engine(monkeypatch, cfg, lanes=3, decode_mode="scan",
+                           chunk=4, fault_plan=plan)
+    ledger = guards.TransferLedger()
+    with guards.attach_ledger(ledger):
+        res = eng.run(_reqs(3, max_new=17))
+    assert [r.status for r in res] == ["ok", "poisoned", "ok"]
+    # the fault-free lanes still decode all 4 chunks; counts stay exact
+    assert eng.last_stats["chunks"] == 4
+    assert ledger.counts["chunk"] == 4
+    assert ledger.counts["seed"] == 1 and ledger.counts["book"] == 1
+    assert set(ledger.counts) == {"chunk", "seed", "book"}
+    assert counted_device_get["n"] == ledger.total
+
+
 # ---------------------------------------------------------------------------
 # REPRO_SANITIZE=1 parity (one attention family, one SSM family)
 
@@ -209,3 +261,13 @@ def test_sanitize_scope_flags_nan(monkeypatch):
     with pytest.raises(FloatingPointError):
         with guards.sanitize_scope():
             jax.jit(lambda x: jnp.log(x))(jnp.float32(-1.0)).block_until_ready()
+
+
+def test_sanitize_scope_nan_checks_optout(monkeypatch):
+    """nan_checks=False (the engine's fault-injection path) keeps the scope
+    but skips debug_nans, so deliberately injected poison survives to the
+    quarantine detector instead of aborting the run."""
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    with guards.sanitize_scope(nan_checks=False):
+        out = jax.jit(lambda x: jnp.log(x))(jnp.float32(-1.0))
+        assert bool(jnp.isnan(out))
