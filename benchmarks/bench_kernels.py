@@ -37,14 +37,15 @@ def bench_serve_loop(emit, lane_counts=(2, 8, 16), max_new=64, iters=3):
     per token vs per chunk) — the cost the scanned engine removes.
     """
     from benchmarks.common import serve_fixture
-    from repro.serving import Engine
+    from repro.serving import Engine, EngineConfig
 
     for lanes in lane_counts:
         cfg, params, ctrl, pp, reqs = serve_fixture(lanes, max_new=max_new)
         tok_s = {}
         for mode in ("host", "scan"):
-            eng = Engine(cfg, params, ctrl=ctrl, probe_params=pp, lanes=lanes,
-                         policy="full", decode_mode=mode)
+            eng = Engine(cfg, params, ctrl=ctrl, probe_params=pp,
+                         engine=EngineConfig(lanes=lanes, policy="full",
+                                             decode_mode=mode))
             eng.run(reqs)                          # compile + warm up
             t0 = time.perf_counter()
             for _ in range(iters):
@@ -97,7 +98,7 @@ def bench_serve_continuous(emit, *, lanes=8, n_req=24, short=8, long_=192,
     from repro.models import model as M
     from repro.core import controller as ctrl_mod
     from repro.data.traces import BOUNDARY_IDS, MARKER_IDS
-    from repro.serving import Engine
+    from repro.serving import Engine, EngineConfig
 
     if smoke:
         lanes, n_req, short, long_, chunk, iters = 2, 4, 4, 28, 16, 1
@@ -116,8 +117,9 @@ def bench_serve_continuous(emit, *, lanes=8, n_req=24, short=8, long_=192,
 
     tok_s, stats, emitted_by = {}, {}, {}
     for mode in ("wave", "continuous"):
-        eng = Engine(cfg, params, ctrl=ctrl, probe_params=pp, lanes=lanes,
-                     policy="full", scheduler=mode, chunk=chunk)
+        eng = Engine(cfg, params, ctrl=ctrl, probe_params=pp,
+                     engine=EngineConfig(lanes=lanes, policy="full",
+                                         scheduler=mode, chunk=chunk))
         res = eng.run(reqs)                    # compile + warm up
         # a bench run must be fault-free end to end: any rejected/poisoned/
         # deadline result means the measurement is not comparing full decodes

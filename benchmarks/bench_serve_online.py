@@ -1,0 +1,165 @@
+"""Online serving benchmark: open-loop arrivals through the asyncio front end.
+
+Replays the same deterministic arrival trace (Poisson gaps or a t=0 burst)
+through ``repro.serving.frontend.AsyncFrontend`` twice — once per continuous
+admission mode (``prefill="whole"`` vs ``prefill="inflight"``) — and records
+p50/p99 TTFT (submit → first streamed token) and mean per-token latency for
+each.  The guarded number is the tail: at the saturating (burst) rate every
+lane turnover pays whole-prompt admission's prefill dispatch + admit +
+host-sync bubble, which stalls *every* co-resident lane at the chunk
+boundary and compounds down the queue; in-flight admission is pure device
+lane surgery and the prompt replay rides chunks the batch was running
+anyway, so the tail request's TTFT stops paying for everyone else's
+prefills.  Entries append to ``BENCH_serve.json`` (same history file as the
+offline serve bench) as ``serve_online_<family>_<rate>`` cases; the
+``check_serve_regression`` gate tracks the p99 TTFT ratio
+(inflight / whole) against the committed baseline.
+"""
+
+from __future__ import annotations
+
+import asyncio
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.bench_kernels import BENCH_SERVE_PATH
+
+
+def _pct(xs, p):
+    xs = [x for x in xs if x is not None]
+    return float(np.percentile(xs, p)) if xs else None
+
+
+def bench_serve_online(emit, *, lanes=8, n_req=32, prompt_len=16, max_new=24,
+                       chunk=16, poisson_rate=25.0, repeats=3, smoke=False,
+                       out_path=BENCH_SERVE_PATH, arch="qwen3-8b", seed=0):
+    """Whole vs in-flight admission TTFT under open-loop arrivals.
+
+    Two arrival regimes per run: ``burst`` (every request at t=0 — the
+    saturating rate, where admission cost lands on the tail) and
+    ``poisson<rate>`` (mean ``poisson_rate`` req/s — partial load, where
+    free lanes usually exist and both modes should look similar).  The same
+    pre-sampled gap sequence drives both admission modes, so the comparison
+    is paired.  ``smoke=True`` shrinks to a CI canary that still exercises
+    queueing (requests > lanes) in both regimes.
+
+    ``chunk >= prompt_len`` is deliberate: tokens only surface at chunk
+    boundaries (one host sync per chunk), so with the prompt replay flipping
+    to decode *inside* the first chunk after admission, in-flight pays no
+    extra boundary-latency for the replay and the measured TTFT delta is
+    pure admission overhead — the regime the mode exists for.  With
+    ``prompt_len`` spilling past ``chunk`` the replay costs whole chunk
+    boundaries and whole-prompt admission wins instead (still a valid
+    configuration, just not the guarded one).
+    """
+    from benchmarks.common import serve_cfg, serve_requests
+    from repro.core import controller as ctrl_mod
+    from repro.data.traces import BOUNDARY_IDS, MARKER_IDS
+    from repro.models import model as M
+    from repro.serving import Engine, EngineConfig
+    from repro.serving.frontend import serve_requests as serve_async
+
+    # smoke keeps lanes=8 and max_new > chunk: per admission round whole
+    # pays `lanes` prefill dispatches + admit syncs while in-flight pays ONE
+    # replay chunk shared by every lane admitted at that boundary, so few
+    # lanes (or requests that finish inside one chunk) shrink whole's
+    # per-round stall below a chunk walltime and the burst p99 — max of a
+    # small sample — turns into a coin flip
+    if smoke:
+        n_req, max_new = 12, 24
+    cfg = serve_cfg(arch)
+    params = M.init_params(cfg, jax.random.PRNGKey(seed))
+    ctrl = ctrl_mod.ControllerConfig(BOUNDARY_IDS, MARKER_IDS, window=10,
+                                     min_steps=2, probe_dim=16)
+    pp = ctrl_mod.init_probe_params(cfg.d_model, 16)
+    import dataclasses
+
+    base = serve_requests(cfg, n_req, max_new, seed)
+    rng = np.random.default_rng(seed + 1)
+    # pad every prompt to prompt_len with in-vocab filler so admission cost
+    # (prefill vs replay) is uniform and prompt-length controlled
+    reqs = [dataclasses.replace(r, prompt=np.concatenate(
+        [np.atleast_1d(r.prompt),
+         rng.integers(4, 200, max(prompt_len - len(r.prompt), 0))]
+        ).astype(np.int32)) for r in base]
+
+    regimes = {
+        "burst": np.zeros(n_req),
+        f"poisson{poisson_rate:g}": rng.exponential(1.0 / poisson_rate,
+                                                    n_req),
+    }
+
+    out_entries = []
+    for label, delays in regimes.items():
+        meas = {}
+        for mode in ("whole", "inflight"):
+            eng = Engine(cfg, params, ctrl=ctrl, probe_params=pp,
+                         engine=EngineConfig(
+                             lanes=lanes, policy="full",
+                             scheduler="continuous", chunk=chunk,
+                             prefill=mode))
+            warm = eng.run(reqs)           # compile every graph off-clock
+            bad = [(r.uid, r.status) for r in warm if r.status != "ok"]
+            assert not bad, bad
+            # p99 over one trace is max-of-n_req: a single OS/GC hiccup on
+            # one chunk poisons it.  timeit-style, replay the identical
+            # trace a few times and keep the repeat with the lowest p99 —
+            # the noise floor — so the whole-vs-inflight comparison stays
+            # paired AND robust
+            best = None
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                streams = asyncio.run(serve_async(eng,
+                                                  list(zip(delays, reqs))))
+                wall = time.perf_counter() - t0
+                ttfts = [1e3 * s.ttft_s for s in streams
+                         if s.ttft_s is not None]
+                tpots = [1e3 * s.tpot_s for s in streams
+                         if s.tpot_s is not None]
+                assert len(ttfts) == n_req, (mode, label, len(ttfts))
+                rep = {
+                    "p50_ttft_ms": round(_pct(ttfts, 50), 2),
+                    "p99_ttft_ms": round(_pct(ttfts, 99), 2),
+                    "tpot_ms": (round(float(np.mean(tpots)), 3)
+                                if tpots else None),
+                    "wall_s": round(wall, 3),
+                }
+                if best is None or rep["p99_ttft_ms"] < best["p99_ttft_ms"]:
+                    best = rep
+            meas[mode] = best
+        entry = {
+            "case": f"serve_online_{cfg.family}_{label}"
+                    + ("_smoke" if smoke else ""),
+            "arch": arch, "family": cfg.family,
+            "arrival": label, "saturating": label == "burst",
+            "lanes": lanes, "requests": n_req, "prompt_len": prompt_len,
+            "max_new": max_new, "chunk": chunk,
+            "p50_ttft_ms_whole": meas["whole"]["p50_ttft_ms"],
+            "p99_ttft_ms_whole": meas["whole"]["p99_ttft_ms"],
+            "p50_ttft_ms_inflight": meas["inflight"]["p50_ttft_ms"],
+            "p99_ttft_ms_inflight": meas["inflight"]["p99_ttft_ms"],
+            "tpot_ms_whole": meas["whole"]["tpot_ms"],
+            "tpot_ms_inflight": meas["inflight"]["tpot_ms"],
+            "inflight_beats_whole_p99": (
+                meas["inflight"]["p99_ttft_ms"]
+                < meas["whole"]["p99_ttft_ms"]),
+        }
+        emit("serve", entry["case"], {k: v for k, v in entry.items()
+                                      if k != "case"})
+        out_entries.append(entry)
+
+    history = []
+    if os.path.exists(out_path):
+        try:
+            with open(out_path) as f:
+                history = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            history = []
+    history.extend(out_entries)
+    with open(out_path, "w") as f:
+        json.dump(history, f, indent=2)
+    return out_entries

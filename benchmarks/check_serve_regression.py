@@ -11,6 +11,11 @@ model on the same machine back to back).  A fresh ratio more than
 ``--tolerance`` (default 30%) below the baseline ratio fails the step; cases
 with no committed baseline pass with a note (new family/shape).
 
+Online (``serve_online_*``) entries are gated on the paired tail-latency
+ratio ``p99_ttft_ms_inflight / p99_ttft_ms_whole`` instead — LOWER is
+better, and a rise past ``--ttft-tolerance`` (default 60%, never tightening
+below a ratio of 1.0) fails the step.
+
 ``--require PREFIX`` (repeatable) additionally fails when the fresh file has
 no case starting with PREFIX — so a family silently dropping out of the
 sweep (e.g. the musicgen ``serve_continuous_audio`` codebook path) is a red
@@ -47,6 +52,11 @@ def main() -> int:
                     help="committed baseline (default: BENCH_serve.json)")
     ap.add_argument("--tolerance", type=float, default=0.30,
                     help="allowed fractional drop in continuous/wave ratio")
+    ap.add_argument("--ttft-tolerance", type=float, default=0.60,
+                    help="allowed fractional rise in the online p99 TTFT "
+                         "ratio (inflight/whole); wider than --tolerance "
+                         "because a p99 over tens of requests is a tail "
+                         "statistic — one OS hiccup on one chunk moves it")
     ap.add_argument("--require", action="append", default=[],
                     metavar="PREFIX",
                     help="fail unless a fresh case starts with PREFIX "
@@ -67,8 +77,32 @@ def main() -> int:
                   "no fresh entry matches")
             failed = True
     for e in fresh:
-        case, got = e["case"], float(e["speedup"])
+        case = e["case"]
         ref = base.get(case)
+        if "p99_ttft_ms_inflight" in e:
+            # online TTFT case: the guarded number is the tail-latency ratio
+            # p99_inflight / p99_whole (paired runs on the same machine —
+            # robust to absolute-latency noise, like the speedup ratio).
+            # LOWER is better, so the gate fails on a rise past tolerance.
+            got = float(e["p99_ttft_ms_inflight"]) / float(
+                e["p99_ttft_ms_whole"])
+            if ref is None:
+                print(f"  new  {case}: p99 TTFT ratio {got:.2f} "
+                      "(no committed baseline)")
+                continue
+            want = float(ref["p99_ttft_ms_inflight"]) / float(
+                ref["p99_ttft_ms_whole"])
+            # the guarded property is in-flight NOT structurally losing its
+            # admission advantage; a sub-unity baseline ratio is itself
+            # tail-noise-prone, so the ceiling never tightens below
+            # (1 + tol) — a lucky committed run must not red honest reruns
+            ceil = (1.0 + args.ttft_tolerance) * max(want, 1.0)
+            status = "ok  " if got <= ceil else "FAIL"
+            failed |= got > ceil
+            print(f"  {status} {case}: p99 TTFT ratio {got:.2f} "
+                  f"(baseline {want:.2f}, ceiling {ceil:.2f})")
+            continue
+        got = float(e["speedup"])
         if ref is None:
             print(f"  new  {case}: speedup {got:.2f}x (no committed baseline)")
             continue
@@ -79,8 +113,10 @@ def main() -> int:
         print(f"  {status} {case}: speedup {got:.2f}x "
               f"(baseline {want:.2f}x, floor {floor:.2f}x)")
     if failed:
-        print(f"FAIL: continuous/wave tok/s ratio regressed more than "
-              f"{args.tolerance:.0%} below the committed baseline")
+        print(f"FAIL: a serve metric regressed past its committed baseline "
+              f"(continuous/wave tok/s down more than {args.tolerance:.0%}, "
+              f"or online p99 TTFT ratio up more than "
+              f"{args.ttft_tolerance:.0%})")
         return 1
     print("serve-bench regression gate: green")
     return 0

@@ -98,6 +98,13 @@ def main() -> None:
             if arch in WINDOWED_SERVE_ARCHS:
                 bench_kernels.bench_serve_continuous(emit, smoke=args.smoke,
                                                      arch=arch, windowed=True)
+            if arch == "qwen3-8b":
+                # online TTFT cases ride the dense family only: the
+                # whole-vs-inflight admission delta is scheduler overhead,
+                # not model math, so one family keeps the sweep cheap
+                from benchmarks import bench_serve_online
+                bench_serve_online.bench_serve_online(emit, smoke=args.smoke,
+                                                      arch=arch)
 
     path = os.path.join(args.out, "results.json")
     with open(path, "w") as f:

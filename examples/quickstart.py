@@ -27,7 +27,7 @@ from repro.core.segmentation import segment_mean_pool, segment_steps
 from repro.data import DataConfig, PackedDataset, TraceConfig, generate_dataset
 from repro.data.traces import BOUNDARY_IDS, MARKER_IDS
 from repro.models import model as M
-from repro.serving import Engine, ServeRequest
+from repro.serving import Engine, EngineConfig, ServeRequest
 from repro.training.loop import train
 
 
@@ -90,8 +90,8 @@ def main():
             for i, t in enumerate(test)]
     for policy, kw in (("calibrated", {}), ("crop", {"crop_budget": 48}),
                        ("full", {})):
-        eng = Engine(cfg, params, ctrl=ctrl, probe_params=pp, lanes=8,
-                     policy=policy, **kw)
+        eng = Engine(cfg, params, ctrl=ctrl, probe_params=pp,
+                     engine=EngineConfig(lanes=8, policy=policy, **kw))
         rs = eng.run(reqs)
         think = np.mean([r.think_tokens for r in rs])
         early = np.mean([r.exited_early for r in rs])

@@ -105,6 +105,16 @@ def device_scalar(x, dtype=None) -> jax.Array:
     return jax.device_put(np.asarray(x, dtype or np.int32))
 
 
+def device_array(x, dtype=None) -> jax.Array:
+    """Host array → device array via an **explicit** ``device_put``.
+
+    The array-valued sibling of :func:`device_scalar`, for the in-flight
+    admission path: the right-padded prompt row an admitted lane replays
+    through the decode graph crosses host→device exactly once, here, so
+    the transfer stays explicit and guard-clean."""
+    return jax.device_put(np.asarray(x, dtype or np.int32))
+
+
 @contextlib.contextmanager
 def chunk_guard() -> Iterator[None]:
     """Disallow implicit host↔device transfers around one decode chunk

@@ -113,6 +113,15 @@ class ControllerState(NamedTuple):
     deadline_hit: jax.Array   # (B,)   bool lane retired by its deadline
     poisoned: jax.Array       # (B,)   bool lane quarantined (non-finite
                               #        logits or probe state detected)
+    # --- in-flight (chunked) prefill cursor (continuous admission) ---------
+    # A lane with pf_pos < pf_len is PREFILLING: the scanned chunk feeds it
+    # prompt tokens from the engine's prompt buffer instead of sampled ones,
+    # emits nothing, and keeps this controller state frozen (masked update)
+    # until the prompt is exhausted — at which point the lane flips to
+    # decoding and is seeded exactly like a whole-prompt admission.
+    pf_pos: jax.Array         # (B,)   i32 prompt tokens consumed so far
+    pf_len: jax.Array         # (B,)   i32 prompt length being replayed
+                              #        (0: lane is not prefilling)
 
 
 def init_state(batch: int, d_model: int, window: int,
@@ -141,6 +150,8 @@ def init_state(batch: int, d_model: int, window: int,
         deadline=jnp.full((batch,), INF_STEPS, jnp.int32),
         deadline_hit=jnp.zeros((batch,), bool),
         poisoned=jnp.zeros((batch,), bool),
+        pf_pos=jnp.zeros((batch,), jnp.int32),
+        pf_len=jnp.zeros((batch,), jnp.int32),
     )
 
 
@@ -290,6 +301,7 @@ def update(
         state.forced_exit, exit_step, emitted, state.max_tokens,
         cb_think_done, cb_end,
         state.deadline, state.deadline_hit | dl_now, state.poisoned,
+        state.pf_pos, state.pf_len,
     )
 
 

@@ -20,7 +20,7 @@ from repro.configs import ARCH_IDS, get_reduced
 from repro.core import controller as ctrl_mod
 from repro.data.traces import BOS, BOUNDARY_IDS, MARKER_IDS, TraceConfig, generate_dataset
 from repro.models import model as model_mod
-from repro.serving import Engine, ServeRequest, stub_ctx
+from repro.serving import Engine, EngineConfig, ServeRequest, stub_ctx
 from repro.training import load_checkpoint
 
 
@@ -56,6 +56,11 @@ def main():
     ap.add_argument("--chunk", type=int, default=16,
                     help="tokens decoded per jitted scan chunk (one "
                          "device->host sync per chunk)")
+    ap.add_argument("--prefill", default="whole",
+                    choices=["whole", "inflight"],
+                    help="continuous admission mode: whole-prompt prefill "
+                         "at admission, or in-flight chunked prefill "
+                         "replayed through the persistent scan step")
     ap.add_argument("--kv-quant", action="store_true",
                     help="serve from an int8 KV cache (append-cache "
                          "attention families: dense/moe/audio)")
@@ -114,11 +119,13 @@ def main():
     # into calibrated as an opt-in safety net, and the CLI default of 64
     # would silently crop a pure calibrated run
     crop_kw = {"crop_budget": args.crop_budget} if args.policy == "crop" else {}
-    eng = Engine(cfg, params, ctrl=ctrl, probe_params=pp, lanes=args.lanes,
-                 policy=args.policy, scheduler=args.scheduler,
-                 decode_mode=args.decode_mode, chunk=args.chunk,
-                 kv_quant=args.kv_quant, attn_impl=args.attn_impl,
-                 max_pending=args.max_pending, **crop_kw)
+    eng = Engine(cfg, params, ctrl=ctrl, probe_params=pp,
+                 engine=EngineConfig(
+                     lanes=args.lanes, policy=args.policy,
+                     scheduler=args.scheduler, decode_mode=args.decode_mode,
+                     chunk=args.chunk, kv_quant=args.kv_quant,
+                     attn_impl=args.attn_impl, prefill=args.prefill,
+                     max_pending=args.max_pending, **crop_kw))
 
     rng = np.random.default_rng(args.seed)
     traces = generate_dataset(args.requests, TraceConfig(), seed=args.seed + 7)

@@ -157,6 +157,22 @@ def scatter_cache_lane(cache: dict, small: dict, lane) -> dict:
     return jax.tree.map(one, cache, small)
 
 
+def reset_cache_lane(cache: dict, lane, prompt_row, plen) -> dict:
+    """Re-arm lane ``lane`` of a live stacked cache for an in-flight
+    (chunked) prefill admission: zero its layer-stacked content leaves and
+    reset its per-lane ``pos`` scalar to 0, so the lane replays its prompt
+    through the decode graph from an empty cache.  ``lane``/``plen`` may be
+    traced.  ``prompt_row`` (the right-padded prompt about to be replayed)
+    is not consumed here — the real cache needs only a clean slate — but it
+    is part of the signature so the scripted-engine test fakes can stamp
+    per-lane bookkeeping (request id, prompt length) the way their fake
+    ``prefill_into_slot`` does for whole-prompt admission."""
+    del prompt_row, plen
+    out = scrub_cache_lane(cache, lane)
+    out["pos"] = out["pos"].at[lane].set(0)
+    return out
+
+
 def scrub_cache_lane(cache: dict, lane) -> dict:
     """Zero lane ``lane``'s content in a live stacked cache (quarantine of a
     poisoned lane).  ``lane`` may be traced.  Only layer-stacked content

@@ -595,6 +595,49 @@ def slot_prefill_unsupported(cfg) -> Optional[str]:
     return None
 
 
+def init_decode_cache(cfg, lanes: int, cache_len: int | None, *,
+                      window: int = 0, ring_cache: bool = True,
+                      compute_dtype: str = "bfloat16",
+                      kv_quant: bool = False) -> dict:
+    """Empty stacked decode cache for in-flight (chunked) prefill admission.
+
+    Unlike whole-prompt admission — which prefills a batch=1 cache and
+    scatters it into a lane — in-flight admission replays the prompt through
+    ``decode_step`` itself, so the persistent cache starts empty and only
+    ever grows one token at a time.  The width rule mirrors
+    :func:`prefill` so the resulting layout is indistinguishable downstream:
+    a native-SWA ring is exactly ``window`` slots; a masked-append windowed
+    cache nudges past an accidental ``width == window`` collision (width is
+    what marks a cache as a ring); otherwise the width is ``cache_len``.
+    Leaf dtypes follow ``compute_dtype`` — the dtype ``decode_step`` writes.
+    """
+    if window and ring_cache:
+        return cache_mod.init_cache(cfg, lanes, window, use_window=True,
+                                    dtype=jnp.dtype(compute_dtype),
+                                    kv_quant=kv_quant)
+    w = int(cache_len)
+    if window and w == window:
+        w += 1
+    return cache_mod.init_cache(cfg, lanes, w, use_window=False,
+                                dtype=jnp.dtype(compute_dtype),
+                                kv_quant=kv_quant)
+
+
+def encode_ctx_kv(cfg, params, ctx: jax.Array,
+                  compute_dtype: str = "bfloat16") -> dict:
+    """Per-request cross-attention K/V for in-flight admission.
+
+    ``ctx``: (1, T, C) encoder output (vision patches / audio conditioning).
+    Returns the ``{"cross_k", "cross_v"}`` leaves (L_cross, 1, T, KV, hd)
+    that whole-prompt admission gets from :func:`prefill` — in-flight
+    admission computes them directly (the prompt replay itself runs through
+    ``decode_step``, which only reads cross-K/V) and scatters them into the
+    admitted lane.
+    """
+    ctx_h = _ctx_hidden(cfg, params, ctx, jnp.dtype(compute_dtype))
+    return _cross_kv(cfg, params, ctx_h)
+
+
 def _ssm_block_with_state(cfg, p, xin, plen=None):
     """Like ssm.ssm_block but also returns the decode state dict.
 

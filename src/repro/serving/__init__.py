@@ -5,6 +5,7 @@ from repro.serving.delay import (
 )
 from repro.serving.engine import (
     Engine,
+    EngineConfig,
     ServeRequest,
     ServeResult,
     make_serve_step,
@@ -13,6 +14,11 @@ from repro.serving.engine import (
     status_from_book,
     stub_ctx,
 )
+from repro.serving.events import RequestHandle, ServeError, Status, StreamEvent
 from repro.serving.faults import Fault, FaultPlan
 from repro.serving.sampling import decode_key, sample_tokens
 from repro.serving.scheduler import SlotScheduler, bucket_length, run_continuous
+
+# The asyncio front end (repro.serving.frontend) is imported lazily by its
+# consumers rather than re-exported here: this package import pulls in jax
+# via engine, while frontend is deliberately jax-free.

@@ -44,6 +44,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence
 
@@ -54,6 +55,7 @@ import numpy as np
 from repro.analysis import guards
 from repro.core import controller as ctrl_mod
 from repro.data.traces import ANS_BASE, EOS, NUM_ANSWERS, PAD, THINK_END
+from repro.models import cache as cache_lib
 from repro.models import model as model_mod
 from repro.models.cache import quantize_prefill_cache
 from repro.models.cache import replicate_cache_lanes as cache_mod_replicate
@@ -61,6 +63,7 @@ from repro.models.cache import scatter_cache_lane as cache_mod_scatter
 from repro.models.cache import scrub_cache_lane as cache_mod_scrub
 from repro.serving import delay as delay_mod
 from repro.serving import faults as faults_mod
+from repro.serving.events import RequestHandle, Status, StreamEvent
 from repro.serving.sampling import decode_key, sample_tokens
 
 
@@ -106,11 +109,20 @@ class ServeResult:
     answer: Optional[int]               # decoded answer id (synthetic world)
     probe_trace: np.ndarray             # smoothed probe score after each token
     exit_pos: int = -1                  # absolute token position of the probe trigger
-    # request lifecycle: "ok" | "rejected" | "deadline" | "poisoned" |
-    # "drained" — anything but "ok" carries a structured ``error`` payload
-    # ({"code": ..., "message": ...}) instead of raising mid-run
-    status: str = "ok"
+    # Request lifecycle: a typed serving.events.Status (a StrEnum — compares
+    # and serializes as the historical plain strings); anything but OK
+    # carries a structured serving.events.ServeError payload instead of
+    # raising mid-run.
+    status: Status = Status.OK
     error: Optional[dict] = None
+    # Engine step-counter timing (the TTFT bench's step-domain view): the
+    # step the request was admitted to a lane, the step its first token was
+    # emitted, and the step it retired.  Wave mode fills these degenerately
+    # (admission and first token coincide at wave formation); -1 on results
+    # that never decoded (rejected/drained).
+    admit_step: int = -1
+    first_token_step: int = -1
+    finish_step: int = -1
 
 
 # Per-lane ControllerState fields snapshotted into a ServeResult at retire.
@@ -129,21 +141,25 @@ def status_from_book(book: Dict[str, object]):
     pre-robustness snapshots (standalone SlotScheduler callers) still
     retire cleanly."""
     if bool(book.get("poisoned", False)):
-        return "poisoned", {
+        return Status.POISONED, {
             "code": "non_finite",
             "message": "non-finite logits or probe score; lane quarantined"}
     if bool(book.get("deadline_hit", False)):
-        return "deadline", {
+        return Status.DEADLINE, {
             "code": "deadline_exceeded",
             "message": "deadline_steps reached before completion"}
-    return "ok", None
+    return Status.OK, None
 
 
 def status_counts(results) -> Dict[str, int]:
-    """Histogram of ``ServeResult.status`` over ``results`` (stats payload)."""
+    """Histogram of ``ServeResult.status`` over ``results`` (stats payload).
+
+    Keys are plain ``str`` (``Status`` coerced via ``str()``) so the dict
+    reprs/JSON-dumps exactly as it did before statuses were typed."""
     counts: Dict[str, int] = {}
     for r in results:
-        counts[r.status] = counts.get(r.status, 0) + 1
+        k = str(r.status)
+        counts[k] = counts.get(k, 0) + 1
     return counts
 
 
@@ -232,7 +248,7 @@ def make_serve_steps(cfg, ctrl: ctrl_mod.ControllerConfig, *,
                      window: int = 0, moe_impl: str = "dense",
                      compute_dtype: str = "float32", temperature: float = 0.0,
                      attn_impl: str | None = None,
-                     faults: tuple = ()):
+                     faults: tuple = (), inflight: bool = False):
     """Build the jitted K-token chunk: decode, sampling, controller update and
     THINK_END forcing fused into one ``lax.scan`` (K = ``num_steps``, static).
 
@@ -245,13 +261,27 @@ def make_serve_steps(cfg, ctrl: ctrl_mod.ControllerConfig, *,
     FaultPlan's device faults at their (lane, step) coordinates; the same
     per-lane non-finite detector as the host step quarantines poisoned lanes
     in-scan, so the verdict reaches the host on the existing chunk sync.
+
+    ``pf`` is the (B, P[, ncb]) right-padded prompt buffer for in-flight
+    chunked prefill; with ``inflight=False`` (wave mode / whole-prompt
+    admission) it is ignored and the compiled graph is exactly the
+    historical chunk.  With ``inflight=True`` a lane whose controller state
+    says ``pf_pos < pf_len`` is PREFILLING: its decode input comes from
+    ``pf`` instead of the sampled token, it emits nothing and its controller
+    state stays frozen, and on the step that consumes the last prompt token
+    it FLIPS to decoding — seeded with the greedy argmax of that step's
+    logits via the same masked controller update whole-prompt admission
+    uses, so the flip is bit-identical to an ``_admit_fn`` seed (greedy
+    decoding; a temperature > 0 run samples at different global steps than
+    whole-prompt admission would, so only the seed token itself is
+    argmax-pinned).
     """
     ncb = cfg.num_codebooks
     faults = faults_mod.FaultPlan(faults).device_faults
 
     @functools.partial(jax.jit, static_argnames=("num_steps",))
     def serve_steps(params, probe_params, dcache, state, cur, base_key,
-                    step0, *, num_steps: int):
+                    step0, pf, *, num_steps: int):
         def body(carry, t):
             cur, dcache, state = carry
             forced, state = ctrl_mod.forced_next(ctrl, state)
@@ -271,9 +301,39 @@ def make_serve_steps(cfg, ctrl: ctrl_mod.ControllerConfig, *,
             bad_logits = _nonfinite_logit_lanes(logits)
             emit = _emit_mask(state, ncb)
             emit = emit & ~(bad_logits[:, None] if ncb else bad_logits)
-            state = ctrl_mod.update(ctrl, probe_params, state, nxt,
-                                    hidden[:, 0], dcache["pos"] - 1)
+            if not inflight:
+                state = ctrl_mod.update(ctrl, probe_params, state, nxt,
+                                        hidden[:, 0], dcache["pos"] - 1)
+                state = _quarantine_after_update(state, prev_done, bad_logits)
+                return (nxt, dcache, state), (nxt, state.smoothed, emit)
+
+            # ---- in-flight chunked prefill state machine -----------------
+            # PREFILLING (pf_pos + 1 < pf_len): feed the next prompt token,
+            # emit nothing, controller frozen.  FLIP (this step consumed the
+            # last prompt token): seed with argmax(logits) — the prefill
+            # logits of the last prompt position — and emit it.  DECODING
+            # (pf_pos >= pf_len): the historical body above.
+            def mcol(m):
+                return m[:, None] if ncb else m
+
+            prefilling = state.pf_pos < state.pf_len            # (B,)
+            last_pf = prefilling & (state.pf_pos + 1 >= state.pf_len)
+            still = prefilling & ~last_pf
+            seed = jnp.argmax(logits, -1)[:, 0].astype(nxt.dtype)
+            idx = jnp.clip(state.pf_pos + 1, 0, pf.shape[1] - 1)
+            nxt_pf = pf[jnp.arange(pf.shape[0]), idx]
+            nxt = jnp.where(mcol(last_pf), seed,
+                            jnp.where(mcol(still), nxt_pf, nxt))
+            emit = emit & ~mcol(still)
+            # frozen lanes (still prefilling) skip the controller update so
+            # budgets/deadlines/probe windows start counting at the seed,
+            # exactly like a whole-prompt admission
+            state = ctrl_mod.update_lanes(ctrl, probe_params, state, ~still,
+                                          nxt, hidden[:, 0],
+                                          dcache["pos"] - 1)
             state = _quarantine_after_update(state, prev_done, bad_logits)
+            state = state._replace(
+                pf_pos=jnp.where(prefilling, state.pf_pos + 1, state.pf_pos))
             return (nxt, dcache, state), (nxt, state.smoothed, emit)
 
         (cur, dcache, state), (toks, sm, emit) = jax.lax.scan(
@@ -308,6 +368,77 @@ def append_chunk(gen: List[list], traces: List[List[float]],
             traces[i].extend(sm_np[m, i].tolist())
 
 
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """All Engine serving knobs as one frozen, validated config.
+
+    ``Engine(cfg, params, ctrl=..., probe_params=..., engine=EngineConfig(...))``
+    is the supported construction; the historical flat keyword knobs still
+    work as a deprecated shim that forwards here with a
+    ``DeprecationWarning``.  Validation that needs only the knobs themselves
+    lives in ``__post_init__``; model-capability checks (slot-prefill
+    support, kv_quant family limits) stay in ``Engine.__init__`` where the
+    model config is known.
+
+    ``prefill`` selects the continuous-admission mode: ``"whole"`` (default)
+    prefills the whole bucketed prompt in one shot at admission;
+    ``"inflight"`` replays the prompt in decode-chunk-sized slices through
+    the persistent scan step, so admission never stalls the decoding batch
+    (see ``repro.serving.scheduler.run_continuous``)."""
+
+    lanes: int = 8
+    policy: str = "calibrated"
+    crop_budget: int = 10 ** 9
+    moe_impl: str = "dense"
+    compute_dtype: str = "float32"
+    temperature: float = 0.0
+    seed: int = 0
+    kv_quant: bool = False
+    decode_mode: str = "scan"
+    chunk: int = 16
+    scheduler: str = "wave"
+    attn_impl: Optional[str] = None
+    window_cache: str = "ring"
+    prefill: str = "whole"
+    max_pending: Optional[int] = None
+    max_cache_len: Optional[int] = None
+    fault_plan: Optional[faults_mod.FaultPlan] = None
+
+    def __post_init__(self):
+        if self.policy not in ("calibrated", "crop", "full"):
+            raise ValueError(f"unknown policy {self.policy!r}")
+        if self.lanes < 1:
+            raise ValueError(f"lanes must be >= 1, got {self.lanes}")
+        if self.max_pending is not None and self.max_pending < 0:
+            raise ValueError("max_pending must be >= 0 (None: unbounded)")
+        if self.max_cache_len is not None and self.max_cache_len < 1:
+            raise ValueError("max_cache_len must be >= 1 (None: unbounded)")
+        if self.fault_plan is not None and not isinstance(
+                self.fault_plan, faults_mod.FaultPlan):
+            raise ValueError("fault_plan must be a serving.faults.FaultPlan")
+        if self.decode_mode not in ("scan", "host"):
+            raise ValueError(f"unknown decode_mode {self.decode_mode!r}")
+        if self.scheduler not in ("wave", "continuous"):
+            raise ValueError(f"unknown scheduler {self.scheduler!r}")
+        if self.window_cache not in ("ring", "append"):
+            raise ValueError(f"unknown window_cache {self.window_cache!r}")
+        if self.prefill not in ("whole", "inflight"):
+            raise ValueError(f"unknown prefill mode {self.prefill!r}")
+        if self.scheduler == "continuous" and self.decode_mode != "scan":
+            raise ValueError("continuous scheduling drives the scanned chunk "
+                             "step; use decode_mode='scan'")
+        if self.prefill == "inflight" and self.scheduler != "continuous":
+            raise ValueError("prefill='inflight' interleaves admission into "
+                             "the persistent continuous-batching scan; use "
+                             "scheduler='continuous'")
+        if self.policy == "crop" and self.crop_budget < 1:
+            raise ValueError("crop policy needs crop_budget >= 1 "
+                             "(0 would disable the only exit trigger)")
+        # normalize rather than reject: chunk < 1 never made sense and the
+        # flat-kwarg Engine silently floored it at 1 — keep that contract
+        object.__setattr__(self, "chunk", max(int(self.chunk), 1))
+
+
 class Engine:
     """Batched early-exit server with two schedulers.
 
@@ -319,38 +450,37 @@ class Engine:
     ``repro.serving.scheduler``.  The wave path is the bit-exactness
     reference; continuous mode turns early exit into tokens/sec.  Both
     schedulers serve multi-codebook (MusicGen delay-pattern) streams: every
-    token is a (K,) plane and results are frame-aligned (F, K) rows."""
+    token is a (K,) plane and results are frame-aligned (F, K) rows.
+
+    The core API is streaming-first: :meth:`submit` hands one request to the
+    active session and returns a :class:`~repro.serving.events.RequestHandle`,
+    :meth:`step_chunk` advances the engine by one unit of device work (one
+    decode chunk / one wave formation) and returns the
+    :class:`~repro.serving.events.StreamEvent` list it produced, and
+    :meth:`drain` runs the session to completion and returns the ordered
+    results.  :meth:`run` is a thin submit-all + drain wrapper, so the
+    offline batch paths, the asyncio front end
+    (``repro.serving.frontend``), and the chaos tests all drive one code
+    path."""
 
     def __init__(self, cfg, params, *, ctrl: ctrl_mod.ControllerConfig,
-                 probe_params: ctrl_mod.ProbeParams, lanes: int = 8,
-                 policy: str = "calibrated", crop_budget: int = 10 ** 9,
-                 moe_impl: str = "dense", compute_dtype: str = "float32",
-                 temperature: float = 0.0, seed: int = 0,
-                 kv_quant: bool = False, decode_mode: str = "scan",
-                 chunk: int = 16, scheduler: str = "wave",
-                 attn_impl: str | None = None, window_cache: str = "ring",
-                 max_pending: Optional[int] = None,
-                 max_cache_len: Optional[int] = None,
-                 fault_plan: Optional[faults_mod.FaultPlan] = None):
-        if policy not in ("calibrated", "crop", "full"):
-            raise ValueError(f"unknown policy {policy!r}")
-        if max_pending is not None and max_pending < 0:
-            raise ValueError("max_pending must be >= 0 (None: unbounded)")
-        if max_cache_len is not None and max_cache_len < 1:
-            raise ValueError("max_cache_len must be >= 1 (None: unbounded)")
-        if fault_plan is not None and not isinstance(fault_plan,
-                                                    faults_mod.FaultPlan):
-            raise ValueError("fault_plan must be a serving.faults.FaultPlan")
-        if decode_mode not in ("scan", "host"):
-            raise ValueError(f"unknown decode_mode {decode_mode!r}")
-        if scheduler not in ("wave", "continuous"):
-            raise ValueError(f"unknown scheduler {scheduler!r}")
-        if window_cache not in ("ring", "append"):
-            raise ValueError(f"unknown window_cache {window_cache!r}")
-        if scheduler == "continuous" and decode_mode != "scan":
-            raise ValueError("continuous scheduling drives the scanned chunk "
-                             "step; use decode_mode='scan'")
-        if scheduler == "continuous":
+                 probe_params: ctrl_mod.ProbeParams,
+                 engine: Optional[EngineConfig] = None, **legacy):
+        if legacy:
+            unknown = set(legacy) - set(EngineConfig.__dataclass_fields__)
+            if unknown:
+                raise TypeError(
+                    f"unknown Engine kwargs: {sorted(unknown)}")
+            if engine is not None:
+                raise TypeError("pass engine=EngineConfig(...) OR the "
+                                "deprecated flat keyword knobs, not both")
+            warnings.warn(
+                "Engine's flat keyword knobs (lanes=, scheduler=, ...) are "
+                "deprecated; pass engine=EngineConfig(...) instead",
+                DeprecationWarning, stacklevel=2)
+            engine = EngineConfig(**legacy)
+        e = self.engine_config = engine if engine is not None else EngineConfig()
+        if e.scheduler == "continuous":
             # Capability probe, not a family allowlist: admission is exact for
             # every family with a pad-invariant slot prefill (attention via
             # causal invisibility, ssm/hybrid via the plen-masked scan,
@@ -360,7 +490,7 @@ class Engine:
                 raise ValueError(
                     f"scheduler='continuous' cannot serve {cfg.arch_id}: "
                     f"{reason}; use scheduler='wave'")
-        if kv_quant and (cfg.uses_ssm or cfg.family == "vlm"):
+        if e.kv_quant and (cfg.uses_ssm or cfg.family == "vlm"):
             # The int8 dequant-on-read path lives in decode_step's append-
             # cache scan; the hybrid/vlm stacked paths read K/V raw (and ssm
             # has no attention cache at all), so kv_quant would silently
@@ -368,23 +498,21 @@ class Engine:
             raise ValueError(
                 f"kv_quant is not supported for family {cfg.family!r} "
                 "(append-cache attention decode path only)")
-        if policy == "crop" and crop_budget < 1:
-            raise ValueError("crop policy needs crop_budget >= 1 "
-                             "(0 would disable the only exit trigger)")
         self.cfg = cfg
         self.params = params
         self.ctrl = ctrl
         self.probe_params = probe_params
-        self.lanes = lanes
-        self.policy = policy
-        self.moe_impl = moe_impl
-        self.compute_dtype = compute_dtype
-        self.key = jax.random.PRNGKey(seed)
-        self.temperature = temperature
-        self.kv_quant = kv_quant
-        self.decode_mode = decode_mode
-        self.scheduler = scheduler
-        self.chunk = max(int(chunk), 1)
+        self.lanes = e.lanes
+        self.policy = e.policy
+        self.moe_impl = e.moe_impl
+        self.compute_dtype = e.compute_dtype
+        self.key = jax.random.PRNGKey(e.seed)
+        self.temperature = e.temperature
+        self.kv_quant = e.kv_quant
+        self.decode_mode = e.decode_mode
+        self.scheduler = e.scheduler
+        self.chunk = e.chunk
+        self.prefill_mode = e.prefill
         # Multi-codebook fan-out: 0 for single-stream models, else the K of
         # every (B, 1, K) decode plane / (B, K) controller lane.
         self.ncb = cfg.num_codebooks
@@ -400,30 +528,32 @@ class Engine:
         self.window = (cfg.sliding_window
                        if cfg.native_swa and cfg.sliding_window
                        and cfg.family != "ssm" else 0)
-        self.window_cache = window_cache
+        self.window_cache = e.window_cache
         # Admission control: accept at most lanes + max_pending requests per
-        # run (beyond: status="rejected", code "backpressure"); reject any
-        # request whose prompt + max_new needs more than max_cache_len cache
-        # slots (code "cache_capacity").  None disables either cap.
-        self.max_pending = max_pending
-        self.max_cache_len = max_cache_len
+        # session (beyond: status="rejected", code "backpressure"); reject
+        # any request whose prompt + max_new needs more than max_cache_len
+        # cache slots (code "cache_capacity").  None disables either cap.
+        self.max_pending = e.max_pending
+        self.max_cache_len = e.max_cache_len
         # Deterministic fault injection (chaos testing): None in production.
-        self.fault_plan = fault_plan
+        self.fault_plan = e.fault_plan
         self.last_stats: Dict[str, object] = {}
         self._run_chunks = self._run_steps = 0  # wave-mode run counters
+        self._session = None                    # active incremental session
         # Policies compile down to (λ, crop) on device: `full` disables both
         # triggers, `crop` disables the probe, `calibrated` keeps both (the
         # default crop_budget of 1e9 is inert).
-        eff_crop = crop_budget if policy in ("calibrated", "crop") else 0
+        eff_crop = e.crop_budget if e.policy in ("calibrated", "crop") else 0
         self.wave_ctrl = dataclasses.replace(
             ctrl, think_end_id=THINK_END, eos_id=EOS, ans_base=ANS_BASE,
             num_answers=NUM_ANSWERS, crop_budget=eff_crop, pad_id=PAD)
-        kw = dict(window=self.window, moe_impl=moe_impl,
-                  compute_dtype=compute_dtype, temperature=temperature,
-                  attn_impl=attn_impl,
-                  faults=(fault_plan.device_faults if fault_plan else ()))
+        kw = dict(window=self.window, moe_impl=e.moe_impl,
+                  compute_dtype=e.compute_dtype, temperature=e.temperature,
+                  attn_impl=e.attn_impl,
+                  faults=(e.fault_plan.device_faults if e.fault_plan else ()))
         self._step_fn = make_serve_step(cfg, self.wave_ctrl, **kw)
-        self._steps_fn = make_serve_steps(cfg, self.wave_ctrl, **kw)
+        self._steps_fn = make_serve_steps(
+            cfg, self.wave_ctrl, inflight=(e.prefill == "inflight"), **kw)
         # seed the controller with the prefill-argmax token (it was never
         # checked for THINK_END/answer/EOS before this step existed)
         self._seed_fn = jax.jit(
@@ -434,6 +564,8 @@ class Engine:
         self._replicate_fn = jax.jit(
             lambda small: cache_mod_replicate(small, self.lanes))
         self._admit_fn = self._make_admit_fn()
+        self._inflight_admit_fn = self._make_inflight_admit_fn()
+        self._ctx_admit_fn = self._make_ctx_admit_fn()
         self._quarantine_fn = self._make_quarantine_fn()
 
     def _make_admit_fn(self):
@@ -468,6 +600,61 @@ class Engine:
             return state, cache, cur, tok0, state.smoothed
 
         return admit
+
+    def _make_inflight_admit_fn(self):
+        """Jitted in-flight admission: re-arm one lane to replay its prompt
+        through the persistent scan step instead of prefilling it whole.
+
+        Pure device-side lane surgery — no prefill dispatch, no host sync:
+        the lane's controller state is reset with its budget/deadline and the
+        prompt cursor armed (``pf_pos=0, pf_len=plen``), its cache slice is
+        zeroed with ``pos=0`` (:func:`repro.models.cache.reset_cache_lane` —
+        a module attribute so scripted test engines can stamp their fake
+        per-lane bookkeeping), the right-padded prompt ``row`` lands in the
+        engine's prompt buffer, and the lane's next decode input becomes the
+        prompt's first token.  One compiled graph per prompt-buffer width
+        bucket (``row``/``pf_buf`` widths are shapes)."""
+        ncb = self.ncb
+
+        @jax.jit
+        def admit(state, cache, cur, pf_buf, row, lane, plen, max_new,
+                  deadline):
+            b = cur.shape[0]
+            mask = jnp.arange(b) == lane
+            state = ctrl_mod.reset_lanes(
+                state, mask, jnp.where(mask, max_new, state.max_tokens),
+                jnp.where(mask, deadline, state.deadline))
+            state = state._replace(
+                pf_pos=jnp.where(mask, 0, state.pf_pos),
+                pf_len=jnp.where(mask, plen, state.pf_len))
+            cache = cache_lib.reset_cache_lane(cache, lane, row, plen)
+            pf_buf = pf_buf.at[lane].set(row)
+            tok0 = row[0]                       # () | (K,): first prompt token
+            if ncb:
+                cur = jnp.where(mask[:, None], tok0[None], cur)
+            else:
+                cur = jnp.where(mask, tok0, cur)
+            return state, cache, cur, pf_buf
+
+        return admit
+
+    def _make_ctx_admit_fn(self):
+        """Jitted cross-attention half of in-flight admission: compute one
+        request's cross-K/V (the leaves whole-prompt admission gets from
+        prefill) and scatter them into the admitted lane."""
+        cfg, compute_dtype = self.cfg, self.compute_dtype
+
+        @jax.jit
+        def ctx_admit(params, cache, ctx, lane):
+            kv = model_mod.encode_ctx_kv(cfg, params, ctx, compute_dtype)
+            cache = dict(cache)
+            cache["cross_k"] = cache["cross_k"].at[:, lane].set(
+                kv["cross_k"][:, 0])
+            cache["cross_v"] = cache["cross_v"].at[:, lane].set(
+                kv["cross_v"][:, 0])
+            return cache
+
+        return ctx_admit
 
     def _make_quarantine_fn(self):
         """Jitted quarantine for a poisoned lane at retire: re-arm the lane's
@@ -652,7 +839,7 @@ class Engine:
                 accepted.append((order, req))
         return accepted
 
-    def failed_result(self, req: ServeRequest, status: str,
+    def failed_result(self, req: ServeRequest, status,
                       error: dict) -> ServeResult:
         """A ServeResult for a request that never decoded (rejected at
         admission, or drained before a lane freed): empty token payload,
@@ -662,75 +849,195 @@ class Engine:
             uid=req.uid, tokens=np.zeros(shape, np.int32), think_tokens=0,
             exited_early=False, exit_step=-1, answer=None,
             probe_trace=np.zeros((0,), np.float32), exit_pos=-1,
-            status=status, error=dict(error))
+            status=Status(status), error=dict(error))
 
-    def run(self, requests: Sequence[ServeRequest]) -> List[ServeResult]:
-        """Serve ``requests``; under ``REPRO_SANITIZE=1`` the whole run
-        executes inside :func:`repro.analysis.guards.sanitize_scope`
-        (implicit-d2h transfer guard + NaN checking).  When the active
-        FaultPlan deliberately injects non-finite values the NaN check is
-        skipped — quarantine IS the behavior under test — while the
-        transfer guards stay enforced."""
+    # ----------------------------------------------- streaming-first core API
+    #
+    # One incremental session drives every consumer: Engine.run (offline
+    # batch), the asyncio front end (repro.serving.frontend), and the chaos
+    # tests.  submit() screens and enqueues, step_chunk() performs exactly
+    # one unit of device work (a wave formation or one decode chunk for wave
+    # scheduling; one chunk boundary — drain/admit/decode — for continuous),
+    # drain() steps until idle and finalizes last_stats.
+
+    def _sanitize(self):
+        """The per-step sanitizer scope (``REPRO_SANITIZE=1``): implicit-d2h
+        transfer guard + NaN checking.  When the active FaultPlan
+        deliberately injects non-finite values the NaN check is skipped —
+        quarantine IS the behavior under test — while the transfer guards
+        stay enforced."""
         nan_faults = (self.fault_plan is not None
                       and self.fault_plan.injects_nonfinite)
-        with guards.sanitize_scope(nan_checks=not nan_faults):
-            if self.scheduler == "continuous":
-                from repro.serving.scheduler import run_continuous
-                return run_continuous(self, requests)
-            return self._run_waves(requests)
+        return guards.sanitize_scope(nan_checks=not nan_faults)
 
-    def _run_waves(self, requests: Sequence[ServeRequest]) -> List[ServeResult]:
-        results: Dict[int, ServeResult] = {}
-        accepted = self.screen_requests(requests, results)
-        self._run_chunks = self._run_steps = waves = started = 0
-        drain_at = self.fault_plan.drain_step if self.fault_plan else None
-        i = 0
-        while i < len(accepted):
-            if drain_at is not None and self._run_steps >= drain_at:
-                for order, r in accepted[i:]:
-                    results[order] = self.failed_result(
-                        r, "drained",
+    def _new_session(self):
+        if self.scheduler == "continuous":
+            from repro.serving.scheduler import _ContinuousSession
+            return _ContinuousSession(self)
+        return _WaveSession(self)
+
+    @property
+    def idle(self) -> bool:
+        """True when a step_chunk() call would do no work (no active lanes,
+        no pending requests, no undelivered events)."""
+        return self._session is None or self._session.idle
+
+    def submit(self, req: ServeRequest) -> RequestHandle:
+        """Screen and enqueue one request on the active session (opening one
+        if needed).  Host-side only — no device work, no sync points.  A
+        request that fails screening is terminal immediately: its handle
+        carries the rejected result and its ``done`` event is delivered by
+        the next :meth:`step_chunk`."""
+        if self._session is None:
+            self._session = self._new_session()
+        return self._session.submit(req)
+
+    def step_chunk(self) -> List[StreamEvent]:
+        """Advance the engine by one unit of device work and return the
+        stream events it produced (``"tokens"`` payloads per request plus
+        terminal ``"done"`` events).  Safe to call while idle (returns
+        [])."""
+        if self._session is None:
+            return []
+        with self._sanitize():
+            return self._session.step_chunk()
+
+    def drain(self) -> List[ServeResult]:
+        """Run the active session to completion: step until idle, finalize
+        ``last_stats``, and return results ordered by submission."""
+        if self._session is None:
+            self._session = self._new_session()
+        session, self._session = self._session, None
+        with self._sanitize():
+            while not session.idle:
+                session.step_chunk()
+            return session.finish()
+
+    def run(self, requests: Sequence[ServeRequest]) -> List[ServeResult]:
+        """Offline batch serving: submit everything, drain, return results
+        in submission order — a thin wrapper over the streaming API (one
+        code path with the asyncio front end)."""
+        for r in requests:
+            self.submit(r)
+        return self.drain()
+
+    @staticmethod
+    def _book_from_state(state: ctrl_mod.ControllerState) -> Dict[str, np.ndarray]:
+        vals = guards.host_sync(
+            [getattr(state, k) for k in BOOK_KEYS], "book")
+        return dict(zip(BOOK_KEYS, vals))
+
+
+class _WaveSession:
+    """Incremental wave-scheduling driver behind Engine.submit/step_chunk.
+
+    One ``step_chunk()`` call performs exactly one of: shedding pending
+    requests at a drain point, forming a wave (left-pad + prefill + seed —
+    the ``"seed"`` host sync), or driving the current wave one decode chunk
+    (scan mode, ``"chunk"`` sync) / one token (host mode, ``"token"`` sync).
+    The device-call and host-sync sequence is exactly the historical
+    ``Engine._run_waves`` loop unrolled, so ledger counts and results are
+    bit-identical for offline runs."""
+
+    def __init__(self, eng: Engine):
+        self.eng = eng
+        self.results: Dict[int, ServeResult] = {}
+        self.handles: Dict[int, RequestHandle] = {}
+        self.pending: List[tuple] = []          # accepted (order, req) FIFO
+        self.events: List[StreamEvent] = []     # queued for next step_chunk
+        self.n_submitted = 0
+        self.n_accepted = 0
+        self.waves = self.started = 0
+        self.wave: Optional[dict] = None
+        eng._run_chunks = eng._run_steps = 0
+
+    @property
+    def idle(self) -> bool:
+        return self.wave is None and not self.pending and not self.events
+
+    def _terminal(self, order: int, res: ServeResult) -> None:
+        self.results[order] = res
+        self.handles[order].result = res
+        self.events.append(StreamEvent(
+            kind="done", uid=res.uid, order=order, step=self.eng._run_steps,
+            status=res.status, result=res))
+
+    def submit(self, req: ServeRequest) -> RequestHandle:
+        eng = self.eng
+        order = self.n_submitted
+        self.n_submitted += 1
+        handle = self.handles[order] = RequestHandle(uid=req.uid, order=order)
+        err = eng.validate_request(req)
+        cap = (None if eng.max_pending is None
+               else eng.lanes + eng.max_pending)
+        if err is None and cap is not None and self.n_accepted >= cap:
+            err = {"code": "backpressure",
+                   "message": f"pending queue full ({cap} accepted: "
+                              f"{eng.lanes} lanes + {eng.max_pending} "
+                              "pending)"}
+        if err is not None:
+            self._terminal(order, eng.failed_result(req, Status.REJECTED, err))
+        else:
+            self.n_accepted += 1
+            self.pending.append((order, req))
+        return handle
+
+    def step_chunk(self) -> List[StreamEvent]:
+        eng = self.eng
+        if self.wave is None:
+            drain_at = eng.fault_plan.drain_step if eng.fault_plan else None
+            if (drain_at is not None and eng._run_steps >= drain_at
+                    and self.pending):
+                shed, self.pending = self.pending, []
+                for order, r in shed:
+                    self._terminal(order, eng.failed_result(
+                        r, Status.DRAINED,
                         {"code": "drained",
-                         "message": "engine drained before admission"})
-                break
-            wave = accepted[i : i + self.lanes]
-            for (order, _), res in zip(
-                    wave, self._run_wave([r for _, r in wave])):
-                results[order] = res
-            started += len(wave)
-            waves += 1
-            i += self.lanes
-        statuses = status_counts(results.values())
-        self.last_stats = {
-            "scheduler": "wave", "decode_mode": self.decode_mode,
-            "waves": waves, "chunks": self._run_chunks,
-            "steps": self._run_steps, "lanes": self.lanes,
-            "requests": len(requests),
-            "admitted": started, "retired": started,
+                         "message": "engine drained before admission"}))
+            elif self.pending:
+                self._form_wave()
+        else:
+            self._wave_chunk()
+        out, self.events = self.events, []
+        return out
+
+    def finish(self) -> List[ServeResult]:
+        eng = self.eng
+        statuses = status_counts(self.results.values())
+        eng.last_stats = {
+            "scheduler": "wave", "decode_mode": eng.decode_mode,
+            "waves": self.waves, "chunks": eng._run_chunks,
+            "steps": eng._run_steps, "lanes": eng.lanes,
+            "requests": self.n_submitted,
+            "admitted": self.started, "retired": self.started,
             "rejected": statuses.get("rejected", 0),
             "poisoned": statuses.get("poisoned", 0),
             "deadline": statuses.get("deadline", 0),
             "drained": statuses.get("drained", 0),
             "statuses": statuses,
         }
-        return [results[k] for k in range(len(requests))]
+        return [self.results[k] for k in range(self.n_submitted)]
 
-    # ------------------------------------------------------------------ wave
+    # ------------------------------------------------------------ internals
 
-    def _run_wave(self, reqs: Sequence[ServeRequest]) -> List[ServeResult]:
+    def _form_wave(self) -> None:
+        eng = self.eng
+        wave, self.pending = (self.pending[:eng.lanes],
+                              self.pending[eng.lanes:])
+        reqs = [r for _, r in wave]
         b = len(reqs)
         plen = max(len(r.prompt) for r in reqs)
         max_new = max(r.max_new for r in reqs)
-        shape = (b, plen, self.ncb) if self.ncb else (b, plen)
+        shape = (b, plen, eng.ncb) if eng.ncb else (b, plen)
         prompts = np.full(shape, PAD, np.int32)
         for i, r in enumerate(reqs):
-            prompts[i, plen - len(r.prompt):] = self.delayed_prompt(r)
-        logits, hidden, dcache = self._prefill(
-            prompts, self.decode_cache_len(plen, max_new),
-            ctx=self._batch_ctx(reqs))
+            prompts[i, plen - len(r.prompt):] = eng.delayed_prompt(r)
+        logits, hidden, dcache = eng._prefill(
+            prompts, eng.decode_cache_len(plen, max_new),
+            ctx=eng._batch_ctx(reqs))
 
-        state = ctrl_mod.init_state(b, self.cfg.d_model, self.ctrl.window,
-                                    num_codebooks=max(self.ncb, 1))
+        state = ctrl_mod.init_state(b, eng.cfg.d_model, eng.ctrl.window,
+                                    num_codebooks=max(eng.ncb, 1))
         # per-lane emission budget: lanes sharing a wave stop at their own
         # request's max_new, not the wave-wide maximum; per-lane deadlines
         # ride the same budget math (INF_STEPS: no deadline)
@@ -739,99 +1046,122 @@ class Engine:
             deadline=jnp.asarray(
                 [r.deadline_steps if r.deadline_steps > 0
                  else ctrl_mod.INF_STEPS for r in reqs], jnp.int32))
-        pp = self._wave_probe_params()
+        pp = eng._wave_probe_params()
 
         # first generated token: greedy off the prefill logits, routed through
         # the controller with the hidden state that produced it
         tok0 = jnp.argmax(logits, -1)[:, 0].astype(jnp.int32)  # (B,) | (B, K)
-        state = self._seed_fn(pp, state, tok0, hidden[:, -1], dcache["pos"] - 1)
+        state = eng._seed_fn(pp, state, tok0, hidden[:, -1],
+                             dcache["pos"] - 1)
+        eng.key, wave_key = jax.random.split(eng.key)
+        tok0_np, sm0 = guards.host_sync((tok0, state.smoothed), "seed")
+        gen, traces = eng._seed_buffers(tok0_np, sm0)
+        self.wave = dict(
+            reqs=reqs, orders=[o for o, _ in wave], pp=pp, dcache=dcache,
+            state=state, cur=tok0, key=wave_key, gen=gen, traces=traces,
+            t=0, steps_total=max_new - 1, admit_step=eng._run_steps,
+            # whole-prompt waves ignore the prompt buffer (the chunk graph
+            # was built with inflight=False); a device zeros placeholder
+            # keeps the chunk_guard's h2d side clean
+            pf=jnp.zeros((b, 1, eng.ncb) if eng.ncb else (b, 1), jnp.int32))
+        self.waves += 1
+        self.started += b
+        for i, (order, r) in enumerate(wave):
+            if eng.ncb:
+                payload = [[int(tok0_np[i, cb])] for cb in range(eng.ncb)]
+            else:
+                payload = [int(tok0_np[i])]
+            self.events.append(StreamEvent(
+                kind="tokens", uid=r.uid, order=order,
+                step=eng._run_steps, tokens=payload))
+        if self.wave["steps_total"] <= 0:
+            self._finish_wave()
 
-        self.key, wave_key = jax.random.split(self.key)
-        steps_total = max_new - 1
-        if self.decode_mode == "scan":
-            gen, traces, state = self._drive_scan(
-                pp, dcache, state, tok0, wave_key, steps_total)
+    def _wave_chunk(self) -> None:
+        eng, w = self.eng, self.wave
+        if eng.decode_mode == "scan":
+            # always full-size chunks: a single compiled (B, K) scan graph
+            # per wave shape — the final chunk overshoots past steps_total
+            # with every lane already over budget, so the overshoot is
+            # emit-masked noise.  Steady state runs transfer-guarded: the
+            # step counter crosses h2d explicitly (device_scalar), results
+            # cross d2h through the single sanctioned host_sync.
+            k = eng.chunk
+            with guards.chunk_guard():
+                cur, dcache, state, toks, sm, emit = eng._steps_fn(
+                    eng.params, w["pp"], w["dcache"], w["state"], w["cur"],
+                    w["key"], guards.device_scalar(w["t"], jnp.int32),
+                    w["pf"], num_steps=k)
+                # one device→host sync per chunk
+                toks_np, sm_np, emit_np, all_done = guards.host_sync(
+                    (toks, sm, emit, state.lane_done.all()), "chunk")
+            eng._run_chunks += 1
+            eng._run_steps += k
         else:
-            gen, traces, state = self._drive_host(
-                pp, dcache, state, tok0, wave_key, steps_total)
-        book = self._book_from_state(state)
+            # per-token reference loop: one jitted single-token step — the
+            # same fused forcing/controller math as the scan body — with the
+            # per-token fetch as the one sanctioned sync of the iteration
+            k = 1
+            with guards.chunk_guard():
+                cur, dcache, state, emit = eng._step_fn(
+                    eng.params, w["pp"], w["dcache"], w["state"],
+                    w["cur"][:, None], w["key"],
+                    guards.device_scalar(w["t"], jnp.int32))
+                nxt_np, sm_np, emit_np, all_done = guards.host_sync(
+                    (cur, state.smoothed, emit, state.lane_done.all()),
+                    "token")
+            toks_np, sm_np, emit_np = nxt_np[None], sm_np[None], emit_np[None]
+            eng._run_steps += 1
+        w.update(cur=cur, dcache=dcache, state=state)
+        self._append_events(toks_np, sm_np, emit_np)
+        w["t"] += k
+        if all_done or w["t"] >= w["steps_total"]:
+            self._finish_wave()
 
-        out = []
-        for i, r in enumerate(reqs):
+    def _append_events(self, toks_np, sm_np, emit_np) -> None:
+        eng, w = self.eng, self.wave
+        gen = w["gen"]
+        if eng.ncb:
+            before = [[len(cb) for cb in g] for g in gen]
+        else:
+            before = [len(g) for g in gen]
+        append_chunk(gen, w["traces"], toks_np, sm_np, emit_np)
+        for i, order in enumerate(w["orders"]):
+            if eng.ncb:
+                new = [g[n:] for g, n in zip(gen[i], before[i])]
+                if not any(new):
+                    continue
+            else:
+                new = gen[i][before[i]:]
+                if not new:
+                    continue
+            self.events.append(StreamEvent(
+                kind="tokens", uid=w["reqs"][i].uid, order=order,
+                step=eng._run_steps, tokens=new))
+
+    def _finish_wave(self) -> None:
+        eng, w = self.eng, self.wave
+        book = eng._book_from_state(w["state"])
+        for i, (order, r) in enumerate(zip(w["orders"], w["reqs"])):
             exited = bool(book["forced_exit"][i])
             ans = int(book["answer"][i])
             status, error = status_from_book(
                 {k: book[k][i] for k in BOOK_KEYS})
-            out.append(ServeResult(
+            self._terminal(order, ServeResult(
                 uid=r.uid,
-                tokens=self.result_tokens(gen[i]),
+                tokens=eng.result_tokens(w["gen"][i]),
                 think_tokens=int(book["think_tokens"][i]),
                 exited_early=exited,
                 exit_step=int(book["exit_step"][i]) if exited else -1,
                 answer=ans if ans >= 0 else None,
-                probe_trace=np.asarray(traces[i], np.float32),
+                probe_trace=np.asarray(w["traces"][i], np.float32),
                 exit_pos=int(book["exit_pos"][i]),
                 status=status, error=error,
+                # wave timing is degenerate by construction: the whole wave
+                # admits (and seeds its first token) at formation and every
+                # lane retires when the wave does
+                admit_step=w["admit_step"],
+                first_token_step=w["admit_step"],
+                finish_step=eng._run_steps,
             ))
-        return out
-
-    @staticmethod
-    def _book_from_state(state: ctrl_mod.ControllerState) -> Dict[str, np.ndarray]:
-        vals = guards.host_sync(
-            [getattr(state, k) for k in BOOK_KEYS], "book")
-        return dict(zip(BOOK_KEYS, vals))
-
-    # ------------------------------------------------- scanned chunk driver
-
-    def _drive_scan(self, pp, dcache, state, tok0, wave_key, steps_total):
-        tok0_np, sm0 = guards.host_sync((tok0, state.smoothed), "seed")
-        gen, traces = self._seed_buffers(tok0_np, sm0)
-        # always full-size chunks: a single compiled (B, K) scan graph per
-        # wave shape — the final chunk overshoots past steps_total with every
-        # lane already over budget, so the overshoot is emit-masked noise
-        cur, t = tok0, 0
-        while t < steps_total:
-            k = self.chunk
-            # steady state runs transfer-guarded: the step counter crosses
-            # h2d explicitly (device_scalar), results cross d2h through the
-            # single sanctioned host_sync — anything else raises
-            with guards.chunk_guard():
-                cur, dcache, state, toks, sm, emit = self._steps_fn(
-                    self.params, pp, dcache, state, cur, wave_key,
-                    guards.device_scalar(t, jnp.int32), num_steps=k)
-                # one device→host sync per chunk
-                toks_np, sm_np, emit_np, all_done = guards.host_sync(
-                    (toks, sm, emit, state.lane_done.all()), "chunk")
-            append_chunk(gen, traces, toks_np, sm_np, emit_np)
-            t += k
-            self._run_chunks += 1
-            self._run_steps += k
-            if all_done:
-                break
-        return gen, traces, state
-
-    # ------------------------------------------------ host-loop reference
-
-    def _drive_host(self, pp, dcache, state, tok0, wave_key, steps_total):
-        """Per-token reference loop: one jitted single-token step — the same
-        fused forcing/controller math as the scan body — plus one
-        device→host sync and per-token Python append per token."""
-        tok0_np, sm0 = guards.host_sync((tok0, state.smoothed), "seed")
-        gen, traces = self._seed_buffers(tok0_np, sm0)
-        cur = tok0
-        for t in range(steps_total):
-            # same bracket as the scanned driver, at token granularity: the
-            # step index is an explicit device_scalar (fold_in draws
-            # bit-identical keys either way) and the per-token fetch is the
-            # one sanctioned sync of the iteration
-            with guards.chunk_guard():
-                cur, dcache, state, emit = self._step_fn(
-                    self.params, pp, dcache, state, cur[:, None],
-                    wave_key, guards.device_scalar(t, jnp.int32))
-                nxt_np, sm_np, emit_np, all_done = guards.host_sync(
-                    (cur, state.smoothed, emit, state.lane_done.all()), "token")
-            append_chunk(gen, traces, nxt_np[None], sm_np[None], emit_np[None])
-            self._run_steps += 1
-            if all_done:
-                break
-        return gen, traces, state
+        self.wave = None

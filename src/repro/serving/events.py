@@ -1,0 +1,89 @@
+"""Typed serving statuses, stream events, and request handles.
+
+This module is deliberately **jax-free** (it is imported by the asyncio
+front end, which must stay host-side so tracelint's R001 cannot fire) and
+is the one place the request lifecycle vocabulary is defined:
+
+* :class:`Status` — the terminal state of a request.  A ``StrEnum``: every
+  member round-trips through JSON as the exact string the old stringly
+  ``ServeResult.status`` used (``json.dumps(Status.OK) == '"ok"'`` and
+  ``Status("ok") is Status.OK``), so ``status_counts`` keys, persisted
+  bench entries, and ``check_serve_regression`` are unchanged.
+* :class:`ServeError` — the typed shape of ``ServeResult.error``: ``None``
+  for ``Status.OK``, else a ``{"code", "message"}`` dict.  ``code`` is a
+  machine-readable slug (validation: ``empty_prompt``, ``bad_prompt_shape``,
+  ``bad_prompt_dtype``, ``token_out_of_range``, ``bad_max_new``,
+  ``bad_ctx_shape``, ``cache_capacity``, ``backpressure``,
+  ``fault_injected``; runtime: ``non_finite``, ``deadline_exceeded``,
+  ``drained``); ``message`` is human-readable detail.
+* :class:`StreamEvent` — what :meth:`Engine.step_chunk` yields: per-chunk
+  ``"tokens"`` payloads and one terminal ``"done"`` event per request
+  carrying its :class:`Status` and final ``ServeResult``.
+* :class:`RequestHandle` — the engine-side handle :meth:`Engine.submit`
+  returns; ``result`` is filled when the request's terminal event fires.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Optional, TypedDict
+
+try:  # Python >= 3.11
+    from enum import StrEnum
+except ImportError:  # pragma: no cover - 3.10 shim, same JSON round-trip
+
+    class StrEnum(str, enum.Enum):
+        __str__ = str.__str__
+        __format__ = str.__format__
+
+
+class Status(StrEnum):
+    """Terminal request status (serializes as its plain string value)."""
+
+    OK = "ok"                # completed normally
+    REJECTED = "rejected"    # failed admission screening (never decoded)
+    DEADLINE = "deadline"    # retired at its per-request step deadline
+    POISONED = "poisoned"    # quarantined: non-finite logits / probe state
+    DRAINED = "drained"      # shed undecoded at a drain point
+
+
+class ServeError(TypedDict):
+    """Typed ``ServeResult.error`` payload (``None`` when status is OK)."""
+
+    code: str
+    message: str
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamEvent:
+    """One event on a request's output stream.
+
+    ``kind == "tokens"``: ``tokens`` holds the newly emitted token ids —
+    a flat list for single-stream models, a list of per-codebook lists for
+    multi-codebook (audio) streams; ``step`` is the engine step counter at
+    the end of the chunk that produced them.  ``kind == "done"`` is the
+    terminal event: ``status``/``result`` are set, ``tokens`` is None, and
+    no further events follow for this request.
+    """
+
+    kind: str                     # "tokens" | "done"
+    uid: int                      # caller-supplied request id
+    order: int                    # submission order (unique per engine run)
+    step: int                     # engine step counter when emitted
+    tokens: Optional[list] = None
+    status: Optional[Status] = None
+    result: Optional[object] = None   # ServeResult on the "done" event
+
+
+@dataclasses.dataclass
+class RequestHandle:
+    """Engine-side handle for one submitted request."""
+
+    uid: int
+    order: int
+    result: Optional[object] = None   # ServeResult once terminal
+
+    @property
+    def done(self) -> bool:
+        return self.result is not None

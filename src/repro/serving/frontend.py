@@ -1,0 +1,226 @@
+"""Asyncio streaming front end over the engine's streaming-first core API.
+
+This module is strictly **host-side and jax-free** (enforced by
+``tests/test_frontend.py``): the device-facing engine loop runs on a
+dedicated worker thread, and the asyncio side only ever touches Python
+queues, futures, and :mod:`repro.serving.events` values.  The split keeps
+the event loop responsive — a decode chunk never blocks a coroutine — and
+keeps every jitted call on one thread (JAX dispatch is not thread-safe
+across concurrent callers).
+
+Architecture::
+
+    coroutine  --submit(req)-->  SimpleQueue  --+
+                                                |   worker thread
+    AsyncStream  <--call_soon_threadsafe--  eng.submit / eng.step_chunk
+                                                |
+    drain()  <------- results future ----------+
+
+* :meth:`AsyncFrontend.submit` creates the request's :class:`AsyncStream`
+  *on the event loop* (its ``asyncio.Queue``/future bind to the running
+  loop) and hands the request to the worker, which forwards it to
+  ``Engine.submit`` in arrival order.
+* The worker drives ``Engine.step_chunk`` whenever the engine has work and
+  routes each :class:`~repro.serving.events.StreamEvent` to its stream via
+  ``loop.call_soon_threadsafe``; PR-7 lifecycle terminals
+  (rejected/deadline/poisoned/drained) arrive as the stream's ``"done"``
+  event exactly like a clean finish.
+* :meth:`AsyncFrontend.drain` closes submission, lets the engine run dry,
+  and resolves to the ordered ``ServeResult`` list (``Engine.drain``).
+
+Timing: each stream stamps ``submitted_at`` at creation and the worker
+stamps event production times, so ``ttft_s`` (time to first token) and
+``tpot_s`` (per-token latency after the first) are measured across the
+whole stack — scheduler queueing, admission, and decode — which is what the
+open-loop serving benchmark records.
+"""
+
+from __future__ import annotations
+
+import asyncio
+import queue
+import threading
+import time
+from typing import AsyncIterator, List, Optional
+
+from repro.serving.events import StreamEvent
+
+
+class AsyncStream:
+    """Per-request async view: an event stream plus a result future.
+
+    Created on the event loop by :meth:`AsyncFrontend.submit`; fed from the
+    engine worker thread via ``call_soon_threadsafe``.  Iterate
+    ``async for event in stream.stream()`` for incremental tokens, or
+    ``await stream.result()`` for just the final ``ServeResult``.
+    """
+
+    def __init__(self, uid: int, loop: asyncio.AbstractEventLoop):
+        self.uid = uid
+        self._loop = loop
+        self._events: asyncio.Queue = asyncio.Queue()
+        self._result = loop.create_future()
+        self.submitted_at = time.perf_counter()
+        self.first_token_at: Optional[float] = None
+        self.finished_at: Optional[float] = None
+        self.n_tokens = 0
+
+    def _post(self, event: StreamEvent, t: float) -> None:
+        # loop-thread only (scheduled by the worker via call_soon_threadsafe)
+        if event.kind == "tokens":
+            if self.first_token_at is None:
+                self.first_token_at = t
+            self.n_tokens += sum(len(cb) for cb in event.tokens) \
+                if event.tokens and isinstance(event.tokens[0], list) \
+                else len(event.tokens)
+        elif event.kind == "done":
+            self.finished_at = t
+            if not self._result.done():
+                self._result.set_result(event.result)
+        self._events.put_nowait(event)
+
+    async def stream(self) -> AsyncIterator[StreamEvent]:
+        """Yield this request's events; terminates after the ``"done"``
+        event (every request gets exactly one, whatever its status)."""
+        while True:
+            event = await self._events.get()
+            yield event
+            if event.kind == "done":
+                return
+
+    async def result(self):
+        """The final ``ServeResult`` (any terminal status)."""
+        return await self._result
+
+    @property
+    def ttft_s(self) -> Optional[float]:
+        """Submit → first streamed token, in seconds (None until then)."""
+        if self.first_token_at is None:
+            return None
+        return self.first_token_at - self.submitted_at
+
+    @property
+    def tpot_s(self) -> Optional[float]:
+        """Mean per-token latency after the first token, in seconds."""
+        if self.finished_at is None or self.first_token_at is None \
+                or self.n_tokens < 2:
+            return None
+        return (self.finished_at - self.first_token_at) / (self.n_tokens - 1)
+
+
+class AsyncFrontend:
+    """Online serving front end: async submission over a threaded engine.
+
+    Usage::
+
+        front = AsyncFrontend(engine)
+        await front.start()
+        stream = await front.submit(req)
+        async for event in stream.stream():
+            ...
+        results = await front.drain()
+
+    One frontend drives one engine session; after :meth:`drain` resolves
+    the frontend is closed (build a new one to serve again).
+    """
+
+    _POLL_S = 0.02   # worker nap when the engine is idle and nothing arrived
+
+    def __init__(self, engine):
+        self._eng = engine
+        self._subq: queue.SimpleQueue = queue.SimpleQueue()
+        self._streams: dict = {}           # order -> AsyncStream (worker side)
+        self._wake = threading.Event()
+        self._draining = threading.Event()
+        self._closed = False
+        self._loop: Optional[asyncio.AbstractEventLoop] = None
+        self._results = None               # future resolved by the worker
+        self._thread: Optional[threading.Thread] = None
+
+    async def start(self) -> "AsyncFrontend":
+        self._loop = asyncio.get_running_loop()
+        self._results = self._loop.create_future()
+        self._thread = threading.Thread(
+            target=self._worker, name="repro-engine-worker", daemon=True)
+        self._thread.start()
+        return self
+
+    async def submit(self, req) -> AsyncStream:
+        """Enqueue one request; returns its stream immediately (admission
+        screening happens on the worker — a rejected request's stream just
+        receives its terminal event)."""
+        if self._closed:
+            raise RuntimeError("frontend is draining; no new submissions")
+        stream = AsyncStream(req.uid, self._loop)
+        self._subq.put((req, stream))
+        self._wake.set()
+        return stream
+
+    async def drain(self) -> List:
+        """Close submission, run the engine dry, return ordered results."""
+        self._closed = True
+        self._draining.set()
+        self._wake.set()
+        return await self._results
+
+    # ------------------------------------------------------- worker thread
+
+    def _ingest(self) -> None:
+        """Forward queued submissions to the engine in arrival order."""
+        while True:
+            try:
+                req, stream = self._subq.get_nowait()
+            except queue.Empty:
+                return
+            handle = self._eng.submit(req)
+            self._streams[handle.order] = stream
+
+    def _route(self, events: List[StreamEvent]) -> None:
+        now = time.perf_counter()
+        for event in events:
+            stream = self._streams.get(event.order)
+            if stream is not None:
+                self._loop.call_soon_threadsafe(stream._post, event, now)
+
+    def _worker(self) -> None:
+        eng = self._eng
+        try:
+            while True:
+                self._ingest()
+                if not eng.idle:
+                    self._route(eng.step_chunk())
+                    continue
+                if self._draining.is_set() and self._subq.empty():
+                    results = eng.drain()
+                    self._loop.call_soon_threadsafe(
+                        self._results.set_result, results)
+                    return
+                # idle and open: nap until a submission (or drain) arrives
+                self._wake.wait(self._POLL_S)
+                self._wake.clear()
+        except BaseException as exc:  # surface engine faults to the loop
+            self._loop.call_soon_threadsafe(self._fail, exc)
+
+    def _fail(self, exc: BaseException) -> None:
+        if not self._results.done():
+            self._results.set_exception(exc)
+        for stream in self._streams.values():
+            if not stream._result.done():
+                stream._result.set_exception(exc)
+
+
+async def serve_requests(engine, arrivals) -> List[AsyncStream]:
+    """Open-loop arrival helper: submit each ``(delay_s, request)`` after
+    sleeping its delay (delays are relative to the previous arrival, i.e. an
+    arrival-process sample), then drain.  Returns the per-request streams —
+    each carries its own ``ttft_s``/``tpot_s`` — with the ordered results
+    available via ``engine.last_stats`` and ``stream.result()``.
+    """
+    front = await AsyncFrontend(engine).start()
+    streams = []
+    for delay_s, req in arrivals:
+        if delay_s > 0:
+            await asyncio.sleep(delay_s)
+        streams.append(await front.submit(req))
+    await front.drain()
+    return streams

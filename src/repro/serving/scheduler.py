@@ -18,7 +18,10 @@ as *slots*:
   SSM/hybrid prefill runs plen-masked (zero ``dt`` / conv tails gathered
   before plen, so pads fold nothing into the carried recurrent state), and
   audio/vlm requests carry their own encoder ``ctx`` whose cross-K/V land
-  as per-lane cache leaves.
+  as per-lane cache leaves.  With ``prefill="inflight"`` the whole-prompt
+  prefill dispatch disappears entirely: the lane is re-armed on device and
+  *replays* its prompt through the persistent chunk step instead (see
+  :func:`run_continuous` for the state-machine contract).
 * **decode** — the engine's existing jitted (B, K) ``lax.scan`` chunk step
   runs unchanged; ``lane_done`` lanes are emit-masked no-ops, so the graph
   compiles ONCE for the engine's lifetime regardless of how lanes churn.
@@ -28,8 +31,10 @@ as *slots*:
   boundary.
 
 Host-side state (queues, per-lane token buffers, stats) lives in
-:class:`SlotScheduler`; :func:`run_continuous` is the drive loop the engine
-delegates to for ``scheduler="continuous"``.
+:class:`SlotScheduler`; :class:`_ContinuousSession` is the incremental
+driver behind ``Engine.submit``/``step_chunk``/``drain`` for
+``scheduler="continuous"``, and :func:`run_continuous` the offline batch
+entry point (submit-all + drain).
 """
 
 from __future__ import annotations
@@ -49,6 +54,7 @@ from repro.serving import delay as delay_mod
 from repro.serving.engine import (BOOK_KEYS, ServeRequest, ServeResult,
                                   append_chunk, status_counts,
                                   status_from_book)
+from repro.serving.events import RequestHandle, Status, StreamEvent
 
 MIN_BUCKET = 8
 
@@ -75,6 +81,7 @@ class _Active:
     order: int                    # submission index (results are re-ordered)
     lane: int
     admitted_step: int            # engine step at admission (stats)
+    first_token_step: int = -1    # engine step of the first emitted token
     tokens: list = dataclasses.field(default_factory=list)
     traces: List[float] = dataclasses.field(default_factory=list)
 
@@ -131,11 +138,14 @@ class SlotScheduler:
             {"lane": lane, "step": step, "uid": act.req.uid})
         return act
 
-    def retire(self, lane: int, book: Dict[str, int]) -> tuple:
+    def retire(self, lane: int, book: Dict[str, int],
+               finish_step: int = -1) -> tuple:
         """Close out the lane's request; returns (order, ServeResult).  The
         result's status/error come from :func:`engine.status_from_book`, so
         a lane retired by its deadline or quarantined as poisoned carries
-        its partial output plus the structured failure payload."""
+        its partial output plus the structured failure payload; its
+        admission/first-token/finish step counters ride along for TTFT
+        accounting."""
         act = self.owner[lane]
         assert act is not None, f"retire of empty lane {lane}"
         self.owner[lane] = None
@@ -152,12 +162,382 @@ class SlotScheduler:
             probe_trace=np.asarray(act.traces, np.float32),
             exit_pos=int(book["exit_pos"]),
             status=status, error=error,
+            admit_step=act.admitted_step,
+            first_token_step=act.first_token_step,
+            finish_step=finish_step,
         )
         return act.order, res
 
 
+class _ContinuousSession:
+    """Incremental continuous-batching driver behind Engine.submit/step_chunk.
+
+    One ``step_chunk()`` call performs exactly one chunk boundary: shed the
+    pending queue at a drain point / admit free lanes, then run one decode
+    chunk if any lane is live.  The device-call and host-sync sequence is
+    the historical ``run_continuous`` loop body, so ledger counts
+    (whole-prompt: one ``"admit"`` sync per admission + one ``"chunk"`` per
+    chunk; in-flight: ``"chunk"`` syncs ONLY) and per-request outputs are
+    unchanged for offline runs.
+
+    Device state is initialized lazily at the first step_chunk with pending
+    work, sizing the persistent cache over every request accepted so far
+    (see the :func:`run_continuous` cache-sizing contract); a request
+    accepted *after* initialization that would need a larger cache is
+    rejected with code ``cache_capacity`` rather than resized mid-run (the
+    chunk graph compiles once per run)."""
+
+    def __init__(self, eng):
+        self.eng = eng
+        self.sched = SlotScheduler(eng.lanes, num_codebooks=eng.ncb,
+                                   result_tokens=eng.result_tokens)
+        self.results: Dict[int, ServeResult] = {}
+        self.handles: Dict[int, RequestHandle] = {}
+        self.events: List[StreamEvent] = []
+        self.orders: List[int] = []   # scheduler order -> submission order
+        self.n_submitted = 0
+        self.n_accepted = 0
+        self.warnings: List[Dict[str, object]] = []
+        self.retired = 0
+        self.quarantined = 0
+        self.stalled_admissions = 0
+        self.gstep = 0
+        self.chunks = 0
+        self.w_cache: Optional[int] = None
+        self._dev: Optional[dict] = None
+        # injected host faults (None in production): drain stops admission
+        # and sheds the queue from its step on; stall holds admission closed
+        # for `chunks` chunk boundaries starting at its step — admission
+        # timing never changes per-request outputs (greedy), only stats
+        plan = eng.fault_plan
+        self._drain_at = plan.drain_step if plan else None
+        self._stall = plan.stall_spec if plan else None
+        self._stall_armed = self._stall is not None
+        self._stall_left = 0
+
+    @property
+    def idle(self) -> bool:
+        return (not self.sched.any_active and not self.sched.has_pending
+                and not self.events)
+
+    def _terminal(self, order: int, res: ServeResult) -> None:
+        self.results[order] = res
+        self.handles[order].result = res
+        self.events.append(StreamEvent(
+            kind="done", uid=res.uid, order=order, step=self.gstep,
+            status=res.status, result=res))
+
+    def submit(self, req: ServeRequest) -> RequestHandle:
+        eng = self.eng
+        order = self.n_submitted
+        self.n_submitted += 1
+        handle = self.handles[order] = RequestHandle(uid=req.uid, order=order)
+        err = eng.validate_request(req)
+        cap = (None if eng.max_pending is None
+               else eng.lanes + eng.max_pending)
+        if err is None and cap is not None and self.n_accepted >= cap:
+            err = {"code": "backpressure",
+                   "message": f"pending queue full ({cap} accepted: "
+                              f"{eng.lanes} lanes + {eng.max_pending} "
+                              "pending)"}
+        if err is None and self._dev is not None and self.w_cache is not None:
+            need = eng.decode_cache_len(bucket_length(len(req.prompt)),
+                                        int(req.max_new))
+            if need is not None and need > self.w_cache:
+                err = {"code": "cache_capacity",
+                       "message": f"late request needs {need} cache slots; "
+                                  "this session's persistent cache was "
+                                  f"sized at {self.w_cache}"}
+        if err is not None:
+            self._terminal(order, eng.failed_result(req, Status.REJECTED,
+                                                    err))
+        else:
+            self.n_accepted += 1
+            self.orders.append(order)
+            self.sched.submit([req])
+        return handle
+
+    def step_chunk(self) -> List[StreamEvent]:
+        sched = self.sched
+        if sched.any_active or sched.has_pending:
+            if self._dev is None:
+                self._init_device()
+            if self._drain_at is not None and self.gstep >= self._drain_at:
+                self._drain_pending()
+            elif self._admission_open():
+                self._admit_free_lanes()
+            if sched.any_active:
+                self._chunk()
+            # else: admission held closed with zero live lanes (stall
+            # fault) — the boundary still passes; _stall_left strictly
+            # decreases each _admission_open() call, so the spin terminates
+        out, self.events = self.events, []
+        return out
+
+    def finish(self) -> List[ServeResult]:
+        eng = self.eng
+        statuses = status_counts(self.results.values())
+        eng.last_stats = {
+            "scheduler": "continuous", "chunks": self.chunks,
+            "steps": self.gstep, "lanes": eng.lanes,
+            "requests": self.n_submitted,
+            "admitted": len(self.sched.admissions),
+            "retired": self.retired,
+            "rejected": statuses.get("rejected", 0),
+            "poisoned": statuses.get("poisoned", 0),
+            "deadline": statuses.get("deadline", 0),
+            "drained": statuses.get("drained", 0),
+            "quarantined_lanes": self.quarantined,
+            "statuses": statuses,
+            "admissions": self.sched.admissions,
+            "emitted_tokens": int(sum(
+                np.asarray(r.tokens).size for r in self.results.values())),
+            "cache_len": self.w_cache,
+            "stalled_admissions": self.stalled_admissions,
+            "warnings": self.warnings,
+        }
+        return [self.results[i] for i in range(self.n_submitted)]
+
+    # ------------------------------------------------------------ internals
+
+    def _init_device(self) -> None:
+        eng, sched = self.eng, self.sched
+        lanes = eng.lanes
+        acts = list(sched.pending)   # every accepted request (none admitted)
+        # per-run cache sizing (see the run_continuous docstring contract);
+        # decode_cache_len is None exactly when ring serving sizes the cache
+        # at the window
+        needs = [eng.decode_cache_len(bucket_length(len(a.req.prompt)),
+                                      a.req.max_new) for a in acts]
+        if needs[0] is None:
+            self.w_cache = None
+        else:
+            self.w_cache = max(needs)
+            median = float(np.median(needs))
+            if median > 0 and self.w_cache > 2 * median:
+                worst = acts[int(np.argmax(needs))].req
+                self.warnings.append({
+                    "code": "cache_outlier", "uid": worst.uid,
+                    "need": int(self.w_cache), "median": median,
+                    "message": (
+                        f"request uid={worst.uid} needs {self.w_cache} cache "
+                        f"slots, >2x the {median:.0f} median — every lane's "
+                        "cache is sized for it; split it into its own run "
+                        "or cap with max_cache_len")})
+
+        pp = eng._wave_probe_params()
+        eng.key, run_key = jax.random.split(eng.key)
+
+        state = ctrl_mod.init_state(lanes, eng.cfg.d_model, eng.ctrl.window,
+                                    num_codebooks=max(eng.ncb, 1))
+        # all lanes start idle: done, zero budget, emit-masked until admission
+        state = state._replace(
+            lane_done=jnp.ones((lanes,), bool),
+            max_tokens=jnp.zeros((lanes,), jnp.int32))
+        cur_shape = (lanes, eng.ncb) if eng.ncb else (lanes,)
+        cur = jnp.zeros(cur_shape, jnp.int32)
+        if eng.prefill_mode == "inflight":
+            # the persistent cache starts EMPTY (prompts replay through the
+            # decode graph) and the prompt buffer starts at the widest
+            # bucket seen so far — a later, wider admission grows it (one
+            # retrace per width bucket; outputs invariant)
+            cache = model_mod.init_decode_cache(
+                eng.cfg, lanes, self.w_cache, window=eng.window,
+                ring_cache=(eng.window_cache == "ring"),
+                compute_dtype=eng.compute_dtype, kv_quant=eng.kv_quant)
+            pf_w = max(bucket_length(len(a.req.prompt)) for a in acts)
+        else:
+            cache = None   # replicated from the first admission's prefill
+            pf_w = 1       # degenerate: the whole-prompt graph ignores pf
+        pf_shape = (lanes, pf_w, eng.ncb) if eng.ncb else (lanes, pf_w)
+        self._dev = dict(pp=pp, key=run_key, state=state, cache=cache,
+                         cur=cur, pf=jnp.zeros(pf_shape, jnp.int32))
+
+    def _drain_pending(self) -> None:
+        eng, sched = self.eng, self.sched
+        while sched.pending:
+            act = sched.pending.popleft()
+            self._terminal(self.orders[act.order], eng.failed_result(
+                act.req, Status.DRAINED,
+                {"code": "drained",
+                 "message": "engine drained before admission"}))
+            self.retired += 1
+
+    def _admission_open(self) -> bool:
+        sched = self.sched
+        if self._stall_armed and self.gstep >= self._stall.step:
+            self._stall_armed = False
+            self._stall_left = self._stall.chunks
+        if self._stall_left > 0:
+            self._stall_left -= 1
+            if sched.has_pending and sched.free_lanes():
+                self.stalled_admissions += 1
+            return False
+        return True
+
+    def _admit_free_lanes(self) -> None:
+        eng, sched = self.eng, self.sched
+        inflight = eng.prefill_mode == "inflight"
+        for lane in sched.free_lanes():
+            act = sched.admit_next(lane, self.gstep)
+            if act is None:
+                break
+            if inflight:
+                self._admit_inflight(act, lane)
+            else:
+                self._admit_whole(act, lane)
+
+    def _admit_whole(self, act: _Active, lane: int) -> None:
+        """Whole-prompt admission: one batch=1 bucketed prefill scattered
+        into the lane, seed token synced to the host (the per-admission
+        ``"admit"`` ledger entry) and streamed immediately."""
+        eng, d = self.eng, self._dev
+        plen = len(act.req.prompt)
+        bucket = bucket_length(plen)
+        shape = (1, bucket, eng.ncb) if eng.ncb else (1, bucket)
+        toks = np.zeros(shape, np.int32)
+        toks[0, :plen] = eng.delayed_prompt(act.req)
+        ctx = eng.request_ctx(act.req)
+        logits, hid_last, small = model_mod.prefill_into_slot(
+            eng.cfg, eng.params, jnp.asarray(toks), plen,
+            cache_len=self.w_cache,
+            ctx=None if ctx is None else jnp.asarray(ctx)[None],
+            ring_cache=(eng.window_cache == "ring"),
+            moe_impl=eng.moe_impl, compute_dtype=eng.compute_dtype)
+        if eng.kv_quant:
+            small = eng._quant_fn(small)
+        if d["cache"] is None:
+            d["cache"] = eng._replicate_fn(small)
+        deadline = (act.req.deadline_steps
+                    if act.req.deadline_steps > 0 else ctrl_mod.INF_STEPS)
+        state, cache, cur, tok0, sm = eng._admit_fn(
+            d["pp"], d["state"], d["cache"], d["cur"], small, hid_last,
+            logits, guards.device_scalar(lane), guards.device_scalar(plen),
+            guards.device_scalar(act.req.max_new),
+            guards.device_scalar(deadline))
+        d.update(state=state, cache=cache, cur=cur)
+        tok0_np, sm_np = guards.host_sync((tok0, sm), "admit")
+        if eng.ncb:
+            payload = []
+            for cb in range(eng.ncb):
+                act.tokens[cb].append(int(tok0_np[cb]))
+                payload.append([int(tok0_np[cb])])
+        else:
+            act.tokens.append(int(tok0_np))
+            payload = [int(tok0_np)]
+        act.traces.append(float(sm_np[lane]))
+        act.first_token_step = self.gstep
+        self.events.append(StreamEvent(
+            kind="tokens", uid=act.req.uid, order=self.orders[act.order],
+            step=self.gstep, tokens=payload))
+
+    def _admit_inflight(self, act: _Active, lane: int) -> None:
+        """In-flight admission: pure device-side lane surgery — no prefill
+        dispatch, no host sync (the ledger for an in-flight run counts
+        ``"chunk"`` entries ONLY).  The lane replays its prompt through the
+        persistent chunk step; its seed token is emitted by the in-scan
+        FLIP, so the first stream event arrives with the chunk that crosses
+        the prompt boundary."""
+        eng, d = self.eng, self._dev
+        plen = len(act.req.prompt)
+        pf = d["pf"]
+        row_w = bucket_length(plen)
+        if row_w > pf.shape[1]:
+            # grow the shared prompt buffer to the new width bucket (one
+            # chunk-graph retrace per width; outputs invariant)
+            grown = jnp.zeros((pf.shape[0], row_w) + pf.shape[2:], jnp.int32)
+            pf = grown.at[:, :pf.shape[1]].set(pf)
+        shape = (pf.shape[1], eng.ncb) if eng.ncb else (pf.shape[1],)
+        row = np.zeros(shape, np.int32)
+        row[:plen] = eng.delayed_prompt(act.req)
+        deadline = (act.req.deadline_steps
+                    if act.req.deadline_steps > 0 else ctrl_mod.INF_STEPS)
+        state, cache, cur, pf = eng._inflight_admit_fn(
+            d["state"], d["cache"], d["cur"], pf, guards.device_array(row),
+            guards.device_scalar(lane), guards.device_scalar(plen),
+            guards.device_scalar(act.req.max_new),
+            guards.device_scalar(deadline))
+        ctx = eng.request_ctx(act.req)
+        if ctx is not None:
+            cache = eng._ctx_admit_fn(
+                eng.params, cache,
+                guards.device_array(ctx[None], np.float32), lane)
+        d.update(state=state, cache=cache, cur=cur, pf=pf)
+
+    def _chunk(self) -> None:
+        eng, sched, d = self.eng, self.sched, self._dev
+        # steady state runs transfer-guarded (same bracket as the wave
+        # drivers): the step counter crosses h2d explicitly, and the chunk's
+        # only d2h point is the sanctioned host_sync below
+        with guards.chunk_guard():
+            cur, cache, state, toks, sm, emit = eng._steps_fn(
+                eng.params, d["pp"], d["cache"], d["state"], d["cur"],
+                d["key"], guards.device_scalar(self.gstep), d["pf"],
+                num_steps=eng.chunk)
+            # one device→host sync per chunk: emitted tokens/traces plus the
+            # per-lane bookkeeping needed to retire any lane that just
+            # finished (poisoned/deadline verdicts ride the same tuple)
+            fetched = guards.host_sync(
+                (toks, sm, emit, state.lane_done)
+                + tuple(getattr(state, k) for k in BOOK_KEYS), "chunk")
+        d.update(cur=cur, cache=cache, state=state)
+        chunk_start = self.gstep
+        self.gstep += eng.chunk
+        self.chunks += 1
+        toks_np, sm_np, emit_np, done_np = fetched[:4]
+        book = dict(zip(BOOK_KEYS, fetched[4:]))
+        gen = [a.tokens if a is not None else [] for a in sched.owner]
+        traces = [a.traces if a is not None else [] for a in sched.owner]
+        if eng.ncb:
+            before = [[len(cb) for cb in g] for g in gen]
+        else:
+            before = [len(g) for g in gen]
+        append_chunk(gen, traces, toks_np, sm_np, emit_np)
+        for lane, act in enumerate(sched.owner):
+            if act is None:
+                continue
+            if act.first_token_step < 0:
+                # first emission of an in-flight lane: the FLIP step inside
+                # this chunk (whole-prompt lanes stamped this at admission)
+                rows = (emit_np[:, lane].any(axis=-1) if eng.ncb
+                        else emit_np[:, lane])
+                if rows.any():
+                    act.first_token_step = chunk_start + int(np.argmax(rows))
+            if eng.ncb:
+                new = [g[n:] for g, n in zip(gen[lane], before[lane])]
+                fresh = any(new)
+            else:
+                new = gen[lane][before[lane]:]
+                fresh = bool(new)
+            if fresh:
+                self.events.append(StreamEvent(
+                    kind="tokens", uid=act.req.uid,
+                    order=self.orders[act.order], step=self.gstep,
+                    tokens=new))
+        for lane, act in enumerate(sched.owner):
+            if act is not None and done_np[lane]:
+                order, res = sched.retire(
+                    lane, {k: book[k][lane] for k in BOOK_KEYS},
+                    finish_step=self.gstep)
+                self._terminal(self.orders[order], res)
+                self.retired += 1
+                if res.status == "poisoned":
+                    # quarantine before the slot refills: re-arm the lane's
+                    # controller state (its probe accumulators hold NaN/Inf)
+                    # and scrub the lane's cache content — all on device,
+                    # zero extra host syncs
+                    self.quarantined += 1
+                    state, cache = eng._quarantine_fn(
+                        d["state"], d["cache"], guards.device_scalar(lane))
+                    d.update(state=state, cache=cache)
+
+
 def run_continuous(eng, requests: Sequence[ServeRequest]) -> List[ServeResult]:
-    """Drive ``eng`` (a ``repro.serving.Engine``) in continuous-batching mode.
+    """Drive ``eng`` (a ``repro.serving.Engine``) in continuous-batching mode:
+    submit everything, drain, return results in submission order.  The loop
+    itself lives in :class:`_ContinuousSession` behind the engine's
+    streaming API; this wrapper is the offline batch entry point and the
+    home of the continuous-serving contract.
 
     One compiled (B, K) chunk graph decodes for the engine's whole run; lanes
     are admitted/retired between chunks.  Per-request outputs are
@@ -165,6 +545,38 @@ def run_continuous(eng, requests: Sequence[ServeRequest]) -> List[ServeResult]:
     float32): admission right-padding is causally invisible, masked idle
     lanes never touch live lanes, and the controller math is the same pure
     per-lane state machine both schedulers share.
+
+    **In-flight (chunked) prefill** (``EngineConfig(prefill="inflight")``)
+    replaces the whole-prompt admission prefill with a per-lane replay
+    state machine that runs *inside* the persistent chunk step, so admitting
+    a long prompt never stalls lanes that are mid-decode:
+
+    * **ADMIT** (host, chunk boundary): the freed lane's controller state is
+      reset with its budget/deadline and its prompt cursor armed
+      (``pf_pos=0, pf_len=plen``); its cache lane is zeroed with ``pos=0``
+      (``cache.reset_cache_lane``); the right-padded prompt row lands in the
+      engine's shared prompt buffer (the one explicit h2d transfer,
+      ``guards.device_array``); the lane's next decode input becomes the
+      prompt's first token.  No prefill dispatch, no host sync — an
+      in-flight run's transfer ledger counts ``"chunk"`` entries ONLY.
+    * **PREFILLING** (``pf_pos < pf_len``, in-scan): each step feeds the
+      lane's next prompt token through the same decode graph its neighbours
+      decode with, emits nothing, and leaves the controller frozen — so
+      budgets, deadlines, and probe windows start counting at the seed
+      token, exactly like a whole-prompt admission.
+    * **FLIP** (the step consuming prompt token ``plen-1``): the lane seeds
+      with ``argmax(logits)`` — the prefill logits of the last prompt
+      position — emits that seed, and takes the same masked controller
+      update whole-prompt admission applies, bit-identically to an
+      ``_admit_fn`` seed.
+    * **DECODING** (``pf_pos >= pf_len``): the historical chunk body,
+      unchanged, until ``lane_done`` retires the lane at a chunk boundary.
+
+    Greedy decoding (``temperature=0``) makes the two admission modes
+    token-identical; a temperature > 0 run samples each request at different
+    *global* steps than whole-prompt admission would (the sampling key is
+    ``fold_in(base_key, step)``), so only greedy runs are cross-mode
+    bit-comparable.
 
     Request lifecycle: admission screening turns inadmissible requests into
     ``status="rejected"`` results before any device work; a lane whose
@@ -184,213 +596,12 @@ def run_continuous(eng, requests: Sequence[ServeRequest]) -> List[ServeResult]:
     chunk step compiles exactly once; when a single request drives more than
     2x the median requirement the run records a ``cache_outlier`` warning in
     ``eng.last_stats["warnings"]`` (split such outliers into their own run —
-    or cap them with ``Engine(max_cache_len=...)``, which rejects them at
-    admission instead).  Native-SWA ring serving sizes the persistent cache
-    at the ring width instead (None: prefill lays each admission in a
-    window-sized ring), so cache memory is O(lanes * window) regardless.
+    or cap them with ``max_cache_len``, which rejects them at admission
+    instead).  Native-SWA ring serving sizes the persistent cache at the
+    ring width instead (None: prefill lays each admission in a window-sized
+    ring; in-flight mode starts from an empty ring and replays into it), so
+    cache memory is O(lanes * window) regardless.
     """
-    reqs = list(requests)
-    if not reqs:
-        eng.last_stats = {
-            "scheduler": "continuous", "chunks": 0, "steps": 0,
-            "lanes": eng.lanes, "requests": 0, "admitted": 0, "retired": 0,
-            "rejected": 0, "poisoned": 0, "deadline": 0, "drained": 0,
-            "quarantined_lanes": 0, "statuses": {}, "admissions": [],
-            "emitted_tokens": 0, "cache_len": None,
-            "stalled_admissions": 0, "warnings": [],
-        }
-        return []
-    lanes = eng.lanes
-    results: Dict[int, ServeResult] = {}
-    accepted = eng.screen_requests(reqs, results)
-    warnings: List[Dict[str, object]] = []
-    retired = 0
-    quarantined = 0
-    stalled_admissions = 0
-    gstep = 0
-    chunks = 0
-
-    def _finish() -> List[ServeResult]:
-        statuses = status_counts(results.values())
-        eng.last_stats = {
-            "scheduler": "continuous", "chunks": chunks, "steps": gstep,
-            "lanes": lanes, "requests": len(reqs),
-            "admitted": len(sched.admissions) if accepted else 0,
-            "retired": retired,
-            "rejected": statuses.get("rejected", 0),
-            "poisoned": statuses.get("poisoned", 0),
-            "deadline": statuses.get("deadline", 0),
-            "drained": statuses.get("drained", 0),
-            "quarantined_lanes": quarantined,
-            "statuses": statuses,
-            "admissions": sched.admissions if accepted else [],
-            "emitted_tokens": int(sum(
-                np.asarray(r.tokens).size for r in results.values())),
-            "cache_len": w_cache,
-            "stalled_admissions": stalled_admissions,
-            "warnings": warnings,
-        }
-        return [results[i] for i in range(len(reqs))]
-
-    if not accepted:
-        w_cache = None
-        sched = None
-        return _finish()
-
-    # submission order of each accepted request: SlotScheduler numbers the
-    # accepted stream 0..n-1, results are keyed by position in `requests`
-    orders = [order for order, _ in accepted]
-    sched = SlotScheduler(lanes, num_codebooks=eng.ncb,
-                          result_tokens=eng.result_tokens)
-    sched.submit([r for _, r in accepted])
-
-    # per-run cache sizing (see the docstring contract); decode_cache_len is
-    # None exactly when ring serving sizes the cache at the window
-    needs = [eng.decode_cache_len(bucket_length(len(r.prompt)), r.max_new)
-             for _, r in accepted]
-    if needs[0] is None:
-        w_cache = None
-    else:
-        w_cache = max(needs)
-        median = float(np.median(needs))
-        if median > 0 and w_cache > 2 * median:
-            worst = accepted[int(np.argmax(needs))][1]
-            warnings.append({
-                "code": "cache_outlier", "uid": worst.uid,
-                "need": int(w_cache), "median": median,
-                "message": (
-                    f"request uid={worst.uid} needs {w_cache} cache slots, "
-                    f">2x the {median:.0f} median — every lane's cache is "
-                    "sized for it; split it into its own run or cap with "
-                    "max_cache_len")})
-
-    pp = eng._wave_probe_params()
-    eng.key, run_key = jax.random.split(eng.key)
-
-    state = ctrl_mod.init_state(lanes, eng.cfg.d_model, eng.ctrl.window,
-                                num_codebooks=max(eng.ncb, 1))
-    # all lanes start idle: done, zero budget, emit-masked until admission
-    state = state._replace(
-        lane_done=jnp.ones((lanes,), bool),
-        max_tokens=jnp.zeros((lanes,), jnp.int32))
-    cache = None
-    cur_shape = (lanes, eng.ncb) if eng.ncb else (lanes,)
-    cur = jnp.zeros(cur_shape, jnp.int32)
-
-    # injected host faults (None in production): drain stops admission and
-    # sheds the queue from its step on; stall holds admission closed for
-    # `chunks` chunk boundaries starting at its step — admission timing never
-    # changes per-request outputs (greedy), only stats
-    plan = eng.fault_plan
-    drain_at = plan.drain_step if plan else None
-    stall = plan.stall_spec if plan else None
-    stall_armed = stall is not None
-    stall_left = 0
-
-    def drain_pending():
-        nonlocal retired
-        while sched.pending:
-            act = sched.pending.popleft()
-            results[orders[act.order]] = eng.failed_result(
-                act.req, "drained",
-                {"code": "drained",
-                 "message": "engine drained before admission"})
-            retired += 1
-
-    def admission_open() -> bool:
-        nonlocal stall_armed, stall_left, stalled_admissions
-        if stall_armed and gstep >= stall.step:
-            stall_armed = False
-            stall_left = stall.chunks
-        if stall_left > 0:
-            stall_left -= 1
-            if sched.has_pending and sched.free_lanes():
-                stalled_admissions += 1
-            return False
-        return True
-
-    def admit_free_lanes():
-        nonlocal state, cache, cur
-        for lane in sched.free_lanes():
-            act = sched.admit_next(lane, gstep)
-            if act is None:
-                break
-            plen = len(act.req.prompt)
-            bucket = bucket_length(plen)
-            shape = (1, bucket, eng.ncb) if eng.ncb else (1, bucket)
-            toks = np.zeros(shape, np.int32)
-            toks[0, :plen] = eng.delayed_prompt(act.req)
-            ctx = eng.request_ctx(act.req)
-            logits, hid_last, small = model_mod.prefill_into_slot(
-                eng.cfg, eng.params, jnp.asarray(toks), plen,
-                cache_len=w_cache,
-                ctx=None if ctx is None else jnp.asarray(ctx)[None],
-                ring_cache=(eng.window_cache == "ring"),
-                moe_impl=eng.moe_impl, compute_dtype=eng.compute_dtype)
-            if eng.kv_quant:
-                small = eng._quant_fn(small)
-            if cache is None:
-                cache = eng._replicate_fn(small)
-            deadline = (act.req.deadline_steps
-                        if act.req.deadline_steps > 0 else ctrl_mod.INF_STEPS)
-            state, cache, cur, tok0, sm = eng._admit_fn(
-                pp, state, cache, cur, small, hid_last, logits,
-                guards.device_scalar(lane), guards.device_scalar(plen),
-                guards.device_scalar(act.req.max_new),
-                guards.device_scalar(deadline))
-            tok0_np, sm_np = guards.host_sync((tok0, sm), "admit")
-            if eng.ncb:
-                for cb in range(eng.ncb):
-                    act.tokens[cb].append(int(tok0_np[cb]))
-            else:
-                act.tokens.append(int(tok0_np))
-            act.traces.append(float(sm_np[lane]))
-
-    while sched.any_active or sched.has_pending:
-        if drain_at is not None and gstep >= drain_at:
-            drain_pending()
-            if not sched.any_active:
-                break
-        elif admission_open():
-            admit_free_lanes()
-        if not sched.any_active:
-            # admission held closed with zero live lanes (stall fault): the
-            # boundary still passes — stall_left strictly decreases each
-            # admission_open() call, so the spin terminates
-            continue
-        # steady state runs transfer-guarded (same bracket as the wave
-        # drivers): the step counter crosses h2d explicitly, and the chunk's
-        # only d2h point is the sanctioned host_sync below
-        with guards.chunk_guard():
-            cur, cache, state, toks, sm, emit = eng._steps_fn(
-                eng.params, pp, cache, state, cur, run_key,
-                guards.device_scalar(gstep), num_steps=eng.chunk)
-            # one device→host sync per chunk: emitted tokens/traces plus the
-            # per-lane bookkeeping needed to retire any lane that just
-            # finished (poisoned/deadline verdicts ride the same tuple)
-            fetched = guards.host_sync(
-                (toks, sm, emit, state.lane_done)
-                + tuple(getattr(state, k) for k in BOOK_KEYS), "chunk")
-        gstep += eng.chunk
-        chunks += 1
-        toks_np, sm_np, emit_np, done_np = fetched[:4]
-        book = dict(zip(BOOK_KEYS, fetched[4:]))
-        gen = [a.tokens if a is not None else [] for a in sched.owner]
-        traces = [a.traces if a is not None else [] for a in sched.owner]
-        append_chunk(gen, traces, toks_np, sm_np, emit_np)
-        for lane, act in enumerate(sched.owner):
-            if act is not None and done_np[lane]:
-                order, res = sched.retire(
-                    lane, {k: book[k][lane] for k in BOOK_KEYS})
-                results[orders[order]] = res
-                retired += 1
-                if res.status == "poisoned":
-                    # quarantine before the slot refills: re-arm the lane's
-                    # controller state (its probe accumulators hold NaN/Inf)
-                    # and scrub the lane's cache content — all on device,
-                    # zero extra host syncs
-                    quarantined += 1
-                    state, cache = eng._quarantine_fn(
-                        state, cache, guards.device_scalar(lane))
-
-    return _finish()
+    for r in requests:
+        eng.submit(r)
+    return eng.drain()

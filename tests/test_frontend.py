@@ -1,0 +1,326 @@
+"""Asyncio streaming front end + the redesigned streaming-first Engine API.
+
+The load-bearing guarantees:
+
+* online == offline: a request served through the asyncio front end under
+  ANY arrival jitter produces bit-identical results to the same request in
+  an offline ``Engine.run`` batch (greedy/float32) — across wave,
+  continuous/whole and continuous/in-flight admission;
+* stream integrity: concatenating a request's streamed token events
+  reproduces ``ServeResult.tokens`` exactly, and every request gets exactly
+  one terminal ``"done"`` event whatever its status;
+* fault isolation: a lane poisoned mid-stream terminates ONLY its own
+  stream (status ``poisoned``); co-resident streams are bit-identical to
+  the fault-free run;
+* the deprecated flat-kwarg Engine constructor warns and behaves exactly
+  like ``engine=EngineConfig(...)``;
+* ``repro.serving.frontend`` (and the events module it builds on) never
+  imports jax — the front end is pure host-side plumbing.
+"""
+
+import ast
+import asyncio
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.core import controller as C
+from repro.data.traces import (ANS_BASE, BOS, EOS, THINK_END, BOUNDARY_IDS,
+                               MARKER_IDS)
+from repro.models import model as M
+from repro.serving import Engine, EngineConfig, ServeRequest, Status
+from repro.serving.faults import Fault, FaultPlan
+from repro.serving.frontend import AsyncFrontend, serve_requests
+
+from test_scheduler import (CONTENT, _install_scripted_inflight,
+                            _install_scripted_slots, _reqs, _result_tuple)
+
+
+def _slot_script(n=4, max_new=20):
+    """Request rid thinks 4 + 2*rid tokens then ends naturally."""
+    rows = []
+    for rid in range(n):
+        k = 4 + 2 * rid
+        rows.append([CONTENT] * k + [THINK_END, ANS_BASE + rid, EOS]
+                    + [CONTENT] * (max_new - k - 3))
+    return np.asarray(rows, np.int32)
+
+
+def _cont_engine(monkeypatch, *, prefill="whole", plan=None, lanes=2,
+                 chunk=4, n=4, **kw):
+    cfg = get_reduced("qwen3-8b").replace(d_model=32)
+    install = (_install_scripted_inflight if prefill == "inflight"
+               else _install_scripted_slots)
+    install(monkeypatch, _slot_script(n))
+    ctrl = C.ControllerConfig(BOUNDARY_IDS, MARKER_IDS, window=10,
+                              min_steps=1, probe_dim=16)
+    pp = C.init_probe_params(cfg.d_model, 16)
+    return Engine(cfg, None, ctrl=ctrl, probe_params=pp,
+                  engine=EngineConfig(lanes=lanes, policy="full",
+                                      scheduler="continuous", chunk=chunk,
+                                      prefill=prefill, fault_plan=plan, **kw))
+
+
+async def _collect(front, reqs, gaps):
+    """Submit with the given inter-arrival gaps; return (streams, token
+    transcript per uid from the events, results)."""
+    streams = []
+    for gap, req in zip(gaps, reqs):
+        if gap > 0:
+            await asyncio.sleep(gap)
+        streams.append(await front.submit(req))
+
+    async def pump(stream):
+        toks, done = [], None
+        async for ev in stream.stream():
+            if ev.kind == "tokens":
+                toks.extend(ev.tokens)
+            elif ev.kind == "done":
+                done = ev
+        return toks, done
+
+    pumped = await asyncio.gather(*(pump(s) for s in streams))
+    results = await front.drain()
+    return streams, pumped, results
+
+
+# ---------------------------------------------------------------------------
+# online == offline, regardless of arrival jitter
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("prefill", ["whole", "inflight"])
+@pytest.mark.parametrize("gaps", [
+    (0.0, 0.0, 0.0, 0.0),                      # burst
+    (0.0, 0.004, 0.0, 0.008),                  # staggered arrivals
+])
+def test_online_matches_offline_continuous(monkeypatch, prefill, gaps):
+    reqs = _reqs(4, max_new=20)
+    offline = _cont_engine(monkeypatch, prefill=prefill).run(reqs)
+
+    async def go():
+        eng = _cont_engine(monkeypatch, prefill=prefill)
+        front = await AsyncFrontend(eng).start()
+        return await _collect(front, reqs, gaps)
+
+    streams, pumped, results = asyncio.run(go())
+    assert [r.uid for r in results] == [r.uid for r in offline]
+    for off, on, (toks, done) in zip(offline, results, pumped):
+        assert _result_tuple(off) == _result_tuple(on), f"uid {off.uid}"
+        assert on.status == Status.OK
+        # stream integrity: streamed chunks concatenate to the final tokens
+        assert toks == on.tokens.tolist(), f"uid {off.uid}"
+        assert done is not None and done.status == Status.OK
+        assert _result_tuple(done.result) == _result_tuple(off)
+    for s in streams:                          # ttft/tpot observable online
+        assert s.ttft_s is not None and s.ttft_s >= 0
+
+
+def test_online_matches_offline_wave_real_model():
+    """Wave scheduling online: arrival timing changes how waves GROUP (the
+    worker may form a partial wave before later requests land) but never
+    what any request decodes (greedy/float32, same-bucket prompts)."""
+    cfg = get_reduced("qwen3-8b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    ctrl = C.ControllerConfig(BOUNDARY_IDS, MARKER_IDS, window=10,
+                              min_steps=1, probe_dim=16)
+    pp = C.init_probe_params(cfg.d_model, 16)
+
+    def build():
+        return Engine(cfg, params, ctrl=ctrl, probe_params=pp,
+                      engine=EngineConfig(lanes=2, policy="full", chunk=4))
+
+    reqs = [ServeRequest(uid=i, prompt=np.array([BOS, 100 + i], np.int32),
+                         max_new=8) for i in range(3)]
+    offline = build().run(reqs)
+
+    async def go():
+        front = await AsyncFrontend(build()).start()
+        return await _collect(front, reqs, (0.0, 0.02, 0.0))
+
+    _, pumped, results = asyncio.run(go())
+    for off, on, (toks, _) in zip(offline, results, pumped):
+        assert _result_tuple(off) == _result_tuple(on), f"uid {off.uid}"
+        assert toks == on.tokens.tolist()
+
+
+# ---------------------------------------------------------------------------
+# lifecycle terminals through streams
+# ---------------------------------------------------------------------------
+
+def test_poisoned_stream_isolated(monkeypatch):
+    """A mid-stream poisoned request terminates its OWN stream with a
+    ``poisoned`` done event; co-resident streams finish bit-identical to
+    the fault-free run."""
+    reqs = _reqs(4, max_new=20)
+    base = _cont_engine(monkeypatch).run(reqs)
+
+    plan = FaultPlan((Fault("nan_logits", lane=1, step=2),))
+
+    async def go():
+        eng = _cont_engine(monkeypatch, plan=plan)
+        front = await AsyncFrontend(eng).start()
+        return await _collect(front, reqs, (0.0,) * 4)
+
+    _, pumped, results = asyncio.run(go())
+    assert results[1].status == Status.POISONED
+    assert results[1].error["code"] == "non_finite"
+    _, done1 = pumped[1]
+    assert done1.status == Status.POISONED      # terminal reached the stream
+    for i in (0, 2, 3):
+        assert results[i].status == Status.OK
+        assert _result_tuple(results[i]) == _result_tuple(base[i]), f"uid {i}"
+        assert pumped[i][0] == results[i].tokens.tolist()
+
+
+def test_rejected_stream_gets_terminal(monkeypatch):
+    """Backpressure rejection surfaces as an immediate ``done`` event with
+    status ``rejected`` on that request's stream — accepted co-residents
+    are unaffected."""
+    reqs = _reqs(3, max_new=20)
+
+    async def go():
+        eng = _cont_engine(monkeypatch, lanes=1, max_pending=1)
+        front = await AsyncFrontend(eng).start()
+        return await _collect(front, reqs, (0.0,) * 3)
+
+    _, pumped, results = asyncio.run(go())
+    statuses = [r.status for r in results]
+    assert statuses[:2] == [Status.OK, Status.OK]
+    assert statuses[2] == Status.REJECTED
+    assert results[2].error["code"] == "backpressure"
+    toks2, done2 = pumped[2]
+    assert toks2 == [] and done2.status == Status.REJECTED
+
+
+def test_frontend_closed_after_drain(monkeypatch):
+    async def go():
+        eng = _cont_engine(monkeypatch)
+        front = await AsyncFrontend(eng).start()
+        await front.submit(_reqs(1, max_new=20)[0])
+        await front.drain()
+        with pytest.raises(RuntimeError, match="draining"):
+            await front.submit(_reqs(2, max_new=20)[1])
+
+    asyncio.run(go())
+
+
+# ---------------------------------------------------------------------------
+# streaming-first core API (no asyncio): submit / step_chunk / drain
+# ---------------------------------------------------------------------------
+
+def test_incremental_api_matches_run(monkeypatch):
+    reqs = _reqs(4, max_new=20)
+    offline = _cont_engine(monkeypatch).run(reqs)
+
+    eng = _cont_engine(monkeypatch)
+    assert eng.idle
+    handles = [eng.submit(r) for r in reqs]
+    assert [h.order for h in handles] == [0, 1, 2, 3]
+    events = []
+    while not eng.idle:
+        events.extend(eng.step_chunk())
+    results = eng.drain()
+    for off, on in zip(offline, results):
+        assert _result_tuple(off) == _result_tuple(on)
+    # every handle resolved by its terminal event, in submission order
+    assert all(h.done for h in handles)
+    done = [e for e in events if e.kind == "done"]
+    assert len(done) == len(reqs)
+    for h in handles:
+        assert _result_tuple(h.result) == _result_tuple(results[h.order])
+    # timing fields are coherent: admit <= first token <= finish
+    for r in results:
+        assert 0 <= r.admit_step <= r.first_token_step <= r.finish_step
+
+
+# ---------------------------------------------------------------------------
+# EngineConfig: validation + the deprecated flat-kwarg shim
+# ---------------------------------------------------------------------------
+
+def test_engine_config_validation():
+    with pytest.raises(ValueError, match="policy"):
+        EngineConfig(policy="nope")
+    with pytest.raises(ValueError, match="lanes"):
+        EngineConfig(lanes=0)
+    with pytest.raises(ValueError, match="scheduler"):
+        EngineConfig(scheduler="nope")
+    with pytest.raises(ValueError, match="decode_mode"):
+        EngineConfig(decode_mode="nope")
+    with pytest.raises(ValueError, match="prefill"):
+        EngineConfig(prefill="nope")
+    with pytest.raises(ValueError, match="continuous"):
+        EngineConfig(prefill="inflight", scheduler="wave")
+    with pytest.raises(ValueError, match="scan"):
+        EngineConfig(scheduler="continuous", decode_mode="host")
+    with pytest.raises(ValueError, match="max_pending"):
+        EngineConfig(max_pending=-1)
+    with pytest.raises(ValueError, match="crop_budget"):
+        EngineConfig(policy="crop", crop_budget=0)
+    assert EngineConfig(chunk=0).chunk == 1      # normalized, not rejected
+    with pytest.raises(Exception):               # frozen dataclass
+        EngineConfig().lanes = 4
+
+
+def test_deprecated_kwargs_shim_equivalent(monkeypatch):
+    reqs = _reqs(4, max_new=20)
+    modern = _cont_engine(monkeypatch).run(reqs)
+
+    cfg = get_reduced("qwen3-8b").replace(d_model=32)
+    _install_scripted_slots(monkeypatch, _slot_script())
+    ctrl = C.ControllerConfig(BOUNDARY_IDS, MARKER_IDS, window=10,
+                              min_steps=1, probe_dim=16)
+    pp = C.init_probe_params(cfg.d_model, 16)
+    with pytest.warns(DeprecationWarning, match="EngineConfig"):
+        eng = Engine(cfg, None, ctrl=ctrl, probe_params=pp, lanes=2,
+                     policy="full", scheduler="continuous", chunk=4)
+    legacy = eng.run(reqs)
+    for a, b in zip(modern, legacy):
+        assert _result_tuple(a) == _result_tuple(b)
+
+    with pytest.raises(TypeError, match="not both"):
+        Engine(cfg, None, ctrl=ctrl, probe_params=pp,
+               engine=EngineConfig(), lanes=2)
+    with pytest.raises(TypeError, match="unknown Engine kwargs"):
+        Engine(cfg, None, ctrl=ctrl, probe_params=pp, lanez=2)
+
+
+# ---------------------------------------------------------------------------
+# typed statuses + the jax-free frontend contract
+# ---------------------------------------------------------------------------
+
+def test_status_enum_json_compatible(monkeypatch):
+    """Status members compare, hash, and serialize as their historical JSON
+    strings — stats dicts and bench files are byte-compatible."""
+    import json
+    assert Status.OK == "ok" and Status.POISONED == "poisoned"
+    assert json.dumps({"s": Status.DRAINED}) == '{"s": "drained"}'
+    assert json.loads(json.dumps({Status.OK: 1})) == {"ok": 1}
+    eng = _cont_engine(monkeypatch)
+    eng.run(_reqs(4, max_new=20))
+    counts = eng.last_stats["statuses"]
+    assert counts.get("ok") == 4                 # str-keyed lookups still hit
+
+
+def test_frontend_and_events_are_jax_free():
+    """The asyncio front end is host-side plumbing by contract: neither it
+    nor the events module it builds on may import jax (directly or via a
+    ``from jax ...``) — so a jax-less client process could drive a remote
+    engine with these files verbatim."""
+    import repro.serving.events as events_mod
+    import repro.serving.frontend as frontend_mod
+    for mod in (events_mod, frontend_mod):
+        with open(mod.__file__) as f:
+            tree = ast.parse(f.read(), mod.__file__)
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                names = [a.name for a in node.names]
+            elif isinstance(node, ast.ImportFrom):
+                names = [node.module or ""]
+            else:
+                continue
+            for name in names:
+                root = name.split(".")[0]
+                assert root not in ("jax", "jaxlib", "flax"), (
+                    f"{mod.__name__} imports {name}")

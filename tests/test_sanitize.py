@@ -179,6 +179,30 @@ def test_continuous_exactly_one_sync_per_chunk(counted_device_get, key):
     assert counted_device_get["n"] == ledger.total
 
 
+def test_inflight_chunk_syncs_only(counted_device_get, key):
+    """In-flight admission is pure device-side lane surgery: the ledger for
+    a whole continuous run shows ONE 'chunk' sync per chunk and NOTHING
+    else — zero per-admission syncs (the whole-prompt path's 'admit'
+    entries disappear, they are not merely relabeled)."""
+    from repro.serving import EngineConfig
+
+    cfg = get_reduced("qwen3-8b")
+    params = M.init_params(cfg, key)
+    ctrl, pp = _ctrl_pp(cfg)
+    eng = Engine(cfg, params, ctrl=ctrl, probe_params=pp,
+                 engine=EngineConfig(lanes=2, policy="crop", crop_budget=4,
+                                     scheduler="continuous", chunk=4,
+                                     prefill="inflight"))
+    ledger = guards.TransferLedger()
+    with guards.attach_ledger(ledger):
+        res = eng.run(_reqs(3, max_new=12))
+    assert len(res) == 3
+    assert eng.last_stats["admitted"] == 3
+    assert ledger.counts["chunk"] == eng.last_stats["chunks"] >= 1
+    assert set(ledger.counts) == {"chunk"}
+    assert counted_device_get["n"] == ledger.total
+
+
 def test_quarantine_adds_no_syncs(monkeypatch, counted_device_get):
     """Poisoned-lane quarantine (detect, scrub, re-arm, refill) is pure
     device work riding the existing chunk sync: the ledger still shows

@@ -19,7 +19,7 @@ from repro.core import controller as C
 from repro.data.traces import (ANS_BASE, BOS, EOS, NL2, THINK_END, WAIT,
                                BOUNDARY_IDS, MARKER_IDS)
 from repro.models import model as M
-from repro.serving import Engine, ServeRequest, bucket_length
+from repro.serving import Engine, EngineConfig, ServeRequest, bucket_length
 from repro.serving.scheduler import SlotScheduler
 
 CONTENT = 100
@@ -486,3 +486,132 @@ def test_musicgen_drain_completes_frame_rectangle(monkeypatch):
     drained = [[int(frames[t - k, k]) if t >= k else PAD
                 for t in range(4 + k)] for k in range(3)]
     np.testing.assert_array_equal(D.undelay_frames(drained), frames)
+
+
+# ---------------------------------------------------------------------------
+# in-flight (chunked) prefill admission: whole == inflight, token for token
+# ---------------------------------------------------------------------------
+
+def _install_scripted_inflight(monkeypatch, script, vocab=256):
+    """The slot harness extended to the in-flight admission path.  Decode
+    stays rid-keyed; a fake ``init_decode_cache`` provides the bookkeeping
+    leaves the fake ``decode_step`` reads, and a fake ``reset_cache_lane``
+    stamps rid/plen at admission — the in-flight counterpart of what the
+    fake ``prefill_into_slot`` does for whole-prompt admission.  Both hooks
+    are looked up as module attributes at trace time, so patching before the
+    engine's first chunk is enough."""
+    from repro.models import cache as cache_lib
+
+    _install_scripted_slots(monkeypatch, script, vocab)
+
+    def fake_init_decode_cache(cfg, lanes, cache_len, **kw):
+        z = jnp.zeros((lanes,), jnp.int32)
+        return {"pos": z, "plen": z, "rid": z}
+
+    def fake_reset_cache_lane(cache, lane, prompt_row, plen):
+        return {"pos": cache["pos"].at[lane].set(0),
+                "plen": cache["plen"].at[lane].set(plen),
+                "rid": cache["rid"].at[lane].set(prompt_row[plen - 1] - 100)}
+
+    monkeypatch.setattr(M, "init_decode_cache", fake_init_decode_cache)
+    monkeypatch.setattr(cache_lib, "reset_cache_lane", fake_reset_cache_lane)
+
+
+def _cont_engine(cfg, params, ctrl, pp, prefill, *, chunk, lanes=2, **kw):
+    return Engine(cfg, params, ctrl=ctrl, probe_params=pp,
+                  engine=EngineConfig(lanes=lanes, scheduler="continuous",
+                                      chunk=chunk, prefill=prefill, **kw))
+
+
+@pytest.mark.parametrize("chunk", [1, 4, 16])
+def test_inflight_matches_whole_scripted(monkeypatch, chunk):
+    """Every early-exit path (probe exit, crop, natural end, first-token
+    end) under in-flight admission is bit-identical to whole-prompt
+    admission — the prompt replay and in-scan FLIP change when a lane
+    starts emitting, never what it emits."""
+    cfg = get_reduced("qwen3-8b").replace(d_model=32)
+    script = _refill_scripts()
+    ctrl = C.ControllerConfig(BOUNDARY_IDS, MARKER_IDS, window=10,
+                              min_steps=1, probe_dim=16)
+    pp = C.init_probe_params(cfg.d_model, 16)._replace(lam=jnp.float32(-1.0))
+    kw = dict(policy="calibrated", crop_budget=6)
+
+    _install_scripted_slots(monkeypatch, script)
+    whole = _cont_engine(cfg, None, ctrl, pp, "whole",
+                         chunk=chunk, **kw).run(_reqs(4))
+
+    _install_scripted_inflight(monkeypatch, script)
+    eng = _cont_engine(cfg, None, ctrl, pp, "inflight", chunk=chunk, **kw)
+    infl = eng.run(_reqs(4))
+
+    for a, b in zip(whole, infl):
+        assert _result_tuple(a) == _result_tuple(b), f"uid {a.uid}"
+        assert b.status == "ok"
+    assert {a["uid"] for a in eng.last_stats["admissions"]} == {0, 1, 2, 3}
+
+
+def test_inflight_first_token_step_reflects_replay(monkeypatch):
+    """Whole admission streams its seed at the admission step; an in-flight
+    lane pays its prompt replay first, so first_token_step lands plen steps
+    after admit_step (and retirement bookkeeping agrees across modes)."""
+    cfg = get_reduced("qwen3-8b").replace(d_model=32)
+    script = _refill_scripts()
+    ctrl = C.ControllerConfig(BOUNDARY_IDS, MARKER_IDS, window=10,
+                              min_steps=1, probe_dim=16)
+    pp = C.init_probe_params(cfg.d_model, 16)
+
+    _install_scripted_slots(monkeypatch, script)
+    whole = _cont_engine(cfg, None, ctrl, pp, "whole", chunk=4,
+                         policy="full").run(_reqs(2))
+    for r in whole:
+        assert r.admit_step == r.first_token_step == 0
+        assert r.finish_step > 0
+
+    _install_scripted_inflight(monkeypatch, script)
+    infl = _cont_engine(cfg, None, ctrl, pp, "inflight", chunk=4,
+                        policy="full").run(_reqs(2))
+    for r in infl:
+        # _reqs prompts are 2 tokens: the FLIP lands inside the first chunk,
+        # one replay step after the consumed-at-admission first token
+        assert r.admit_step == 0
+        assert r.first_token_step == len(_reqs(1)[0].prompt) - 1
+        assert r.finish_step > r.first_token_step
+
+
+def test_inflight_matches_whole_real_model(setup):
+    """Real-model bit-parity (greedy/float32) with heterogeneous prompt
+    buckets and mixed budgets: in-flight admission grows the prompt buffer
+    across width buckets without perturbing any output."""
+    cfg, params, ctrl, pp = setup
+    prompts = [np.r_[BOS, np.arange(100, 100 + n)].astype(np.int32)
+               for n in (1, 9, 4, 2)]
+    reqs = [ServeRequest(uid=i, prompt=p, max_new=m)
+            for i, (p, m) in enumerate(zip(prompts, (10, 24, 10, 24)))]
+    res = {}
+    for mode in ("whole", "inflight"):
+        eng = _cont_engine(cfg, params, ctrl, pp, mode, chunk=6,
+                           policy="crop", crop_budget=5, seed=3)
+        res[mode] = eng.run(reqs)
+    for a, b in zip(res["whole"], res["inflight"]):
+        assert _result_tuple(a) == _result_tuple(b), f"uid {a.uid}"
+
+
+@pytest.mark.parametrize("arch", FAMILY_ARCHS)
+def test_inflight_matches_whole_all_families(arch):
+    """In-flight admission is family-agnostic: the empty persistent cache
+    from ``init_decode_cache`` (ssm state, hybrid stacks, cross-K/V,
+    windowed rings included) replays prompts to the same fixed point as
+    whole-prompt prefill for every non-dense family."""
+    cfg = get_reduced(arch)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    ctrl = C.ControllerConfig(BOUNDARY_IDS, MARKER_IDS, window=10,
+                              min_steps=1, probe_dim=16)
+    pp = C.init_probe_params(cfg.d_model, 16)
+    reqs = _family_requests(cfg)
+    res = {}
+    for mode in ("whole", "inflight"):
+        eng = _cont_engine(cfg, params, ctrl, pp, mode, chunk=4,
+                           policy="crop", crop_budget=4, seed=3)
+        res[mode] = eng.run(reqs)
+    for a, b in zip(res["whole"], res["inflight"]):
+        assert _result_tuple(a) == _result_tuple(b), f"{arch} uid {a.uid}"
