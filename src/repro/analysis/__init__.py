@@ -1,24 +1,39 @@
 """Dynamic trace-hygiene tooling: transfer-guard sanitizers and the
 host-sync ledger that turns "one host sync per chunk" into an asserted
 invariant (see :mod:`repro.analysis.guards`).  The static half lives in
-``tools/tracelint`` at the repo root."""
+``tools/tracelint`` at the repo root.
 
-from repro.analysis.guards import (
-    TransferLedger,
-    attach_ledger,
-    chunk_guard,
-    device_scalar,
-    host_sync,
-    sanitize_enabled,
-    sanitize_scope,
-)
+The package ``__init__`` is lazy (PEP 562): ``repro.analysis.sanitize`` is
+jax-free and importable from the declared jax-free serving modules, so the
+eager ``guards`` import (which pulls jax) must not run at package-import
+time.  ``from repro.analysis import guards`` and attribute access on the
+package both still work unchanged.
+"""
 
 __all__ = [
+    "ThreadOwnershipGuard",
     "TransferLedger",
     "attach_ledger",
     "chunk_guard",
+    "device_array",
     "device_scalar",
     "host_sync",
     "sanitize_enabled",
     "sanitize_scope",
 ]
+
+
+def __getattr__(name):
+    if name == "sanitize_enabled":
+        from repro.analysis.sanitize import sanitize_enabled
+
+        return sanitize_enabled
+    if name in __all__:
+        from repro.analysis import guards
+
+        return getattr(guards, name)
+    raise AttributeError(f"module 'repro.analysis' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(__all__)

@@ -33,11 +33,13 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
-import os
+import threading
 from typing import Dict, Iterator, List, Optional
 
 import jax
 import numpy as np
+
+from repro.analysis.sanitize import sanitize_enabled  # noqa: F401  (re-export)
 
 
 @dataclasses.dataclass
@@ -126,14 +128,61 @@ def chunk_guard() -> Iterator[None]:
         yield
 
 
-def sanitize_enabled() -> bool:
-    """True when ``REPRO_SANITIZE=1`` (or any truthy value) is set."""
-    return os.environ.get("REPRO_SANITIZE", "").strip().lower() in {
-        "1",
-        "true",
-        "yes",
-        "on",
-    }
+class ThreadOwnershipGuard:
+    """Runtime mirror of tracelint R102/R103/R105: one thread owns a
+    surface.
+
+    JAX dispatch is not thread-safe across concurrent callers and the
+    engine's session state is mutable host bookkeeping, so exactly one
+    thread may drive ``Engine.submit`` / ``step_chunk`` / ``drain``.  Under
+    ``REPRO_SANITIZE=1`` each of those entry points calls :meth:`check`:
+    the first caller binds ownership implicitly (offline ``Engine.run`` on
+    the main thread just works), and any call from a *different* thread
+    raises.  ``AsyncFrontend`` binds its worker explicitly via
+    :meth:`bind` before the first engine call, so a stray loop-side engine
+    call fails loudly instead of racing the worker.
+
+    The env gate is consulted at check time (not construction), so tests
+    that flip ``REPRO_SANITIZE`` via monkeypatch see the change without
+    rebuilding the engine; pass ``enabled=`` to pin it explicitly.
+    """
+
+    def __init__(self, name: str = "Engine", enabled: Optional[bool] = None):
+        self.name = name
+        self._enabled = enabled
+        self._owner: Optional[threading.Thread] = None
+
+    def _on(self) -> bool:
+        return sanitize_enabled() if self._enabled is None else self._enabled
+
+    @property
+    def owner(self) -> Optional[threading.Thread]:
+        return self._owner
+
+    def bind(self, thread: Optional[threading.Thread] = None) -> None:
+        """Explicitly (re)bind ownership to ``thread`` (default: caller).
+
+        Rebinding is allowed — a frontend taking over an engine built on
+        the main thread is the expected handoff — but happens even when
+        the sanitizer tier is off, so the guard's state stays coherent
+        with who actually drives the engine."""
+        self._owner = thread if thread is not None else threading.current_thread()
+
+    def check(self, op: str) -> None:
+        """Assert the caller is the owning thread (first caller binds)."""
+        if not self._on():
+            return
+        cur = threading.current_thread()
+        if self._owner is None:
+            self._owner = cur
+            return
+        if cur is not self._owner:
+            raise RuntimeError(
+                f"{self.name}.{op}() called from thread {cur.name!r} but the "
+                f"surface is owned by thread {self._owner.name!r}; exactly "
+                "one thread may drive submit/step_chunk/drain (tracelint "
+                "R105 is the static mirror of this check)"
+            )
 
 
 @contextlib.contextmanager

@@ -1,0 +1,24 @@
+"""Jax-free sanitizer-tier switch.
+
+The ``REPRO_SANITIZE`` gate is consulted by both sides of the house: the
+device-facing guards in :mod:`repro.analysis.guards` (transfer guards,
+debug_nans, the engine's :class:`ThreadOwnershipGuard`) and the jax-free
+serving front end (:mod:`repro.serving.frontend` asserts loop affinity on
+its streams).  The front end is a declared jax-free module (tracelint
+R104), so the switch lives here — importing this module must never pull in
+jax.  ``guards`` re-exports it for back-compat.
+"""
+
+from __future__ import annotations
+
+import os
+
+
+def sanitize_enabled() -> bool:
+    """True when ``REPRO_SANITIZE=1`` (or any truthy value) is set."""
+    return os.environ.get("REPRO_SANITIZE", "").strip().lower() in {
+        "1",
+        "true",
+        "yes",
+        "on",
+    }

@@ -1,0 +1,72 @@
+"""Device-facing construction for the online launcher.
+
+``repro.launch.server`` is a declared jax-free module (tracelint R104): a
+jax-less client process must be able to import it and drive a remote
+engine.  Everything that touches jax, model params, or the controller —
+the pieces ``server.main`` used to build inline — lives here instead, and
+the launcher imports only this module's *functions*, never jax itself.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_reduced
+from repro.core import controller as ctrl_mod
+from repro.data.traces import BOS, BOUNDARY_IDS, MARKER_IDS
+from repro.models import model as model_mod
+from repro.serving import Engine, EngineConfig, ServeRequest, stub_ctx
+
+ARCH_CHOICES = tuple(ARCH_IDS)
+
+
+def build_online_engine(
+    arch: str,
+    *,
+    lanes: int = 4,
+    chunk: int = 16,
+    prefill: str = "whole",
+    seed: int = 0,
+    vocab_size: int = 512,
+) -> Engine:
+    """A continuous-batching engine on the reduced config for ``arch``,
+    ready for the asyncio front end (real init'd params, full controller)."""
+    cfg = get_reduced(arch).replace(vocab_size=vocab_size)
+    params = model_mod.init_params(cfg, jax.random.PRNGKey(seed))
+    pp = ctrl_mod.init_probe_params(cfg.d_model, cfg.probe_dim)
+    ctrl = ctrl_mod.ControllerConfig(
+        boundary_ids=BOUNDARY_IDS, marker_ids=MARKER_IDS,
+        window=10, min_steps=2, probe_dim=cfg.probe_dim)
+    return Engine(cfg, params, ctrl=ctrl, probe_params=pp,
+                  engine=EngineConfig(
+                      lanes=lanes, policy="full", scheduler="continuous",
+                      chunk=chunk, prefill=prefill))
+
+
+def synthetic_arrivals(
+    engine: Engine,
+    *,
+    requests: int = 16,
+    prompt_len: int = 24,
+    max_new: int = 32,
+    rate: float = 0.0,
+    seed: int = 0,
+):
+    """``(delay_s, ServeRequest)`` pairs for an open-loop Poisson replay.
+
+    ``rate`` is the mean arrival rate in requests/second; 0 means burst
+    (every request at t=0, the saturating regime).  Delays are relative to
+    the previous arrival, matching ``serve_requests``.
+    """
+    cfg = engine.cfg
+    rng = np.random.default_rng(seed)
+    prompts = [
+        np.concatenate([[BOS], rng.integers(4, 260, prompt_len - 1)])
+        .astype(np.int32) for _ in range(requests)]
+    reqs = [ServeRequest(uid=i, prompt=p, max_new=max_new,
+                         ctx=stub_ctx(cfg, rng))
+            for i, p in enumerate(prompts)]
+    delays = (rng.exponential(1.0 / rate, requests)
+              if rate > 0 else np.zeros(requests))
+    return list(zip(delays.tolist(), reqs))

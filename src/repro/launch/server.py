@@ -12,6 +12,12 @@ whole stack.  The interesting comparison is ``--prefill whole`` vs
 chunked prefill admits new prompts *into* the running scan chunk instead of
 stalling the batch on a whole-prompt prefill, which is exactly the tail
 (p99) TTFT regime.
+
+This module is a declared **jax-free** boundary (tracelint R104): every
+device-facing import — jax, configs, model params, the controller — lives
+in :mod:`repro.launch.builders`, and this file only wires arguments to
+builder calls and formats the result.  A jax-less client could reuse the
+argument surface and reporting verbatim against a remote engine.
 """
 
 from __future__ import annotations
@@ -19,28 +25,29 @@ from __future__ import annotations
 import argparse
 import asyncio
 import json
+import math
 
-import jax
-import numpy as np
-
-from repro.configs import ARCH_IDS, get_reduced
-from repro.core import controller as ctrl_mod
-from repro.data.traces import BOS, BOUNDARY_IDS, MARKER_IDS
-from repro.models import model as model_mod
-from repro.serving import Engine, EngineConfig, ServeRequest, stub_ctx
+from repro.launch.builders import ARCH_CHOICES, build_online_engine, synthetic_arrivals
 from repro.serving.frontend import serve_requests
 
 
 def _percentiles(xs, ps=(50, 99)):
-    xs = [x for x in xs if x is not None]
+    xs = sorted(x for x in xs if x is not None)
     if not xs:
         return {f"p{p}": None for p in ps}
-    return {f"p{p}": float(np.percentile(xs, p)) for p in ps}
+    out = {}
+    for p in ps:
+        # linear-interpolation percentile (numpy default), stdlib-only
+        rank = (len(xs) - 1) * (p / 100.0)
+        lo = math.floor(rank)
+        hi = math.ceil(rank)
+        out[f"p{p}"] = float(xs[lo] + (xs[hi] - xs[lo]) * (rank - lo))
+    return out
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen3-8b", choices=list(ARCH_IDS))
+    ap.add_argument("--arch", default="qwen3-8b", choices=list(ARCH_CHOICES))
     ap.add_argument("--lanes", type=int, default=4)
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--prompt-len", type=int, default=24)
@@ -56,28 +63,14 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    cfg = get_reduced(args.arch).replace(vocab_size=512)
-    params = model_mod.init_params(cfg, jax.random.PRNGKey(args.seed))
-    pp = ctrl_mod.init_probe_params(cfg.d_model, cfg.probe_dim)
-    ctrl = ctrl_mod.ControllerConfig(
-        boundary_ids=BOUNDARY_IDS, marker_ids=MARKER_IDS,
-        window=10, min_steps=2, probe_dim=cfg.probe_dim)
-    eng = Engine(cfg, params, ctrl=ctrl, probe_params=pp,
-                 engine=EngineConfig(
-                     lanes=args.lanes, policy="full", scheduler="continuous",
-                     chunk=args.chunk, prefill=args.prefill))
+    eng = build_online_engine(
+        args.arch, lanes=args.lanes, chunk=args.chunk,
+        prefill=args.prefill, seed=args.seed)
+    arrivals = synthetic_arrivals(
+        eng, requests=args.requests, prompt_len=args.prompt_len,
+        max_new=args.max_new, rate=args.rate, seed=args.seed)
 
-    rng = np.random.default_rng(args.seed)
-    prompts = [
-        np.concatenate([[BOS], rng.integers(4, 260, args.prompt_len - 1)])
-        .astype(np.int32) for _ in range(args.requests)]
-    reqs = [ServeRequest(uid=i, prompt=p, max_new=args.max_new,
-                         ctx=stub_ctx(cfg, rng))
-            for i, p in enumerate(prompts)]
-    delays = (rng.exponential(1.0 / args.rate, args.requests)
-              if args.rate > 0 else np.zeros(args.requests))
-
-    streams = asyncio.run(serve_requests(eng, list(zip(delays, reqs))))
+    streams = asyncio.run(serve_requests(eng, arrivals))
 
     stats = eng.last_stats
     print(json.dumps({

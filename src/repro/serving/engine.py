@@ -540,6 +540,10 @@ class Engine:
         self.last_stats: Dict[str, object] = {}
         self._run_chunks = self._run_steps = 0  # wave-mode run counters
         self._session = None                    # active incremental session
+        # Single-thread ownership of the submit/step_chunk/drain surface
+        # (enforced under REPRO_SANITIZE=1; first caller binds, the asyncio
+        # front end binds its worker explicitly via bind_owner_thread()).
+        self._owner_guard = guards.ThreadOwnershipGuard("Engine")
         # Policies compile down to (λ, crop) on device: `full` disables both
         # triggers, `crop` disables the probe, `calibrated` keeps both (the
         # default crop_budget of 1e9 is inert).
@@ -888,6 +892,7 @@ class Engine:
         request that fails screening is terminal immediately: its handle
         carries the rejected result and its ``done`` event is delivered by
         the next :meth:`step_chunk`."""
+        self._owner_guard.check("submit")
         if self._session is None:
             self._session = self._new_session()
         return self._session.submit(req)
@@ -897,6 +902,7 @@ class Engine:
         stream events it produced (``"tokens"`` payloads per request plus
         terminal ``"done"`` events).  Safe to call while idle (returns
         [])."""
+        self._owner_guard.check("step_chunk")
         if self._session is None:
             return []
         with self._sanitize():
@@ -905,6 +911,7 @@ class Engine:
     def drain(self) -> List[ServeResult]:
         """Run the active session to completion: step until idle, finalize
         ``last_stats``, and return results ordered by submission."""
+        self._owner_guard.check("drain")
         if self._session is None:
             self._session = self._new_session()
         session, self._session = self._session, None
@@ -920,6 +927,14 @@ class Engine:
         for r in requests:
             self.submit(r)
         return self.drain()
+
+    def bind_owner_thread(self, thread=None) -> None:
+        """Bind the submit/step_chunk/drain surface to ``thread`` (default:
+        the calling thread).  The asyncio front end calls this from its
+        worker before the first engine call so that, under
+        ``REPRO_SANITIZE=1``, a stray loop-side engine call raises instead
+        of racing the worker (tracelint R105 is the static mirror)."""
+        self._owner_guard.bind(thread)
 
     @staticmethod
     def _book_from_state(state: ctrl_mod.ControllerState) -> Dict[str, np.ndarray]:

@@ -1,7 +1,8 @@
 """Asyncio streaming front end over the engine's streaming-first core API.
 
-This module is strictly **host-side and jax-free** (enforced by
-``tests/test_frontend.py``): the device-facing engine loop runs on a
+This module is strictly **host-side and jax-free** (a declared tracelint
+R104 boundary — only stdlib plus ``repro.serving.events`` and the jax-free
+``repro.analysis.sanitize`` switch): the device-facing engine loop runs on a
 dedicated worker thread, and the asyncio side only ever touches Python
 queues, futures, and :mod:`repro.serving.events` values.  The split keeps
 the event loop responsive — a decode chunk never blocks a coroutine — and
@@ -43,6 +44,7 @@ import threading
 import time
 from typing import AsyncIterator, List, Optional
 
+from repro.analysis.sanitize import sanitize_enabled
 from repro.serving.events import StreamEvent
 
 
@@ -64,9 +66,22 @@ class AsyncStream:
         self.first_token_at: Optional[float] = None
         self.finished_at: Optional[float] = None
         self.n_tokens = 0
+        # REPRO_SANITIZE=1: _post asserts it runs on the owning loop (the
+        # runtime mirror of tracelint R103's loop-affinity rule)
+        self._check_affinity = sanitize_enabled()
 
     def _post(self, event: StreamEvent, t: float) -> None:
         # loop-thread only (scheduled by the worker via call_soon_threadsafe)
+        if self._check_affinity:
+            try:
+                running = asyncio.get_running_loop()
+            except RuntimeError:
+                running = None
+            if running is not self._loop:
+                raise RuntimeError(
+                    "AsyncStream._post() called off its owning event loop; "
+                    "the worker must cross via loop.call_soon_threadsafe "
+                    "(tracelint R103 is the static mirror of this check)")
         if event.kind == "tokens":
             if self.first_token_at is None:
                 self.first_token_at = t
@@ -79,11 +94,22 @@ class AsyncStream:
                 self._result.set_result(event.result)
         self._events.put_nowait(event)
 
+    def _abort(self, exc: BaseException) -> None:
+        # loop-thread only: terminate BOTH consumption surfaces — the result
+        # future and the event iterator (an exception sentinel in the queue
+        # wakes any `async for` parked on get(), so no awaiter hangs)
+        if not self._result.done():
+            self._result.set_exception(exc)
+        self._events.put_nowait(exc)
+
     async def stream(self) -> AsyncIterator[StreamEvent]:
         """Yield this request's events; terminates after the ``"done"``
-        event (every request gets exactly one, whatever its status)."""
+        event (every request gets exactly one, whatever its status) or
+        raises if the engine worker died before producing it."""
         while True:
             event = await self._events.get()
+            if isinstance(event, BaseException):
+                raise event
             yield event
             if event.kind == "done":
                 return
@@ -150,7 +176,8 @@ class AsyncFrontend:
         screening happens on the worker — a rejected request's stream just
         receives its terminal event)."""
         if self._closed:
-            raise RuntimeError("frontend is draining; no new submissions")
+            raise RuntimeError(
+                "frontend is closed (draining or failed); no new submissions")
         stream = AsyncStream(req.uid, self._loop)
         self._subq.put((req, stream))
         self._wake.set()
@@ -184,6 +211,13 @@ class AsyncFrontend:
 
     def _worker(self) -> None:
         eng = self._eng
+        # Own the engine's submit/step_chunk/drain surface before the first
+        # call: under REPRO_SANITIZE=1 a stray loop-side engine call then
+        # raises instead of racing the worker (getattr keeps the engine
+        # protocol duck-typed for test doubles).
+        bind = getattr(eng, "bind_owner_thread", None)
+        if bind is not None:
+            bind()
         try:
             while True:
                 self._ingest()
@@ -202,11 +236,22 @@ class AsyncFrontend:
             self._loop.call_soon_threadsafe(self._fail, exc)
 
     def _fail(self, exc: BaseException) -> None:
+        # Loop-thread only, scheduled by the dying worker (which has already
+        # returned — `_streams`/`_subq` have no writer left).  Close
+        # submission, then terminate EVERY consumption surface: the drain
+        # future, queued-but-never-ingested streams, and live streams — so
+        # no awaiter (result() or an `async for` over stream()) ever hangs.
+        self._closed = True
         if not self._results.done():
             self._results.set_exception(exc)
+        while True:
+            try:
+                _req, stream = self._subq.get_nowait()
+            except queue.Empty:
+                break
+            stream._abort(exc)
         for stream in self._streams.values():
-            if not stream._result.done():
-                stream._result.set_exception(exc)
+            stream._abort(exc)
 
 
 async def serve_requests(engine, arrivals) -> List[AsyncStream]:

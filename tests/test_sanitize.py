@@ -8,6 +8,8 @@ counts are deterministic and fast; the cross-check that every
 ``host_sync`` wrapper is done by patching ``jax.device_get`` itself.
 """
 
+import threading
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -82,6 +84,139 @@ def test_sanitize_enabled_parsing(monkeypatch):
         assert guards.sanitize_enabled() is expect
     monkeypatch.delenv("REPRO_SANITIZE")
     assert guards.sanitize_enabled() is False
+
+
+# ---------------------------------------------------------------------------
+# thread-ownership guard (the dynamic mirror of tracelint R105)
+
+
+def test_owner_guard_first_caller_binds(monkeypatch):
+    monkeypatch.delenv("REPRO_SANITIZE", raising=False)
+    g = guards.ThreadOwnershipGuard("Engine")
+    g.check("submit")                       # sanitizer off: no-op, no bind
+    assert g.owner is None
+
+    g = guards.ThreadOwnershipGuard("Engine", enabled=True)
+    g.check("submit")                       # first caller binds implicitly
+    assert g.owner is threading.current_thread()
+    g.check("step_chunk")                   # same thread: fine
+
+    seen = {}
+
+    def foreign():
+        try:
+            g.check("drain")
+        except RuntimeError as e:
+            seen["err"] = str(e)
+
+    t = threading.Thread(target=foreign, name="intruder")
+    t.start()
+    t.join()
+    assert "owned by" in seen["err"] and "Engine.drain()" in seen["err"]
+
+
+def test_owner_guard_explicit_rebind(monkeypatch):
+    monkeypatch.delenv("REPRO_SANITIZE", raising=False)
+    g = guards.ThreadOwnershipGuard(enabled=True)
+    g.check("submit")                       # main thread owns
+    holder = {}
+
+    def claim():
+        g.bind()                            # explicit handoff (frontend shape)
+        holder["t"] = threading.current_thread()
+
+    t = threading.Thread(target=claim)
+    t.start()
+    t.join()
+    assert g.owner is holder["t"]
+    with pytest.raises(RuntimeError, match="owned by"):
+        g.check("submit")                   # main no longer owns
+
+
+def test_owner_guard_env_gate_checked_at_call_time(monkeypatch):
+    g = guards.ThreadOwnershipGuard()
+    monkeypatch.delenv("REPRO_SANITIZE", raising=False)
+    g.check("submit")
+    assert g.owner is None                  # off at check time: no binding
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    g.check("submit")                       # flipped on: binds now
+    assert g.owner is threading.current_thread()
+
+    pinned_off = guards.ThreadOwnershipGuard(enabled=False)
+    pinned_off.check("submit")
+    assert pinned_off.owner is None         # env says on, pin wins
+
+
+def _owner_script(n=4):
+    return np.asarray(
+        [([CONTENT] * (4 + 2 * rid) + [6, 8 + rid, 2]
+          + [CONTENT] * 16)[:20] for rid in range(n)], np.int32)
+
+
+def test_engine_owner_guard_cross_thread(monkeypatch):
+    """Under REPRO_SANITIZE=1 the first engine caller binds the
+    submit/step_chunk/drain surface and a call from any other thread
+    raises — while the owning thread keeps serving normally."""
+    from test_scheduler import _install_scripted_slots
+
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    cfg = get_reduced("qwen3-8b").replace(d_model=32)
+    _install_scripted_slots(monkeypatch, _owner_script())
+    ctrl, pp = _ctrl_pp(cfg)
+    eng = Engine(cfg, None, ctrl=ctrl, probe_params=pp, lanes=2,
+                 policy="full", scheduler="continuous", chunk=4)
+
+    handles = [eng.submit(r) for r in _reqs(2, max_new=16)]  # main binds
+    err = {}
+
+    def drive():
+        try:
+            eng.step_chunk()
+        except RuntimeError as e:
+            err["msg"] = str(e)
+
+    t = threading.Thread(target=drive, name="intruder")
+    t.start()
+    t.join()
+    assert "owned by" in err["msg"] and "Engine.step_chunk()" in err["msg"]
+
+    # the owner is unaffected: run to completion on the main thread
+    while not eng.idle:
+        eng.step_chunk()
+    results = eng.drain()
+    assert [r.status for r in results] == ["ok", "ok"]
+    assert all(h.done for h in handles)
+
+
+def test_engine_owner_guard_explicit_handoff(monkeypatch):
+    """``Engine.bind_owner_thread`` moves ownership to a worker before its
+    first call — the AsyncFrontend handoff — after which the building
+    thread's own calls fail loudly."""
+    from test_scheduler import _install_scripted_slots
+
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    cfg = get_reduced("qwen3-8b").replace(d_model=32)
+    _install_scripted_slots(monkeypatch, _owner_script())
+    ctrl, pp = _ctrl_pp(cfg)
+    eng = Engine(cfg, None, ctrl=ctrl, probe_params=pp, lanes=2,
+                 policy="full", scheduler="continuous", chunk=4)
+    reqs = _reqs(2, max_new=16)
+    box = {}
+
+    def worker():
+        eng.bind_owner_thread()
+        for r in reqs:
+            eng.submit(r)
+        while not eng.idle:
+            eng.step_chunk()
+        box["results"] = eng.drain()
+
+    t = threading.Thread(target=worker, name="owner")
+    t.start()
+    t.join()
+    assert [r.status for r in box["results"]] == ["ok", "ok"]
+    with pytest.raises(RuntimeError, match="owned by"):
+        eng.submit(reqs[0])                 # builder thread lost the surface
 
 
 # ---------------------------------------------------------------------------

@@ -20,7 +20,19 @@ if str(REPO_ROOT) not in sys.path:
 from tools.tracelint import core  # noqa: E402
 
 FIXTURES = Path(__file__).resolve().parent / "tracelint_fixtures"
-RULES = ("R001", "R002", "R003", "R004", "R005")
+RULES = (
+    "R001",
+    "R002",
+    "R003",
+    "R004",
+    "R005",
+    # concurrency pack (thread-reachability engine: tools/tracelint/threadscope)
+    "R101",
+    "R102",
+    "R103",
+    "R104",
+    "R105",
+)
 
 
 def lint(path: Path):
@@ -187,6 +199,68 @@ def test_cli_exit_codes_and_json(tmp_path):
     assert proc.returncode == 0
     for rule in RULES:
         assert rule in proc.stdout
+
+
+def test_cli_fail_on_stale(tmp_path):
+    """Stale baseline entries are a warning by default, exit 1 under
+    --fail-on-stale (the quickcheck gate keeps the baseline honest)."""
+    mod = tmp_path / "mod.py"
+    mod.write_text("import jax\n\n@jax.jit\ndef f(x):\n    return int(x)\n")
+    bl = tmp_path / "baseline.json"
+    proc = _run_cli(str(mod), "--baseline", str(bl), "--write-baseline")
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+    mod.write_text("import jax\n\n@jax.jit\ndef f(x):\n    return x\n")  # fixed
+    proc = _run_cli(str(mod), "--baseline", str(bl))
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    proc = _run_cli(str(mod), "--baseline", str(bl), "--fail-on-stale")
+    assert proc.returncode == 1
+    assert "stale" in proc.stderr
+
+
+# ---------------------------------------------------------------------------
+# threadscope (the concurrency pack's reachability engine)
+
+
+def test_threadscope_classifies_loop_vs_worker():
+    import ast
+
+    from tools.tracelint import threadscope
+
+    src = textwrap.dedent(
+        """
+        import asyncio
+        import threading
+
+        class Front:
+            def start(self):
+                self._t = threading.Thread(target=self._worker)
+                self._t.start()
+
+            async def submit(self, req):
+                self._pump(req)
+
+            def _pump(self, req):
+                self._q.append(req)
+
+            def _worker(self):
+                while True:
+                    self._spin()
+
+            def _spin(self):
+                pass
+        """
+    )
+    idx = threadscope.ThreadIndex(ast.parse(src))
+    assert idx.has_roots
+    # async def + its transitive sync callee run on the event loop
+    assert idx.loop_side("Front.submit") and not idx.worker_side("Front.submit")
+    assert idx.loop_side("Front._pump") and not idx.worker_side("Front._pump")
+    # Thread target + its transitive callee run on the worker
+    assert idx.worker_side("Front._worker") and not idx.loop_side("Front._worker")
+    assert idx.worker_side("Front._spin") and not idx.loop_side("Front._spin")
+    # start() is scheduled from neither root set
+    assert not idx.loop_side("Front.start") and not idx.worker_side("Front.start")
 
 
 def test_syntax_error_reported_not_crash(tmp_path):

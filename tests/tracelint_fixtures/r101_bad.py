@@ -1,0 +1,40 @@
+"""R101 bad: blocking calls in event-loop-reachable code."""
+
+import queue
+import threading
+import time
+
+
+async def sleeps():
+    time.sleep(0.1)  # blocks the whole loop for 100ms
+
+
+async def drains():
+    subq = queue.Queue()
+    item = subq.get()  # blocking host-queue get inside a coroutine
+    subq.put(item)  # bounded put can block too
+
+
+async def joins():
+    t = threading.Thread(target=work)
+    t.start()
+    t.join()  # parks the loop until the worker exits
+
+
+def work():
+    pass
+
+
+def pump():
+    # not async itself, but reachable from `run` below — still loop code
+    ch = queue.SimpleQueue()
+    return ch.get()
+
+
+async def run():
+    return pump()
+
+
+async def reads():
+    with open("trace.json") as fh:  # file I/O on the loop
+        return fh.read()

@@ -1,0 +1,48 @@
+"""R101 good: the sanctioned versions — waits live on the worker thread or
+cross through run_in_executor, and loop-side queue access is nonblocking."""
+
+import asyncio
+import queue
+import threading
+import time
+
+
+def worker(subq):
+    # worker-thread root (Thread target below): blocking here is the point
+    while True:
+        item = subq.get()
+        if item is None:
+            return
+        time.sleep(0.001)
+
+
+def spin():
+    subq = queue.SimpleQueue()
+    t = threading.Thread(target=worker, args=(subq,))
+    t.start()
+    subq.put(None)  # SimpleQueue.put never blocks (unbounded)
+    return t
+
+
+async def naps():
+    await asyncio.sleep(0.1)  # the loop-side sleep
+
+
+async def offloads():
+    # blocking work routed through the executor is the sanctioned escape
+    loop = asyncio.get_running_loop()
+    return await loop.run_in_executor(None, time.sleep, 0.1)
+
+
+async def polls():
+    subq = queue.SimpleQueue()
+    try:
+        return subq.get_nowait()  # nonblocking loop-side access
+    except queue.Empty:
+        return None
+
+
+async def peeks():
+    subq = queue.Queue()
+    subq.put_nowait(1)
+    return subq.get(block=False)  # explicit nonblocking get

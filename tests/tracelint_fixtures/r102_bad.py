@@ -1,0 +1,21 @@
+"""R102 bad: attributes written on the worker side and read on the loop
+side with no queue, call_soon_threadsafe, or lock in between."""
+
+import threading
+
+
+class Telemetry:
+    def __init__(self):
+        self.count = 0
+        self.last = None
+        self._thread = threading.Thread(target=self._worker)
+
+    def _worker(self):
+        self.count += 1  # worker-side write
+        self.last = "chunk"  # worker-side write
+
+    async def read(self):
+        return self.count  # racy unsynchronized cross-thread read
+
+    async def peek(self):
+        return self.last  # ditto, different attribute

@@ -1,0 +1,36 @@
+"""R102 good: worker→loop data crosses through a lock, a queue, or a
+call_soon_threadsafe handoff — the three sanctioned channels."""
+
+import asyncio
+import queue
+import threading
+
+
+class Telemetry:
+    def __init__(self):
+        self.count = 0
+        self.latest = None
+        self._lock = threading.Lock()
+        self._events = queue.SimpleQueue()
+        self._loop = asyncio.get_event_loop()
+        self._thread = threading.Thread(target=self._worker)
+
+    def _worker(self):
+        with self._lock:
+            self.count += 1  # lock-guarded write...
+        self._events.put("chunk")  # ...or handed through a queue...
+        self._loop.call_soon_threadsafe(self._publish, "chunk")  # ...or posted
+
+    def _publish(self, item):
+        # runs ON the loop (call_soon_threadsafe target): plain writes fine
+        self.latest = item
+
+    async def read(self):
+        with self._lock:
+            return self.count  # lock-guarded read
+
+    async def peek(self):
+        return self.latest  # written loop-side only (_publish)
+
+    async def pull(self):
+        return self._events.get_nowait()

@@ -1,0 +1,22 @@
+"""R103 bad: loop-affine asyncio primitives touched from the worker
+thread (asyncio.Queue/Future are NOT thread-safe; loop.call_soon is not
+the threadsafe variant)."""
+
+import asyncio
+import threading
+
+
+class Bridge:
+    def __init__(self, loop):
+        self._loop = loop
+        self._events = asyncio.Queue()
+        self._done = loop.create_future()
+        self._thread = threading.Thread(target=self._worker)
+
+    def _worker(self):
+        self._events.put_nowait("tok")  # asyncio.Queue mutated off-loop
+        self._done.set_result(None)  # future bound to the loop, set off-loop
+        self._loop.call_soon(self._noop)  # call_soon is not thread-safe
+
+    def _noop(self):
+        pass

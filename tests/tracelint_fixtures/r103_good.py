@@ -1,0 +1,25 @@
+"""R103 good: the worker crosses to the loop only through the two
+sanctioned channels — call_soon_threadsafe and run_coroutine_threadsafe."""
+
+import asyncio
+import threading
+
+
+class Bridge:
+    def __init__(self, loop):
+        self._loop = loop
+        self._events = asyncio.Queue()
+        self._done = loop.create_future()
+        self._thread = threading.Thread(target=self._worker)
+
+    def _worker(self):
+        # bound methods are handed over as references, invoked ON the loop
+        self._loop.call_soon_threadsafe(self._events.put_nowait, "tok")
+        self._loop.call_soon_threadsafe(self._done.set_result, None)
+        fut = asyncio.run_coroutine_threadsafe(self._flush(), self._loop)
+        fut.result()  # blocking on a concurrent future is fine off-loop
+
+    async def _flush(self):
+        # coroutine body runs on the loop: direct primitive access is fine
+        while not self._events.empty():
+            self._events.get_nowait()

@@ -1,0 +1,8 @@
+"""R104 bad: a declared jax-free module importing the device-facing stack."""
+# tracelint: jax-free allow=repro.serving.events
+
+import jax  # noqa: F401 — banned root in a jax-free module
+import jax.numpy as jnp  # noqa: F401 — still the jax root
+
+from repro.serving.engine import Engine  # noqa: F401 — outside the allow list
+from repro.serving.events import StreamEvent  # noqa: F401 — allowed

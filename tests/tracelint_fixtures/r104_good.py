@@ -1,0 +1,11 @@
+"""R104 good: a declared jax-free module sticking to stdlib, host-side
+third-party packages, and its declared repro allow list."""
+# tracelint: jax-free allow=repro.serving.events,repro.analysis.sanitize
+
+import asyncio  # noqa: F401 — stdlib is always fine
+import queue  # noqa: F401
+
+import numpy as np  # noqa: F401 — host-side third-party is fine
+
+from repro.analysis.sanitize import sanitize_enabled  # noqa: F401 — allowed
+from repro.serving.events import StreamEvent  # noqa: F401 — allowed

@@ -1,0 +1,25 @@
+"""R105 bad: lock hygiene — bare acquire with no try/finally, await while
+holding a sync lock, and the engine driven from two different threads."""
+
+import asyncio
+import threading
+
+
+class Pipeline:
+    def __init__(self, engine):
+        self._eng = engine
+        self._lock = threading.Lock()
+        self._t1 = threading.Thread(target=self._pump)
+        self._t2 = threading.Thread(target=self._drainer)
+
+    def _pump(self):
+        self._lock.acquire()  # an exception before release leaks the lock
+        self._eng.step_chunk()  # engine driven from thread t1...
+        self._lock.release()
+
+    def _drainer(self):
+        self._eng.drain()  # ...AND from thread t2
+
+    async def hold(self):
+        with self._lock:
+            await asyncio.sleep(0)  # suspends while holding the sync lock

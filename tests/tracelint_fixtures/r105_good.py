@@ -1,0 +1,32 @@
+"""R105 good: with-statement or try/finally locks, awaits outside the
+sync-lock window, and a single owning thread for the engine surface."""
+
+import asyncio
+import threading
+
+
+class Pipeline:
+    def __init__(self, engine):
+        self._eng = engine
+        self._lock = threading.Lock()
+        self._alock = asyncio.Lock()
+        self._thread = threading.Thread(target=self._worker)
+
+    def _worker(self):
+        self._lock.acquire()  # sanctioned: released in the finally below
+        try:
+            self._eng.submit(None)  # one thread owns the whole surface
+            self._eng.step_chunk()
+            self._eng.drain()
+        finally:
+            self._lock.release()
+
+    async def snapshot(self):
+        with self._lock:  # sync lock held WITHOUT awaiting under it
+            n = self._count()
+        async with self._alock:  # asyncio.Lock may be held across awaits
+            await asyncio.sleep(0)
+        return n
+
+    def _count(self):
+        return 0

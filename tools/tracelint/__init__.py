@@ -18,6 +18,25 @@ tracelint statically checks the bug classes that have actually bitten us:
 * **R005** Pallas contracts: grid/BlockSpec rank mismatches, ``out_shape``
   dtype disagreements, kernels that don't plumb ``interpret`` through.
 
+The concurrency pack (``tools/tracelint/conrules.py``, backed by the
+``threadscope`` thread-reachability engine) covers the asyncio serving seam:
+
+* **R101** blocking calls (``time.sleep``, ``queue.*.get/put``,
+  ``Thread.join``, ``Future.result``, file/subprocess I/O, jax dispatch,
+  ``Engine`` methods) in event-loop-reachable code, unless routed through
+  ``run_in_executor``.
+* **R102** attributes written worker-side and read loop-side without a
+  queue, ``call_soon_threadsafe``, or a lock in between.
+* **R103** loop-affine asyncio primitives (``asyncio.Queue``/``Future``/
+  ``Event``) touched from worker-reachable code except via
+  ``call_soon_threadsafe`` / ``run_coroutine_threadsafe``.
+* **R104** jax-free module boundary: ``serving/frontend.py``,
+  ``serving/events.py``, and ``launch/server.py`` must not import jax or
+  undeclared ``repro.*`` modules.
+* **R105** lock hygiene: bare ``.acquire()`` without try/finally, ``await``
+  under a synchronous lock, and the ``Engine.submit/step_chunk/drain/run``
+  surface driven from more than one thread.
+
 Run ``python -m tools.tracelint src/`` from the repo root.  Findings can be
 suppressed inline with ``# tracelint: disable=R001`` (or a bare
 ``# tracelint: disable`` for all rules) or grandfathered in the checked-in

@@ -35,6 +35,12 @@ def main(argv=None) -> int:
         action="store_true",
         help="grandfather ALL current findings into the baseline file and exit 0",
     )
+    ap.add_argument(
+        "--fail-on-stale",
+        action="store_true",
+        help="exit 1 when the baseline has stale entries (fixed findings "
+        "whose grandfathering should be deleted)",
+    )
     ap.add_argument("--json", type=Path, default=None, help="also write a JSON report here")
     ap.add_argument("--list-rules", action="store_true", help="print the rule set and exit")
     ap.add_argument(
@@ -79,6 +85,14 @@ def main(argv=None) -> int:
         args.json.parent.mkdir(parents=True, exist_ok=True)
         args.json.write_text(json_report(new, grandfathered, stale, len(files)) + "\n")
     print(text_report(new, grandfathered, stale, len(files)))
+    if not new and stale and args.fail_on_stale:
+        print(
+            f"tracelint: {len(stale)} stale baseline entr"
+            f"{'y' if len(stale) == 1 else 'ies'} (--fail-on-stale): delete "
+            f"the fixed findings from {args.baseline}",
+            file=sys.stderr,
+        )
+        return 1
     return 1 if new else 0
 
 

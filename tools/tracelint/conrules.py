@@ -1,0 +1,497 @@
+"""The concurrency rule pack (R101–R105) for the asyncio serving seam.
+
+PR 8 put an event loop plus a dedicated engine worker thread in the hot
+path; these rules check the bug classes that seam invites, using
+:mod:`threadscope`'s per-module thread-reachability classification the way
+R001–R005 use :mod:`jitscope`'s traced-scope discovery.
+
+* **R101** blocking calls in event-loop-reachable code.
+* **R102** attributes written on the worker side and read on the loop side
+  without a queue, ``call_soon_threadsafe``, or a lock in between.
+* **R103** loop-affine asyncio primitives touched from worker-reachable
+  code except via ``call_soon_threadsafe`` / ``run_coroutine_threadsafe``.
+* **R104** jax-free module boundary: declared modules must not import jax
+  or undeclared ``repro.*`` modules (the device-facing stack).
+* **R105** lock hygiene: bare ``.acquire()`` without a try/finally
+  release, ``await`` while holding a synchronous lock, and
+  ``Engine.submit/step_chunk/drain/run`` driven from more than one thread.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+from tools.tracelint.core import Finding, ModuleContext, Rule, register
+from tools.tracelint.jitscope import dotted_name
+from tools.tracelint.threadscope import (
+    CHANNEL_KINDS,
+    ThreadIndex,
+    walk_body,
+)
+
+#: synchronous lock kinds — holding one across threads / awaits is the bug
+SYNC_LOCK_KINDS = frozenset({"lock", "condition"})
+#: asyncio primitives that are affine to the loop that created them
+LOOP_AFFINE_KINDS = frozenset({"aqueue", "aevent", "alock", "afuture"})
+#: engine surface a single thread must own
+ENGINE_METHODS = frozenset({"submit", "step_chunk", "drain", "run"})
+
+_BLOCKING_DOTTED = {
+    "time.sleep": "time.sleep() blocks the event loop; use `await asyncio.sleep(...)`",
+    "subprocess.run": "subprocess call blocks the event loop",
+    "subprocess.Popen": "subprocess call blocks the event loop",
+    "subprocess.call": "subprocess call blocks the event loop",
+    "subprocess.check_call": "subprocess call blocks the event loop",
+    "subprocess.check_output": "subprocess call blocks the event loop",
+    "os.system": "os.system() blocks the event loop",
+    "os.popen": "os.popen() blocks the event loop",
+}
+
+#: declared jax-free modules -> repro import prefixes they may use
+JAX_FREE_MODULES: Dict[str, Tuple[str, ...]] = {
+    "src/repro/serving/events.py": (),
+    "src/repro/serving/frontend.py": (
+        "repro.serving.events",
+        "repro.analysis.sanitize",
+    ),
+    "src/repro/launch/server.py": (
+        "repro.launch.builders",
+        "repro.serving.frontend",
+        "repro.serving.events",
+    ),
+}
+
+_BANNED_ROOTS = ("jax", "jaxlib", "flax")
+
+_JAXFREE_MARKER_RE = re.compile(
+    r"#\s*tracelint:\s*jax-free(?:\s+allow=(?P<allow>[\w.,]+))?"
+)
+
+
+def _tindex(ctx: ModuleContext) -> ThreadIndex:
+    cached = getattr(ctx, "_thread_index", None)
+    if cached is None:
+        cached = ThreadIndex(ctx.tree)
+        ctx._thread_index = cached
+    return cached
+
+
+def _call_kw(call: ast.Call, name: str) -> Optional[ast.AST]:
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None
+
+
+def _nonblocking_get_put(call: ast.Call) -> bool:
+    """``q.get(block=False)`` / ``q.put(x, block=False)`` do not block."""
+    blk = _call_kw(call, "block")
+    return isinstance(blk, ast.Constant) and blk.value is False
+
+
+def _with_lock_nodes(idx: ThreadIndex, qual: str, fn: ast.AST) -> Set[int]:
+    """ids of nodes lexically inside a ``with <sync lock>:`` block."""
+    inside: Set[int] = set()
+
+    def visit(node: ast.AST, locked: bool) -> None:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+            if id(node) != id(fn):
+                return
+        if isinstance(node, ast.With):
+            held = locked or any(
+                idx.receiver_kind(qual, item.context_expr) in SYNC_LOCK_KINDS
+                for item in node.items
+            )
+            for child in ast.iter_child_nodes(node):
+                if locked or held:
+                    inside.add(id(child))
+                visit(child, held)
+            return
+        if locked:
+            inside.add(id(node))
+        for child in ast.iter_child_nodes(node):
+            if locked:
+                inside.add(id(child))
+            visit(child, locked)
+
+    visit(fn, False)
+    return inside
+
+
+@register
+class BlockingInLoopRule(Rule):
+    """R101: blocking calls in event-loop-reachable code."""
+
+    code = "R101"
+    name = "blocking-in-loop"
+    description = (
+        "blocking call (time.sleep, queue get/put, Thread.join, "
+        "Future.result, file/subprocess I/O, jax dispatch, Engine methods) "
+        "in code transitively reachable from an async def, unless routed "
+        "through run_in_executor"
+    )
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        idx = _tindex(ctx)
+        if not idx.has_roots:
+            return
+        for qual, info in idx.funcs.items():
+            if not idx.loop_side(qual) or qual in idx.executor_targets:
+                continue
+            where = f"'{qual}' is event-loop-reachable ({idx.why(qual)})"
+            for node in walk_body(info.node):
+                if not isinstance(node, ast.Call):
+                    continue
+                msg = self._blocking_reason(idx, qual, node)
+                if msg is not None:
+                    yield ctx.finding(self.code, node, f"{msg}; {where}", symbol=qual)
+
+    def _blocking_reason(
+        self, idx: ThreadIndex, qual: str, call: ast.Call
+    ) -> Optional[str]:
+        d = dotted_name(call.func, idx.aliases)
+        if d in _BLOCKING_DOTTED:
+            return _BLOCKING_DOTTED[d]
+        if d is not None and (d == "jax" or d.startswith("jax.")):
+            return (
+                f"jax call '{d}' dispatches device work on the event loop; "
+                "drive the engine from a worker thread or run_in_executor"
+            )
+        if isinstance(call.func, ast.Name) and call.func.id == "open":
+            return "file I/O blocks the event loop; use run_in_executor"
+        if not isinstance(call.func, ast.Attribute):
+            return None
+        attr = call.func.attr
+        k = idx.receiver_kind(qual, call.func.value)
+        if k == "queue" and attr in ("get", "put", "join"):
+            if attr != "join" and _nonblocking_get_put(call):
+                return None
+            return (
+                f"queue.Queue.{attr}() blocks the event loop; use the "
+                "_nowait variant or an asyncio.Queue"
+            )
+        if k == "simplequeue" and attr == "get":
+            if _nonblocking_get_put(call):
+                return None
+            return "SimpleQueue.get() blocks the event loop; use get_nowait()"
+        if k == "thread" and attr == "join":
+            return "Thread.join() blocks the event loop; use run_in_executor"
+        if k == "cfuture" and attr in ("result", "exception"):
+            return (
+                f"concurrent Future.{attr}() blocks the event loop; wrap with "
+                "asyncio.wrap_future and await it"
+            )
+        if k == "tevent" and attr == "wait":
+            return "threading.Event.wait() blocks the event loop"
+        if k == "condition" and attr in ("wait", "wait_for"):
+            return f"Condition.{attr}() blocks the event loop"
+        if k == "lock" and attr == "acquire":
+            return (
+                "sync Lock.acquire() can block the event loop; use "
+                "run_in_executor or an asyncio.Lock"
+            )
+        if k == "engine" and attr in ENGINE_METHODS:
+            return (
+                f"Engine.{attr}() runs device work and blocks the event "
+                "loop; drive the engine from the worker thread "
+                "(AsyncFrontend) or run_in_executor"
+            )
+        return None
+
+
+@register
+class CrossThreadSharingRule(Rule):
+    """R102: worker-written attributes read on the loop side unsynchronized."""
+
+    code = "R102"
+    name = "cross-thread-sharing"
+    description = (
+        "instance attribute written by worker-thread-reachable code and "
+        "read by event-loop code without passing through a queue, "
+        "call_soon_threadsafe, or a lock"
+    )
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        idx = _tindex(ctx)
+        if not idx.has_roots:
+            return
+        for cls, methods in idx._methods.items():
+            writes: Dict[str, str] = {}  # attr -> writing qualname
+            for name, qual in methods.items():
+                if not idx.worker_side(qual):
+                    continue
+                info = idx.funcs[qual]
+                locked = _with_lock_nodes(idx, qual, info.node)
+                for node in walk_body(info.node):
+                    for attr in _self_attr_writes(node):
+                        if id(node) not in locked:
+                            writes.setdefault(attr, qual)
+            if not writes:
+                continue
+            for name, qual in methods.items():
+                if not idx.loop_side(qual) or qual in idx.threadsafe_targets:
+                    continue
+                if idx.worker_side(qual):
+                    continue  # the write side itself
+                info = idx.funcs[qual]
+                locked = _with_lock_nodes(idx, qual, info.node)
+                seen: Set[str] = set()
+                for node in walk_body(info.node):
+                    if not (
+                        isinstance(node, ast.Attribute)
+                        and isinstance(node.ctx, ast.Load)
+                        and isinstance(node.value, ast.Name)
+                        and node.value.id == "self"
+                    ):
+                        continue
+                    attr = node.attr
+                    if attr not in writes or attr in seen or id(node) in locked:
+                        continue
+                    if idx.self_kinds.get(cls, {}).get(attr) in CHANNEL_KINDS:
+                        continue  # the attribute IS the sync channel
+                    seen.add(attr)
+                    yield ctx.finding(
+                        self.code,
+                        node,
+                        f"'self.{attr}' is written by worker-side "
+                        f"'{writes[attr]}' and read here on the event loop "
+                        "without a queue, call_soon_threadsafe, or a lock",
+                        symbol=qual,
+                    )
+
+
+def _self_attr_writes(node: ast.AST) -> Iterator[str]:
+    targets: List[ast.AST] = []
+    if isinstance(node, ast.Assign):
+        targets = list(node.targets)
+    elif isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+        targets = [node.target]
+    for t in targets:
+        base = t
+        while isinstance(base, ast.Subscript):
+            base = base.value
+        if (
+            isinstance(base, ast.Attribute)
+            and isinstance(base.value, ast.Name)
+            and base.value.id == "self"
+        ):
+            yield base.attr
+
+
+@register
+class LoopAffinityRule(Rule):
+    """R103: loop-affine asyncio primitives touched from worker code."""
+
+    code = "R103"
+    name = "loop-affinity"
+    description = (
+        "asyncio.Queue/Future/Event/Lock methods or loop APIs invoked from "
+        "worker-thread-reachable code (those objects are affine to the loop "
+        "that created them); cross via call_soon_threadsafe or "
+        "run_coroutine_threadsafe"
+    )
+
+    _BAD_DOTTED = {
+        "asyncio.get_running_loop",
+        "asyncio.ensure_future",
+        "asyncio.create_task",
+    }
+    _LOOP_OK = {"call_soon_threadsafe", "is_closed", "is_running", "time"}
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        idx = _tindex(ctx)
+        if not idx.has_roots:
+            return
+        for qual, info in idx.funcs.items():
+            if not idx.worker_side(qual):
+                continue
+            where = f"'{qual}' is worker-thread-reachable ({idx.why(qual)})"
+            for node in walk_body(info.node):
+                if not isinstance(node, ast.Call):
+                    continue
+                d = dotted_name(node.func, idx.aliases)
+                if d in self._BAD_DOTTED:
+                    yield ctx.finding(
+                        self.code,
+                        node,
+                        f"'{d}' has no running loop on a worker thread; "
+                        f"{where}",
+                        symbol=qual,
+                    )
+                    continue
+                if not isinstance(node.func, ast.Attribute):
+                    continue
+                attr = node.func.attr
+                k = idx.receiver_kind(qual, node.func.value)
+                if k in LOOP_AFFINE_KINDS:
+                    yield ctx.finding(
+                        self.code,
+                        node,
+                        f"asyncio primitive method '.{attr}()' called from "
+                        f"the worker side is not thread-safe; hand it to the "
+                        f"loop via call_soon_threadsafe — {where}",
+                        symbol=qual,
+                    )
+                elif k == "loop" and attr not in self._LOOP_OK:
+                    yield ctx.finding(
+                        self.code,
+                        node,
+                        f"'loop.{attr}()' is not thread-safe off-loop; only "
+                        "call_soon_threadsafe (or asyncio."
+                        f"run_coroutine_threadsafe) may cross — {where}",
+                        symbol=qual,
+                    )
+
+
+@register
+class JaxFreeBoundaryRule(Rule):
+    """R104: declared jax-free modules must stay jax-free."""
+
+    code = "R104"
+    name = "jax-free-boundary"
+    description = (
+        "a declared jax-free module (serving/frontend.py, serving/events.py, "
+        "launch/server.py, or any file carrying a `# tracelint: jax-free` "
+        "marker) imports jax/jaxlib/flax or a repro module outside its "
+        "declared allow list"
+    )
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        allow = self._declared_allow(ctx)
+        if allow is None:
+            return
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    yield from self._check_module(ctx, node, a.name, allow)
+            elif isinstance(node, ast.ImportFrom):
+                if node.level > 0:
+                    yield ctx.finding(
+                        self.code,
+                        node,
+                        "relative import in a jax-free module defeats the "
+                        "boundary check; use an absolute import",
+                    )
+                elif node.module:
+                    yield from self._check_module(ctx, node, node.module, allow)
+
+    def _declared_allow(self, ctx: ModuleContext) -> Optional[Tuple[str, ...]]:
+        for key, allow in JAX_FREE_MODULES.items():
+            if ctx.relpath == key or ctx.relpath.endswith("/" + key):
+                return allow
+        for line in ctx.lines:
+            m = _JAXFREE_MARKER_RE.search(line)
+            if m:
+                raw = m.group("allow") or ""
+                return tuple(p for p in raw.split(",") if p)
+        return None
+
+    def _check_module(
+        self, ctx: ModuleContext, node: ast.AST, mod: str, allow: Tuple[str, ...]
+    ) -> Iterator[Finding]:
+        root = mod.split(".")[0]
+        if root in _BANNED_ROOTS:
+            yield ctx.finding(
+                self.code,
+                node,
+                f"jax-free module imports '{mod}' — the module is declared "
+                "host-side-only (a jax-less client must be able to load it)",
+            )
+        elif root == "repro" and not any(
+            mod == a or mod.startswith(a + ".") for a in allow
+        ):
+            yield ctx.finding(
+                self.code,
+                node,
+                f"jax-free module imports '{mod}', which is outside its "
+                f"declared allow list {sorted(allow)} and may pull in the "
+                "device-facing stack",
+            )
+
+
+@register
+class LockHygieneRule(Rule):
+    """R105: lock hygiene and single-thread engine ownership."""
+
+    code = "R105"
+    name = "lock-hygiene"
+    description = (
+        ".acquire() without a try/finally release (use `with lock:`), "
+        "`await` while holding a synchronous lock, and "
+        "Engine.submit/step_chunk/drain/run reachable from more than one "
+        "thread"
+    )
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        idx = _tindex(ctx)
+        engine_sites: List[Tuple[str, ast.Call, str]] = []
+        for qual, info in idx.funcs.items():
+            released = self._released_receivers(info.node)
+            locked = _with_lock_nodes(idx, qual, info.node)
+            for node in walk_body(info.node):
+                if isinstance(node, ast.Await) and id(node) in locked:
+                    yield ctx.finding(
+                        self.code,
+                        node,
+                        "awaiting while holding a synchronous lock: the lock "
+                        "is held across the suspension and can deadlock the "
+                        "worker; release first or use asyncio.Lock",
+                        symbol=qual,
+                    )
+                if not isinstance(node, ast.Call):
+                    continue
+                if isinstance(node.func, ast.Attribute):
+                    attr = node.func.attr
+                    k = idx.receiver_kind(qual, node.func.value)
+                    if (
+                        attr == "acquire"
+                        and k in SYNC_LOCK_KINDS
+                        and ast.unparse(node.func.value) not in released
+                    ):
+                        yield ctx.finding(
+                            self.code,
+                            node,
+                            "bare .acquire() with no try/finally release; an "
+                            "exception leaks the lock — use `with lock:`",
+                            symbol=qual,
+                        )
+                    elif k == "engine" and attr in ENGINE_METHODS:
+                        engine_sites.append((qual, node, attr))
+        # single-owner check: every classified call site of the engine
+        # surface must be reachable from at most one thread identity
+        roots: Set[str] = set()
+        for qual, _, _ in engine_sites:
+            roots |= idx.roots_of(qual)
+        if len(roots) > 1:
+            pretty = ", ".join(sorted(roots))
+            for qual, node, attr in engine_sites:
+                if not idx.roots_of(qual):
+                    continue
+                yield ctx.finding(
+                    self.code,
+                    node,
+                    f"Engine.{attr}() is driven from more than one thread "
+                    f"({pretty}); JAX dispatch and the session state are "
+                    "single-owner — route every engine call through one "
+                    "worker",
+                    symbol=qual,
+                )
+
+    def _released_receivers(self, fn: ast.AST) -> Set[str]:
+        """Unparsed receivers that see a ``.release()`` inside any
+        try/finally of this function (sanctions a preceding bare acquire)."""
+        out: Set[str] = set()
+        for node in walk_body(fn):
+            if not isinstance(node, ast.Try) or not node.finalbody:
+                continue
+            for stmt in node.finalbody:
+                for sub in ast.walk(stmt):
+                    if (
+                        isinstance(sub, ast.Call)
+                        and isinstance(sub.func, ast.Attribute)
+                        and sub.func.attr == "release"
+                    ):
+                        out.add(ast.unparse(sub.func.value))
+        return out

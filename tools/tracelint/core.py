@@ -110,9 +110,9 @@ def available_rules() -> List[Rule]:
 
 
 def _ensure_rules_loaded() -> None:
-    # Imported lazily so `core` has no import cycle with `rules`.
+    # Imported lazily so `core` has no import cycle with the rule modules.
     if not RULES:
-        from tools.tracelint import rules  # noqa: F401
+        from tools.tracelint import conrules, rules  # noqa: F401
 
 
 # ---------------------------------------------------------------------------
