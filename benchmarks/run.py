@@ -105,6 +105,11 @@ def main() -> None:
                 from benchmarks import bench_serve_online
                 bench_serve_online.bench_serve_online(emit, smoke=args.smoke,
                                                       arch=arch)
+                # shared-prefix paged serving: TTFT + lanes-per-GB vs dense,
+                # with the greedy/f32 paged==dense parity oracle riding the
+                # warm runs
+                bench_serve_online.bench_serve_paged_prefix(
+                    emit, smoke=args.smoke, arch=arch)
 
     path = os.path.join(args.out, "results.json")
     with open(path, "w") as f:

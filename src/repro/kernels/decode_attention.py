@@ -7,7 +7,7 @@ tiles *sequentially* (TPU grid order), carrying the online-softmax state
 the TPU analogue of flash-decoding's split-K reduction, with BlockSpec-tiled
 HBM→VMEM streaming of K/V instead of GPU shared-memory staging.
 
-Two entry points:
+Three entry points:
 
 * :func:`decode_attention` — plain cached attention, ``lengths`` valid
   prefix + optional sliding ``window`` over position-ordered slots.
@@ -20,9 +20,20 @@ Two entry points:
   layout ``model._attn_ring_bounds`` emits: ring caches (lo=0, hi=min(pos,W),
   skip=pos%W once warm) and full-length append caches masked to the trailing
   window (lo=pos-window+1, hi=pos, skip=-1).
+* :func:`decode_attention_paged` — the appended variant extended with a
+  block-indices operand for paged KV caches: K/V live in a physical block
+  pool (NB, BLK, Hkv, Dh) shared by every lane, and each lane's logical
+  cache is named by a row of an int32 ``block_tables`` (B, NBL) array.  The
+  tables ride the scalar-prefetch lane of a
+  ``pltpu.PrefetchScalarGridSpec`` so the BlockSpec index map can steer the
+  HBM→VMEM stream per (lane, logical-block) grid step — the gather never
+  materializes in HBM.  Logical slot masking is identical to the appended
+  kernel (``kpos = ni * BLK + iota``), so unallocated table entries — which
+  point at the reserved null block 0 — are fetched but masked out.
 
 Shapes: q (B, H, Dh); k/v (B, W, Hkv, Dh); lengths/lo/hi/skip (B,).
-Grid: (B, W // TILE_W).  Scratch: m/l (H, 1), acc (H, Dh) — f32.
+Grid: (B, W // TILE_W) (paged: (B, NBL), one pool block per step).
+Scratch: m/l (H, 1), acc (H, Dh) — f32.
 
 ``interpret=None`` auto-detects the backend like ``probe_score``: compiled
 natively on TPU, interpreted elsewhere (the kernel body still executes).
@@ -279,4 +290,149 @@ def _decode_attention_appended_jit(q, k_cache, v_cache, lo, hi, skip, k_new,
         interpret=interpret,
     )(lo.astype(jnp.int32), hi.astype(jnp.int32), skip.astype(jnp.int32),
       q, k_new, v_new, k_cache, v_cache)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# paged variant (block-indices operand; serving hot path for paged caches)
+# ---------------------------------------------------------------------------
+
+def _make_paged_kernel(softcap: float):
+    def kernel(bt_ref, lo_ref, hi_ref, skip_ref, q_ref, kn_ref, vn_ref,
+               k_ref, v_ref, out_ref, m_ref, l_ref, acc_ref):
+        del bt_ref  # consumed by the BlockSpec index maps, not the body
+        bi = pl.program_id(0)
+        n_idx = pl.program_id(1)
+        n_blk = pl.num_programs(1)
+
+        @pl.when(n_idx == 0)
+        def _init():
+            m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+            l_ref[...] = jnp.zeros_like(l_ref)
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        q = q_ref[0].astype(jnp.float32)                   # (H, Dh)
+        k = k_ref[0].astype(jnp.float32)                   # (BLK, Hkv, Dh)
+        v = v_ref[0].astype(jnp.float32)
+        h, dh = q.shape
+        blk, hkv, _ = k.shape
+        g = h // hkv
+
+        lo, hi, skip = lo_ref[bi], hi_ref[bi], skip_ref[bi]
+        kpos = n_idx * blk + jax.lax.broadcasted_iota(jnp.int32, (blk,), 0)
+        valid = (kpos >= lo) & (kpos < hi) & (kpos != skip)
+        # Invalid slots may hold ARBITRARY pool garbage — including NaN from
+        # a quarantined lane's masked writes into the null block.  Scores are
+        # where-masked (NaN-proof), but the p @ v accumulation is not
+        # (0 * NaN = NaN), so zero masked V explicitly.
+        v = jnp.where(valid[:, None, None], v, 0.0)
+
+        qg = q.reshape(hkv, g, dh)
+        scores = jax.lax.dot_general(
+            qg, k.transpose(1, 2, 0),
+            (((2,), (1,)), ((0,), (0,))),
+            precision=jax.lax.Precision.HIGHEST,
+        ) / math.sqrt(dh)                                  # (Hkv, g, BLK)
+        scores = scores.reshape(h, blk)
+        if softcap:
+            scores = softcap * jnp.tanh(scores / softcap)
+        scores = jnp.where(valid[None, :], scores, NEG_INF)
+
+        m_prev = m_ref[...]                                # (H, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(scores, axis=1, keepdims=True))
+        p = jnp.exp(scores - m_new)                        # (H, BLK)
+        p = jnp.where(valid[None, :], p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)                    # (H, 1)
+
+        pg = p.reshape(hkv, g, blk)
+        pv = jax.lax.dot_general(
+            pg, v.transpose(1, 0, 2),
+            (((2,), (1,)), ((0,), (0,))),
+            precision=jax.lax.Precision.HIGHEST,
+        ).reshape(h, dh)
+
+        m_ref[...] = m_new
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + pv
+
+        @pl.when(n_idx == n_blk - 1)
+        def _final():
+            kn = kn_ref[0].astype(jnp.float32)             # (Hkv, Dh)
+            vn = vn_ref[0].astype(jnp.float32)
+            sn = jnp.sum(qg * kn[:, None, :], axis=-1) / math.sqrt(dh)
+            if softcap:
+                sn = softcap * jnp.tanh(sn / softcap)
+            sn = sn.reshape(h, 1)                          # (H, 1)
+            m_fin = jnp.maximum(m_ref[...], sn)
+            alpha_f = jnp.exp(m_ref[...] - m_fin)
+            pn = jnp.exp(sn - m_fin)                       # (H, 1)
+            l_fin = l_ref[...] * alpha_f + pn
+            accg = (acc_ref[...] * alpha_f).reshape(hkv, g, dh) \
+                + pn.reshape(hkv, g, 1) * vn[:, None, :]
+            out_ref[0] = (accg.reshape(h, dh)
+                          / jnp.maximum(l_fin, 1e-30)).astype(out_ref.dtype)
+
+    return kernel
+
+
+def decode_attention_paged(q, k_pool, v_pool, block_tables, lo, hi, skip,
+                           k_new, v_new, *, softcap: float = 0.0,
+                           interpret: bool | None = None):
+    """Flash-decode over a PAGED cache ∪ {current token}, without a write.
+
+    q: (B, H, Dh); pools: (NB, BLK, Hkv, Dh) physical blocks shared across
+    lanes; block_tables: (B, NBL) int32 — lane b's logical slot s lives in
+    pool block ``block_tables[b, s // BLK]`` at offset ``s % BLK`` (entry 0
+    is the reserved null block — fetched, then masked).  lo/hi/skip: (B,)
+    int32 with the :func:`decode_attention_appended` semantics over LOGICAL
+    slots (0 <= s < NBL*BLK); k_new/v_new: (B, Hkv, Dh).  Returns
+    (B, H, Dh).  One pool block per grid step; the block tables ride the
+    scalar-prefetch lane so the index map resolves physical blocks before
+    the body runs."""
+    if interpret is None:
+        interpret = default_interpret()
+    return _decode_attention_paged_jit(
+        q, k_pool, v_pool, block_tables, lo, hi, skip, k_new, v_new,
+        softcap=float(softcap), interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("softcap", "interpret"))
+def _decode_attention_paged_jit(q, k_pool, v_pool, block_tables, lo, hi, skip,
+                                k_new, v_new, *, softcap: float,
+                                interpret: bool):
+    b, h, dh = q.shape
+    _, blk, hkv, _ = k_pool.shape
+    nbl = block_tables.shape[1]
+
+    def _lane(bi, ni, *refs):
+        return (bi, 0, 0)
+
+    def _pool(bi, ni, bt, *refs):
+        return (bt[bi, ni], 0, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,                 # block_tables, lo, hi, skip
+        grid=(b, nbl),
+        in_specs=[
+            pl.BlockSpec((1, h, dh), _lane),
+            pl.BlockSpec((1, hkv, dh), _lane),
+            pl.BlockSpec((1, hkv, dh), _lane),
+            pl.BlockSpec((1, blk, hkv, dh), _pool),
+            pl.BlockSpec((1, blk, hkv, dh), _pool),
+        ],
+        out_specs=pl.BlockSpec((1, h, dh), _lane),
+        scratch_shapes=[
+            pltpu.VMEM((h, 1), jnp.float32),
+            pltpu.VMEM((h, 1), jnp.float32),
+            pltpu.VMEM((h, dh), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        _make_paged_kernel(softcap),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, dh), q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), lo.astype(jnp.int32),
+      hi.astype(jnp.int32), skip.astype(jnp.int32),
+      q, k_new, v_new, k_pool, v_pool)
     return out

@@ -18,6 +18,9 @@ from repro.kernels.decode_attention import decode_attention as _decode_attention
 from repro.kernels.decode_attention import (
     decode_attention_appended as _decode_attention_appended,
 )
+from repro.kernels.decode_attention import (
+    decode_attention_paged as _decode_attention_paged,
+)
 from repro.kernels.probe_score import probe_score as _probe_score
 from repro.kernels.ssd_scan import ssd_chunk_scan as _ssd_chunk_scan
 from repro.kernels.ssd_scan import ssd_chunk_scan_masked as _ssd_chunk_scan_masked
@@ -49,6 +52,21 @@ def decode_attention_appended(q, k_cache, v_cache, lo, hi, skip, k_new, v_new,
             softcap=softcap, interpret=interpret)
     return ref.decode_attention_appended_ref(
         q, k_cache, v_cache, lo, hi, skip, k_new, v_new, softcap=softcap)
+
+
+def decode_attention_paged(q, k_pool, v_pool, block_tables, lo, hi, skip,
+                           k_new, v_new, *, softcap: float = 0.0,
+                           use_kernel: bool = True,
+                           interpret: bool | None = None):
+    """Paged flash decode: block-indices operand over a physical K/V pool
+    (see kernels.decode_attention)."""
+    if use_kernel:
+        return _decode_attention_paged(
+            q, k_pool, v_pool, block_tables, lo, hi, skip, k_new, v_new,
+            softcap=softcap, interpret=interpret)
+    return ref.decode_attention_paged_ref(
+        q, k_pool, v_pool, block_tables, lo, hi, skip, k_new, v_new,
+        softcap=softcap)
 
 
 def ssd_chunk_scan(x, dA, Bm, Cm, chunk: int = 256,

@@ -74,6 +74,32 @@ def decode_attention_appended_ref(q, k_cache, v_cache, lo, hi, skip,
     return out.reshape(b, h, dh).astype(q.dtype)
 
 
+def decode_attention_paged_ref(q, k_pool, v_pool, block_tables, lo, hi, skip,
+                               k_new, v_new, softcap: float = 0.0):
+    """Oracle for the paged flash-decode kernel: gather each lane's logical
+    cache out of the pool through its block-table row, then run the appended
+    oracle over the dense view.
+
+    q: (B, H, Dh); pools: (NB, BLK, Hkv, Dh); block_tables: (B, NBL) int32;
+    lo/hi/skip: (B,) over logical slots; k_new/v_new: (B, Hkv, Dh)."""
+    b = q.shape[0]
+    nbl = block_tables.shape[1]
+    blk = k_pool.shape[1]
+    w = nbl * blk
+    k_dense = k_pool[block_tables].reshape(b, w, *k_pool.shape[2:])
+    v_dense = v_pool[block_tables].reshape(b, w, *v_pool.shape[2:])
+    # Masked slots may hold arbitrary pool garbage (incl. NaN in the null
+    # block); the softmax weights are where-masked but 0 * NaN = NaN in the
+    # value reduction, so zero masked V like the kernel does.
+    slots = jnp.arange(w)[None]
+    valid = (slots >= lo[:, None]) & (slots < hi[:, None]) \
+        & (slots != skip[:, None])
+    v_dense = jnp.where(valid[..., None, None], v_dense,
+                        jnp.zeros((), v_dense.dtype))
+    return decode_attention_appended_ref(q, k_dense, v_dense, lo, hi, skip,
+                                         k_new, v_new, softcap=softcap)
+
+
 def ssd_chunk_scan_ref(x, dA, Bm, Cm, chunk):
     """Oracle for the SSD kernel — delegates to the model's chunked SSD.
 

@@ -1,18 +1,37 @@
-"""Decode-time caches: attention KV (full or ring/sliding-window), SSM state,
-and static cross-attention context KV.
+"""Decode-time caches: attention KV (dense, ring/sliding-window, or paged),
+SSM state, and static cross-attention context KV.
 
 Caches are plain pytrees stacked over layers on the leading axis so the decode
 step can ``lax.scan`` over (layer_params, layer_cache) together.
+
+:class:`CacheLayout` is the single owner of the layout contract — leaf lane
+axes, slot math, validity masks, and lane surgery — with three variants:
+
+* ``dense``  — per-lane (L, B, W, KV, hd) slab (plain or masked-append);
+* ``ring``   — dense slab whose width equals the sliding window (slot =
+  pos % W with pre-write eviction);
+* ``paged``  — K/V live in a physical block pool (L, NB, block, KV, hd)
+  reached through a per-lane ``block_table`` (B, W // block); block 0 is a
+  reserved null block every unallocated table entry points at.
+
+The module-level functions below remain the implementation (and the
+monkeypatch surface the scripted-engine tests rely on); ``CacheLayout``
+methods delegate to them so there is exactly one copy of each rule.
 """
 
 from __future__ import annotations
 
+import dataclasses
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.models import ssm as ssm_mod
+
+# Leaves stored per physical block rather than per lane under the paged
+# layout.  Everything else (pos, ssm state, cross-K/V) stays per-lane dense.
+PAGED_LEAVES = ("k", "v", "k_scale", "v_scale")
 
 
 def attn_cache_window(cfg, seq_len: int, use_window: bool) -> int:
@@ -225,19 +244,38 @@ def cache_write(k_cache: jax.Array, v_cache: jax.Array, k_new: jax.Array,
     return k_cache, v_cache
 
 
-def cache_valid_mask_pre_write(pos: jax.Array, w: int, window: int) -> jax.Array:
-    """(B, W) validity of the cache BEFORE inserting position ``pos`` — the
-    decode-read state.  Rings additionally evict the slot the new token will
-    overwrite (it holds position pos - window, outside the window); masked
-    append caches restrict to the trailing ``window`` positions."""
+def cache_valid_slots(pos: jax.Array, w: int, window: int, *,
+                      phase: str) -> jax.Array:
+    """(B, W) slot-validity mask around the write of position ``pos``.
+
+    The single mask API (supersedes the old ``cache_valid_mask`` /
+    ``cache_valid_mask_pre_write`` pair); ``phase`` names the cache state
+    explicitly:
+
+    * ``phase="pre_write"`` — validity BEFORE inserting position ``pos``:
+      the decode-read state.  Rings additionally evict the slot the new
+      token is about to overwrite (it holds position pos - window, outside
+      the window); masked-append caches restrict to the trailing ``window``
+      positions.
+    * ``phase="post_write"`` — validity AFTER position ``pos`` has been
+      written (prefill/teacher-forcing bookkeeping).
+    """
+    if phase not in ("pre_write", "post_write"):
+        raise ValueError(f"phase must be 'pre_write' or 'post_write', got {phase!r}")
     slots = jnp.arange(w)[None, :]
+    if phase == "pre_write":
+        if is_ring(w, window):
+            valid = slots < jnp.minimum(pos[:, None], w)
+            evict = (pos[:, None] >= w) & (slots == (pos % w)[:, None])
+            return valid & ~evict
+        if window:
+            return (slots < pos[:, None]) & (slots > pos[:, None] - window)
+        return slots < pos[:, None]
     if is_ring(w, window):
-        valid = slots < jnp.minimum(pos[:, None], w)
-        evict = (pos[:, None] >= w) & (slots == (pos % w)[:, None])
-        return valid & ~evict
+        return slots < jnp.minimum(pos[:, None] + 1, w)
     if window:
-        return (slots < pos[:, None]) & (slots > pos[:, None] - window)
-    return slots < pos[:, None]
+        return (slots <= pos[:, None]) & (slots > pos[:, None] - window)
+    return slots <= pos[:, None]
 
 
 def cache_write_stacked(k_cache, v_cache, k_new, v_new, pos, window: int):
@@ -251,24 +289,309 @@ def cache_write_stacked(k_cache, v_cache, k_new, v_new, pos, window: int):
     return k_cache, v_cache
 
 
-def cache_valid_mask(pos: jax.Array, w: int, window: int) -> jax.Array:
-    """(B, W) validity mask after writing position ``pos``."""
-    slots = jnp.arange(w)[None, :]
-    if is_ring(w, window):
-        return slots < jnp.minimum(pos[:, None] + 1, w)
-    if window:
-        return (slots <= pos[:, None]) & (slots > pos[:, None] - window)
-    return slots <= pos[:, None]
-
-
 def cache_key_positions(pos: jax.Array, w: int, window: int) -> jax.Array:
     """(B, W) absolute position held by each cache slot BEFORE inserting
-    position ``pos`` — the same pre-write state ``cache_valid_mask_pre_write``
-    and ``model._attn_ring_bounds`` mask (kernels that rotate K at read
-    consume this).  A ring slot holds the latest position p ≡ slot (mod w)
-    with p < pos (negative: nothing written there yet); append slots hold
-    their own index."""
+    position ``pos`` — the same pre-write state
+    ``cache_valid_slots(phase="pre_write")`` and ``model._attn_ring_bounds``
+    mask (kernels that rotate K at read consume this).  A ring slot holds the
+    latest position p ≡ slot (mod w) with p < pos (negative: nothing written
+    there yet); append slots hold their own index."""
     slots = jnp.arange(w)[None, :]
     if is_ring(w, window):
         return pos[:, None] - 1 - ((pos[:, None] - 1 - slots) % w)
     return jnp.broadcast_to(slots, (pos.shape[0], w))
+
+
+# ---------------------------------------------------------------------------
+# CacheLayout: the layout contract as one object (dense | ring | paged)
+# ---------------------------------------------------------------------------
+
+
+def _is_paged_leaf(key: str) -> bool:
+    return key in PAGED_LEAVES
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheLayout:
+    """Owner of the cache-layout contract: leaf lane axes, slot math,
+    validity masks, and lane surgery.
+
+    ``kind``:
+
+    * ``"dense"`` — per-lane (L, B, W, KV, hd) slab.  ``width == window``
+      makes it a ring (the PR-4 serving layout); ``window`` with
+      ``width > window`` is the masked-append reference.
+    * ``"paged"`` — K/V (+ int8 scales) live in a physical pool
+      (L, NB, block, KV, hd) reached through an int32 ``block_table`` leaf
+      of shape (B, width // block).  Physical block 0 is a reserved null
+      block: unallocated table entries point at it so gathers are always
+      in-bounds.  ``width`` must be a block multiple (rings therefore
+      require ``block | window``); masked-append paged caches are not a
+      thing — windowed paged serving is ring-only.
+
+    Per-lane scalars ((B,) — ``pos``) keep lane axis 0; every other dense
+    leaf is layer-stacked with the lane axis second.  Under the paged
+    layout the pool leaves (:data:`PAGED_LEAVES`) have NO lane axis — lane
+    surgery on them goes through the block table.
+    """
+
+    kind: str = "dense"
+    width: int = 0
+    window: int = 0
+    block: int = 0
+    pool_blocks: int = 0
+
+    def __post_init__(self):
+        if self.kind not in ("dense", "paged"):
+            raise ValueError(f"unknown CacheLayout kind {self.kind!r}")
+        if self.kind == "paged":
+            if self.block < 1:
+                raise ValueError("paged layout needs block >= 1")
+            if self.width % self.block:
+                raise ValueError(
+                    f"paged width {self.width} is not a multiple of "
+                    f"block {self.block}")
+            if self.window and self.width != self.window:
+                raise ValueError(
+                    "windowed paged caches are ring-only: width must equal "
+                    f"window (got width={self.width}, window={self.window}); "
+                    "a sliding window must be a block multiple")
+            if self.pool_blocks < self.blocks_per_lane + 1:
+                raise ValueError(
+                    f"pool_blocks={self.pool_blocks} cannot hold one lane of "
+                    f"{self.blocks_per_lane} blocks plus the null block")
+
+    # -- constructors -------------------------------------------------------
+
+    @classmethod
+    def dense(cls, width: int, window: int = 0) -> "CacheLayout":
+        return cls(kind="dense", width=width, window=window)
+
+    @classmethod
+    def ring(cls, window: int) -> "CacheLayout":
+        return cls(kind="dense", width=window, window=window)
+
+    @classmethod
+    def paged(cls, width: int, block: int, pool_blocks: int,
+              window: int = 0) -> "CacheLayout":
+        return cls(kind="paged", width=width, window=window, block=block,
+                   pool_blocks=pool_blocks)
+
+    @classmethod
+    def infer(cls, cache: dict, window: int = 0) -> "CacheLayout":
+        """Recover the layout from a live cache pytree (the decode path's
+        view: width from leaf shapes, paged-ness from the block table)."""
+        if "block_table" in cache:
+            block = cache["k"].shape[2]
+            nbl = cache["block_table"].shape[1]
+            return cls.paged(nbl * block, block, cache["k"].shape[1],
+                             window=window)
+        w = cache["k"].shape[2] if "k" in cache else 0
+        return cls.dense(w, window)
+
+    # -- static facts -------------------------------------------------------
+
+    @property
+    def is_ring(self) -> bool:
+        return is_ring(self.width, self.window)
+
+    @property
+    def is_paged(self) -> bool:
+        return self.kind == "paged"
+
+    @property
+    def blocks_per_lane(self) -> int:
+        return self.width // self.block if self.is_paged else 0
+
+    @staticmethod
+    def lane_axis(leaf: jax.Array) -> int:
+        """Lane axis of a dense cache leaf (pool leaves have none)."""
+        return _lane_axis(leaf)
+
+    # -- slot math ----------------------------------------------------------
+
+    def slot(self, pos: jax.Array) -> jax.Array:
+        return cache_slot(pos, self.width, self.window)
+
+    def valid_slots(self, pos: jax.Array, *, phase: str) -> jax.Array:
+        return cache_valid_slots(pos, self.width, self.window, phase=phase)
+
+    def key_positions(self, pos: jax.Array) -> jax.Array:
+        return cache_key_positions(pos, self.width, self.window)
+
+    # -- init ---------------------------------------------------------------
+
+    def init(self, cfg, lanes: int, *, dtype=jnp.bfloat16,
+             kv_quant: bool = False) -> dict:
+        """Empty cache for ``lanes`` lanes under this layout."""
+        base = init_cache(cfg, lanes, max(self.width, 1),
+                          use_window=self.is_ring, dtype=dtype,
+                          kv_quant=kv_quant)
+        if not self.is_paged or "k" not in base:
+            return base
+        cache = {k: v for k, v in base.items() if not _is_paged_leaf(k)}
+        for key in PAGED_LEAVES:
+            if key not in base:
+                continue
+            leaf = base[key]                      # (L, B, W, ...)
+            pool_shape = (leaf.shape[0], self.pool_blocks, self.block,
+                          *leaf.shape[3:])
+            # one-time init over <= 4 fixed leaf kinds (K/V + scales), not a
+            # hot jit loop: each leaf kind has its one pool shape per layout
+            cache[key] = jnp.zeros(pool_shape, leaf.dtype)  # tracelint: disable=R004
+        cache["block_table"] = jnp.zeros((lanes, self.blocks_per_lane),
+                                         jnp.int32)
+        return cache
+
+    # -- lane surgery -------------------------------------------------------
+
+    def replicate(self, small: dict, lanes: int) -> dict:
+        if self.is_paged:
+            raise NotImplementedError(
+                "paged caches are initialized empty, never replicated")
+        return replicate_cache_lanes(small, lanes)
+
+    def scatter_lane(self, cache: dict, small: dict, lane, *,
+                     block_row=None) -> dict:
+        """Scatter a batch=1 prefilled cache into lane ``lane``.
+
+        Paged: dense leaves scatter as usual; the small cache's (L, 1, W,
+        ...) K/V reshape into ``blocks_per_lane`` blocks and land in the
+        physical blocks named by ``block_row`` ((blocks_per_lane,) int32 —
+        null-padded entries rewrite block 0 with zeros, harmlessly)."""
+        if not self.is_paged:
+            return scatter_cache_lane(cache, small, lane)
+
+        def one(big, sm):
+            if _lane_axis(big) == 0:
+                return big.at[lane].set(sm[0])
+            return big.at[:, lane].set(sm[:, 0])
+
+        out = {}
+        for key, big in cache.items():
+            if key == "block_table":
+                out[key] = big.at[lane].set(block_row)
+            elif _is_paged_leaf(key):
+                sm = small[key][:, 0]             # (L, W, ...)
+                resh = sm.reshape(sm.shape[0], self.blocks_per_lane,
+                                  self.block, *sm.shape[2:])
+                out[key] = big.at[:, block_row].set(resh)
+            else:
+                out[key] = jax.tree.map(one, big, small[key])
+        return out
+
+    def reset_lane(self, cache: dict, lane, prompt_row, plen, *,
+                   block_row=None, start=None) -> dict:
+        """Re-arm lane ``lane`` for in-flight (chunked) prefill admission.
+
+        Dense: delegates to :func:`reset_cache_lane` (zero content,
+        ``pos=0``).  Paged: installs ``block_row`` as the lane's table,
+        zeroes the lane's dense leaves (ssm/cross), and sets
+        ``pos=start`` — ``start > 0`` means the leading ``start`` tokens'
+        K/V are already resident in shared prefix blocks and the replay
+        begins at the first unshared token."""
+        if not self.is_paged:
+            return reset_cache_lane(cache, lane, prompt_row, plen)
+        del prompt_row, plen
+        if start is None:
+            start = jnp.int32(0)
+
+        def zero(leaf):
+            if _lane_axis(leaf) == 0:
+                return leaf
+            return leaf.at[:, lane].set(jnp.zeros_like(leaf[:, lane]))
+
+        out = {}
+        for key, big in cache.items():
+            if key == "block_table":
+                out[key] = big.at[lane].set(block_row)
+            elif key == "pos":
+                out[key] = big.at[lane].set(start)
+            elif _is_paged_leaf(key):
+                out[key] = big                    # masks hide stale blocks
+            else:
+                out[key] = jax.tree.map(zero, big)
+        return out
+
+    def scrub_lane(self, cache: dict, lane) -> dict:
+        """Quarantine lane ``lane``: dense zeroes its content; paged remaps
+        its block table to the null block (freeing is host-side) and zeroes
+        its dense leaves.  ``pos`` is kept in both variants (see
+        :func:`scrub_cache_lane`)."""
+        if not self.is_paged:
+            return scrub_cache_lane(cache, lane)
+        return self.release_lane(cache, lane)
+
+    def release_lane(self, cache: dict, lane) -> dict:
+        """Point lane ``lane``'s block table at the null block and zero its
+        dense content leaves.  Required at retire/quarantine BEFORE the
+        lane's physical blocks are handed back to the allocator: the lane
+        keeps executing masked writes until refilled, and a stale mapping
+        would corrupt blocks reallocated to another lane."""
+        def zero(leaf):
+            if _lane_axis(leaf) == 0:
+                return leaf
+            return leaf.at[:, lane].set(jnp.zeros_like(leaf[:, lane]))
+
+        out = {}
+        for key, big in cache.items():
+            if key == "block_table":
+                out[key] = big.at[lane].set(jnp.zeros_like(big[lane]))
+            elif _is_paged_leaf(key):
+                out[key] = big
+            else:
+                out[key] = jax.tree.map(zero, big)
+        return out
+
+    # -- paged <-> dense ----------------------------------------------------
+
+    def dense_view(self, cache: dict) -> dict:
+        """Gather a paged cache into the exact dense cache ``decode_step``'s
+        dense math expects: (L, B, W, ...) K/V via the lane block tables.
+        Width is exactly ``self.width`` (a block multiple), so the dense
+        reductions see the same shapes as a true dense cache of that width —
+        bitwise-identical attention."""
+        if not self.is_paged:
+            return cache
+        bt = cache["block_table"]                 # (B, NBL)
+        valid = self.valid_slots(cache["pos"], phase="pre_write")  # (B, W)
+        out = {k: v for k, v in cache.items() if k != "block_table"}
+        for key in PAGED_LEAVES:
+            if key not in cache:
+                continue
+            pool = cache[key]                     # (L, NB, block, ...)
+            g = pool[:, bt]                       # (L, B, NBL, block, ...)
+            g = g.reshape(pool.shape[0], bt.shape[0], self.width,
+                          *pool.shape[3:])
+            if key in ("v", "v_scale"):
+                # invalid slots hold arbitrary pool garbage (incl. NaN in
+                # the null block); scores are where-masked downstream but
+                # the value reduction is not (0 * NaN = NaN), so zero
+                # masked V (and its dequant scale) on the gather
+                vm = valid.reshape(1, *valid.shape, *([1] * (g.ndim - 3)))
+                g = jnp.where(vm, g, jnp.zeros((), g.dtype))
+            out[key] = g
+        return out
+
+    def writeback(self, cache: dict, new_dense: dict) -> dict:
+        """Fold one decode step's dense-view result back into the paged
+        cache: the single written slot per lane returns to its physical
+        block; dense leaves (pos, ssm, cross) are taken wholesale."""
+        if not self.is_paged:
+            return new_dense
+        pos = cache["pos"]                        # pre-write positions
+        slot = self.slot(pos)
+        bt = cache["block_table"]
+        bidx = jnp.arange(bt.shape[0])
+        phys = bt[bidx, slot // self.block]       # (B,)
+        off = slot % self.block
+        out = {}
+        for key, leaf in cache.items():
+            if key == "block_table":
+                out[key] = leaf
+            elif _is_paged_leaf(key):
+                tok = new_dense[key][:, bidx, slot]   # (L, B, ...)
+                out[key] = leaf.at[:, phys, off].set(tok)
+            else:
+                out[key] = new_dense[key]
+        return out

@@ -23,6 +23,9 @@ import jax.numpy as jnp
 from repro.kernels.decode_attention import (
     decode_attention_appended as decode_attention_kernel,
 )
+from repro.kernels.decode_attention import (
+    decode_attention_paged as decode_attention_paged_kernel,
+)
 from repro.models import cache as cache_mod
 from repro.models import layers, moe, ssm
 
@@ -554,9 +557,11 @@ def prefill_into_slot(
 
     Returns ``(logits (1,1,V) at position plen-1, hidden_last (1, D),
     cache)`` with ``cache["pos"] = plen``; the cache is batch=1, ready for
-    :func:`repro.models.cache.scatter_cache_lane` into a free lane of a live
-    stacked cache.  Pad K/V beyond ``plen`` sit in slots the decode
-    valid-mask excludes and the first decoded tokens overwrite.
+    :meth:`repro.models.cache.CacheLayout.scatter_lane` into a free lane of
+    a live stacked cache (dense lane scatter, or — paged — a reshape into
+    fixed-size blocks landing in the lane's physical block row).  Pad K/V
+    beyond ``plen`` sit in slots the decode valid-mask excludes and the
+    first decoded tokens overwrite.
     """
     plen = jnp.asarray(plen, jnp.int32)
     windowed = bool(cfg.native_swa and cfg.sliding_window
@@ -732,7 +737,8 @@ def default_attn_impl() -> str:
 
 
 def _attn_ring_bounds(pos: jax.Array, w: int, window: int):
-    """(lo, hi, skip) slot bounds matching ``cache_valid_mask_pre_write``:
+    """(lo, hi, skip) slot bounds matching
+    ``cache_valid_slots(..., phase="pre_write")``:
     slot s is valid iff lo <= s < hi and s != skip.  Ring caches
     (w == window) evict the slot the new token will overwrite; wider windowed
     caches are append layout masked to the trailing ``window`` positions."""
@@ -772,11 +778,41 @@ def decode_step(
     ``jnp.repeat``-materialized KV heads) or ``"pallas"`` (the GQA
     flash-decode kernel with append-without-write semantics); ``None``
     autodetects (pallas on TPU, dense elsewhere).
+
+    A cache with a ``"block_table"`` leaf is PAGED (see
+    :class:`repro.models.cache.CacheLayout`): K/V live in a physical block
+    pool reached through per-lane block tables.  The carry-path families
+    (dense/moe/audio) read the pool natively — the Pallas backend via a
+    block-indices operand (``decode_attention_paged``), the dense backend
+    via a per-layer gather — and write the new token straight to its
+    physical block; hybrid/vlm take the gather/writeback reference route
+    through ``CacheLayout.dense_view``.  Either way the logical cache a
+    lane observes is bit-identical to a dense cache of the same width.
     """
     if attn_impl is None:
         attn_impl = default_attn_impl()
     if attn_impl not in ("dense", "pallas"):
         raise ValueError(f"unknown attn_impl {attn_impl!r}")
+    paged = "block_table" in dcache
+    if paged and cfg.family in ("hybrid", "vlm"):
+        # Stacked-cache families: materialize the dense view once per token,
+        # run the dense math unchanged, then return the single written slot
+        # per lane to its physical block.
+        layout = cache_mod.CacheLayout.infer(dcache, window=window)
+        logits, hidden, nd = decode_step(
+            cfg, params, layout.dense_view(dcache), tokens, window=window,
+            moe_impl=moe_impl, compute_dtype=compute_dtype, unroll=unroll,
+            attn_impl=attn_impl)
+        return logits, hidden, layout.writeback(dcache, nd)
+    if paged:
+        pbt = dcache["block_table"]              # (B, NBL) int32
+        pblk = dcache["k"].shape[2]              # block size
+        pw = pbt.shape[1] * pblk                 # logical cache width
+        # Direct pool reads need the Pallas block-indices kernel; quantized
+        # pools fall back to the gather-dense route (dequantize-on-read).
+        paged_direct = attn_impl == "pallas" and "k_scale" not in dcache
+    else:
+        paged_direct = False
     dtype = jnp.dtype(compute_dtype)
     b = tokens.shape[0]
     pos = dcache["pos"]                                             # (B,)
@@ -789,14 +825,23 @@ def decode_step(
 
     def cached_attn(q, kcache, vcache, k, v):
         """Attention over (cache ∪ current token) without a cache write,
-        via the selected backend. q/k/v: (B, 1, H*, D)."""
+        via the selected backend. q/k/v: (B, 1, H*, D).  Under
+        ``paged_direct`` the caches are per-layer POOLS (NB, block, KV, hd)
+        read through the lane block tables inside the kernel."""
+        if paged_direct:
+            lo, hi, skip = _attn_ring_bounds(pos, pw, window)
+            o = decode_attention_paged_kernel(
+                q[:, 0], kcache, vcache, pbt, lo, hi, skip, k[:, 0], v[:, 0],
+                softcap=cfg.attn_logit_softcap)
+            return o[:, None]
         if attn_impl == "pallas":
             lo, hi, skip = _attn_ring_bounds(pos, kcache.shape[1], window)
             o = decode_attention_kernel(
                 q[:, 0], kcache, vcache, lo, hi, skip, k[:, 0], v[:, 0],
                 softcap=cfg.attn_logit_softcap)
             return o[:, None]
-        valid = cache_mod.cache_valid_mask_pre_write(pos, kcache.shape[1], window)
+        valid = cache_mod.cache_valid_slots(pos, kcache.shape[1], window,
+                                            phase="pre_write")
         return layers.decode_attention_appended(
             q, kcache, vcache, valid, k, v, cfg.attn_logit_softcap)
 
@@ -908,9 +953,21 @@ def decode_step(
         # With ``kv_quant`` the cache holds int8 values + per-(token, head)
         # scales; slices are dequantized on read and re-quantized on write.
         kv_quant = "k_scale" in dcache
-        w = dcache["k"].shape[2]
+        w = pw if paged else dcache["k"].shape[2]
         slot = cache_mod.cache_slot(pos, w, window)
         bidx = jnp.arange(b)
+        if paged:
+            # the write target: physical block of the slot being written,
+            # and the offset within it (retired lanes map to null block 0 —
+            # their masked writes land there harmlessly)
+            phys = pbt[bidx, slot // pblk]
+            off = slot % pblk
+            # invalid slots of a gathered pool view may hold arbitrary
+            # garbage (incl. NaN in the null block); scores are where-masked
+            # but the value reduction is not (0 * NaN = NaN), so masked V is
+            # zeroed on the gather-dense read path
+            read_valid = cache_mod.cache_valid_slots(pos, w, window,
+                                                     phase="pre_write")
 
         def body(carry, scanned):
             xc, aux, kf, vf, ksf, vsf, li = carry
@@ -928,20 +985,44 @@ def decode_step(
             if kv_quant:
                 ksc = jax.lax.dynamic_index_in_dim(ksf, li, 0, keepdims=False)
                 vsc = jax.lax.dynamic_index_in_dim(vsf, li, 0, keepdims=False)
-                kc_d = cache_mod.dequantize_kv(kc, ksc, dtype)
-                vc_d = cache_mod.dequantize_kv(vc, vsc, dtype)
+            # attention read view: the lane-major cache, or (paged, without
+            # the block-indices kernel) this layer's pool gathered through
+            # the block tables into the same (B, W, ...) dense shape
+            if paged and not paged_direct:
+                ka = kc[pbt].reshape(b, w, *kc.shape[2:])
+                va = vc[pbt].reshape(b, w, *vc.shape[2:])
+                if kv_quant:
+                    ksa = ksc[pbt].reshape(b, w, *ksc.shape[2:])
+                    vsa = vsc[pbt].reshape(b, w, *vsc.shape[2:])
             else:
-                kc_d, vc_d = kc, vc
-            ao, k_new, v_new = attn_sub(lp, xc, kc_d, vc_d)
+                ka, va = kc, vc
+                if kv_quant:
+                    ksa, vsa = ksc, vsc
+            if kv_quant:
+                ka = cache_mod.dequantize_kv(ka, ksa, dtype)
+                va = cache_mod.dequantize_kv(va, vsa, dtype)
+            if paged and not paged_direct:
+                va = jnp.where(read_valid[:, :, None, None], va,
+                               jnp.zeros((), va.dtype))
+            ao, k_new, v_new = attn_sub(lp, xc, ka, va)
             if kv_quant:
                 kq, ks_new = cache_mod.quantize_kv(k_new[:, 0])
                 vq, vs_new = cache_mod.quantize_kv(v_new[:, 0])
-                kc = kc.at[bidx, slot].set(kq)
-                vc = vc.at[bidx, slot].set(vq)
-                ksc = ksc.at[bidx, slot].set(ks_new)
-                vsc = vsc.at[bidx, slot].set(vs_new)
+                if paged:
+                    kc = kc.at[phys, off].set(kq)
+                    vc = vc.at[phys, off].set(vq)
+                    ksc = ksc.at[phys, off].set(ks_new)
+                    vsc = vsc.at[phys, off].set(vs_new)
+                else:
+                    kc = kc.at[bidx, slot].set(kq)
+                    vc = vc.at[bidx, slot].set(vq)
+                    ksc = ksc.at[bidx, slot].set(ks_new)
+                    vsc = vsc.at[bidx, slot].set(vs_new)
                 ksf = jax.lax.dynamic_update_index_in_dim(ksf, ksc, li, 0)
                 vsf = jax.lax.dynamic_update_index_in_dim(vsf, vsc, li, 0)
+            elif paged:
+                kc = kc.at[phys, off].set(k_new[:, 0])
+                vc = vc.at[phys, off].set(v_new[:, 0])
             else:
                 kc = kc.at[bidx, slot].set(k_new[:, 0])
                 vc = vc.at[bidx, slot].set(v_new[:, 0])

@@ -16,6 +16,7 @@ from repro.serving.engine import (
 )
 from repro.serving.events import RequestHandle, ServeError, Status, StreamEvent
 from repro.serving.faults import Fault, FaultPlan
+from repro.serving.pages import PagePool, PrefixIndex, block_hashes
 from repro.serving.sampling import decode_key, sample_tokens
 from repro.serving.scheduler import SlotScheduler, bucket_length, run_continuous
 

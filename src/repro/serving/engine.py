@@ -44,7 +44,6 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import warnings
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence
 
@@ -373,18 +372,31 @@ class EngineConfig:
     """All Engine serving knobs as one frozen, validated config.
 
     ``Engine(cfg, params, ctrl=..., probe_params=..., engine=EngineConfig(...))``
-    is the supported construction; the historical flat keyword knobs still
-    work as a deprecated shim that forwards here with a
-    ``DeprecationWarning``.  Validation that needs only the knobs themselves
-    lives in ``__post_init__``; model-capability checks (slot-prefill
-    support, kv_quant family limits) stay in ``Engine.__init__`` where the
-    model config is known.
+    is the ONLY construction — the deprecated flat-keyword shim was removed;
+    flat knobs now raise ``TypeError`` pointing here.  Validation that needs
+    only the knobs themselves lives in ``__post_init__``; model-capability
+    checks (slot-prefill support, kv_quant family limits, paged window
+    divisibility) stay in ``Engine.__init__`` where the model config is
+    known.
 
     ``prefill`` selects the continuous-admission mode: ``"whole"`` (default)
     prefills the whole bucketed prompt in one shot at admission;
     ``"inflight"`` replays the prompt in decode-chunk-sized slices through
     the persistent scan step, so admission never stalls the decoding batch
-    (see ``repro.serving.scheduler.run_continuous``)."""
+    (see ``repro.serving.scheduler.run_continuous``).
+
+    ``cache_layout`` selects the persistent-cache layout for continuous
+    serving: ``"dense"`` (default) keeps the historical per-lane slab;
+    ``"paged"`` stores K/V in a physical block pool of ``page_block``-token
+    blocks reached through per-lane block tables
+    (:class:`repro.models.cache.CacheLayout`), sized ``page_pool_blocks``
+    physical blocks (None: auto — every lane can hold a full-width row, so
+    admission never stalls and output parity with dense is unconditional).
+    ``prefix_cache`` additionally shares identical prompt prefixes across
+    requests under paged + in-flight serving: leading full blocks of a new
+    prompt that content-hash to resident blocks are mapped (refcounted) into
+    the new lane's table and its replay starts at the first unshared
+    token."""
 
     lanes: int = 8
     policy: str = "calibrated"
@@ -403,6 +415,10 @@ class EngineConfig:
     max_pending: Optional[int] = None
     max_cache_len: Optional[int] = None
     fault_plan: Optional[faults_mod.FaultPlan] = None
+    cache_layout: str = "dense"
+    page_block: int = 16
+    page_pool_blocks: Optional[int] = None
+    prefix_cache: bool = True
 
     def __post_init__(self):
         if self.policy not in ("calibrated", "crop", "full"):
@@ -434,6 +450,20 @@ class EngineConfig:
         if self.policy == "crop" and self.crop_budget < 1:
             raise ValueError("crop policy needs crop_budget >= 1 "
                              "(0 would disable the only exit trigger)")
+        if self.cache_layout not in ("dense", "paged"):
+            raise ValueError(f"unknown cache_layout {self.cache_layout!r}")
+        if self.cache_layout == "paged":
+            if self.scheduler != "continuous":
+                raise ValueError(
+                    "cache_layout='paged' pages the persistent "
+                    "continuous-batching cache; use scheduler='continuous'")
+            if self.page_block < 1:
+                raise ValueError(
+                    f"page_block must be >= 1, got {self.page_block}")
+            if self.page_pool_blocks is not None and self.page_pool_blocks < 2:
+                raise ValueError(
+                    "page_pool_blocks must be >= 2 (null block + one "
+                    "allocatable; None: auto-size so admission never stalls)")
         # normalize rather than reject: chunk < 1 never made sense and the
         # flat-kwarg Engine silently floored it at 1 — keep that contract
         object.__setattr__(self, "chunk", max(int(self.chunk), 1))
@@ -471,14 +501,10 @@ class Engine:
             if unknown:
                 raise TypeError(
                     f"unknown Engine kwargs: {sorted(unknown)}")
-            if engine is not None:
-                raise TypeError("pass engine=EngineConfig(...) OR the "
-                                "deprecated flat keyword knobs, not both")
-            warnings.warn(
-                "Engine's flat keyword knobs (lanes=, scheduler=, ...) are "
-                "deprecated; pass engine=EngineConfig(...) instead",
-                DeprecationWarning, stacklevel=2)
-            engine = EngineConfig(**legacy)
+            raise TypeError(
+                "Engine's flat keyword knobs were removed; pass "
+                f"engine=EngineConfig({', '.join(sorted(legacy))}=...) "
+                "instead")
         e = self.engine_config = engine if engine is not None else EngineConfig()
         if e.scheduler == "continuous":
             # Capability probe, not a family allowlist: admission is exact for
@@ -529,6 +555,32 @@ class Engine:
                        if cfg.native_swa and cfg.sliding_window
                        and cfg.family != "ssm" else 0)
         self.window_cache = e.window_cache
+        # Paged-cache knobs (continuous scheduler only; EngineConfig
+        # validated the scheduler pairing).  Model-aware checks live here:
+        # windowed paged serving is ring-only and needs block | window.
+        self.cache_layout = e.cache_layout
+        self.page_block = e.page_block
+        self.page_pool_blocks = e.page_pool_blocks
+        self.prefix_cache = e.prefix_cache
+        # per-layout memo for the jitted paged lane-surgery fns: repeat runs
+        # with the same (frozen, hashable) CacheLayout reuse compiled code
+        # instead of re-tracing fresh closures every run
+        self._paged_fns_by_layout: dict = {}
+        if e.cache_layout == "paged" and cache_lib.num_self_layers(cfg) == 0:
+            raise ValueError(
+                f"cache_layout='paged' pages attention K/V; family "
+                f"{cfg.family!r} has no attention cache to page")
+        if e.cache_layout == "paged" and self.window:
+            if e.window_cache != "ring":
+                raise ValueError(
+                    "cache_layout='paged' with a sliding window is ring-only"
+                    " (masked-append paged caches are not a thing); use "
+                    "window_cache='ring'")
+            if self.window % e.page_block:
+                raise ValueError(
+                    f"paged ring serving needs page_block to divide the "
+                    f"sliding window ({self.window}); got "
+                    f"page_block={e.page_block}")
         # Admission control: accept at most lanes + max_pending requests per
         # session (beyond: status="rejected", code "backpressure"); reject
         # any request whose prompt + max_new needs more than max_cache_len
@@ -680,6 +732,111 @@ class Engine:
 
         return quarantine
 
+    def make_cache_layout(self, w_cache: int | None):
+        """The :class:`repro.models.cache.CacheLayout` of this run's
+        persistent cache: dense/ring for ``cache_layout="dense"``, else a
+        paged layout of logical width ``w_cache`` (already a block multiple
+        via :meth:`decode_cache_len`; ring serving pages the window).  The
+        auto pool (``page_pool_blocks=None``) holds one full-width row per
+        lane plus the null block, so admission can never stall on pages and
+        paged output parity with dense is unconditional; an explicit smaller
+        pool trades that for memory (FIFO admission stalls until retires
+        free blocks)."""
+        ring = bool(self.window) and self.window_cache == "ring"
+        width = self.window if ring else w_cache
+        if self.cache_layout != "paged":
+            if ring:
+                return cache_lib.CacheLayout.ring(self.window)
+            return cache_lib.CacheLayout.dense(width or 0, self.window)
+        nbl = width // self.page_block
+        pool = (self.page_pool_blocks if self.page_pool_blocks is not None
+                else self.lanes * nbl + 1)
+        return cache_lib.CacheLayout.paged(
+            width, self.page_block, pool,
+            window=self.window if ring else 0)
+
+    def _make_paged_fns(self, layout) -> dict:
+        """Jitted lane surgery for one run's paged layout — the paged
+        counterparts of ``_admit_fn`` / ``_inflight_admit_fn`` /
+        ``_quarantine_fn`` plus the retire-time ``release``.  Closed over
+        the frozen ``layout`` so the block math is static, and memoized per
+        layout (run-sized, but repeat runs with the same shapes must reuse
+        the compiled fns — per-run recompiles of the admit path dominate
+        short serving runs).  Same transfer discipline as the dense fns:
+        everything stays on device, ``block_row``/``start`` arrive as traced
+        operands."""
+        cached = self._paged_fns_by_layout.get(layout)
+        if cached is not None:
+            return cached
+        ctrl = self.wave_ctrl
+        ncb = self.ncb
+
+        @jax.jit
+        def admit(pp, state, cache, cur, small, hid_last, logits, lane, plen,
+                  max_new, deadline, block_row):
+            b = cur.shape[0]
+            mask = jnp.arange(b) == lane
+            state = ctrl_mod.reset_lanes(
+                state, mask, jnp.where(mask, max_new, state.max_tokens),
+                jnp.where(mask, deadline, state.deadline))
+            cache = layout.scatter_lane(cache, small, lane,
+                                        block_row=block_row)
+            hid_b = jnp.broadcast_to(hid_last, (b, hid_last.shape[-1]))
+            if ncb:
+                tok0 = jnp.argmax(logits, -1).reshape((ncb,)).astype(jnp.int32)
+                tok_b = jnp.broadcast_to(tok0[None], (b, ncb))
+                cur = jnp.where(mask[:, None], tok0[None], cur)
+            else:
+                tok0 = jnp.argmax(logits, -1).reshape(()).astype(jnp.int32)
+                tok_b = jnp.full((b,), tok0)
+                cur = jnp.where(mask, tok0, cur)
+            state = ctrl_mod.update_lanes(
+                ctrl, pp, state, mask, tok_b,
+                hid_b, jnp.full((b,), plen - 1, jnp.int32))
+            return state, cache, cur, tok0, state.smoothed
+
+        @jax.jit
+        def inflight_admit(state, cache, cur, pf_buf, row, lane, plen,
+                           max_new, deadline, block_row, start):
+            b = cur.shape[0]
+            mask = jnp.arange(b) == lane
+            state = ctrl_mod.reset_lanes(
+                state, mask, jnp.where(mask, max_new, state.max_tokens),
+                jnp.where(mask, deadline, state.deadline))
+            # replay starts at the first unshared token: positions < start
+            # are already resident in shared prefix blocks
+            state = state._replace(
+                pf_pos=jnp.where(mask, start, state.pf_pos),
+                pf_len=jnp.where(mask, plen, state.pf_len))
+            cache = layout.reset_lane(cache, lane, row, plen,
+                                      block_row=block_row, start=start)
+            pf_buf = pf_buf.at[lane].set(row)
+            tok0 = row[start]
+            if ncb:
+                cur = jnp.where(mask[:, None], tok0[None], cur)
+            else:
+                cur = jnp.where(mask, tok0, cur)
+            return state, cache, cur, pf_buf
+
+        @jax.jit
+        def release(cache, lane):
+            return layout.release_lane(cache, lane)
+
+        @jax.jit
+        def quarantine(state, cache, lane):
+            b = state.lane_done.shape[0]
+            mask = jnp.arange(b) == lane
+            state = ctrl_mod.reset_lanes(
+                state, mask, jnp.where(mask, 0, state.max_tokens))
+            state = state._replace(lane_done=state.lane_done | mask)
+            cache = layout.scrub_lane(cache, lane)
+            return state, cache
+
+        fns = dict(admit=admit, inflight_admit=inflight_admit,
+                   release=release, quarantine=quarantine)
+        self._paged_fns_by_layout[layout] = fns
+        return fns
+
     def _prefill(self, prompts: np.ndarray, cache_len: int | None, ctx=None):
         logits, hidden, cache = model_mod.prefill(
             self.cfg, self.params, jnp.asarray(prompts), ctx,
@@ -696,10 +853,27 @@ class Engine:
         (the scanned driver always runs full-size chunks — one compiled
         graph — and may overshoot the budget by up to chunk-1 masked steps;
         the same cache_len in host mode keeps shapes, and therefore float
-        math, identical between the two drivers)."""
+        math, identical between the two drivers).  Paged layouts round the
+        need up to a block multiple — block tables address whole blocks, so
+        the logical width IS the gathered width (no trailing slice), and a
+        request's footprint is its own rounded need, not the run-wide
+        maximum."""
         if self.window and self.window_cache == "ring":
             return None
-        return plen + max_new + self.chunk + 8
+        need = plen + max_new + self.chunk + 8
+        if self.cache_layout == "paged":
+            blk = self.page_block
+            need = -(-need // blk) * blk
+        return need
+
+    def prompt_bucket(self, plen: int) -> int:
+        """Bucketed prompt length for continuous admission: power-of-two for
+        dense layouts, block-granular for paged (see
+        ``scheduler.bucket_length``)."""
+        from repro.serving.scheduler import bucket_length
+        if self.cache_layout == "paged":
+            return bucket_length(plen, block=self.page_block)
+        return bucket_length(plen)
 
     def delayed_prompt(self, req: ServeRequest) -> np.ndarray:
         """Per-request prompt in the model's input token domain: (P,) as-is
@@ -804,8 +978,7 @@ class Engine:
         if self.max_cache_len is not None:
             plen = int(prompt.shape[0])
             if self.scheduler == "continuous":
-                from repro.serving.scheduler import bucket_length
-                plen = bucket_length(plen)
+                plen = self.prompt_bucket(plen)
             need = self.decode_cache_len(plen, int(req.max_new))
             if need is not None and need > self.max_cache_len:
                 return {"code": "cache_capacity",

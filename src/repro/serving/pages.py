@@ -1,0 +1,215 @@
+"""Host-side block allocator + content-hash prefix index for paged KV serving.
+
+The device holds one physical K/V pool per layer, (NB, block, Hkv, hd), and
+an int32 block table (lanes, blocks_per_lane) naming each lane's logical
+cache (see :class:`repro.models.cache.CacheLayout`).  THIS module is the
+host-side truth about those physical blocks:
+
+* :class:`PagePool` — a free list plus per-block refcounts.  Block 0 is the
+  reserved null block (never allocated; unmapped table entries point at it).
+  A block whose refcount drops to zero either returns to the free list, or —
+  if the prefix index still names it — parks in a CACHED (evictable) state:
+  still resident, reusable by a future identical prefix, and reclaimed LRU
+  when the free list runs dry.
+* :class:`PrefixIndex` — cumulative content hashes of full prompt blocks →
+  resident block ids.  A new request whose leading blocks hash to resident
+  blocks maps them into its block table (refcount++) and skips prefill for
+  the shared span: in-flight replay starts at the first unshared token.
+
+Everything here is plain host Python over ints and bytes — hashing happens
+once per admission, BEFORE the request touches the device loop, so the
+per-chunk transfer-ledger invariant is untouched (see
+``tests/test_sanitize.py``).  This module must stay jax-free: it is imported
+by the scheduler but owns no device state.
+
+Prefix sharing is only sound when the shared tokens imply identical K/V:
+same model, same absolute positions (prefixes start at position 0), and no
+per-request conditioning.  The scheduler therefore only consults the index
+for ctx-free requests under append-layout (non-windowed) paged caches.
+"""
+
+from __future__ import annotations
+
+import hashlib
+from collections import OrderedDict
+from typing import Callable, Dict, List, Optional, Sequence
+
+NULL_BLOCK = 0
+
+
+def block_hashes(tokens, block: int) -> List[bytes]:
+    """Cumulative content hashes of the FULL blocks of a prompt.
+
+    ``tokens``: the prompt as any int sequence/array ((S,) or (S, K) for
+    multi-codebook streams).  Returns one 16-byte digest per complete block
+    of ``block`` tokens; each digest commits to the entire prefix up to and
+    including its block, so equal hash <=> equal leading tokens (modulo
+    hash collisions, at blake2b-128 odds).  Partial trailing blocks are not
+    hashable — their K/V are never shared.
+    """
+    n_full = len(tokens) // block
+    out: List[bytes] = []
+    prev = b""
+    for i in range(n_full):
+        chunk = tokens[i * block:(i + 1) * block]
+        payload = b"".join(
+            int(t).to_bytes(8, "little", signed=True)
+            for row in chunk
+            for t in (row if hasattr(row, "__len__") else (row,)))
+        prev = hashlib.blake2b(prev + payload, digest_size=16).digest()
+        out.append(prev)
+    return out
+
+
+class PagePool:
+    """Free list + refcounts over ``n_blocks`` physical blocks.
+
+    Block 0 is reserved (the null block) and never handed out.  Blocks are
+    ``used`` (refcount >= 1), ``cached`` (refcount 0 but still named by the
+    prefix index — evictable, LRU), or ``free``.  ``alloc`` prefers free
+    blocks and evicts cached ones only when the free list runs dry, calling
+    ``evict_hook(block_id)`` so the index drops its entries first.
+    """
+
+    def __init__(self, n_blocks: int, block: int):
+        if n_blocks < 2:
+            raise ValueError(
+                f"PagePool needs >= 2 blocks (null + 1 allocatable), "
+                f"got {n_blocks}")
+        self.n_blocks = int(n_blocks)
+        self.block = int(block)
+        # LIFO free list, low ids first out — deterministic placement
+        self._free: List[int] = list(range(self.n_blocks - 1, 0, -1))
+        self._ref: Dict[int, int] = {}
+        self._cached: "OrderedDict[int, None]" = OrderedDict()
+        self._indexed: set = set()
+        self.evict_hook: Optional[Callable[[int], None]] = None
+        self.stats = {"allocs": 0, "evictions": 0, "peak_used": 0,
+                      "released": 0}
+
+    # -- introspection ------------------------------------------------------
+
+    @property
+    def used(self) -> int:
+        """Blocks currently held by at least one lane."""
+        return len(self._ref)
+
+    @property
+    def cached(self) -> int:
+        return len(self._cached)
+
+    @property
+    def available(self) -> int:
+        """Blocks an ``alloc`` could hand out right now."""
+        return len(self._free) + len(self._cached)
+
+    def refcount(self, block_id: int) -> int:
+        return self._ref.get(block_id, 0)
+
+    # -- allocation ---------------------------------------------------------
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """Claim ``n`` blocks (refcount 1 each), or None if they don't fit.
+
+        All-or-nothing: a partial allocation would deadlock FIFO admission.
+        """
+        if n > self.available:
+            return None
+        ids: List[int] = []
+        for _ in range(n):
+            if self._free:
+                ids.append(self._free.pop())
+            else:
+                bid, _ = self._cached.popitem(last=False)   # LRU eviction
+                self._indexed.discard(bid)
+                if self.evict_hook is not None:
+                    self.evict_hook(bid)
+                self.stats["evictions"] += 1
+                ids.append(bid)
+        for bid in ids:
+            self._ref[bid] = 1
+        self.stats["allocs"] += n
+        self.stats["peak_used"] = max(self.stats["peak_used"], self.used)
+        return ids
+
+    def retain(self, ids: Sequence[int]) -> None:
+        """Refcount++ on already-resident blocks (a prefix-index hit); a
+        cached block is promoted back to used."""
+        for bid in ids:
+            if bid in self._cached:
+                del self._cached[bid]
+                self._ref[bid] = 1
+            else:
+                self._ref[bid] += 1
+        self.stats["peak_used"] = max(self.stats["peak_used"], self.used)
+
+    def release(self, ids: Sequence[int]) -> None:
+        """Refcount-- ; at zero the block returns to the free list, or parks
+        as cached (evictable) while the prefix index still names it."""
+        for bid in ids:
+            left = self._ref[bid] - 1
+            if left:
+                self._ref[bid] = left
+                continue
+            del self._ref[bid]
+            if bid in self._indexed:
+                self._cached[bid] = None            # most-recently released
+                self._cached.move_to_end(bid)
+            else:
+                self._free.append(bid)
+            self.stats["released"] += 1
+
+    def mark_indexed(self, ids: Sequence[int]) -> None:
+        self._indexed.update(ids)
+
+
+class PrefixIndex:
+    """Cumulative block hash -> resident physical block id.
+
+    ``lookup`` walks a prompt's block-hash chain and returns the resident
+    blocks of its longest indexed prefix; the caller maps them into the new
+    lane's block table (``pool.retain``) and starts the in-flight replay at
+    the first unshared token.  ``register`` publishes a lane's fully-written
+    prompt blocks once its replay completes — never earlier, so a partially
+    replayed lane can't serve garbage to a lookalike.  Evictions (the pool
+    reclaiming a cached block) drop every hash that named the block.
+    """
+
+    def __init__(self, pool: PagePool):
+        self._pool = pool
+        self._by_hash: Dict[bytes, int] = {}
+        self._by_block: Dict[int, List[bytes]] = {}
+        pool.evict_hook = self._drop_block
+        self.stats = {"lookups": 0, "hit_blocks": 0, "registered": 0}
+
+    def lookup(self, hashes: Sequence[bytes]) -> List[int]:
+        """Block ids of the longest indexed prefix of ``hashes``."""
+        self.stats["lookups"] += 1
+        ids: List[int] = []
+        for h in hashes:
+            bid = self._by_hash.get(h)
+            if bid is None:
+                break
+            ids.append(bid)
+        self.stats["hit_blocks"] += len(ids)
+        return ids
+
+    def register(self, hashes: Sequence[bytes],
+                 block_ids: Sequence[int]) -> None:
+        """Publish ``block_ids[i]`` as the resident K/V of prefix
+        ``hashes[i]``.  First writer wins: a hash already indexed keeps its
+        existing block (the duplicate stays private and unindexed)."""
+        fresh: List[int] = []
+        for h, bid in zip(hashes, block_ids):
+            if h in self._by_hash:
+                continue
+            self._by_hash[h] = bid
+            self._by_block.setdefault(bid, []).append(h)
+            fresh.append(bid)
+        if fresh:
+            self._pool.mark_indexed(fresh)
+            self.stats["registered"] += len(fresh)
+
+    def _drop_block(self, block_id: int) -> None:
+        for h in self._by_block.pop(block_id, []):
+            del self._by_hash[h]

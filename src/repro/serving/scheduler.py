@@ -55,17 +55,28 @@ from repro.serving.engine import (BOOK_KEYS, ServeRequest, ServeResult,
                                   append_chunk, status_counts,
                                   status_from_book)
 from repro.serving.events import RequestHandle, Status, StreamEvent
+from repro.serving.pages import (NULL_BLOCK, PagePool, PrefixIndex,
+                                 block_hashes)
 
 MIN_BUCKET = 8
 
 
-def bucket_length(plen: int, min_bucket: int = MIN_BUCKET) -> int:
-    """Smallest power-of-two bucket >= plen (>= min_bucket).
+def bucket_length(plen: int, min_bucket: int = MIN_BUCKET,
+                  block: int = 0) -> int:
+    """Bucketed prompt length: the smallest power-of-two >= plen
+    (>= min_bucket), or — with ``block > 0`` (paged serving) — the smallest
+    multiple of ``block`` >= plen.
 
     Prompts are right-padded to their bucket, so the jitted prefill compiles
-    once per bucket instead of once per distinct prompt length."""
+    once per bucket instead of once per distinct prompt length.  Paged
+    caches address whole blocks, so block-granular buckets waste at most
+    ``block - 1`` slots of slack per prompt instead of up to 2x under
+    power-of-two rounding — the per-request footprint that
+    admitted-lanes-per-GB is won on."""
     if plen < 1:
         raise ValueError(f"prompt length must be >= 1, got {plen}")
+    if block:
+        return -(-plen // block) * block
     b = max(int(min_bucket), 1)
     while b < plen:
         b *= 2
@@ -205,6 +216,18 @@ class _ContinuousSession:
         self.chunks = 0
         self.w_cache: Optional[int] = None
         self._dev: Optional[dict] = None
+        # paged-cache machinery (None under the dense layout): host block
+        # allocator + prefix index, per-run jitted lane surgery, and per-lane
+        # owned-block / pending-registration bookkeeping
+        self._layout = None
+        self._pool: Optional[PagePool] = None
+        self._prefix: Optional[PrefixIndex] = None
+        self._paged_fns: Optional[dict] = None
+        self._lane_blocks: List[Optional[List[int]]] = [None] * eng.lanes
+        self._lane_reg: List[Optional[tuple]] = [None] * eng.lanes
+        self.page_stalls = 0
+        self.prefix_hits = 0
+        self.prefix_shared_tokens = 0
         # injected host faults (None in production): drain stops admission
         # and sheds the queue from its step on; stall holds admission closed
         # for `chunks` chunk boundaries starting at its step — admission
@@ -241,13 +264,27 @@ class _ContinuousSession:
                               f"{eng.lanes} lanes + {eng.max_pending} "
                               "pending)"}
         if err is None and self._dev is not None and self.w_cache is not None:
-            need = eng.decode_cache_len(bucket_length(len(req.prompt)),
+            need = eng.decode_cache_len(eng.prompt_bucket(len(req.prompt)),
                                         int(req.max_new))
             if need is not None and need > self.w_cache:
                 err = {"code": "cache_capacity",
                        "message": f"late request needs {need} cache slots; "
                                   "this session's persistent cache was "
                                   f"sized at {self.w_cache}"}
+        if err is None and eng.cache_layout == "paged":
+            # a request that could never fit the physical pool (even with
+            # every other lane retired) must not deadlock FIFO admission
+            pool_total = (self._layout.pool_blocks
+                          if self._layout is not None
+                          else eng.page_pool_blocks)
+            need = eng.decode_cache_len(eng.prompt_bucket(len(req.prompt)),
+                                        int(req.max_new))
+            if (need is not None and pool_total is not None
+                    and need // eng.page_block > pool_total - 1):
+                err = {"code": "page_capacity",
+                       "message": f"request needs {need // eng.page_block} "
+                                  f"cache blocks; the page pool holds "
+                                  f"{pool_total - 1} allocatable blocks"}
         if err is not None:
             self._terminal(order, eng.failed_result(req, Status.REJECTED,
                                                     err))
@@ -296,6 +333,16 @@ class _ContinuousSession:
             "stalled_admissions": self.stalled_admissions,
             "warnings": self.warnings,
         }
+        if self._pool is not None:
+            eng.last_stats["page_pool"] = dict(
+                self._pool.stats, n_blocks=self._pool.n_blocks,
+                block=self._pool.block, used=self._pool.used,
+                cached=self._pool.cached)
+            eng.last_stats["page_stalls"] = self.page_stalls
+        if self._prefix is not None:
+            eng.last_stats["prefix_index"] = dict(
+                self._prefix.stats, hits=self.prefix_hits,
+                shared_tokens=self.prefix_shared_tokens)
         return [self.results[i] for i in range(self.n_submitted)]
 
     # ------------------------------------------------------------ internals
@@ -307,7 +354,7 @@ class _ContinuousSession:
         # per-run cache sizing (see the run_continuous docstring contract);
         # decode_cache_len is None exactly when ring serving sizes the cache
         # at the window
-        needs = [eng.decode_cache_len(bucket_length(len(a.req.prompt)),
+        needs = [eng.decode_cache_len(eng.prompt_bucket(len(a.req.prompt)),
                                       a.req.max_new) for a in acts]
         if needs[0] is None:
             self.w_cache = None
@@ -336,7 +383,25 @@ class _ContinuousSession:
             max_tokens=jnp.zeros((lanes,), jnp.int32))
         cur_shape = (lanes, eng.ncb) if eng.ncb else (lanes,)
         cur = jnp.zeros(cur_shape, jnp.int32)
-        if eng.prefill_mode == "inflight":
+        if eng.cache_layout == "paged":
+            # paged runs always pre-build the cache: physical K/V pools plus
+            # per-lane block tables (every row starts at the null block).
+            # Prefix sharing needs identical absolute positions and no
+            # per-lane recurrent carry, so it is armed only for in-flight,
+            # non-windowed, attention-only (no ssm state) serving.
+            layout = eng.make_cache_layout(self.w_cache)
+            self._layout = layout
+            self._paged_fns = eng._make_paged_fns(layout)
+            self._pool = PagePool(layout.pool_blocks, layout.block)
+            if (eng.prefix_cache and eng.prefill_mode == "inflight"
+                    and not eng.window and not eng.cfg.uses_ssm):
+                self._prefix = PrefixIndex(self._pool)
+            cache = layout.init(eng.cfg, lanes,
+                                dtype=jnp.dtype(eng.compute_dtype),
+                                kv_quant=eng.kv_quant)
+            pf_w = (max(eng.prompt_bucket(len(a.req.prompt)) for a in acts)
+                    if eng.prefill_mode == "inflight" else 1)
+        elif eng.prefill_mode == "inflight":
             # the persistent cache starts EMPTY (prompts replay through the
             # decode graph) and the prompt buffer starts at the widest
             # bucket seen so far — a later, wider admission grows it (one
@@ -345,7 +410,7 @@ class _ContinuousSession:
                 eng.cfg, lanes, self.w_cache, window=eng.window,
                 ring_cache=(eng.window_cache == "ring"),
                 compute_dtype=eng.compute_dtype, kv_quant=eng.kv_quant)
-            pf_w = max(bucket_length(len(a.req.prompt)) for a in acts)
+            pf_w = max(eng.prompt_bucket(len(a.req.prompt)) for a in acts)
         else:
             cache = None   # replicated from the first admission's prefill
             pf_w = 1       # degenerate: the whole-prompt graph ignores pf
@@ -379,21 +444,78 @@ class _ContinuousSession:
         eng, sched = self.eng, self.sched
         inflight = eng.prefill_mode == "inflight"
         for lane in sched.free_lanes():
-            act = sched.admit_next(lane, self.gstep)
-            if act is None:
+            if not sched.has_pending:
                 break
+            plan = None
+            if self._pool is not None:
+                plan = self._plan_pages(sched.pending[0])
+                if plan is None:
+                    # the FIFO head cannot get its blocks: hold admission
+                    # (no skip-ahead — a smaller request jumping the queue
+                    # could starve the head forever) until retires free pages
+                    self.page_stalls += 1
+                    break
+            act = sched.admit_next(lane, self.gstep)
             if inflight:
-                self._admit_inflight(act, lane)
+                self._admit_inflight(act, lane, plan)
             else:
-                self._admit_whole(act, lane)
+                self._admit_whole(act, lane, plan)
 
-    def _admit_whole(self, act: _Active, lane: int) -> None:
+    def _plan_pages(self, act: _Active) -> Optional[dict]:
+        """Host-side page plan for admitting ``act``: consult the prefix
+        index for resident leading blocks (refcount++), claim private blocks
+        for the rest, and lay out the lane's block-table row.  Returns None
+        — with every refcount untouched — when the pool cannot supply the
+        private blocks (the caller stalls admission).
+
+        Hashing/lookup happen here, before any device work, so the
+        transfer-ledger invariant of the device loop is untouched."""
+        eng, layout, pool = self.eng, self._layout, self._pool
+        blk = layout.block
+        nbl = layout.blocks_per_lane
+        plen = len(act.req.prompt)
+        if self.w_cache is None:
+            n_need = nbl       # ring: every slot wraps into use
+        else:
+            need = eng.decode_cache_len(eng.prompt_bucket(plen),
+                                        int(act.req.max_new))
+            n_need = min(need // blk, nbl)
+        shared: List[int] = []
+        hashes: List[bytes] = []
+        if self._prefix is not None and act.req.ctx is None:
+            hashes = block_hashes(np.asarray(act.req.prompt), blk)
+            shared = self._prefix.lookup(hashes)
+            while shared and len(shared) * blk >= plen:
+                # replay must consume >= 1 real token (the FLIP step seeds
+                # off the last prompt position's logits)
+                shared.pop()
+        pool.retain(shared)    # pin before alloc: eviction can't reap them
+        priv = pool.alloc(n_need - len(shared))
+        if priv is None:
+            pool.release(shared)
+            return None
+        row = np.full((nbl,), NULL_BLOCK, np.int32)
+        ids = shared + priv
+        row[:len(ids)] = ids
+        if shared:
+            self.prefix_hits += 1
+            self.prefix_shared_tokens += len(shared) * blk
+        # full prompt blocks to publish once the replay completes (shared
+        # entries re-register as no-ops: first writer wins)
+        reg = (hashes, row[:len(hashes)].tolist()) if hashes else None
+        return dict(row=row, owned=ids, shared_tokens=len(shared) * blk,
+                    reg=reg)
+
+    def _admit_whole(self, act: _Active, lane: int,
+                     plan: Optional[dict] = None) -> None:
         """Whole-prompt admission: one batch=1 bucketed prefill scattered
         into the lane, seed token synced to the host (the per-admission
-        ``"admit"`` ledger entry) and streamed immediately."""
+        ``"admit"`` ledger entry) and streamed immediately.  Under the paged
+        layout (``plan``) the prefilled K/V lands block-by-block in the
+        lane's freshly claimed physical blocks instead."""
         eng, d = self.eng, self._dev
         plen = len(act.req.prompt)
-        bucket = bucket_length(plen)
+        bucket = eng.prompt_bucket(plen)
         shape = (1, bucket, eng.ncb) if eng.ncb else (1, bucket)
         toks = np.zeros(shape, np.int32)
         toks[0, :plen] = eng.delayed_prompt(act.req)
@@ -410,11 +532,22 @@ class _ContinuousSession:
             d["cache"] = eng._replicate_fn(small)
         deadline = (act.req.deadline_steps
                     if act.req.deadline_steps > 0 else ctrl_mod.INF_STEPS)
-        state, cache, cur, tok0, sm = eng._admit_fn(
-            d["pp"], d["state"], d["cache"], d["cur"], small, hid_last,
-            logits, guards.device_scalar(lane), guards.device_scalar(plen),
-            guards.device_scalar(act.req.max_new),
-            guards.device_scalar(deadline))
+        if plan is not None:
+            state, cache, cur, tok0, sm = self._paged_fns["admit"](
+                d["pp"], d["state"], d["cache"], d["cur"], small, hid_last,
+                logits, guards.device_scalar(lane),
+                guards.device_scalar(plen),
+                guards.device_scalar(act.req.max_new),
+                guards.device_scalar(deadline),
+                guards.device_array(plan["row"]))
+            self._lane_blocks[lane] = plan["owned"]
+        else:
+            state, cache, cur, tok0, sm = eng._admit_fn(
+                d["pp"], d["state"], d["cache"], d["cur"], small, hid_last,
+                logits, guards.device_scalar(lane),
+                guards.device_scalar(plen),
+                guards.device_scalar(act.req.max_new),
+                guards.device_scalar(deadline))
         d.update(state=state, cache=cache, cur=cur)
         tok0_np, sm_np = guards.host_sync((tok0, sm), "admit")
         if eng.ncb:
@@ -431,17 +564,21 @@ class _ContinuousSession:
             kind="tokens", uid=act.req.uid, order=self.orders[act.order],
             step=self.gstep, tokens=payload))
 
-    def _admit_inflight(self, act: _Active, lane: int) -> None:
+    def _admit_inflight(self, act: _Active, lane: int,
+                        plan: Optional[dict] = None) -> None:
         """In-flight admission: pure device-side lane surgery — no prefill
         dispatch, no host sync (the ledger for an in-flight run counts
         ``"chunk"`` entries ONLY).  The lane replays its prompt through the
         persistent chunk step; its seed token is emitted by the in-scan
         FLIP, so the first stream event arrives with the chunk that crosses
-        the prompt boundary."""
+        the prompt boundary.  Under the paged layout (``plan``) the lane's
+        block-table row is installed instead of a slab wipe, and a prefix
+        hit starts the replay at the first unshared token — the shared
+        span's K/V are already resident."""
         eng, d = self.eng, self._dev
         plen = len(act.req.prompt)
         pf = d["pf"]
-        row_w = bucket_length(plen)
+        row_w = eng.prompt_bucket(plen)
         if row_w > pf.shape[1]:
             # grow the shared prompt buffer to the new width bucket (one
             # chunk-graph retrace per width; outputs invariant)
@@ -452,11 +589,24 @@ class _ContinuousSession:
         row[:plen] = eng.delayed_prompt(act.req)
         deadline = (act.req.deadline_steps
                     if act.req.deadline_steps > 0 else ctrl_mod.INF_STEPS)
-        state, cache, cur, pf = eng._inflight_admit_fn(
-            d["state"], d["cache"], d["cur"], pf, guards.device_array(row),
-            guards.device_scalar(lane), guards.device_scalar(plen),
-            guards.device_scalar(act.req.max_new),
-            guards.device_scalar(deadline))
+        if plan is not None:
+            state, cache, cur, pf = self._paged_fns["inflight_admit"](
+                d["state"], d["cache"], d["cur"], pf,
+                guards.device_array(row), guards.device_scalar(lane),
+                guards.device_scalar(plen),
+                guards.device_scalar(act.req.max_new),
+                guards.device_scalar(deadline),
+                guards.device_array(plan["row"]),
+                guards.device_scalar(plan["shared_tokens"]))
+            self._lane_blocks[lane] = plan["owned"]
+            self._lane_reg[lane] = plan["reg"]
+        else:
+            state, cache, cur, pf = eng._inflight_admit_fn(
+                d["state"], d["cache"], d["cur"], pf,
+                guards.device_array(row), guards.device_scalar(lane),
+                guards.device_scalar(plen),
+                guards.device_scalar(act.req.max_new),
+                guards.device_scalar(deadline))
         ctx = eng.request_ctx(act.req)
         if ctx is not None:
             cache = eng._ctx_admit_fn(
@@ -514,6 +664,18 @@ class _ContinuousSession:
                     kind="tokens", uid=act.req.uid,
                     order=self.orders[act.order], step=self.gstep,
                     tokens=new))
+        if self._prefix is not None:
+            # publish prompt blocks of lanes whose replay completed this
+            # chunk (first emission stamped, lane finite) — never earlier,
+            # so a partially replayed lane can't serve garbage to a
+            # lookalike prompt
+            for lane, act in enumerate(sched.owner):
+                reg = self._lane_reg[lane]
+                if (reg is not None and act is not None
+                        and act.first_token_step >= 0
+                        and not bool(book["poisoned"][lane])):
+                    self._prefix.register(*reg)
+                    self._lane_reg[lane] = None
         for lane, act in enumerate(sched.owner):
             if act is not None and done_np[lane]:
                 order, res = sched.retire(
@@ -525,11 +687,27 @@ class _ContinuousSession:
                     # quarantine before the slot refills: re-arm the lane's
                     # controller state (its probe accumulators hold NaN/Inf)
                     # and scrub the lane's cache content — all on device,
-                    # zero extra host syncs
+                    # zero extra host syncs (the paged scrub remaps the
+                    # lane's block table to the null block instead)
                     self.quarantined += 1
-                    state, cache = eng._quarantine_fn(
+                    qfn = (self._paged_fns["quarantine"]
+                           if self._pool is not None else eng._quarantine_fn)
+                    state, cache = qfn(
                         d["state"], d["cache"], guards.device_scalar(lane))
                     d.update(state=state, cache=cache)
+                elif self._pool is not None:
+                    # null the lane's table row on device BEFORE the host
+                    # hands its blocks back: the lane keeps executing
+                    # masked writes until refilled, and a stale mapping
+                    # would corrupt blocks reallocated to another lane
+                    d["cache"] = self._paged_fns["release"](
+                        d["cache"], guards.device_scalar(lane))
+                if self._pool is not None:
+                    owned = self._lane_blocks[lane]
+                    if owned:
+                        self._pool.release(owned)
+                    self._lane_blocks[lane] = None
+                    self._lane_reg[lane] = None
 
 
 def run_continuous(eng, requests: Sequence[ServeRequest]) -> List[ServeResult]:

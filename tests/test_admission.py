@@ -16,7 +16,7 @@ from repro.core import controller as C
 from repro.data.traces import (ANS_BASE, BOS, EOS, THINK_END, BOUNDARY_IDS,
                                MARKER_IDS)
 from repro.models import model as M
-from repro.serving import Engine, ServeRequest
+from repro.serving import Engine, EngineConfig, ServeRequest
 
 from _hypothesis_compat import given, settings, st
 from test_engine import CONTENT, _install_scripted_model
@@ -63,8 +63,9 @@ def _mk_engine(lanes=2, scheduler="wave", **kw):
     ctrl = C.ControllerConfig(BOUNDARY_IDS, MARKER_IDS, window=10,
                               min_steps=1, probe_dim=16)
     pp = C.init_probe_params(cfg.d_model, 16)
-    return Engine(cfg, None, ctrl=ctrl, probe_params=pp, lanes=lanes,
-                  policy="full", scheduler=scheduler, chunk=4, **kw)
+    return Engine(cfg, None, ctrl=ctrl, probe_params=pp,
+                  engine=EngineConfig(lanes=lanes, policy="full",
+                                      scheduler=scheduler, chunk=4, **kw))
 
 
 # ---------------------------------------------------------------------------
@@ -134,7 +135,8 @@ def test_ctx_shape_screening():
     ctrl = C.ControllerConfig(BOUNDARY_IDS, MARKER_IDS, window=10,
                               min_steps=1, probe_dim=16)
     pp = C.init_probe_params(cfg.d_model, 16)
-    eng = Engine(cfg, None, ctrl=ctrl, probe_params=pp, lanes=2)
+    eng = Engine(cfg, None, ctrl=ctrl, probe_params=pp,
+                 engine=EngineConfig(lanes=2))
     assert cfg.uses_cross_attn
     bad = ServeRequest(uid=0, prompt=np.array([BOS], np.int32),
                        ctx=np.zeros((3, 3), np.float32))
@@ -196,8 +198,8 @@ def test_wave_mixed_batch_drains_in_order(monkeypatch):
     ctrl = C.ControllerConfig(BOUNDARY_IDS, MARKER_IDS, window=10,
                               min_steps=1, probe_dim=16)
     pp = C.init_probe_params(cfg.d_model, 16)
-    eng = Engine(cfg, None, ctrl=ctrl, probe_params=pp, lanes=2,
-                 policy="full", chunk=4)
+    eng = Engine(cfg, None, ctrl=ctrl, probe_params=pp,
+                 engine=EngineConfig(lanes=2, policy="full", chunk=4))
     reqs = [_make_request("valid", 0, 0),
             _make_request("empty", 1, 0),
             _make_request("valid", 2, 1),
@@ -230,16 +232,16 @@ def test_rejected_never_consumes_prefill(monkeypatch):
     ctrl = C.ControllerConfig(BOUNDARY_IDS, MARKER_IDS, window=10,
                               min_steps=1, probe_dim=16)
     pp = C.init_probe_params(cfg.d_model, 16)
-    eng = Engine(cfg, None, ctrl=ctrl, probe_params=pp, lanes=2,
-                 policy="full", chunk=4)
+    eng = Engine(cfg, None, ctrl=ctrl, probe_params=pp,
+                 engine=EngineConfig(lanes=2, policy="full", chunk=4))
     res = eng.run(bad)
     assert all(r.status == "rejected" for r in res)
     assert calls["prefill"] == 0
     assert eng.last_stats["chunks"] == 0
 
     # wave: one prefill per wave of accepted requests, rejects add none
-    eng = Engine(cfg, None, ctrl=ctrl, probe_params=pp, lanes=2,
-                 policy="full", chunk=4)
+    eng = Engine(cfg, None, ctrl=ctrl, probe_params=pp,
+                 engine=EngineConfig(lanes=2, policy="full", chunk=4))
     eng.run([_make_request("valid", 0, 0), _make_request("empty", 1, 0),
              _make_request("valid", 2, 1)])
     assert calls["prefill"] == 1

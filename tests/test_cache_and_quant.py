@@ -9,8 +9,7 @@ from _hypothesis_compat import given, settings, st
 from repro.models.cache import (
     cache_key_positions,
     cache_slot,
-    cache_valid_mask,
-    cache_valid_mask_pre_write,
+    cache_valid_slots,
     cache_write,
     dequantize_kv,
     quantize_kv,
@@ -21,8 +20,8 @@ from repro.models.cache import (
 @settings(max_examples=40, deadline=None)
 def test_ring_valid_mask_counts(w, p):
     pos = jnp.asarray([p])
-    post = np.asarray(cache_valid_mask(pos, w, window=w))[0]
-    pre = np.asarray(cache_valid_mask_pre_write(pos, w, window=w))[0]
+    post = np.asarray(cache_valid_slots(pos, w, w, phase="post_write"))[0]
+    pre = np.asarray(cache_valid_slots(pos, w, w, phase="pre_write"))[0]
     assert post.sum() == min(p + 1, w)
     # pre-write: the slot about to be overwritten is excluded once warm
     assert pre.sum() == min(p, w) - (1 if p >= w else 0)
@@ -33,7 +32,7 @@ def test_ring_valid_mask_counts(w, p):
 @settings(max_examples=40, deadline=None)
 def test_append_valid_mask(w, p):
     pos = jnp.asarray([p])
-    post = np.asarray(cache_valid_mask(pos, w, window=0))[0]
+    post = np.asarray(cache_valid_slots(pos, w, 0, phase="post_write"))[0]
     assert post.sum() == min(p + 1, w)
 
 
@@ -47,8 +46,8 @@ LAYOUTS = ((8, 8), (24, 8), (24, 0))
 
 @pytest.mark.parametrize("w,window", LAYOUTS)
 def test_mask_helpers_agree_on_slot_positions(w, window):
-    """The three mask helpers and ``cache_key_positions`` must describe the
-    SAME pre-/post-write cache state, across wrap boundaries: a slot is
+    """Both ``cache_valid_slots`` phases and ``cache_key_positions`` must
+    describe the SAME pre-/post-write cache state, across wrap boundaries: a slot is
     pre-write-valid iff the absolute position it holds is written (>= 0) and
     inside the trailing window ending at pos-1, and post-write-valid iff its
     post-write position is inside the window ending at pos."""
@@ -61,7 +60,7 @@ def test_mask_helpers_agree_on_slot_positions(w, window):
         kp = np.asarray(cache_key_positions(pos, w, window))[0]     # pre-write
         win = window if window else 10 ** 9
         want_pre = (kp >= 0) & (kp < p) & (kp > p - win)
-        pre = np.asarray(cache_valid_mask_pre_write(pos, w, window))[0]
+        pre = np.asarray(cache_valid_slots(pos, w, window, phase="pre_write"))[0]
         np.testing.assert_array_equal(pre, want_pre, err_msg=f"pre p={p}")
         # _attn_ring_bounds (the Pallas path) must mask identically
         lo, hi, skip = jax.device_get(_attn_ring_bounds(pos, w, window))
@@ -74,7 +73,7 @@ def test_mask_helpers_agree_on_slot_positions(w, window):
         kp_post = kp.copy()
         kp_post[int(cache_slot(pos, w, window)[0])] = p
         want_post = (kp_post >= 0) & (kp_post <= p) & (kp_post > p - win)
-        post = np.asarray(cache_valid_mask(pos, w, window))[0]
+        post = np.asarray(cache_valid_slots(pos, w, window, phase="post_write"))[0]
         np.testing.assert_array_equal(post, want_post, err_msg=f"post p={p}")
 
 
@@ -89,7 +88,7 @@ def test_cache_key_positions_match_written_slots(w, window):
     for p in range(total):
         kp = np.asarray(cache_key_positions(jnp.asarray([p]), w, window))[0]
         valid = np.asarray(
-            cache_valid_mask_pre_write(jnp.asarray([p]), w, window))[0]
+            cache_valid_slots(jnp.asarray([p]), w, window, phase="pre_write"))[0]
         held = np.asarray(k_cache[0, :, 0, 0])
         for s in np.nonzero(valid)[0]:
             assert held[s] == kp[s], (p, s)

@@ -137,7 +137,7 @@ def test_engine_ring_parity_past_window(arch, attn_impl):
     token-identical (greedy, float32) to the full-length append cache whose
     attention is masked to the trailing window (``window_cache="append"``),
     under wave/scan, wave/host, and continuous schedulers."""
-    from repro.serving import Engine, ServeRequest
+    from repro.serving import Engine, EngineConfig, ServeRequest
 
     window = 8
     cfg, params, ctrl, pp, bos = _swa_engine_fixture(arch, window)
@@ -148,14 +148,15 @@ def test_engine_ring_parity_past_window(arch, attn_impl):
                                            100 + 10 * i + plen - 1)
                             ].astype(np.int32),
         max_new=max_new) for i in range(2)]
-    kw = dict(ctrl=ctrl, probe_params=pp, lanes=2, policy="full", chunk=4,
-              seed=3, attn_impl=attn_impl)
-    ref = Engine(cfg, params, window_cache="append", **kw).run(reqs)
+    kw = dict(lanes=2, policy="full", chunk=4, seed=3, attn_impl=attn_impl)
+    ref = Engine(cfg, params, ctrl=ctrl, probe_params=pp,
+                 engine=EngineConfig(window_cache="append", **kw)).run(reqs)
     assert any(len(r.tokens) + plen > window for r in ref)
     for label, ekw in (("wave/scan", {}),
                        ("wave/host", {"decode_mode": "host"}),
                        ("continuous", {"scheduler": "continuous"})):
-        got = Engine(cfg, params, **kw, **ekw).run(reqs)
+        got = Engine(cfg, params, ctrl=ctrl, probe_params=pp,
+                     engine=EngineConfig(**kw, **ekw)).run(reqs)
         for a, b in zip(ref, got):
             assert _result_tuple(a) == _result_tuple(b), (label, a.uid)
 
@@ -165,15 +166,15 @@ def test_engine_ring_matches_teacher_forced_forward(arch):
     """Ring serving past the window must reproduce a greedy teacher-forced
     rollout of ``forward`` (whose native-SWA attention mask is the ground
     truth for the windowed semantics)."""
-    from repro.serving import Engine, ServeRequest
+    from repro.serving import Engine, EngineConfig, ServeRequest
 
     window = 8
     cfg, params, ctrl, pp, bos = _swa_engine_fixture(arch, window)
     plen = window
     max_new = 3 * window - plen
     prompt = np.r_[bos, np.arange(100, 100 + plen - 1)].astype(np.int32)
-    res = Engine(cfg, params, ctrl=ctrl, probe_params=pp, lanes=1,
-                 policy="full", chunk=4, seed=3).run(
+    res = Engine(cfg, params, ctrl=ctrl, probe_params=pp,
+                 engine=EngineConfig(lanes=1, policy="full", chunk=4, seed=3)).run(
         [ServeRequest(uid=0, prompt=prompt, max_new=max_new)])[0]
     seq = list(prompt)
     want = []
@@ -192,7 +193,7 @@ def test_continuous_ring_bucket_exceeds_window_matches_solo(key):
     solo wave runs across wrap boundaries."""
     from repro.core import controller as C
     from repro.data.traces import BOS, BOUNDARY_IDS, MARKER_IDS
-    from repro.serving import Engine, ServeRequest
+    from repro.serving import Engine, EngineConfig, ServeRequest
 
     cfg = get_reduced("phi3-mini-3.8b").replace(sliding_window=4)
     params = M.init_params(cfg, key)
@@ -203,11 +204,14 @@ def test_continuous_ring_bucket_exceeds_window_matches_solo(key):
                for n in (2, 6, 10, 4)]
     reqs = [ServeRequest(uid=i, prompt=p, max_new=12)
             for i, p in enumerate(prompts)]
-    kw = dict(ctrl=ctrl, probe_params=pp, policy="full", chunk=4, seed=3)
+    kw = dict(policy="full", chunk=4, seed=3)
     alone = []
     for r in reqs:
-        alone.extend(Engine(cfg, params, lanes=1, **kw).run([r]))
-    cont = Engine(cfg, params, lanes=2, scheduler="continuous", **kw).run(reqs)
+        alone.extend(Engine(cfg, params, ctrl=ctrl, probe_params=pp,
+                            engine=EngineConfig(lanes=1, **kw)).run([r]))
+    cont = Engine(cfg, params, ctrl=ctrl, probe_params=pp,
+                  engine=EngineConfig(lanes=2, scheduler="continuous",
+                                      **kw)).run(reqs)
     for a, b in zip(alone, cont):
         assert _result_tuple(a) == _result_tuple(b), f"uid {a.uid}"
 
@@ -215,7 +219,7 @@ def test_continuous_ring_bucket_exceeds_window_matches_solo(key):
 def test_engine_ring_int8_kv_parity():
     """kv_quant serving from a ring cache (int8 scatter at slot = pos % w):
     scan/host/continuous must stay bit-identical past the window."""
-    from repro.serving import Engine, ServeRequest
+    from repro.serving import Engine, EngineConfig, ServeRequest
 
     window = 8
     cfg, params, ctrl, pp, bos = _swa_engine_fixture("phi3-mini-3.8b", window)
@@ -223,11 +227,12 @@ def test_engine_ring_int8_kv_parity():
         uid=i, prompt=np.r_[bos, np.arange(100 + 10 * i,
                                            107 + 10 * i)].astype(np.int32),
         max_new=2 * window) for i in range(2)]
-    kw = dict(ctrl=ctrl, probe_params=pp, lanes=2, policy="full", chunk=4,
-              seed=3, kv_quant=True)
-    ref = Engine(cfg, params, **kw).run(reqs)
+    kw = dict(lanes=2, policy="full", chunk=4, seed=3, kv_quant=True)
+    ref = Engine(cfg, params, ctrl=ctrl, probe_params=pp,
+                 engine=EngineConfig(**kw)).run(reqs)
     for ekw in ({"decode_mode": "host"}, {"scheduler": "continuous"}):
-        got = Engine(cfg, params, **kw, **ekw).run(reqs)
+        got = Engine(cfg, params, ctrl=ctrl, probe_params=pp,
+                     engine=EngineConfig(**kw, **ekw)).run(reqs)
         for a, b in zip(ref, got):
             assert _result_tuple(a) == _result_tuple(b)
 

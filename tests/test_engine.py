@@ -13,7 +13,7 @@ from repro.core import controller as C
 from repro.data.traces import (ANS_BASE, BOS, EOS, NUM_ANSWERS, NL2,
                                THINK_END, WAIT, BOUNDARY_IDS, MARKER_IDS)
 from repro.models import model as M
-from repro.serving import Engine, ServeRequest
+from repro.serving import Engine, EngineConfig, ServeRequest
 
 CONTENT = 100   # an inert content token for scripted traces
 
@@ -40,8 +40,8 @@ def _result_tuple(r):
 
 def test_crop_budget_respected(setup):
     cfg, params, ctrl, pp = setup
-    eng = Engine(cfg, params, ctrl=ctrl, probe_params=pp, lanes=4,
-                 policy="crop", crop_budget=10)
+    eng = Engine(cfg, params, ctrl=ctrl, probe_params=pp,
+                 engine=EngineConfig(lanes=4, policy="crop", crop_budget=10))
     for r in eng.run(_reqs(4)):
         assert r.think_tokens <= 10
         assert r.exited_early
@@ -49,8 +49,8 @@ def test_crop_budget_respected(setup):
 
 def test_full_policy_never_exits_early(setup):
     cfg, params, ctrl, pp = setup
-    eng = Engine(cfg, params, ctrl=ctrl, probe_params=pp, lanes=4,
-                 policy="full")
+    eng = Engine(cfg, params, ctrl=ctrl, probe_params=pp,
+                 engine=EngineConfig(lanes=4, policy="full"))
     for r in eng.run(_reqs(4, max_new=32)):
         assert not r.exited_early
 
@@ -58,8 +58,8 @@ def test_full_policy_never_exits_early(setup):
 def test_calibrated_lam_zero_exits_after_min_steps(setup):
     cfg, params, ctrl, pp = setup
     pp0 = pp._replace(lam=jnp.float32(-1.0))   # always below the score
-    eng = Engine(cfg, params, ctrl=ctrl, probe_params=pp0, lanes=4,
-                 policy="calibrated")
+    eng = Engine(cfg, params, ctrl=ctrl, probe_params=pp0,
+                 engine=EngineConfig(lanes=4, policy="calibrated"))
     res = eng.run(_reqs(4, max_new=64))
     # with an untrained model boundary tokens may never be sampled; if any
     # lane closed a step it must have exited early
@@ -70,8 +70,8 @@ def test_calibrated_lam_zero_exits_after_min_steps(setup):
 
 def test_wave_scheduling_handles_more_requests_than_lanes(setup):
     cfg, params, ctrl, pp = setup
-    eng = Engine(cfg, params, ctrl=ctrl, probe_params=pp, lanes=2,
-                 policy="crop", crop_budget=6)
+    eng = Engine(cfg, params, ctrl=ctrl, probe_params=pp,
+                 engine=EngineConfig(lanes=2, policy="crop", crop_budget=6))
     res = eng.run(_reqs(5, max_new=24))
     assert len(res) == 5
     assert sorted(r.uid for r in res) == list(range(5))
@@ -79,8 +79,8 @@ def test_wave_scheduling_handles_more_requests_than_lanes(setup):
 
 def test_results_contain_probe_trace(setup):
     cfg, params, ctrl, pp = setup
-    eng = Engine(cfg, params, ctrl=ctrl, probe_params=pp, lanes=2,
-                 policy="full")
+    eng = Engine(cfg, params, ctrl=ctrl, probe_params=pp,
+                 engine=EngineConfig(lanes=2, policy="full"))
     res = eng.run(_reqs(2, max_new=16))
     for r in res:
         assert r.probe_trace.ndim == 1
@@ -91,8 +91,9 @@ def test_results_contain_probe_trace(setup):
 
 def test_engine_int8_kv(setup):
     cfg, params, ctrl, pp = setup
-    eng = Engine(cfg, params, ctrl=ctrl, probe_params=pp, lanes=2,
-                 policy="crop", crop_budget=8, kv_quant=True)
+    eng = Engine(cfg, params, ctrl=ctrl, probe_params=pp,
+                 engine=EngineConfig(lanes=2, policy="crop", crop_budget=8,
+                                     kv_quant=True))
     res = eng.run(_reqs(2, max_new=16))
     assert len(res) == 2
     for r in res:
@@ -116,8 +117,10 @@ def test_scan_matches_host_loop(setup, policy, kw):
         pp = pp._replace(lam=jnp.float32(-1.0))
     res = {}
     for mode in ("scan", "host"):
-        eng = Engine(cfg, params, ctrl=ctrl, probe_params=pp, lanes=4,
-                     policy=policy, decode_mode=mode, chunk=8, seed=3, **kw)
+        eng = Engine(cfg, params, ctrl=ctrl, probe_params=pp,
+                     engine=EngineConfig(lanes=4, policy=policy,
+                                         decode_mode=mode, chunk=8, seed=3,
+                                         **kw))
         res[mode] = eng.run(_reqs(4, max_new=40))
     for a, b in zip(res["scan"], res["host"]):
         assert _result_tuple(a) == _result_tuple(b)
@@ -127,9 +130,10 @@ def test_scan_matches_host_loop_int8_kv(setup):
     cfg, params, ctrl, pp = setup
     res = {}
     for mode in ("scan", "host"):
-        eng = Engine(cfg, params, ctrl=ctrl, probe_params=pp, lanes=2,
-                     policy="crop", crop_budget=6, kv_quant=True,
-                     decode_mode=mode, chunk=5, seed=1)
+        eng = Engine(cfg, params, ctrl=ctrl, probe_params=pp,
+                     engine=EngineConfig(lanes=2, policy="crop", crop_budget=6,
+                                         kv_quant=True, decode_mode=mode,
+                                         chunk=5, seed=1))
         res[mode] = eng.run(_reqs(2, max_new=20))
     for a, b in zip(res["scan"], res["host"]):
         assert _result_tuple(a) == _result_tuple(b)
@@ -220,9 +224,10 @@ def test_mixed_wave_exact_bookkeeping(monkeypatch, mode, chunk):
     ctrl = C.ControllerConfig(BOUNDARY_IDS, MARKER_IDS, window=10,
                               min_steps=1, probe_dim=16)
     pp = C.init_probe_params(cfg.d_model, 16)._replace(lam=jnp.float32(-1.0))
-    eng = Engine(cfg, None, ctrl=ctrl, probe_params=pp, lanes=5,
-                 policy="calibrated", crop_budget=6, decode_mode=mode,
-                 chunk=chunk)
+    eng = Engine(cfg, None, ctrl=ctrl, probe_params=pp,
+                 engine=EngineConfig(lanes=5, policy="calibrated",
+                                     crop_budget=6, decode_mode=mode,
+                                     chunk=chunk))
     res = eng.run(_reqs(5, max_new=16))
     for i, r in enumerate(res):
         toks, think, early, estep, ans = EXPECT[i]
@@ -250,9 +255,10 @@ def test_mixed_wave_scan_equals_host(monkeypatch, chunk):
     pp = C.init_probe_params(cfg.d_model, 16)._replace(lam=jnp.float32(-1.0))
     res = {}
     for mode in ("scan", "host"):
-        eng = Engine(cfg, None, ctrl=ctrl, probe_params=pp, lanes=5,
-                     policy="calibrated", crop_budget=6, decode_mode=mode,
-                     chunk=chunk)
+        eng = Engine(cfg, None, ctrl=ctrl, probe_params=pp,
+                     engine=EngineConfig(lanes=5, policy="calibrated",
+                                         crop_budget=6, decode_mode=mode,
+                                         chunk=chunk))
         res[mode] = eng.run(_reqs(5, max_new=16))
     for a, b in zip(res["scan"], res["host"]):
         assert _result_tuple(a) == _result_tuple(b)
@@ -268,8 +274,9 @@ def test_per_request_max_new_respected(monkeypatch, mode):
     ctrl = C.ControllerConfig(BOUNDARY_IDS, MARKER_IDS, window=10,
                               min_steps=1, probe_dim=16)
     pp = C.init_probe_params(cfg.d_model, 16)
-    eng = Engine(cfg, None, ctrl=ctrl, probe_params=pp, lanes=3,
-                 policy="full", decode_mode=mode, chunk=8)
+    eng = Engine(cfg, None, ctrl=ctrl, probe_params=pp,
+                 engine=EngineConfig(lanes=3, policy="full", decode_mode=mode,
+                                     chunk=8))
     reqs = [ServeRequest(uid=i, prompt=np.array([BOS, 100 + i], np.int32),
                          max_new=m) for i, m in enumerate((1, 4, 24))]
     res = eng.run(reqs)
@@ -330,8 +337,9 @@ def test_crop_budget_exact_token_count(monkeypatch):
                               min_steps=1, probe_dim=16)
     pp = C.init_probe_params(cfg.d_model, 16)
     for budget in (1, 5):
-        eng = Engine(cfg, None, ctrl=ctrl, probe_params=pp, lanes=2,
-                     policy="crop", crop_budget=budget)
+        eng = Engine(cfg, None, ctrl=ctrl, probe_params=pp,
+                     engine=EngineConfig(lanes=2, policy="crop",
+                                         crop_budget=budget))
         for r in eng.run(_reqs(2, max_new=32)):
             assert r.think_tokens == budget
             assert r.exited_early

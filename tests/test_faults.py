@@ -17,7 +17,7 @@ from repro.configs import get_reduced
 from repro.core import controller as C
 from repro.data.traces import (ANS_BASE, BOS, EOS, THINK_END, BOUNDARY_IDS,
                                MARKER_IDS)
-from repro.serving import Engine, ServeRequest
+from repro.serving import Engine, EngineConfig, ServeRequest
 from repro.serving.faults import (DEVICE_KINDS, Fault, FaultPlan,
                                   apply_device_faults)
 
@@ -110,8 +110,9 @@ def _scripted_wave_engine(monkeypatch, lanes, plan=None, **kw):
     ctrl = C.ControllerConfig(BOUNDARY_IDS, MARKER_IDS, window=10,
                               min_steps=1, probe_dim=16)
     pp = C.init_probe_params(cfg.d_model, 16)
-    return Engine(cfg, None, ctrl=ctrl, probe_params=pp, lanes=lanes,
-                  policy="full", fault_plan=plan, **kw)
+    return Engine(cfg, None, ctrl=ctrl, probe_params=pp,
+                  engine=EngineConfig(lanes=lanes, policy="full",
+                                      fault_plan=plan, **kw))
 
 
 @pytest.mark.parametrize("mode,chunk", [("scan", 4), ("scan", 16),
@@ -207,9 +208,10 @@ def _continuous_engine(monkeypatch, plan=None, lanes=2, **kw):
     ctrl = C.ControllerConfig(BOUNDARY_IDS, MARKER_IDS, window=10,
                               min_steps=1, probe_dim=16)
     pp = C.init_probe_params(cfg.d_model, 16)
-    return Engine(cfg, None, ctrl=ctrl, probe_params=pp, lanes=lanes,
-                  policy="full", scheduler="continuous", chunk=4,
-                  fault_plan=plan, **kw)
+    return Engine(cfg, None, ctrl=ctrl, probe_params=pp,
+                  engine=EngineConfig(lanes=lanes, policy="full",
+                                      scheduler="continuous", chunk=4,
+                                      fault_plan=plan, **kw))
 
 
 @pytest.mark.parametrize("kind", sorted(DEVICE_KINDS))
@@ -257,8 +259,8 @@ def _endless_engine(monkeypatch, lanes, **kw):
     ctrl = C.ControllerConfig(BOUNDARY_IDS, MARKER_IDS, window=10,
                               min_steps=1, probe_dim=16)
     pp = C.init_probe_params(cfg.d_model, 16)
-    return Engine(cfg, None, ctrl=ctrl, probe_params=pp, lanes=lanes,
-                  policy="full", **kw)
+    return Engine(cfg, None, ctrl=ctrl, probe_params=pp,
+                  engine=EngineConfig(lanes=lanes, policy="full", **kw))
 
 
 @pytest.mark.parametrize("mode", ["scan", "host"])
@@ -306,8 +308,9 @@ def test_deadline_continuous_frees_lane(monkeypatch):
     ctrl = C.ControllerConfig(BOUNDARY_IDS, MARKER_IDS, window=10,
                               min_steps=1, probe_dim=16)
     pp = C.init_probe_params(cfg.d_model, 16)
-    eng = Engine(cfg, None, ctrl=ctrl, probe_params=pp, lanes=2,
-                 policy="full", scheduler="continuous", chunk=4)
+    eng = Engine(cfg, None, ctrl=ctrl, probe_params=pp,
+                 engine=EngineConfig(lanes=2, policy="full",
+                                     scheduler="continuous", chunk=4))
     reqs = [ServeRequest(uid=i, prompt=np.array([BOS, 100 + i], np.int32),
                          max_new=12, deadline_steps=6) for i in range(4)]
     res = eng.run(reqs)

@@ -12,8 +12,9 @@ The load-bearing guarantees:
 * fault isolation: a lane poisoned mid-stream terminates ONLY its own
   stream (status ``poisoned``); co-resident streams are bit-identical to
   the fault-free run;
-* the deprecated flat-kwarg Engine constructor warns and behaves exactly
-  like ``engine=EngineConfig(...)``;
+* the flat-kwarg Engine constructor is gone: a known EngineConfig field
+  passed flat raises a ``TypeError`` naming the ``engine=EngineConfig(...)``
+  replacement, unknown kwargs keep the ``unknown Engine kwargs`` error;
 * ``repro.serving.frontend`` (and the events module it builds on) never
   imports jax — a declared tracelint R104 boundary, asserted here by
   running the analyzer itself;
@@ -245,7 +246,7 @@ def test_incremental_api_matches_run(monkeypatch):
 
 
 # ---------------------------------------------------------------------------
-# EngineConfig: validation + the deprecated flat-kwarg shim
+# EngineConfig: validation + removal of the flat-kwarg shim
 # ---------------------------------------------------------------------------
 
 def test_engine_config_validation():
@@ -272,25 +273,21 @@ def test_engine_config_validation():
         EngineConfig().lanes = 4
 
 
-def test_deprecated_kwargs_shim_equivalent(monkeypatch):
-    reqs = _reqs(4, max_new=20)
-    modern = _cont_engine(monkeypatch).run(reqs)
-
+def test_flat_kwargs_removed(monkeypatch):
+    """The PR-8 flat-keyword shim is gone: a known EngineConfig field passed
+    flat raises a TypeError pointing at EngineConfig (naming the offending
+    knobs), while an unknown kwarg keeps the historical 'unknown Engine
+    kwargs' message."""
     cfg = get_reduced("qwen3-8b").replace(d_model=32)
     _install_scripted_slots(monkeypatch, _slot_script())
     ctrl = C.ControllerConfig(BOUNDARY_IDS, MARKER_IDS, window=10,
                               min_steps=1, probe_dim=16)
     pp = C.init_probe_params(cfg.d_model, 16)
-    with pytest.warns(DeprecationWarning, match="EngineConfig"):
-        eng = Engine(cfg, None, ctrl=ctrl, probe_params=pp, lanes=2,
-                     policy="full", scheduler="continuous", chunk=4)
-    legacy = eng.run(reqs)
-    for a, b in zip(modern, legacy):
-        assert _result_tuple(a) == _result_tuple(b)
-
-    with pytest.raises(TypeError, match="not both"):
+    with pytest.raises(TypeError, match=r"engine=EngineConfig\(lanes=\.\.\.\)"):
+        Engine(cfg, None, ctrl=ctrl, probe_params=pp, lanes=2)
+    with pytest.raises(TypeError, match="removed"):
         Engine(cfg, None, ctrl=ctrl, probe_params=pp,
-               engine=EngineConfig(), lanes=2)
+               engine=EngineConfig(lanes=2), chunk=4)
     with pytest.raises(TypeError, match="unknown Engine kwargs"):
         Engine(cfg, None, ctrl=ctrl, probe_params=pp, lanez=2)
 

@@ -150,7 +150,7 @@ def test_decode_attention_appended(b, h, kv, dh, w, softcap, key):
     """Append-without-write kernel vs jnp oracle vs the dense serving path
     (layers.decode_attention_appended) under GQA + softcap."""
     from repro.models import layers
-    from repro.models.cache import cache_valid_mask_pre_write
+    from repro.models.cache import cache_valid_slots
 
     ks = jax.random.split(key, 6)
     q = jax.random.normal(ks[0], (b, h, dh))
@@ -167,7 +167,7 @@ def test_decode_attention_appended(b, h, kv, dh, w, softcap, key):
     want = ref.decode_attention_appended_ref(q, kc, vc, lo, hi, skip, kn, vn,
                                              softcap=softcap)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
-    valid = cache_valid_mask_pre_write(pos, w, 0)
+    valid = cache_valid_slots(pos, w, 0, phase="pre_write")
     dense = layers.decode_attention_appended(
         q[:, None], kc, vc, valid, kn[:, None], vn[:, None], softcap)[:, 0]
     np.testing.assert_allclose(np.asarray(got), np.asarray(dense), atol=1e-5)
@@ -176,9 +176,9 @@ def test_decode_attention_appended(b, h, kv, dh, w, softcap, key):
 def test_decode_attention_appended_ring_skip(key):
     """Ring-buffer eviction: the skip slot (about to be overwritten by the
     incoming token) must not attend — matching the dense path's
-    cache_valid_mask_pre_write ring semantics."""
+    cache_valid_slots(phase="pre_write") ring semantics."""
     from repro.models import layers
-    from repro.models.cache import cache_valid_mask_pre_write
+    from repro.models.cache import cache_valid_slots
 
     b, h, kv, dh, w = 2, 8, 2, 64, 48          # w == sliding window
     ks = jax.random.split(key, 6)
@@ -193,7 +193,7 @@ def test_decode_attention_appended_ring_skip(key):
     skip = jnp.where(pos >= w, pos % w, -1)
     got = ops.decode_attention_appended(q, kc, vc, lo, hi, skip, kn, vn,
                                         use_kernel=True)
-    valid = cache_valid_mask_pre_write(pos, w, w)
+    valid = cache_valid_slots(pos, w, w, phase="pre_write")
     dense = layers.decode_attention_appended(
         q[:, None], kc, vc, valid, kn[:, None], vn[:, None])[:, 0]
     np.testing.assert_allclose(np.asarray(got), np.asarray(dense), atol=1e-5)
@@ -203,6 +203,119 @@ def test_decode_attention_appended_ring_skip(key):
                                          use_kernel=True)
     np.testing.assert_allclose(np.asarray(got[0]), np.asarray(got2[0]),
                                atol=1e-6)
+
+
+@pytest.mark.parametrize("b,h,kv,dh", [(2, 4, 4, 64), (3, 8, 2, 64)])
+@pytest.mark.parametrize("blk,nbl,softcap", [(8, 6, 0.0), (16, 3, 30.0)])
+def test_decode_attention_paged(b, h, kv, dh, blk, nbl, softcap, key):
+    """Paged flash-decode (scalar-prefetched block-indices operand) vs the
+    gather-dense oracle AND vs the appended kernel run over the gathered
+    dense view — shared pool blocks between lanes included."""
+    nb = b * nbl + 1                            # private blocks + null block
+    ks = jax.random.split(key, 6)
+    q = jax.random.normal(ks[0], (b, h, dh))
+    kp = jax.random.normal(ks[1], (nb, blk, kv, dh))
+    vp = jax.random.normal(ks[2], (nb, blk, kv, dh))
+    kn = jax.random.normal(ks[3], (b, kv, dh))
+    vn = jax.random.normal(ks[4], (b, kv, dh))
+    w = nbl * blk
+    # every lane gets its own blocks, except block row 0 is SHARED by all
+    # lanes (the prefix-reuse shape) and unallocated tails point at null 0
+    bt = np.zeros((b, nbl), np.int32)
+    for i in range(b):
+        bt[i] = 1 + np.arange(nbl) + i * nbl
+        bt[i, 0] = 1                            # shared leading block
+    bt = jnp.asarray(bt)
+    pos = jax.random.randint(ks[5], (b,), 0, w + 1)
+    lo = jnp.zeros((b,), jnp.int32)
+    hi = jnp.minimum(pos, w)
+    skip = jnp.full((b,), -1, jnp.int32)
+    got = ops.decode_attention_paged(q, kp, vp, bt, lo, hi, skip, kn, vn,
+                                     softcap=softcap, use_kernel=True)
+    want = ref.decode_attention_paged_ref(q, kp, vp, bt, lo, hi, skip, kn, vn,
+                                          softcap=softcap)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+    kd = kp[bt].reshape(b, w, kv, dh)
+    vd = vp[bt].reshape(b, w, kv, dh)
+    appended = ops.decode_attention_appended(q, kd, vd, lo, hi, skip, kn, vn,
+                                             softcap=softcap, use_kernel=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(appended),
+                               atol=1e-5)
+
+
+def test_decode_attention_paged_null_block_masked(key):
+    """Garbage in the reserved null block (unallocated table entries) must
+    not influence any lane's output."""
+    b, h, kv, dh, blk, nbl = 2, 4, 2, 64, 8, 4
+    nb = b * nbl + 1
+    ks = jax.random.split(key, 6)
+    q = jax.random.normal(ks[0], (b, h, dh))
+    kp = jax.random.normal(ks[1], (nb, blk, kv, dh))
+    vp = jax.random.normal(ks[2], (nb, blk, kv, dh))
+    kn = jax.random.normal(ks[3], (b, kv, dh))
+    vn = jax.random.normal(ks[4], (b, kv, dh))
+    # lanes hold 2 real blocks; the trailing 2 table entries are null (0)
+    bt = jnp.asarray([[1, 2, 0, 0], [3, 4, 0, 0]], jnp.int32)
+    pos = jnp.asarray([2 * blk, blk + 3], jnp.int32)
+    lo = jnp.zeros((b,), jnp.int32)
+    skip = jnp.full((b,), -1, jnp.int32)
+    got = ops.decode_attention_paged(q, kp, vp, bt, lo, pos, skip, kn, vn,
+                                     use_kernel=True)
+    kp2 = kp.at[0].add(1e4)
+    vp2 = vp.at[0].set(jnp.nan)
+    got2 = ops.decode_attention_paged(q, kp2, vp2, bt, lo, pos, skip, kn, vn,
+                                      use_kernel=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(got2), atol=1e-6)
+
+
+@pytest.mark.parametrize("attn_impl", ["dense", "pallas"])
+def test_decode_step_paged_matches_dense(attn_impl, key):
+    """decode_step over a paged cache (block pool + block tables) must be
+    bit-identical to the dense cache on the real model hot path, for both
+    attention backends."""
+    from repro.configs import get_reduced
+    from repro.models import model as M
+    from repro.models.cache import PAGED_LEAVES, CacheLayout
+
+    cfg = get_reduced("qwen3-8b")
+    params = M.init_params(cfg, key)
+    prompts = jnp.asarray(np.array([[1, 100, 101], [1, 102, 103]], np.int32))
+    toks = np.array([[5, 7, 9], [6, 8, 10]], np.int32)
+    blk, w = 4, 12
+    layout = CacheLayout.paged(w, blk, pool_blocks=2 * (w // blk) + 1)
+
+    _, _, cache = M.prefill(cfg, params, prompts, cache_len=w,
+                            moe_impl="dense", compute_dtype="float32")
+    # paged twin: scatter the prefilled lanes into disjoint block rows
+    paged = layout.init(cfg, 2, dtype=jnp.float32)
+    for lane in range(2):
+        small = jax.tree.map(
+            lambda leaf: leaf[:, lane : lane + 1]
+            if leaf.ndim > 1 else leaf[lane : lane + 1], cache)
+        row = jnp.arange(w // blk, dtype=jnp.int32) + 1 + lane * (w // blk)
+        paged = layout.scatter_lane(paged, small, lane, block_row=row)
+    for key_ in PAGED_LEAVES:
+        if key_ in cache:
+            got = layout.dense_view(paged)[key_]
+            np.testing.assert_array_equal(np.asarray(got),
+                                          np.asarray(cache[key_]))
+
+    dense_logits, paged_logits = [], []
+    for t in range(toks.shape[1]):
+        logits, _, cache = M.decode_step(
+            cfg, params, cache, jnp.asarray(toks[:, t : t + 1]),
+            moe_impl="dense", compute_dtype="float32", attn_impl=attn_impl)
+        dense_logits.append(np.asarray(logits[:, 0]))
+        plogits, _, paged = M.decode_step(
+            cfg, params, paged, jnp.asarray(toks[:, t : t + 1]),
+            moe_impl="dense", compute_dtype="float32", attn_impl=attn_impl)
+        paged_logits.append(np.asarray(plogits[:, 0]))
+    if attn_impl == "dense":
+        np.testing.assert_array_equal(np.stack(paged_logits),
+                                      np.stack(dense_logits))
+    else:
+        np.testing.assert_allclose(np.stack(paged_logits),
+                                   np.stack(dense_logits), atol=2e-5)
 
 
 def test_decode_attention_appended_int8_dequant_inputs(key):

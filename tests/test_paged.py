@@ -1,0 +1,393 @@
+"""Paged KV serving: block-pool allocation, prefix reuse, dense bit-parity.
+
+The standing oracle: ``cache_layout="paged"`` is a memory-LAYOUT change
+only.  For every family, both admission modes, and faulted runs, the paged
+continuous engine's outputs (tokens, bookkeeping, probe traces) are
+bit-identical to the dense continuous engine at greedy/float32 — which is
+itself bit-identical to solo wave runs (``test_scheduler``).  Prefix reuse
+and page recycling may change admission cost and memory, never tokens.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.configs import get_reduced
+from repro.core import controller as C
+from repro.data.traces import BOS, BOUNDARY_IDS, MARKER_IDS
+from repro.models import model as M
+from repro.models.cache import CacheLayout
+from repro.serving import Engine, EngineConfig, ServeRequest, bucket_length
+from repro.serving.faults import Fault, FaultPlan
+
+
+def _result_tuple(r):
+    return (r.tokens.tolist(), r.think_tokens, r.exited_early, r.exit_step,
+            r.answer, r.probe_trace.tolist(), r.exit_pos, r.status)
+
+
+def _ctrl_pp(cfg):
+    ctrl = C.ControllerConfig(BOUNDARY_IDS, MARKER_IDS, window=10,
+                              min_steps=1, probe_dim=16)
+    pp = C.init_probe_params(cfg.d_model, 16)
+    return ctrl, pp
+
+
+def _requests(cfg, lens=(1, 4, 9, 2), max_new=10, seed=7):
+    from repro.serving import stub_ctx
+    rng = np.random.default_rng(seed)
+    return [ServeRequest(
+        uid=i, prompt=np.r_[BOS, np.arange(100, 100 + n)].astype(np.int32),
+        max_new=max_new, ctx=stub_ctx(cfg, rng))
+        for i, n in enumerate(lens)]
+
+
+# ---------------------------------------------------------------------------
+# block-granular bucketing (property-style)
+# ---------------------------------------------------------------------------
+
+@given(st.integers(1, 4096), st.integers(0, 7).map(lambda e: 2 ** e))
+@settings(max_examples=100, deadline=None)
+def test_block_bucket_never_starves_never_overshoots(plen, block):
+    """Block-granular bucketing allocates at least ``plen`` tokens and at
+    most one block of slack — and stays block-addressable."""
+    got = bucket_length(plen, block=block)
+    assert got >= plen
+    assert got < plen + block
+    assert got % block == 0
+
+
+def test_bucket_length_block_zero_is_pow2():
+    assert bucket_length(9, block=0) == bucket_length(9) == 16
+
+
+# ---------------------------------------------------------------------------
+# CacheLayout unit behavior
+# ---------------------------------------------------------------------------
+
+def test_cache_layout_constructors_and_infer():
+    cfg = get_reduced("qwen3-8b")
+    lay = CacheLayout.paged(32, block=4, pool_blocks=9)
+    assert lay.is_paged and not lay.is_ring and lay.blocks_per_lane == 8
+    cache = lay.init(cfg, 2, dtype=jnp.float32)
+    assert cache["block_table"].shape == (2, 8)
+    assert CacheLayout.infer(cache).is_paged
+    assert CacheLayout.infer(cache).block == 4
+    dense = CacheLayout.dense(32)
+    ring = CacheLayout.ring(8)
+    assert not dense.is_ring and ring.is_ring and not ring.is_paged
+    with pytest.raises(ValueError):
+        CacheLayout("nope", 32, 0, 0, 0)
+    with pytest.raises(NotImplementedError):
+        lay.replicate({"pos": jnp.zeros((1,), jnp.int32)}, 2)
+
+
+def test_cache_layout_valid_slots_phase_required():
+    lay = CacheLayout.dense(8)
+    pos = jnp.asarray([3])
+    with pytest.raises(ValueError, match="phase"):
+        lay.valid_slots(pos, phase="nope")
+    post = np.asarray(lay.valid_slots(pos, phase="post_write"))[0]
+    pre = np.asarray(lay.valid_slots(pos, phase="pre_write"))[0]
+    assert post.sum() == 4 and pre.sum() == 3
+
+
+def test_dense_view_writeback_roundtrip():
+    """dense_view gathers the paged pool into the dense slab layout (invalid
+    slots' V zeroed); writeback scatters a dense cache back into the pool.
+    A gather -> scatter -> gather cycle is the identity on valid content."""
+    cfg = get_reduced("qwen3-8b")
+    lay = CacheLayout.paged(16, block=4, pool_blocks=16)
+    cache = lay.init(cfg, 2, dtype=jnp.float32)
+    kshape = cache["k"].shape        # (L, NB, blk, Hkv, hd)
+    rng = np.random.default_rng(0)
+    cache["k"] = jnp.asarray(rng.normal(size=kshape).astype(np.float32))
+    cache["v"] = jnp.asarray(rng.normal(size=kshape).astype(np.float32))
+    # lane 0: blocks 1,2 hold 6 written positions; lane 1: empty
+    cache["block_table"] = jnp.asarray([[1, 2, 0, 0], [0, 0, 0, 0]],
+                                       jnp.int32)
+    cache["pos"] = jnp.asarray([6, 0], jnp.int32)
+    dense = lay.dense_view(cache)
+    assert dense["k"].shape[2] == 16
+    got_k = np.asarray(dense["k"])[:, 0, :6]
+    want_k = np.asarray(cache["k"])[:, 1:3].reshape(kshape[0], 8, *kshape[3:])
+    np.testing.assert_array_equal(got_k, want_k[:, :6])
+    # V beyond pos is zeroed in the view (NaN-safety of p @ v)
+    assert np.asarray(dense["v"])[:, 0, 6:].sum() == 0
+    back = lay.writeback(cache, dense)
+    dense2 = lay.dense_view(back)
+    np.testing.assert_array_equal(np.asarray(dense2["k"])[:, 0, :6],
+                                  np.asarray(dense["k"])[:, 0, :6])
+    np.testing.assert_array_equal(np.asarray(dense2["v"]),
+                                  np.asarray(dense["v"]))
+
+
+# ---------------------------------------------------------------------------
+# engine knob validation
+# ---------------------------------------------------------------------------
+
+def test_paged_knob_validation():
+    with pytest.raises(ValueError, match="cache_layout"):
+        EngineConfig(cache_layout="nope")
+    with pytest.raises(ValueError, match="continuous"):
+        EngineConfig(cache_layout="paged", scheduler="wave")
+    with pytest.raises(ValueError, match="page_pool_blocks"):
+        EngineConfig(cache_layout="paged", scheduler="continuous",
+                     page_pool_blocks=1)
+    with pytest.raises(ValueError, match="page_block"):
+        EngineConfig(cache_layout="paged", scheduler="continuous",
+                     page_block=0)
+
+
+def test_paged_rejects_cacheless_and_indivisible_window():
+    ctrl, pp = _ctrl_pp(get_reduced("mamba2-2.7b"))
+    with pytest.raises(ValueError, match="paged"):
+        Engine(get_reduced("mamba2-2.7b"), None, ctrl=ctrl, probe_params=pp,
+               engine=EngineConfig(scheduler="continuous",
+                                   cache_layout="paged"))
+    cfg = get_reduced("phi3-mini-3.8b").replace(sliding_window=8)
+    ctrl, pp = _ctrl_pp(cfg)
+    with pytest.raises(ValueError, match="window"):
+        Engine(cfg, None, ctrl=ctrl, probe_params=pp,
+               engine=EngineConfig(scheduler="continuous",
+                                   cache_layout="paged", page_block=16))
+
+
+def test_page_capacity_rejection():
+    """A request that could never fit the physical pool is rejected at
+    submit instead of deadlocking FIFO admission."""
+    cfg = get_reduced("qwen3-8b")
+    ctrl, pp = _ctrl_pp(cfg)
+    eng = Engine(cfg, None, ctrl=ctrl, probe_params=pp,
+                 engine=EngineConfig(lanes=2, scheduler="continuous",
+                                     chunk=4, cache_layout="paged",
+                                     page_block=4, page_pool_blocks=4))
+    h = eng.submit(ServeRequest(uid=0, prompt=np.array([BOS], np.int32),
+                                max_new=64))
+    res = eng.drain()[0]
+    assert res.status == "rejected"
+    assert res.error["code"] == "page_capacity"
+    assert h.done
+
+
+# ---------------------------------------------------------------------------
+# the standing oracle: paged == dense, bit for bit
+# ---------------------------------------------------------------------------
+
+PAGED_ARCHS = ("qwen3-8b", "phi3-mini-3.8b", "hymba-1.5b",
+               "musicgen-large", "llama-3.2-vision-11b")
+
+
+@pytest.mark.parametrize("arch", PAGED_ARCHS)
+def test_paged_matches_dense_all_families(arch):
+    """Every paged-servable family — dense attention, phi3/hymba ring
+    windows, K>0 audio fan-out, vlm cross-attention — under BOTH admission
+    modes: paged outputs bit-identical to the dense continuous engine."""
+    cfg = get_reduced(arch)
+    if cfg.native_swa and cfg.sliding_window:
+        cfg = cfg.replace(sliding_window=8)    # serve past the window wrap
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    ctrl, pp = _ctrl_pp(cfg)
+    reqs = _requests(cfg)
+    kw = dict(lanes=2, policy="crop", crop_budget=4, chunk=4, seed=3)
+    runs = {}
+    for label, ekw in (
+            ("dense", {}),
+            ("paged", {"cache_layout": "paged", "page_block": 4}),
+            ("paged-inflight", {"cache_layout": "paged", "page_block": 4,
+                                "prefill": "inflight"}),
+            ("dense-inflight", {"prefill": "inflight"}),
+    ):
+        eng = Engine(cfg, params, ctrl=ctrl, probe_params=pp,
+                     engine=EngineConfig(scheduler="continuous", **kw, **ekw))
+        runs[label] = eng.run(reqs)
+    for label in ("paged", "paged-inflight", "dense-inflight"):
+        for a, b in zip(runs["dense"], runs[label]):
+            assert _result_tuple(a) == _result_tuple(b), \
+                f"{arch} {label} uid {a.uid}"
+
+
+def test_paged_matches_dense_int8_kv(key):
+    """kv_quant paged serving: int8 K/V + scales all live in the block pool;
+    parity with the dense int8 path must hold bit-for-bit."""
+    cfg = get_reduced("qwen3-8b")
+    params = M.init_params(cfg, key)
+    ctrl, pp = _ctrl_pp(cfg)
+    reqs = [ServeRequest(uid=i, prompt=np.array([BOS, 100 + i], np.int32),
+                         max_new=12) for i in range(3)]
+    kw = dict(lanes=2, policy="crop", crop_budget=6, chunk=5, seed=1,
+              kv_quant=True, scheduler="continuous")
+    res = {}
+    for layout in ("dense", "paged"):
+        eng = Engine(cfg, params, ctrl=ctrl, probe_params=pp,
+                     engine=EngineConfig(cache_layout=layout, page_block=4,
+                                         **kw))
+        res[layout] = eng.run(reqs)
+    for a, b in zip(res["dense"], res["paged"]):
+        assert _result_tuple(a) == _result_tuple(b), f"uid {a.uid}"
+
+
+def test_paged_fault_isolation_matches_dense():
+    """A poisoned lane under the paged layout quarantines exactly like
+    dense — co-resident lanes bit-identical, pages of the quarantined lane
+    released and the lane refilled."""
+    cfg = get_reduced("qwen3-8b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    ctrl, pp = _ctrl_pp(cfg)
+    reqs = [ServeRequest(uid=i, prompt=np.array([BOS, 100 + i], np.int32),
+                         max_new=12) for i in range(4)]
+    plan = FaultPlan((Fault("nan_logits", lane=1, step=2),))
+    kw = dict(lanes=2, policy="crop", crop_budget=6, chunk=4, seed=3,
+              scheduler="continuous", fault_plan=plan)
+    res = {}
+    for layout in ("dense", "paged"):
+        eng = Engine(cfg, params, ctrl=ctrl, probe_params=pp,
+                     engine=EngineConfig(cache_layout=layout, page_block=4,
+                                         **kw))
+        res[layout] = eng.run(reqs)
+        assert eng.last_stats["poisoned"] == 1
+        assert eng.last_stats["quarantined_lanes"] == 1
+    for a, b in zip(res["dense"], res["paged"]):
+        assert _result_tuple(a) == _result_tuple(b), f"uid {a.uid}"
+    # the poisoned lane's pages went back to the pool and its replacement
+    # reused them: total blocks claimed exceeds the pool's live peak
+    pool = eng.last_stats["page_pool"]
+    assert pool["used"] == 0 and pool["released"] > 0
+
+
+# ---------------------------------------------------------------------------
+# retire frees pages; freed blocks are reused by queued requests (chaos)
+# ---------------------------------------------------------------------------
+
+def test_retired_pages_reused_by_queued_requests():
+    """A pool too small for all requests at once: early retirements hand
+    blocks back and the queued FIFO head claims them in the SAME run.  The
+    admission stall (head needs more blocks than currently free) is
+    observable, block demand exceeds the pool, and outputs still match an
+    unconstrained paged run bit-for-bit."""
+    cfg = get_reduced("qwen3-8b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    ctrl, pp = _ctrl_pp(cfg)
+    # small/large interleave: need = bucket(2)=4 + max_new + chunk + 8,
+    # block 4 -> small (max_new=6) needs 6 blocks, large (max_new=20) 9
+    reqs = [ServeRequest(uid=i, prompt=np.array([BOS, 100 + i], np.int32),
+                         max_new=m)
+            for i, m in enumerate((6, 20, 20, 6))]
+    kw = dict(lanes=2, policy="full", chunk=4, seed=3,
+              scheduler="continuous", cache_layout="paged", page_block=4)
+    ref = Engine(cfg, params, ctrl=ctrl, probe_params=pp,
+                 engine=EngineConfig(**kw)).run(reqs)          # auto pool
+    eng = Engine(cfg, params, ctrl=ctrl, probe_params=pp,
+                 engine=EngineConfig(page_pool_blocks=16, **kw))
+    got = eng.run(reqs)
+    for a, b in zip(ref, got):
+        assert _result_tuple(a) == _result_tuple(b), f"uid {a.uid}"
+        assert b.status == "ok"
+    pool = eng.last_stats["page_pool"]
+    # more blocks were claimed over the run than the pool can hold at once
+    # -> retired lanes' blocks were recycled into queued admissions
+    assert pool["allocs"] == 6 + 9 + 9 + 6
+    assert pool["allocs"] > pool["n_blocks"] - 1
+    assert pool["peak_used"] <= pool["n_blocks"] - 1
+    assert pool["released"] == pool["allocs"] and pool["used"] == 0
+    # uid2 (9 blocks) had to wait for more than uid0's 6 freed blocks
+    assert eng.last_stats["page_stalls"] >= 1
+    late = [a for a in eng.last_stats["admissions"] if a["step"] > 0]
+    assert late, "no queued request was admitted mid-run"
+
+
+# ---------------------------------------------------------------------------
+# cross-request prefix reuse
+# ---------------------------------------------------------------------------
+
+def test_prefix_reuse_skips_replay_and_matches_dense(key):
+    """Requests sharing a 12-token prefix under paged+in-flight serving:
+    later admissions map the resident blocks (refcount++), replay only their
+    private tail, and emit bit-identical tokens to the dense engine."""
+    cfg = get_reduced("qwen3-8b")
+    params = M.init_params(cfg, key)
+    ctrl, pp = _ctrl_pp(cfg)
+    common = np.r_[BOS, np.arange(200, 211)].astype(np.int32)   # 12 tokens
+    reqs = [ServeRequest(uid=i, prompt=np.r_[common, 100 + i].astype(np.int32),
+                         max_new=10) for i in range(4)]
+    kw = dict(lanes=2, policy="crop", crop_budget=4, chunk=4, seed=3,
+              scheduler="continuous", prefill="inflight")
+    dense = Engine(cfg, params, ctrl=ctrl, probe_params=pp,
+                   engine=EngineConfig(**kw)).run(reqs)
+    eng = Engine(cfg, params, ctrl=ctrl, probe_params=pp,
+                 engine=EngineConfig(cache_layout="paged", page_block=4,
+                                     **kw))
+    paged = eng.run(reqs)
+    for a, b in zip(dense, paged):
+        assert _result_tuple(a) == _result_tuple(b), f"uid {a.uid}"
+    idx = eng.last_stats["prefix_index"]
+    assert idx["registered"] >= 3          # uid0's 3 full blocks published
+    assert idx["hits"] >= 1 and idx["shared_tokens"] >= 12
+    assert idx["hit_blocks"] >= 3
+    # a prefix-hit lane starts its replay at the first unshared token:
+    # replay cost (first_token_step - admit_step) drops below plen - 1
+    plen = len(reqs[0].prompt)
+    by_uid = {r.uid: r for r in paged}
+    assert by_uid[0].first_token_step - by_uid[0].admit_step == plen - 1
+    hit = [r for r in paged
+           if 0 <= r.first_token_step - r.admit_step < plen - 1]
+    assert hit, "no admission skipped any replay steps"
+    assert any(r.first_token_step == r.admit_step for r in hit)
+
+
+def test_prefix_reuse_respects_gating(key):
+    """The index never activates where sharing is unsound: whole-prompt
+    admission, prefix_cache=False, and ctx-bearing requests all run with
+    zero lookups/hits — and identical outputs."""
+    cfg = get_reduced("qwen3-8b")
+    params = M.init_params(cfg, key)
+    ctrl, pp = _ctrl_pp(cfg)
+    common = np.r_[BOS, np.arange(200, 211)].astype(np.int32)
+    reqs = [ServeRequest(uid=i, prompt=np.r_[common, 100 + i].astype(np.int32),
+                         max_new=8) for i in range(3)]
+    base = dict(lanes=2, policy="crop", crop_budget=4, chunk=4, seed=3,
+                scheduler="continuous", cache_layout="paged", page_block=4)
+    eng_off = Engine(cfg, params, ctrl=ctrl, probe_params=pp,
+                     engine=EngineConfig(prefill="inflight",
+                                         prefix_cache=False, **base))
+    off = eng_off.run(reqs)
+    assert "prefix_index" not in eng_off.last_stats
+    eng_whole = Engine(cfg, params, ctrl=ctrl, probe_params=pp,
+                       engine=EngineConfig(prefill="whole", **base))
+    whole = eng_whole.run(reqs)
+    assert "prefix_index" not in eng_whole.last_stats
+    eng_on = Engine(cfg, params, ctrl=ctrl, probe_params=pp,
+                    engine=EngineConfig(prefill="inflight", **base))
+    on = eng_on.run(reqs)
+    assert eng_on.last_stats["prefix_index"]["hits"] >= 1
+    for a, b, c in zip(off, whole, on):
+        assert _result_tuple(a) == _result_tuple(b) == _result_tuple(c)
+
+
+def test_prefix_blocks_survive_retirement_and_revive(key):
+    """All lanes retire between the prefix writer and a later lookalike:
+    the shared blocks park cached (refcount 0, still indexed) and the late
+    request revives them — zero replay for its whole shared span."""
+    cfg = get_reduced("qwen3-8b")
+    params = M.init_params(cfg, key)
+    ctrl, pp = _ctrl_pp(cfg)
+    common = np.r_[BOS, np.arange(200, 211)].astype(np.int32)
+    mk = lambda uid: ServeRequest(
+        uid=uid, prompt=np.r_[common, 100 + uid].astype(np.int32), max_new=8)
+    eng = Engine(cfg, params, ctrl=ctrl, probe_params=pp,
+                 engine=EngineConfig(lanes=2, policy="crop", crop_budget=4,
+                                     chunk=4, seed=3, scheduler="continuous",
+                                     prefill="inflight", cache_layout="paged",
+                                     page_block=4))
+    eng.submit(mk(0))
+    while not eng.idle:
+        eng.step_chunk()               # uid0 runs alone, retires fully
+    eng.submit(mk(1))                  # same session: index persists
+    res = eng.drain()
+    assert [r.uid for r in res] == [0, 1]
+    assert all(r.status == "ok" for r in res)
+    idx = eng.last_stats["prefix_index"]
+    assert idx["hits"] == 1 and idx["shared_tokens"] == 12
+    assert res[1].first_token_step - res[1].admit_step == 0

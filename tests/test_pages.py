@@ -1,0 +1,175 @@
+"""Unit tests for the host-side page allocator + prefix index
+(``repro.serving.pages``) — pure Python, no device work."""
+
+import numpy as np
+import pytest
+
+from repro.serving.pages import (NULL_BLOCK, PagePool, PrefixIndex,
+                                 block_hashes)
+
+
+# --------------------------------------------------------------- block_hashes
+
+def test_block_hashes_full_blocks_only():
+    toks = list(range(10))
+    assert len(block_hashes(toks, 4)) == 2      # 10 // 4
+    assert len(block_hashes(toks, 16)) == 0     # no full block
+    assert block_hashes([], 4) == []
+
+
+def test_block_hashes_prefix_property():
+    a = block_hashes([1, 2, 3, 4, 5, 6, 7, 8], 4)
+    b = block_hashes([1, 2, 3, 4, 9, 9, 9, 9], 4)
+    assert a[0] == b[0]          # identical first block
+    assert a[1] != b[1]          # diverging second block
+    # the chain commits to the WHOLE prefix: same second block after a
+    # different first block must not collide
+    c = block_hashes([7, 2, 3, 4, 5, 6, 7, 8], 4)
+    assert c[0] != a[0] and c[1] != a[1]
+
+
+def test_block_hashes_numpy_and_codebook_rows():
+    flat = block_hashes(np.arange(8, dtype=np.int32), 4)
+    assert flat == block_hashes(list(range(8)), 4)
+    # (S, K) codebook rows hash per-row content
+    kb = np.arange(16, dtype=np.int32).reshape(8, 2)
+    kb2 = kb.copy()
+    kb2[5, 1] += 1
+    ha, hb = block_hashes(kb, 4), block_hashes(kb2, 4)
+    assert ha[0] == hb[0] and ha[1] != hb[1]
+
+
+def test_block_hashes_negative_tokens():
+    assert block_hashes([-1, -2, -3, -4], 4) != block_hashes([1, 2, 3, 4], 4)
+
+
+# ------------------------------------------------------------------- PagePool
+
+def test_pool_reserves_null_block():
+    pool = PagePool(4, block=8)
+    ids = pool.alloc(3)
+    assert ids is not None and NULL_BLOCK not in ids
+    assert sorted(ids) == [1, 2, 3]
+    with pytest.raises(ValueError, match=">= 2 blocks"):
+        PagePool(1, block=8)
+
+
+def test_pool_alloc_all_or_nothing():
+    pool = PagePool(5, block=8)
+    assert pool.available == 4
+    assert pool.alloc(5) is None           # over capacity: nothing claimed
+    assert pool.available == 4
+    first = pool.alloc(3)
+    assert pool.alloc(2) is None           # 1 left
+    assert pool.available == 1
+    pool.release(first)
+    assert pool.available == 4
+
+
+def test_pool_refcounts():
+    pool = PagePool(4, block=8)
+    (bid,) = pool.alloc(1)
+    assert pool.refcount(bid) == 1
+    pool.retain([bid])
+    assert pool.refcount(bid) == 2
+    pool.release([bid])
+    assert pool.refcount(bid) == 1 and pool.used == 1
+    pool.release([bid])
+    assert pool.refcount(bid) == 0 and pool.used == 0
+    assert pool.available == 3             # unindexed: straight to free list
+
+
+def test_pool_cached_blocks_evict_lru():
+    pool = PagePool(4, block=8)
+    dropped = []
+    pool.evict_hook = dropped.append
+    a = pool.alloc(1)
+    b = pool.alloc(1)
+    c = pool.alloc(1)
+    pool.mark_indexed(a + b + c)
+    pool.release(b)                        # released order: b, a, c
+    pool.release(a)
+    pool.release(c)
+    assert pool.used == 0 and pool.cached == 3 and pool.available == 3
+    got = pool.alloc(2)                    # must evict the 2 LRU: b then a
+    assert got == [b[0], a[0]]
+    assert dropped == [b[0], a[0]]
+    assert pool.stats["evictions"] == 2
+    # c was never evicted: a retain promotes it back to used
+    pool.retain(c)
+    assert pool.refcount(c[0]) == 1 and pool.cached == 0
+
+
+def test_pool_stats_peak_used():
+    pool = PagePool(6, block=8)
+    a = pool.alloc(3)
+    pool.release(a[:2])
+    pool.alloc(1)
+    assert pool.stats["peak_used"] == 3
+    assert pool.stats["allocs"] == 4
+    assert pool.stats["released"] == 2
+
+
+# ---------------------------------------------------------------- PrefixIndex
+
+def _pool_index(n_blocks=8, block=4):
+    pool = PagePool(n_blocks, block=block)
+    return pool, PrefixIndex(pool)
+
+
+def test_index_lookup_longest_prefix():
+    pool, idx = _pool_index()
+    toks = list(range(12))
+    hashes = block_hashes(toks, 4)
+    ids = pool.alloc(3)
+    idx.register(hashes, ids)
+    assert idx.lookup(hashes) == ids
+    # a prompt sharing only the first two blocks hits exactly those
+    other = block_hashes(toks[:8] + [99, 99, 99, 99], 4)
+    assert idx.lookup(other) == ids[:2]
+    assert idx.lookup(block_hashes([5, 5, 5, 5], 4)) == []
+    assert idx.stats["lookups"] == 3 and idx.stats["hit_blocks"] == 5
+
+
+def test_index_first_writer_wins():
+    pool, idx = _pool_index()
+    hashes = block_hashes(list(range(8)), 4)
+    a, b = pool.alloc(2), pool.alloc(2)
+    idx.register(hashes, a)
+    idx.register(hashes, b)               # duplicate: stays private
+    assert idx.lookup(hashes) == a
+    assert idx.stats["registered"] == 2
+    # the duplicate's blocks were never indexed: releasing frees them
+    pool.release(b)
+    assert pool.cached == 0
+
+
+def test_index_eviction_drops_hashes():
+    pool, idx = _pool_index(n_blocks=4)
+    hashes = block_hashes(list(range(12)), 4)
+    ids = pool.alloc(3)
+    idx.register(hashes, ids)
+    pool.release(ids)                      # all cached, all indexed
+    assert pool.cached == 3
+    pool.alloc(3)                          # evicts everything
+    assert idx.lookup(hashes) == []
+
+
+def test_index_shared_prefix_refcount_lifecycle():
+    """The scheduler's intended flow: request A registers, request B shares,
+    A retires, B retires, blocks stay cached for a request C hit."""
+    pool, idx = _pool_index(n_blocks=8)
+    hashes = block_hashes(list(range(8)), 4)
+    a_ids = pool.alloc(2)
+    idx.register(hashes, a_ids)
+    hit = idx.lookup(hashes)
+    pool.retain(hit)                       # request B maps the shared blocks
+    assert pool.refcount(a_ids[0]) == 2
+    pool.release(a_ids)                    # A retires
+    assert pool.refcount(a_ids[0]) == 1    # B still holds them
+    pool.release(a_ids)                    # B retires
+    assert pool.used == 0 and pool.cached == 2
+    hit_c = idx.lookup(hashes)
+    assert hit_c == a_ids
+    pool.retain(hit_c)                     # C revives the cached blocks
+    assert pool.refcount(a_ids[0]) == 1 and pool.cached == 0

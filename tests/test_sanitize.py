@@ -20,7 +20,7 @@ from repro.configs import get_reduced
 from repro.core import controller as C
 from repro.data.traces import BOUNDARY_IDS, MARKER_IDS
 from repro.models import model as M
-from repro.serving import Engine
+from repro.serving import Engine, EngineConfig
 
 from test_engine import CONTENT, _install_scripted_model, _reqs, _result_tuple
 
@@ -163,8 +163,9 @@ def test_engine_owner_guard_cross_thread(monkeypatch):
     cfg = get_reduced("qwen3-8b").replace(d_model=32)
     _install_scripted_slots(monkeypatch, _owner_script())
     ctrl, pp = _ctrl_pp(cfg)
-    eng = Engine(cfg, None, ctrl=ctrl, probe_params=pp, lanes=2,
-                 policy="full", scheduler="continuous", chunk=4)
+    eng = Engine(cfg, None, ctrl=ctrl, probe_params=pp,
+                 engine=EngineConfig(lanes=2, policy="full",
+                                     scheduler="continuous", chunk=4))
 
     handles = [eng.submit(r) for r in _reqs(2, max_new=16)]  # main binds
     err = {}
@@ -198,8 +199,9 @@ def test_engine_owner_guard_explicit_handoff(monkeypatch):
     cfg = get_reduced("qwen3-8b").replace(d_model=32)
     _install_scripted_slots(monkeypatch, _owner_script())
     ctrl, pp = _ctrl_pp(cfg)
-    eng = Engine(cfg, None, ctrl=ctrl, probe_params=pp, lanes=2,
-                 policy="full", scheduler="continuous", chunk=4)
+    eng = Engine(cfg, None, ctrl=ctrl, probe_params=pp,
+                 engine=EngineConfig(lanes=2, policy="full",
+                                     scheduler="continuous", chunk=4))
     reqs = _reqs(2, max_new=16)
     box = {}
 
@@ -243,8 +245,8 @@ def _scripted_engine(monkeypatch, cfg, lanes, **kw):
     script = np.full((lanes, 64), CONTENT, np.int32)  # never ends naturally
     _install_scripted_model(monkeypatch, script, cfg.d_model)
     ctrl, pp = _ctrl_pp(cfg)
-    return Engine(cfg, None, ctrl=ctrl, probe_params=pp, lanes=lanes,
-                  policy="full", **kw)
+    return Engine(cfg, None, ctrl=ctrl, probe_params=pp,
+                  engine=EngineConfig(lanes=lanes, policy="full", **kw))
 
 
 def test_wave_scan_exactly_one_sync_per_chunk(monkeypatch, counted_device_get):
@@ -300,9 +302,9 @@ def test_continuous_exactly_one_sync_per_chunk(counted_device_get, key):
     cfg = get_reduced("qwen3-8b")
     params = M.init_params(cfg, key)
     ctrl, pp = _ctrl_pp(cfg)
-    eng = Engine(cfg, params, ctrl=ctrl, probe_params=pp, lanes=2,
-                 policy="crop", crop_budget=4, scheduler="continuous",
-                 chunk=4)
+    eng = Engine(cfg, params, ctrl=ctrl, probe_params=pp,
+                 engine=EngineConfig(lanes=2, policy="crop", crop_budget=4,
+                                     scheduler="continuous", chunk=4))
     ledger = guards.TransferLedger()
     with guards.attach_ledger(ledger):
         res = eng.run(_reqs(3, max_new=12))
@@ -338,6 +340,36 @@ def test_inflight_chunk_syncs_only(counted_device_get, key):
     assert counted_device_get["n"] == ledger.total
 
 
+def test_paged_prefix_inflight_chunk_syncs_only(counted_device_get, key):
+    """Paged serving with a live prefix index keeps the in-flight ledger
+    contract: content hashing, pool allocation, and index lookups are host
+    work done BEFORE each admission's device surgery, so a shared-prefix
+    run still counts ONE 'chunk' sync per chunk and nothing else — the
+    prefix cache adds zero per-chunk (and zero per-admission) syncs."""
+    from repro.data.traces import BOS
+    from repro.serving import ServeRequest
+
+    cfg = get_reduced("qwen3-8b")
+    params = M.init_params(cfg, key)
+    ctrl, pp = _ctrl_pp(cfg)
+    common = np.r_[BOS, np.arange(200, 211)].astype(np.int32)
+    reqs = [ServeRequest(uid=i, prompt=np.r_[common, 100 + i].astype(np.int32),
+                         max_new=10) for i in range(4)]
+    eng = Engine(cfg, params, ctrl=ctrl, probe_params=pp,
+                 engine=EngineConfig(lanes=2, policy="crop", crop_budget=4,
+                                     scheduler="continuous", chunk=4,
+                                     prefill="inflight",
+                                     cache_layout="paged", page_block=4))
+    ledger = guards.TransferLedger()
+    with guards.attach_ledger(ledger):
+        res = eng.run(reqs)
+    assert len(res) == 4 and all(r.status == "ok" for r in res)
+    assert eng.last_stats["prefix_index"]["hits"] >= 1
+    assert ledger.counts["chunk"] == eng.last_stats["chunks"] >= 1
+    assert set(ledger.counts) == {"chunk"}
+    assert counted_device_get["n"] == ledger.total
+
+
 def test_quarantine_adds_no_syncs(monkeypatch, counted_device_get):
     """Poisoned-lane quarantine (detect, scrub, re-arm, refill) is pure
     device work riding the existing chunk sync: the ledger still shows
@@ -353,9 +385,10 @@ def test_quarantine_adds_no_syncs(monkeypatch, counted_device_get):
     _install_scripted_slots(monkeypatch, script)
     ctrl, pp = _ctrl_pp(cfg)
     plan = FaultPlan((Fault("nan_logits", lane=1, step=2),))
-    eng = Engine(cfg, None, ctrl=ctrl, probe_params=pp, lanes=2,
-                 policy="full", scheduler="continuous", chunk=4,
-                 fault_plan=plan)
+    eng = Engine(cfg, None, ctrl=ctrl, probe_params=pp,
+                 engine=EngineConfig(lanes=2, policy="full",
+                                     scheduler="continuous", chunk=4,
+                                     fault_plan=plan))
     ledger = guards.TransferLedger()
     with guards.attach_ledger(ledger):
         res = eng.run(_reqs(4, max_new=16))
@@ -407,8 +440,9 @@ def test_sanitize_mode_parity(monkeypatch, arch, key):
             monkeypatch.setenv("REPRO_SANITIZE", "1")
         else:
             monkeypatch.delenv("REPRO_SANITIZE", raising=False)
-        eng = Engine(cfg, params, ctrl=ctrl, probe_params=pp, lanes=2,
-                     policy="crop", crop_budget=6, chunk=5, seed=2)
+        eng = Engine(cfg, params, ctrl=ctrl, probe_params=pp,
+                     engine=EngineConfig(lanes=2, policy="crop", crop_budget=6,
+                                         chunk=5, seed=2))
         res[sanitize] = eng.run(_reqs(2, max_new=16))
     for a, b in zip(res[False], res[True]):
         assert _result_tuple(a) == _result_tuple(b)

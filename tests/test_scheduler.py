@@ -171,17 +171,18 @@ def test_continuous_refill_matches_alone_wave(monkeypatch, chunk):
     ctrl = C.ControllerConfig(BOUNDARY_IDS, MARKER_IDS, window=10,
                               min_steps=1, probe_dim=16)
     pp = C.init_probe_params(cfg.d_model, 16)._replace(lam=jnp.float32(-1.0))
-    kw = dict(ctrl=ctrl, probe_params=pp, policy="calibrated", crop_budget=6,
-              chunk=chunk)
+    kw = dict(policy="calibrated", crop_budget=6, chunk=chunk)
 
     alone = []
     for rid in range(4):
         _install_scripted_wave(monkeypatch, script[rid : rid + 1])
-        eng = Engine(cfg, None, lanes=1, **kw)
+        eng = Engine(cfg, None, ctrl=ctrl, probe_params=pp,
+                     engine=EngineConfig(lanes=1, **kw))
         alone.extend(eng.run([_reqs(4)[rid]]))
 
     _install_scripted_slots(monkeypatch, script)
-    eng = Engine(cfg, None, lanes=2, scheduler="continuous", **kw)
+    eng = Engine(cfg, None, ctrl=ctrl, probe_params=pp,
+                 engine=EngineConfig(lanes=2, scheduler="continuous", **kw))
     cont = eng.run(_reqs(4))
 
     for a, b in zip(alone, cont):
@@ -204,8 +205,9 @@ def test_continuous_more_requests_than_lanes_order_preserved(monkeypatch):
                               min_steps=1, probe_dim=16)
     pp = C.init_probe_params(cfg.d_model, 16)
     _install_scripted_slots(monkeypatch, script)
-    eng = Engine(cfg, None, ctrl=ctrl, probe_params=pp, lanes=2,
-                 policy="full", scheduler="continuous", chunk=4)
+    eng = Engine(cfg, None, ctrl=ctrl, probe_params=pp,
+                 engine=EngineConfig(lanes=2, policy="full",
+                                     scheduler="continuous", chunk=4))
     res = eng.run(_reqs(5, max_new=24))
     assert [r.uid for r in res] == list(range(5))
     for rid, r in enumerate(res):
@@ -240,8 +242,10 @@ def test_continuous_matches_wave_real_model(setup, policy, kw):
             for i, m in enumerate((10, 28, 10, 28, 10))]
     res = {}
     for sched in ("wave", "continuous"):
-        eng = Engine(cfg, params, ctrl=ctrl, probe_params=pp, lanes=2,
-                     policy=policy, scheduler=sched, chunk=6, seed=3, **kw)
+        eng = Engine(cfg, params, ctrl=ctrl, probe_params=pp,
+                     engine=EngineConfig(lanes=2, policy=policy,
+                                         scheduler=sched, chunk=6, seed=3,
+                                         **kw))
         res[sched] = eng.run(reqs)
     for a, b in zip(res["wave"], res["continuous"]):
         assert _result_tuple(a) == _result_tuple(b), f"uid {a.uid}"
@@ -257,12 +261,13 @@ def test_continuous_bucketed_prompts_match_alone(setup):
             for i, p in enumerate(prompts)]
     alone = []
     for r in reqs:
-        eng = Engine(cfg, params, ctrl=ctrl, probe_params=pp, lanes=1,
-                     policy="crop", crop_budget=5, chunk=5, seed=3)
+        eng = Engine(cfg, params, ctrl=ctrl, probe_params=pp,
+                     engine=EngineConfig(lanes=1, policy="crop", crop_budget=5,
+                                         chunk=5, seed=3))
         alone.extend(eng.run([r]))
-    eng = Engine(cfg, params, ctrl=ctrl, probe_params=pp, lanes=2,
-                 policy="crop", crop_budget=5, scheduler="continuous",
-                 chunk=5, seed=3)
+    eng = Engine(cfg, params, ctrl=ctrl, probe_params=pp,
+                 engine=EngineConfig(lanes=2, policy="crop", crop_budget=5,
+                                     scheduler="continuous", chunk=5, seed=3))
     cont = eng.run(reqs)
     for a, b in zip(alone, cont):
         assert _result_tuple(a) == _result_tuple(b), f"uid {a.uid}"
@@ -273,9 +278,10 @@ def test_continuous_int8_kv(setup):
     reqs = _reqs(3, max_new=12)
     res = {}
     for sched in ("wave", "continuous"):
-        eng = Engine(cfg, params, ctrl=ctrl, probe_params=pp, lanes=2,
-                     policy="crop", crop_budget=6, kv_quant=True,
-                     scheduler=sched, chunk=5, seed=1)
+        eng = Engine(cfg, params, ctrl=ctrl, probe_params=pp,
+                     engine=EngineConfig(lanes=2, policy="crop", crop_budget=6,
+                                         kv_quant=True, scheduler=sched,
+                                         chunk=5, seed=1))
         res[sched] = eng.run(reqs)
     for a, b in zip(res["wave"], res["continuous"]):
         assert _result_tuple(a) == _result_tuple(b), f"uid {a.uid}"
@@ -285,9 +291,10 @@ def test_continuous_rejects_host_decode_mode(setup):
     cfg, params, ctrl, pp = setup
     with pytest.raises(ValueError):
         Engine(cfg, params, ctrl=ctrl, probe_params=pp,
-               scheduler="continuous", decode_mode="host")
+               engine=EngineConfig(scheduler="continuous", decode_mode="host"))
     with pytest.raises(ValueError):
-        Engine(cfg, params, ctrl=ctrl, probe_params=pp, scheduler="nope")
+        Engine(cfg, params, ctrl=ctrl, probe_params=pp,
+               engine=EngineConfig(scheduler="nope"))
 
 
 def test_continuous_capability_probe(setup):
@@ -302,7 +309,7 @@ def test_continuous_capability_probe(setup):
     for arch in ("mamba2-2.7b", "hymba-1.5b", "llama-3.2-vision-11b",
                  "musicgen-large"):
         Engine(get_reduced(arch), None, ctrl=ctrl, probe_params=pp,
-               scheduler="continuous")                 # must not raise
+               engine=EngineConfig(scheduler="continuous"))                 # must not raise
     cb_cfg = get_reduced("musicgen-large")
     assert cb_cfg.num_codebooks > 0
     # unknown future family: the probe reports it has no slot-prefill path
@@ -318,7 +325,7 @@ def test_kv_quant_rejected_off_append_cache_path(setup):
     for arch in ("mamba2-2.7b", "hymba-1.5b", "llama-3.2-vision-11b"):
         with pytest.raises(ValueError, match="kv_quant"):
             Engine(get_reduced(arch), None, ctrl=ctrl, probe_params=pp,
-                   kv_quant=True)
+                   engine=EngineConfig(kv_quant=True))
 
 
 # ---------------------------------------------------------------------------
@@ -352,13 +359,14 @@ def test_continuous_matches_alone_all_families(arch):
                               min_steps=1, probe_dim=16)
     pp = C.init_probe_params(cfg.d_model, 16)
     reqs = _family_requests(cfg)
-    kw = dict(ctrl=ctrl, probe_params=pp, policy="crop", crop_budget=4,
-              chunk=4, seed=3)
+    kw = dict(policy="crop", crop_budget=4, chunk=4, seed=3)
     alone = []
     for r in reqs:
-        eng = Engine(cfg, params, lanes=1, **kw)
+        eng = Engine(cfg, params, ctrl=ctrl, probe_params=pp,
+                     engine=EngineConfig(lanes=1, **kw))
         alone.extend(eng.run([r]))
-    eng = Engine(cfg, params, lanes=2, scheduler="continuous", **kw)
+    eng = Engine(cfg, params, ctrl=ctrl, probe_params=pp,
+                 engine=EngineConfig(lanes=2, scheduler="continuous", **kw))
     cont = eng.run(reqs)
     for a, b in zip(alone, cont):
         assert _result_tuple(a) == _result_tuple(b), f"{arch} uid {a.uid}"
@@ -381,14 +389,15 @@ def test_musicgen_codebooks_three_way_parity():
                               min_steps=1, probe_dim=16)
     pp = C.init_probe_params(cfg.d_model, 16)
     reqs = _family_requests(cfg, lens=(1, 4, 9), max_new=12)
-    kw = dict(ctrl=ctrl, probe_params=pp, policy="crop", crop_budget=4,
-              chunk=4, seed=3)
+    kw = dict(policy="crop", crop_budget=4, chunk=4, seed=3)
     res = {"scan": [], "host": []}
     for r in reqs:                                   # solo waves: no left-pad
         for mode in ("scan", "host"):
-            eng = Engine(cfg, params, lanes=1, decode_mode=mode, **kw)
+            eng = Engine(cfg, params, ctrl=ctrl, probe_params=pp,
+                         engine=EngineConfig(lanes=1, decode_mode=mode, **kw))
             res[mode].extend(eng.run([r]))
-    eng = Engine(cfg, params, lanes=2, scheduler="continuous", **kw)
+    eng = Engine(cfg, params, ctrl=ctrl, probe_params=pp,
+                 engine=EngineConfig(lanes=2, scheduler="continuous", **kw))
     res["continuous"] = eng.run(reqs)
     for a, b, c in zip(res["scan"], res["host"], res["continuous"]):
         assert _result_tuple(a) == _result_tuple(b), f"scan!=host uid {a.uid}"
@@ -408,12 +417,14 @@ def test_codebook_k1_degenerate_serves():
                               min_steps=1, probe_dim=16)
     pp = C.init_probe_params(cfg.d_model, 16)
     reqs = _family_requests(cfg, lens=(1, 4), max_new=8)
-    kw = dict(ctrl=ctrl, probe_params=pp, policy="crop", crop_budget=3,
-              chunk=4, seed=3)
+    kw = dict(policy="crop", crop_budget=3, chunk=4, seed=3)
     alone = []
     for r in reqs:
-        alone.extend(Engine(cfg, params, lanes=1, **kw).run([r]))
-    cont = Engine(cfg, params, lanes=2, scheduler="continuous", **kw).run(reqs)
+        alone.extend(Engine(cfg, params, ctrl=ctrl, probe_params=pp,
+                            engine=EngineConfig(lanes=1, **kw)).run([r]))
+    cont = Engine(cfg, params, ctrl=ctrl, probe_params=pp,
+                  engine=EngineConfig(lanes=2, scheduler="continuous",
+                                      **kw)).run(reqs)
     for a, b in zip(alone, cont):
         assert _result_tuple(a) == _result_tuple(b), f"uid {a.uid}"
         assert np.asarray(a.tokens).shape[1] == 1
@@ -460,8 +471,8 @@ def test_musicgen_drain_completes_frame_rectangle(monkeypatch):
     ctrl = C.ControllerConfig(BOUNDARY_IDS, MARKER_IDS, window=10,
                               min_steps=1, probe_dim=16)
     pp = C.init_probe_params(cfg.d_model, 16)
-    eng = Engine(cfg, None, ctrl=ctrl, probe_params=pp, lanes=1,
-                 policy="full", chunk=4)
+    eng = Engine(cfg, None, ctrl=ctrl, probe_params=pp,
+                 engine=EngineConfig(lanes=1, policy="full", chunk=4))
     r, = eng.run([ServeRequest(uid=0, prompt=np.array([BOS], np.int32),
                                max_new=16)])
     # primary stream: c c THINK_END ans — 4 frames; the staircase drains the
